@@ -1,0 +1,86 @@
+"""Paper Fig. 6a/6b (+ Table 2): HPC vs NDIF setup time and runtime.
+
+6a — setup: HPC users load weights per-experiment (grows ~linearly with
+     parameter count); NDIF preloads once, user setup is ~constant.
+6b — runtime: remote execution adds a roughly CONSTANT overhead
+     (serialization + transport) independent of model size.
+
+The OPT ladder is scaled to CPU (2M/8M/20M) — the paper's claims are about
+scaling shape, which survives the rescale.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, build, ioi_batch, opt_suite, timeit
+from repro.models.traced import traced_lm
+from repro.serving import LoopbackTransport, NDIFClient, NDIFServer
+
+
+def _patch(lm, toks, remote):
+    with lm.trace(toks, remote=remote):
+        lm.layers[1].output[1, 3, :] = lm.layers[1].output[0, 2, :]
+        out = lm.output.save("out")
+    return out.value
+
+
+def rows() -> list[Row]:
+    out: list[Row] = []
+    suite = opt_suite()
+
+    # one shared NDIF server hosting every size (preloaded = paid once)
+    server = NDIFServer()
+    models = {}
+    for name, cfg in suite.items():
+        model, params = build(cfg)
+        server.host(cfg.name, model, params, policy="sequential")
+        models[name] = (cfg, model, params)
+
+    for name, (cfg, model, params) in models.items():
+        n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        toks = ioi_batch(cfg)
+
+        # --- 6a setup: HPC = init weights locally (disk-load stand-in)
+        def hpc_setup():
+            p = model.init(jax.random.key(1))
+            jax.block_until_ready(jax.tree.leaves(p)[0])
+
+        m_su, s_su = timeit(hpc_setup, n=3, warmup=1)
+        out.append(Row(f"fig6a/hpc_setup/{name}", m_su * 1e6,
+                       f"params={n_params}"))
+
+        # NDIF setup: client connects to the preloaded instance
+        def ndif_setup():
+            transport = LoopbackTransport(server.handle)
+            NDIFClient(transport, cfg.name)
+
+        m_ns, _ = timeit(ndif_setup, n=3, warmup=1)
+        out.append(Row(f"fig6a/ndif_setup/{name}", m_ns * 1e6,
+                       f"params={n_params}"))
+
+        # --- 6b runtime: local vs remote activation patching
+        lm_local = traced_lm(model, params)
+        _patch(lm_local, jnp.asarray(toks), remote=False)  # warm
+        m_l, _ = timeit(lambda: _patch(lm_local, jnp.asarray(toks), False), n=5)
+        out.append(Row(f"fig6b/local_patch/{name}", m_l * 1e6,
+                       f"params={n_params}"))
+
+        transport = LoopbackTransport(server.handle)
+        client = NDIFClient(transport, cfg.name)
+        lm_remote = traced_lm(model, None, backend=client)
+        _patch(lm_remote, toks, remote=True)  # warm (server compiles once)
+        m_r, _ = timeit(lambda: _patch(lm_remote, toks, True), n=5)
+        out.append(Row(
+            f"fig6b/remote_patch/{name}", m_r * 1e6,
+            f"params={n_params};overhead_us={1e6*(m_r-m_l):.0f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

@@ -1,0 +1,103 @@
+"""Paper Fig. 6c: NDIF vs Petals-style client-side interventions.
+
+Two protocols for the SAME experiment (patch the residual stream at layer L,
+report the last-token logit difference), measured in wire bytes + modeled
+transfer time on the paper's ~60 MB/s link + compute time:
+
+  petals_style — the client RECEIVES hidden states at layer L, modifies
+    locally, SENDS them back; the server resumes from layer L (implemented
+    faithfully: request 2 carries the modified states as a graph constant
+    written into the layer-L tap).  Wire cost ~ 2 × |hidden states|.
+  ndif_style   — ONE request carrying only the graph; the metric is computed
+    server-side; the reply is a scalar per row.  Wire cost ~ KBs.
+
+Also reproduces the "standard remote inference" panel where the two systems
+are comparable (both return final hidden states).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, build, ioi_batch, timeit
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving import LoopbackTransport, NDIFClient, NDIFServer
+
+LAYER = 4
+BANDWIDTH = 60e6  # paper's measured ~60 MB/s
+
+
+def rows() -> list[Row]:
+    cfg = R.get_config("paper-gpt-small")
+    model, params = build(cfg)
+    server = NDIFServer()
+    server.host(cfg.name, model, params, policy="sequential")
+    toks = ioi_batch(cfg)
+    out: list[Row] = []
+
+    # ---------------- standard remote inference (comparable) -------------
+    transport = LoopbackTransport(server.handle, bandwidth_bytes_per_s=BANDWIDTH)
+    client = NDIFClient(transport, cfg.name)
+    client.hidden_states(toks)  # warm
+    b0 = (transport.stats.bytes_sent, transport.stats.bytes_received)
+    m, _ = timeit(lambda: client.hidden_states(toks), n=3, warmup=0)
+    sent = (transport.stats.bytes_sent - b0[0]) / 3
+    recv = (transport.stats.bytes_received - b0[1]) / 3
+    xfer = (sent + recv) / BANDWIDTH
+    out.append(Row("fig6c/standard_inference", (m + xfer) * 1e6,
+                   f"bytes={int(sent+recv)};xfer_ms={xfer*1e3:.1f}"))
+
+    # ---------------- Petals-style intervention --------------------------
+    lm = traced_lm(model, None, backend=client)
+
+    def petals_style():
+        # request 1: download hidden states at layer L
+        with lm.trace(toks, remote=True):
+            h = lm.layers[LAYER].output.save("h")
+        h = np.asarray(h.value)
+        # local modification on the client
+        h[1, 6, :] = h[0, 5, :]
+        # request 2: upload modified states, resume, get logits back
+        with lm.trace(toks, remote=True) as tr:
+            lm.layers[LAYER].output = tr.constant(h)
+            logits = lm.output.save("logits")
+        lg = np.asarray(logits.value)
+        return lg[:, -1, 7] - lg[:, -1, 3]
+
+    petals_style()  # warm/compile
+    b0 = (transport.stats.bytes_sent, transport.stats.bytes_received)
+    m_p, _ = timeit(petals_style, n=3, warmup=0)
+    sent = (transport.stats.bytes_sent - b0[0]) / 3
+    recv = (transport.stats.bytes_received - b0[1]) / 3
+    xfer_p = (sent + recv) / BANDWIDTH
+    out.append(Row("fig6c/petals_style_patch", (m_p + xfer_p) * 1e6,
+                   f"bytes={int(sent+recv)};xfer_ms={xfer_p*1e3:.1f}"))
+
+    # ---------------- NDIF-style intervention ----------------------------
+    def ndif_style():
+        with lm.trace(toks, remote=True):
+            lm.layers[LAYER].output[1, 6, :] = lm.layers[LAYER].output[0, 5, :]
+            logits = lm.output
+            metric = (logits[:, -1, 7] - logits[:, -1, 3]).save("m")
+        return np.asarray(metric.value)
+
+    ndif_style()
+    b0 = (transport.stats.bytes_sent, transport.stats.bytes_received)
+    m_n, _ = timeit(ndif_style, n=3, warmup=0)
+    sent = (transport.stats.bytes_sent - b0[0]) / 3
+    recv = (transport.stats.bytes_received - b0[1]) / 3
+    xfer_n = (sent + recv) / BANDWIDTH
+    out.append(Row("fig6c/ndif_style_patch", (m_n + xfer_n) * 1e6,
+                   f"bytes={int(sent+recv)};xfer_ms={xfer_n*1e3:.1f}"))
+
+    # correctness: both protocols agree on the metric
+    np.testing.assert_allclose(petals_style(), ndif_style(), rtol=2e-4,
+                               atol=2e-4)
+    out.append(Row("fig6c/speedup", 0.0,
+                   f"ndif_over_petals={(m_p+xfer_p)/(m_n+xfer_n):.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

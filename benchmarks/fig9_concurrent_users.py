@@ -1,0 +1,65 @@
+"""Paper Fig. 9 (Appendix D.2): response time vs concurrent users.
+
+Simulates N users submitting random-layer activation requests in one burst
+(the paper's Code Example 9 workload).  Reproduces the paper's finding for
+SEQUENTIAL co-tenancy — median response time grows ~linearly with N — and
+adds the beyond-paper result: PARALLEL co-tenancy (batch-grouped execution,
+the paper's Appendix B.2 future work) flattens the curve.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, build
+from repro.core.graph import InterventionGraph, Ref
+from repro.models import registry as R
+from repro.serving import NDIFServer, Request
+
+
+def user_request(cfg, rng) -> Request:
+    g = InterventionGraph()
+    layer = int(rng.integers(0, cfg.n_layers))
+    t = g.add("tap_get", site="layers.output", layer=layer)
+    s = g.add("save", Ref(t.id))
+    g.mark_saved("acts", s)
+    seq = 24  # paper: prompts up to 24 tokens; fixed so requests batch-merge
+    toks = rng.integers(0, cfg.vocab_size, (1, seq)).astype(np.int32)
+    return Request(graph=g, batch={"tokens": toks})
+
+
+def rows() -> list[Row]:
+    cfg = R.get_config("paper-gpt-small")
+    model, params = build(cfg)
+    out: list[Row] = []
+    for policy in ("sequential", "parallel"):
+        server = NDIFServer()
+        server.host(cfg.name, model, params, policy=policy,
+                    max_batch_rows=128)
+        sched = server.schedulers[cfg.name]
+        for n_users in (1, 4, 16, 64):
+            # Warm pass: identical burst once, so the executable cache is hot
+            # (the paper measures warm, preloaded instances).
+            rng = np.random.default_rng(n_users)
+            for _ in range(n_users):
+                sched.submit(user_request(cfg, rng))
+            sched.drain()
+            # Measured pass: same burst composition, fresh tickets.
+            rng = np.random.default_rng(n_users)
+            tickets = [sched.submit(user_request(cfg, rng))
+                       for _ in range(n_users)]
+            sched.drain()
+            times = np.array([t.response_time for t in tickets])
+            out.append(Row(
+                f"fig9/{policy}/users_{n_users}",
+                float(np.median(times)) * 1e6,
+                f"p25={np.percentile(times,25)*1e3:.1f}ms;"
+                f"p75={np.percentile(times,75)*1e3:.1f}ms;"
+                f"max={times.max()*1e3:.1f}ms;"
+                f"executions={server.engines[cfg.name].stats.executions}",
+            ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

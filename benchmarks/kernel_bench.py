@@ -1,0 +1,66 @@
+"""Kernel-level microbenchmarks: Pallas-fallback (XLA chunked) attention and
+SSD vs their dense/sequential references on CPU, plus the roofline-relevant
+derived quantities (arithmetic intensity per variant).
+
+On TPU the pallas kernels replace the chunked path; on this CPU container we
+benchmark the XLA fallbacks (what the dry-run lowers) and verify the
+kernels in interpret mode for correctness only (interpret timing is
+meaningless).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, timeit
+from repro.models.common import attention, _ssd_chunked
+from repro.kernels import ref
+
+
+def rows() -> list[Row]:
+    out: list[Row] = []
+    B, S, K, G, hd = 2, 1024, 4, 2, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, K * G, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    flops = 4 * B * K * G * S * S * hd  # qk + pv
+
+    for impl in ("dense", "chunked"):
+        fn = jax.jit(lambda q, k, v, impl=impl: attention(
+            q, k, v, q_pos=pos, k_pos=pos, causal=True, impl=impl))
+        jax.block_until_ready(fn(q, k, v))
+        m, _ = timeit(lambda: jax.block_until_ready(fn(q, k, v)), n=5)
+        out.append(Row(f"kernel/attention_{impl}_S{S}", m * 1e6,
+                       f"gflops={flops/1e9:.1f};gflops_per_s={flops/m/1e9:.1f}"))
+
+    Bb, S2, H, P, N, chunk = 2, 2048, 8, 64, 64, 128
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (Bb, S2, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S2, H)))
+    A = jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    B_ = jax.random.normal(ks[3], (Bb, S2, N))
+    C = jax.random.normal(ks[4], (Bb, S2, N))
+    D = jnp.ones((H,))
+
+    ssd = jax.jit(lambda *a: _ssd_chunked(*a, chunk))
+    f = lambda: jax.block_until_ready(ssd(x, dt, A, B_, C, D)[0])
+    f()
+    m, _ = timeit(f, n=3)
+    out.append(Row(f"kernel/ssd_chunked_S{S2}", m * 1e6,
+                   f"chunk={chunk}"))
+
+    seq = jax.jit(ref.reference_ssd)
+    f2 = lambda: jax.block_until_ready(seq(x, dt, A, B_, C, D)[0])
+    f2()
+    m2, _ = timeit(f2, n=3)
+    out.append(Row(f"kernel/ssd_sequential_S{S2}", m2 * 1e6,
+                   f"chunked_speedup={m2/m:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

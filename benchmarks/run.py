@@ -1,0 +1,49 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: python -m benchmarks.run [--only substr]
+
+One module per paper table/figure:
+  table1_framework_overhead  -> paper Table 1
+  fig6_remote                -> paper Fig. 6a/6b + Table 2
+  fig6c_petals_comparison    -> paper Fig. 6c
+  fig9_concurrent_users      -> paper Fig. 9 (+ beyond-paper parallel mode)
+  kernel_bench               -> kernels/fallbacks microbench
+"""
+import argparse
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table1_framework_overhead",
+    "benchmarks.fig6_remote",
+    "benchmarks.fig6c_petals_comparison",
+    "benchmarks.fig9_concurrent_users",
+    "benchmarks.kernel_bench",
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    import importlib
+
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        try:
+            mod = importlib.import_module(mod_name)
+            for row in mod.rows():
+                print(row.csv(), flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(mod_name)
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

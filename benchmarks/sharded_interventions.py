@@ -1,0 +1,154 @@
+"""Beyond-paper ablation: SHARDED interventions vs the paper's DTensor
+gather (Appendix B.2: NDIF "converts DTensors to full tensors using
+torch.distributed gather operations, injects the full tensors into the
+intervention graph, and then re-shards").
+
+Here the intervention graph is compiled INTO the sharded program, so tap
+values keep the activation's sharding and no gather is needed.  This
+benchmark lowers a serve step with an interleaved graph (save + edit on a
+mid-layer output) twice on the production mesh:
+
+  sharded   — our default: tap values inherit shardings;
+  gathered  — paper-faithful: every tapped value is forced to full
+              replication at the tap (with_sharding_constraint P()) before
+              the graph runs, then re-constrained back.
+
+and reports the collective bytes of each compiled program.  Run inside the
+512-device environment:
+
+  PYTHONPATH=src python -m benchmarks.sharded_interventions
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import taps
+from repro.core.graph import InterventionGraph, Ref
+from repro.core.interleave import run_interleaved
+from repro.distributed import use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as R
+from repro.models.registry import batch_pspecs, fsdp_pspecs, input_specs
+from repro.roofline.hlo_cost import analyze_hlo
+
+import os as _os
+
+ARCH = _os.environ.get("ABLATION_ARCH", "qwen3-8b")
+LAYER = int(_os.environ.get("ABLATION_LAYER", "18"))
+# site to edit: the MLA latent for minicpm3 (a value torch hooks cannot
+# cleanly expose), the residual stream for everyone else
+SITE = ("layers.attn.kv_latent" if ARCH.startswith("minicpm3")
+        else "layers.output")
+
+
+def experiment_graph():
+    g = InterventionGraph()
+    t = g.add("tap_get", site=SITE, layer=LAYER)
+    v = g.add("mul", Ref(t.id), 1.5)
+    g.add("tap_set", Ref(v.id), site=SITE, layer=LAYER)
+    s = g.add("save", Ref(t.id))
+    g.mark_saved("acts", s)
+    o = g.add("tap_get", site="logits")
+    m = g.add("jnp.mean", Ref(o.id))
+    sm = g.add("save", Ref(m.id))
+    g.mark_saved("metric", sm)
+    return g
+
+
+class _GatherShim:
+    """Wraps the real InterleaveState, forcing replication at tap sites
+    (the paper's gather-before-intervene semantics)."""
+
+    def __init__(self, inner, mesh):
+        self.inner = inner
+        self.mesh = mesh
+
+    def on_site(self, name, value, layer=None):
+        key_sites = {n.site for n in self.inner.plan.graph.nodes
+                     if n.site is not None}
+        if name in key_sites:
+            rep = NamedSharding(self.mesh, P())
+            value = jax.tree.map(
+                lambda v: jax.lax.with_sharding_constraint(v, rep), value
+            )
+        return self.inner.on_site(name, value, layer)
+
+    def scan_collect_values(self):
+        return self.inner.scan_collect_values()
+
+    def deliver_scan(self, ys):
+        return self.inner.deliver_scan(ys)
+
+
+def lower_variant(gather: bool):
+    mesh = make_production_mesh()
+    cfg = R.get_config(ARCH)
+    model = R.build_model(ARCH, cfg)
+    shape = R.SHAPES["train_4k"]
+    specs = input_specs(cfg, shape, model=model)
+    del specs["labels"]
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    g = experiment_graph()
+    schedule = model.site_schedule("scan")
+    plan_order = list(schedule.order) + [("output", None)]
+    from repro.core.interleave import SiteSchedule
+
+    schedule = SiteSchedule(plan_order, schedule.scan_sites, schedule.n_layers)
+
+    def model_fn(p, batch):
+        out = model.forward(p, batch, mode="scan")["logits"]
+        return taps.site("output", out)
+
+    from repro.core.interleave import Interleaver, InterleaveState
+
+    plan = Interleaver(g, schedule, mode="scan")
+
+    def step(p, batch):
+        state = InterleaveState(plan)
+        st = _GatherShim(state, mesh) if gather else state
+        taps.push_state(st)
+        try:
+            out = model_fn(p, batch)
+        finally:
+            taps.pop_state()
+        state.finalize(include_grad_dependents=True)
+        return state.saves()
+
+    with use_mesh(mesh):
+        from repro.distributed import named_sharding
+
+        p_sh = jax.tree.map(
+            lambda s, v: named_sharding(mesh, s, tuple(v.shape)),
+            fsdp_pspecs(params_sds, mesh.devices.shape[-2]), params_sds,
+        )
+        b_sh = jax.tree.map(
+            lambda s, v: named_sharding(mesh, s, tuple(v.shape)),
+            batch_pspecs(specs), specs,
+        )
+        compiled = (
+            jax.jit(step, in_shardings=(p_sh, b_sh))
+            .lower(params_sds, specs)
+            .compile()
+        )
+    return analyze_hlo(compiled.as_text())
+
+
+def main():
+    print("variant,collective_GiB,bytes_TiB")
+    for gather in (False, True):
+        c = lower_variant(gather)
+        name = "gathered(paper B.2)" if gather else "sharded(ours)"
+        print(f"{name},{c.collective_bytes/2**30:.2f},"
+              f"{c.bytes_accessed/2**40:.2f}")
+
+
+if __name__ == "__main__":
+    main()

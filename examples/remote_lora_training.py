@@ -1,0 +1,54 @@
+"""Remote LoRA training (paper Code Example 5).
+
+    PYTHONPATH=src python examples/remote_lora_training.py
+
+The LoRA adapter IS an intervention graph — getters on a layer's input,
+trainable WA/WB graph inputs, a setter on the layer's output, and an
+in-graph loss. The client ships it once; the server differentiates the
+interleaved program w.r.t. WA/WB and runs Adam.  "The parameters are
+created remotely and never sent, only retrieved."
+"""
+import jax
+import numpy as np
+
+from repro.data.pipeline import DataConfig, synthetic_lm_data
+from repro.models import registry as R
+from repro.serving import LoopbackTransport, NDIFClient, NDIFServer
+from repro.serving.remote_train import lora_graph
+
+
+def main() -> None:
+    cfg = R.get_config("paper-gpt-small")
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host(cfg.name, model, params)
+    transport = LoopbackTransport(server.handle)
+    client = NDIFClient(transport, cfg.name)
+
+    data = next(synthetic_lm_data(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=24, batch_size=8)
+    ))
+
+    graph, init = lora_graph(
+        layer=cfg.n_layers - 2, d_model=cfg.d_model, rank=8,
+        vocab_size=cfg.vocab_size, alpha=2.0,
+    )
+    print(f"training rank-8 LoRA at layer {cfg.n_layers - 2} remotely ...")
+    res = client.train_module(
+        graph, {"tokens": data["tokens"]},
+        trainable=init, fixed_inputs={"labels": data["labels"]},
+        steps=60, lr=5e-3,
+    )
+    losses = res["losses"]
+    print(f"loss: {losses[0]:.4f} -> {losses[-1]:.4f} over {len(losses)} steps")
+    wa, wb = res["params"]["WA"], res["params"]["WB"]
+    print(f"retrieved adapters: WA{wa.shape} |WA|={np.linalg.norm(wa):.3f}, "
+          f"WB{wb.shape} |WB|={np.linalg.norm(wb):.3f}")
+    print(f"wire traffic: {transport.stats.bytes_sent} B up, "
+          f"{transport.stats.bytes_received} B down "
+          f"(model weights: 0 B — they never left the server)")
+
+
+if __name__ == "__main__":
+    main()

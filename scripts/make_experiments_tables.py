@@ -1,0 +1,56 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONL records.
+
+  PYTHONPATH=src python scripts/make_experiments_tables.py \
+      results/dryrun_single.jsonl  > results/table_single_baseline.md
+"""
+import json
+import sys
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) >= 100:
+        return f"{x:.0f}"
+    if abs(x) >= 1:
+        return f"{x:.{digits}g}"
+    return f"{x:.2e}"
+
+
+def main(path: str) -> None:
+    recs = [json.loads(l) for l in open(path)]
+    by = {}
+    for r in recs:
+        by[(r["arch"], r["shape"])] = r  # last record wins
+    print("| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+          "| dominant | useful ratio | MFU bound | temps (GiB/dev) | fits 16G |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(by.items()):
+        rl = r["roofline"]
+        ma = r.get("memory_analysis", {})
+        t = ma.get("temp_size_in_bytes", 0) / 2**30
+        args = ma.get("argument_size_in_bytes", 0) / 2**30
+        fits = "yes" if (t + args) <= 16.0 else f"NO ({t+args:.0f}G)"
+        print(
+            f"| {a} | {s} | {fmt(rl['t_compute_s'])} | {fmt(rl['t_memory_s'])}"
+            f" | {fmt(rl['t_collective_s'])} | {rl['dominant']}"
+            f" | {fmt(rl['useful_flops_ratio'], 2)}"
+            f" | {fmt(rl.get('mfu_bound'), 2)} | {t:.1f} | {fits} |"
+        )
+    print()
+    # dry-run summary block
+    print("| arch | shape | mesh | per-dev FLOPs | per-dev bytes "
+          "| collective bytes | compile (s) |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(by.items()):
+        print(
+            f"| {a} | {s} | {r['mesh']} | {fmt(r['flops'],3)} "
+            f"| {fmt(r['bytes_accessed'],3)} | {fmt(r['collective_bytes'],3)} "
+            f"| {r['compile_s']} |"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

@@ -1,0 +1,19 @@
+"""Llama-3.2-Vision-90B backbone — cross-attention image layers every 5th
+layer; ViT frontend stubbed (precomputed patch embeddings).
+[hf:meta-llama/Llama-3.2-11B-Vision]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    arch_type="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab_size=128256,
+    cross_attn_every=5,  # 20 cross-attention layers over 100 blocks
+    n_image_tokens=1601,
+    rope_theta=500_000.0,
+    source="[hf:meta-llama/Llama-3.2-11B-Vision]",
+)

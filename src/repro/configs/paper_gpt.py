@@ -1,0 +1,20 @@
+"""Paper-native small decoder (GPT-2-ish) used by the paper-claims
+benchmarks and examples — the models the paper itself intervenes on are
+dense decoders (GPT2-XL, Llama-3.1-8B, OPT suite)."""
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paper-gpt-small",
+    arch_type="dense",
+    n_layers=8,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=1024,
+    vocab_size=2048,
+    dtype=jnp.float32,
+    rope_theta=10000.0,
+    source="[paper §4: OPT/GPT2 family stand-in]",
+)

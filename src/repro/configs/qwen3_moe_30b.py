@@ -1,0 +1,20 @@
+"""Qwen3-MoE-30B-A3B — 128 experts, top-8 routing. [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    arch_type="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    moe_d_ff=768,
+    vocab_size=151936,
+    n_experts=128,
+    top_k=8,
+    qk_norm=True,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    source="[hf:Qwen/Qwen3-30B-A3B]",
+)

@@ -1,0 +1,18 @@
+"""SeamlessM4T-Large-v2 backbone — encoder-decoder; audio frontend stubbed
+(precomputed frame embeddings). [arXiv:2308.11596]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    arch_type="audio",
+    n_layers=24,
+    encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    n_source_frames=3750,  # ~5 minutes of audio after the conv frontend
+    rope_theta=10000.0,
+    source="[arXiv:2308.11596]",
+)

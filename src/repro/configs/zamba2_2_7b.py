@@ -1,0 +1,20 @@
+"""Zamba2-2.7B — Mamba2 backbone + shared attention blocks.
+[arXiv:2411.15242]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    arch_type="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    attn_kind="none",
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    shared_attn_every=6,  # 9 shared-block applications over 54 layers
+    source="[arXiv:2411.15242]",
+)

@@ -1,0 +1,56 @@
+"""The paper's primary contribution: intervention graphs in JAX.
+
+Public surface:
+  InterventionGraph, Node, Ref          — the IR (graph.py)
+  TracedModel, Tracer, Session, Envoy   — the NNsight-style API (tracer.py)
+  SiteSchedule, run_interleaved         — interleaving engine (interleave.py)
+  taps.site / taps.scan_outputs         — model-side tap points (taps.py)
+  dumps/loads, graph_to_json            — wire format (serialize.py)
+  merge_graphs / split_results          — parallel co-tenancy (batching.py)
+"""
+from repro.core.batching import MergedBatch, merge_graphs, split_results
+from repro.core.graph import (
+    GraphValidationError,
+    InterventionGraph,
+    Node,
+    Ref,
+)
+from repro.core.interleave import (
+    Interleaver,
+    InterleaveState,
+    SiteSchedule,
+    run_interleaved,
+)
+from repro.core.op_registry import OPS, register_op, resolve_op
+from repro.core.serialize import (
+    dumps,
+    graph_from_json,
+    graph_to_json,
+    loads,
+)
+from repro.core.tracer import Envoy, Session, TracedModel, Tracer
+
+__all__ = [
+    "GraphValidationError",
+    "InterventionGraph",
+    "Node",
+    "Ref",
+    "TracedModel",
+    "Tracer",
+    "Session",
+    "Envoy",
+    "SiteSchedule",
+    "Interleaver",
+    "InterleaveState",
+    "run_interleaved",
+    "OPS",
+    "register_op",
+    "resolve_op",
+    "dumps",
+    "loads",
+    "graph_to_json",
+    "graph_from_json",
+    "MergedBatch",
+    "merge_graphs",
+    "split_results",
+]

@@ -1,0 +1,133 @@
+"""Parallel co-tenancy: merge many users' intervention graphs into ONE
+forward pass (paper Appendix B.2 — listed there as future work; implemented
+here as a beyond-paper feature and benchmarked in fig9).
+
+Each request owns a contiguous group of batch rows.  The merger rewrites
+every getter into a batch-slice of the shared tap value and every setter into
+a ``dynamic_update_slice`` confined to the request's rows, so experiments are
+*structurally* isolated: a user's graph cannot read or write another user's
+rows, and the model weights are untouched (pure function).  This is the
+"extracts appropriate slices while preserving gradient propagation" design
+the paper sketches, realized with JAX functional updates.
+
+Limitations (documented, enforced):
+  * all requests must share non-batch input dims (the scheduler groups
+    compatible requests);
+  * requests using ``.grad`` are executed solo (cross-user losses would have
+    to be summed, entangling perturbation bookkeeping) — the scheduler falls
+    back to sequential co-tenancy for those, exactly the paper's baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.graph import InterventionGraph, Node, Ref, map_refs
+
+__all__ = ["MergedBatch", "merge_graphs", "split_results"]
+
+BATCH_AXIS = 0
+
+
+@dataclasses.dataclass
+class MergedBatch:
+    graph: InterventionGraph
+    row_slices: list[tuple[int, int]]  # (start, size) per request
+    save_prefixes: list[str]
+
+
+def merge_graphs(
+    graphs: list[InterventionGraph], batch_sizes: list[int]
+) -> MergedBatch:
+    if len(graphs) != len(batch_sizes):
+        raise ValueError("one batch size per graph required")
+    for g in graphs:
+        for n in g.nodes:
+            if n.op == "grad_get":
+                raise ValueError(
+                    "graphs using .grad cannot be batch-merged; "
+                    "schedule them sequentially"
+                )
+
+    merged = InterventionGraph()
+    # Per (site, layer): the pristine shared getter and the current
+    # (post-previous-setters) value node.
+    shared_get: dict[tuple[str | None, int | None], Node] = {}
+    current: dict[tuple[str | None, int | None], Node] = {}
+
+    starts: list[int] = []
+    acc = 0
+    for b in batch_sizes:
+        starts.append(acc)
+        acc += b
+
+    row_slices = []
+    prefixes = []
+    for r, (g, start, size) in enumerate(zip(graphs, starts, batch_sizes)):
+        row_slices.append((start, size))
+        prefix = f"r{r}"
+        prefixes.append(prefix)
+        idmap: dict[int, int] = {}
+
+        def remap(obj):
+            return map_refs(obj, lambda ref: Ref(idmap[ref.node_id]))
+
+        for n in g.nodes:
+            key = (n.site, n.layer)
+            if n.op == "tap_get":
+                if key not in shared_get:
+                    node = merged.add("tap_get", site=n.site, layer=n.layer)
+                    shared_get[key] = node
+                    current.setdefault(key, node)
+                sl = merged.add(
+                    "dynamic_slice_in_dim",
+                    Ref(shared_get[key].id),
+                    start,
+                    size,
+                    axis=BATCH_AXIS,
+                )
+                idmap[n.id] = sl.id
+            elif n.op == "tap_set":
+                if key not in current:
+                    node = merged.add("tap_get", site=n.site, layer=n.layer)
+                    shared_get.setdefault(key, node)
+                    current[key] = node
+                val_ref = remap(n.args[0])
+                upd = merged.add(
+                    "dynamic_update_slice_in_dim",
+                    Ref(current[key].id),
+                    val_ref,
+                    start,
+                    axis=BATCH_AXIS,
+                )
+                merged.add("tap_set", Ref(upd.id), site=n.site, layer=n.layer)
+                current[key] = upd
+                idmap[n.id] = upd.id
+            elif n.op == "input":
+                node = merged.add("input", f"{prefix}/{n.args[0]}")
+                idmap[n.id] = node.id
+            else:
+                node = merged.add(
+                    n.op,
+                    *remap(n.args),
+                    site=n.site,
+                    layer=n.layer,
+                    meta=dict(n.meta),
+                    **remap(n.kwargs),
+                )
+                idmap[n.id] = node.id
+
+        for name, nid in g.saves.items():
+            merged.saves[f"{prefix}/{name}"] = idmap[nid]
+
+    return MergedBatch(graph=merged, row_slices=row_slices, save_prefixes=prefixes)
+
+
+def split_results(
+    merged_saves: dict[str, object], batch: MergedBatch
+) -> list[dict[str, object]]:
+    out: list[dict[str, object]] = [dict() for _ in batch.save_prefixes]
+    for name, value in merged_saves.items():
+        prefix, _, rest = name.partition("/")
+        idx = batch.save_prefixes.index(prefix)
+        out[idx][rest] = value
+    return out

@@ -1,0 +1,229 @@
+"""Intervention graph IR — the paper's core data structure (§3.1).
+
+The paper formalizes an experiment as a bipartite computation graph
+``C' = (V', A', E')`` plus *getter* edges (model activation -> experiment op)
+and *setter* edges (experiment value -> model graph).  Here the IR is a flat
+list of :class:`Node` records; variable nodes are implicit (every apply node
+has exactly one output, the paper's Appendix E many-to-one form).  Getters are
+``tap_get`` nodes, setters are ``tap_set`` nodes; everything else is a pure op
+from the registry (:mod:`repro.core.op_registry`).
+
+Acyclicity is *by construction*: a node may only reference nodes with smaller
+ids, so node-id order is a topological order.  The paper's validity rule
+("no directed path from a setter's apply node back to a getter's variable
+node") becomes a *site-schedule* check: every node is assigned the earliest
+model tap site at which all of its dependencies are available, and a
+``tap_set`` at site S must be computable no later than S.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterator
+
+__all__ = [
+    "Ref",
+    "Node",
+    "InterventionGraph",
+    "GraphValidationError",
+    "PRE_SITE",
+    "POST_SITE",
+]
+
+# Pseudo-site indices used by the scheduler.
+PRE_SITE = -1      # available before the model runs (constants, inputs)
+POST_SITE = 1 << 30  # only available after the forward completes
+
+
+class GraphValidationError(ValueError):
+    """Raised when an intervention graph violates the paper's validity rules."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Ref:
+    """A reference to another node's output (a variable-node edge)."""
+
+    node_id: int
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"%{self.node_id}"
+
+
+@dataclasses.dataclass
+class Node:
+    """One apply node. ``op`` names an entry in the op registry or a protocol.
+
+    Protocol ops (executed by the interleaver, not the registry):
+      * ``tap_get``   — read the value at ``site``.
+      * ``tap_set``   — replace the value at ``site`` with ``args[0]``.
+      * ``input``     — a named experiment input provided at execution time.
+      * ``constant``  — a literal embedded in the graph (in ``args[0]``).
+      * ``save``      — pin ``args[0]`` as a user-visible result (LockProtocol).
+      * ``grad_get``  — read d(loss)/d(site value) (GradProtocol).
+      * ``log``       — record ``args[0]`` into the execution log.
+    """
+
+    id: int
+    op: str
+    args: tuple
+    kwargs: dict
+    site: str | None = None
+    layer: int | None = None  # for scan-mode per-layer sites
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def refs(self) -> Iterator[Ref]:
+        yield from _iter_refs(self.args)
+        yield from _iter_refs(tuple(self.kwargs.values()))
+
+
+def _iter_refs(obj: Any) -> Iterator[Ref]:
+    if isinstance(obj, Ref):
+        yield obj
+    elif isinstance(obj, (tuple, list)):
+        for item in obj:
+            yield from _iter_refs(item)
+    elif isinstance(obj, dict):
+        for item in obj.values():
+            yield from _iter_refs(item)
+
+
+def map_refs(obj: Any, fn: Callable[[Ref], Any]) -> Any:
+    """Structurally map ``fn`` over every Ref in a nested arg structure."""
+    if isinstance(obj, Ref):
+        return fn(obj)
+    if isinstance(obj, tuple):
+        return tuple(map_refs(o, fn) for o in obj)
+    if isinstance(obj, list):
+        return [map_refs(o, fn) for o in obj]
+    if isinstance(obj, dict):
+        return {k: map_refs(v, fn) for k, v in obj.items()}
+    return obj
+
+
+class InterventionGraph:
+    """A serializable experiment: nodes + saves, in topological id order."""
+
+    def __init__(self) -> None:
+        self.nodes: list[Node] = []
+        # save-name -> node id (the LockProtocol table).
+        self.saves: dict[str, int] = {}
+        # node id of the scalar loss for the backward pass (GradProtocol).
+        self.backward_loss: int | None = None
+
+    # ------------------------------------------------------------------ build
+    def add(
+        self,
+        op: str,
+        *args: Any,
+        site: str | None = None,
+        layer: int | None = None,
+        meta: dict | None = None,
+        **kwargs: Any,
+    ) -> Node:
+        for ref in _iter_refs(args):
+            self._check_ref(ref)
+        for ref in _iter_refs(tuple(kwargs.values())):
+            self._check_ref(ref)
+        node = Node(
+            id=len(self.nodes),
+            op=op,
+            args=args,
+            kwargs=kwargs,
+            site=site,
+            layer=layer,
+            meta=meta or {},
+        )
+        self.nodes.append(node)
+        return node
+
+    def _check_ref(self, ref: Ref) -> None:
+        if not 0 <= ref.node_id < len(self.nodes):
+            raise GraphValidationError(
+                f"reference to unknown node %{ref.node_id} "
+                f"(graph has {len(self.nodes)} nodes)"
+            )
+
+    def mark_saved(self, name: str, node: Node) -> None:
+        self.saves[name] = node.id
+
+    # ------------------------------------------------------------ inspection
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def node(self, node_id: int) -> Node:
+        return self.nodes[node_id]
+
+    def listeners(self) -> dict[int, list[int]]:
+        """node id -> ids of nodes that consume it (paper's listener count)."""
+        out: dict[int, list[int]] = {n.id: [] for n in self.nodes}
+        for n in self.nodes:
+            for ref in n.refs():
+                out[ref.node_id].append(n.id)
+        return out
+
+    def sites_used(self) -> set[str]:
+        return {n.site for n in self.nodes if n.site is not None}
+
+    # ------------------------------------------------------------ validation
+    def schedule(
+        self, site_order: list[tuple[str, int | None]]
+    ) -> dict[int, int]:
+        """Assign every node the earliest site index at which it can run.
+
+        ``site_order`` is the model's tap-site execution order as
+        ``(site_name, layer)`` keys (layer is None for non-layered sites).
+        Returns node id -> site index (PRE_SITE for pre-model, POST_SITE for
+        gradient values that only exist after the backward pass).
+        Raises GraphValidationError on the paper's setter-cycle rule.
+        """
+        site_index = {key: i for i, key in enumerate(site_order)}
+        ready: dict[int, int] = {}
+        for n in self.nodes:
+            key = (n.site, n.layer)
+            if n.op in ("tap_get", "grad_get"):
+                if key not in site_index:
+                    raise GraphValidationError(
+                        f"node %{n.id} taps unknown site {key!r}"
+                    )
+                # grad values only exist after the backward pass -> POST.
+                ready[n.id] = (
+                    site_index[key] if n.op == "tap_get" else POST_SITE
+                )
+            elif n.op in ("constant", "input"):
+                ready[n.id] = PRE_SITE
+            else:
+                dep_sites = [ready[r.node_id] for r in n.refs()]
+                ready[n.id] = max(dep_sites, default=PRE_SITE)
+            if n.op == "tap_set":
+                if key not in site_index:
+                    raise GraphValidationError(
+                        f"setter %{n.id} targets unknown site {key!r}"
+                    )
+                target = site_index[key]
+                if ready[n.id] > target:
+                    # The paper's acyclicity rule: a setter may not depend on
+                    # a value produced later in model execution.
+                    raise GraphValidationError(
+                        f"setter %{n.id} at site {key!r} (index {target}) "
+                        f"depends on values only ready at index {ready[n.id]}"
+                    )
+                ready[n.id] = target
+        return ready
+
+    def validate(self, site_order: list[tuple[str, int | None]]) -> None:
+        self.schedule(site_order)
+        for name, nid in self.saves.items():
+            if not 0 <= nid < len(self.nodes):
+                raise GraphValidationError(
+                    f"save {name!r} references unknown node %{nid}"
+                )
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        lines = [f"InterventionGraph({len(self.nodes)} nodes)"]
+        for n in self.nodes:
+            tag = f" @{n.site}" if n.site else ""
+            if n.layer is not None:
+                tag += f"[layer={n.layer}]"
+            lines.append(f"  %{n.id} = {n.op}{tag} {n.args!r}")
+        if self.saves:
+            lines.append(f"  saves: {self.saves}")
+        return "\n".join(lines)

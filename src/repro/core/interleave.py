@@ -1,0 +1,582 @@
+"""Interleaving: compile an intervention graph into a pure JAX function.
+
+This is the hardware adaptation of the paper's core mechanism (§3.1 and
+Appendix B.1).  The paper *interprets* the intervention graph at runtime from
+PyTorch module hooks; XLA programs cannot call back into Python, so here the
+graph is *executed at jit-trace time*: as the model function runs under
+``jax.jit`` tracing, every ``taps.site(...)`` call hands its abstract value to
+the :class:`InterleaveState`, which runs the graph segments scheduled at that
+site.  The result is ONE compiled XLA program containing both the model and
+the experiment — interventions fuse with model compute, inherit its sharding,
+and cost zero host round-trips (a strict improvement over eager hooks,
+measured in ``benchmarks/table1_framework_overhead.py``).
+
+Gradient support (the paper's GradProtocol) uses the *perturbation trick*:
+for every tapped value ``v`` with a ``.grad`` consumer we add a zeros
+perturbation ``v + p`` and differentiate the in-graph loss w.r.t. ``p``;
+``dL/dp == dL/dv`` and the whole thing stays jittable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import taps
+from repro.core.graph import (
+    POST_SITE,
+    PRE_SITE,
+    GraphValidationError,
+    InterventionGraph,
+    Node,
+    map_refs,
+)
+from repro.core.op_registry import resolve_op
+
+__all__ = ["SiteSchedule", "Interleaver", "InterleaveState", "run_interleaved"]
+
+
+@dataclasses.dataclass
+class SiteSchedule:
+    """A model's tap-site execution order.
+
+    ``order``      — full (name, layer) schedule, layer-expanded, in model
+                     execution order.  Used for validation and unrolled mode.
+    ``scan_sites`` — site names that live inside the ``lax.scan`` layer body
+                     (scan mode only; empty for unlayered models).
+    ``n_layers``   — number of scan iterations.
+    """
+
+    order: list[tuple[str, int | None]]
+    scan_sites: tuple[str, ...] = ()
+    n_layers: int | None = None
+
+    def index(self) -> dict[tuple[str, int | None], int]:
+        return {key: i for i, key in enumerate(self.order)}
+
+
+class Interleaver:
+    """Static plan: which graph nodes run where.  Reusable across calls."""
+
+    def __init__(
+        self,
+        graph: InterventionGraph,
+        schedule: SiteSchedule,
+        mode: str = "unrolled",
+    ) -> None:
+        assert mode in ("unrolled", "scan"), mode
+        self.graph = graph
+        self.schedule = schedule
+        self.mode = mode
+        self.ready = graph.schedule(schedule.order)
+        self.site_index = schedule.index()
+
+        self.getters_at: dict[tuple[str, int | None], list[Node]] = {}
+        self.setters_at: dict[tuple[str, int | None], list[Node]] = {}
+        self.exec_at: dict[int, list[Node]] = {}
+        self.grad_nodes: list[Node] = []
+        self.post_nodes: list[Node] = []
+
+        scan_set = set(schedule.scan_sites) if mode == "scan" else set()
+        self.scan_getters: dict[str, list[Node]] = {}
+        self.scan_setters: dict[str, list[Node]] = {}
+
+        for n in graph.nodes:
+            if n.op == "tap_get":
+                if n.site in scan_set:
+                    self.scan_getters.setdefault(n.site, []).append(n)
+                else:
+                    self.getters_at.setdefault((n.site, n.layer), []).append(n)
+            elif n.op == "tap_set":
+                if n.site in scan_set:
+                    self.scan_setters.setdefault(n.site, []).append(n)
+                else:
+                    self.setters_at.setdefault((n.site, n.layer), []).append(n)
+            elif n.op == "grad_get":
+                self.grad_nodes.append(n)
+            elif n.op in ("constant", "input"):
+                pass  # bound by the state at start
+            else:
+                idx = self.ready[n.id]
+                if idx >= POST_SITE:
+                    self.post_nodes.append(n)
+                elif mode == "scan" and self._in_scan(idx, scan_set):
+                    pass  # handled below via setter closures / collection
+                else:
+                    self.exec_at.setdefault(idx, []).append(n)
+
+        # Scan mode: compute the transitive dependency closure of in-scan
+        # setters (those nodes execute inside the scan body); everything else
+        # that depends on in-scan getters executes post-scan from collected
+        # stacks.  Validate the same-iteration rule.
+        self.scan_exec: dict[str, list[Node]] = {}
+        self.collect_sites: tuple[str, ...] = ()
+        if mode == "scan":
+            self._plan_scan(scan_set)
+
+        # Which sites need gradient perturbations.
+        self.grad_keys: list[tuple[str, int | None]] = sorted(
+            {(n.site, n.layer) for n in self.grad_nodes},
+            key=lambda k: (k[0], -1 if k[1] is None else k[1]),
+        )
+        if self.grad_nodes and graph.backward_loss is None:
+            raise GraphValidationError(
+                ".grad was used but no backward loss was declared "
+                "(call tracer.backward(loss))"
+            )
+
+    # ------------------------------------------------------------------ scan
+    def _in_scan(self, idx: int, scan_set: set[str]) -> bool:
+        if idx in (PRE_SITE,) or idx >= POST_SITE:
+            return False
+        name, _layer = self.schedule.order[idx]
+        return name in scan_set
+
+    def _plan_scan(self, scan_set: set[str]) -> None:
+        by_id = {n.id: n for n in self.graph.nodes}
+        in_scan_getter_ids = {
+            g.id for gs in self.scan_getters.values() for g in gs
+        }
+
+        def transitive_deps(node: Node) -> set[int]:
+            out: set[int] = set()
+            stack = [r.node_id for r in node.refs()]
+            while stack:
+                nid = stack.pop()
+                if nid in out:
+                    continue
+                out.add(nid)
+                stack.extend(r.node_id for r in by_id[nid].refs())
+            return out
+
+        body_exec_ids: set[int] = set()
+        for site_name, setters in self.scan_setters.items():
+            for s in setters:
+                deps = transitive_deps(s)
+                for nid in deps & in_scan_getter_ids:
+                    g = by_id[nid]
+                    if g.layer != s.layer:
+                        raise GraphValidationError(
+                            f"scan mode: setter %{s.id} (layer {s.layer}) "
+                            f"depends on getter %{g.id} (layer {g.layer}); "
+                            "cross-layer data flow requires unrolled mode"
+                        )
+                for nid in deps:
+                    n = by_id[nid]
+                    if (
+                        n.op not in ("tap_get", "tap_set", "constant", "input")
+                        and self.ready[nid] != PRE_SITE
+                        and self._in_scan(self.ready[nid], scan_set)
+                    ):
+                        body_exec_ids.add(nid)
+
+        # Assign each in-body op node to the site at which it becomes ready.
+        for nid in sorted(body_exec_ids):
+            idx = self.ready[nid]
+            name, _ = self.schedule.order[idx]
+            self.scan_exec.setdefault(name, []).append(by_id[nid])
+
+        # Every in-scan getter's site is collected (stacked over layers) so
+        # post-scan consumers see all layers.
+        self.collect_sites = tuple(sorted(self.scan_getters.keys()))
+
+        # EVERY in-scan op node re-executes post-scan against the collected
+        # (stacked) getter values: setter-closure nodes ran in-body with
+        # iteration-local tracers that must not escape the scan, so their env
+        # entries are recomputed from the delivered stacks for any post-scan
+        # consumer (e.g. a .save() of a written-back value).
+        for n in self.graph.nodes:
+            idx = self.ready[n.id]
+            if (
+                n.op not in ("tap_get", "tap_set", "grad_get", "constant", "input")
+                and idx not in (PRE_SITE,)
+                and idx < POST_SITE
+                and self._in_scan(idx, scan_set)
+            ):
+                self.exec_at.setdefault(_POST_SCAN, []).append(n)
+
+    # ------------------------------------------------------------------ API
+    def has_interventions(self) -> bool:
+        return len(self.graph.nodes) > 0
+
+
+_POST_SCAN = POST_SITE - 1  # pseudo-index: runs right after scan delivery
+
+
+class InterleaveState:
+    """Per-execution runtime: env of node values, fired sites, logs."""
+
+    def __init__(
+        self,
+        plan: Interleaver,
+        inputs: dict[str, Any] | None = None,
+        perts: dict[Any, Any] | None = None,
+        const_env: dict[int, Any] | None = None,
+    ) -> None:
+        self.plan = plan
+        self.env: dict[int, Any] = {}
+        self.logs: list[tuple[int, Any]] = []
+        self.perts = perts or {}
+        self._scan_record: dict[str, Any] = {}
+        self._executed: set[int] = set()
+        inputs = inputs or {}
+        const_env = const_env or {}
+        for n in plan.graph.nodes:
+            if n.op == "constant":
+                # const_env lets the serving engine pass constant VALUES as
+                # runtime arguments so structurally-identical graphs share one
+                # compiled executable (no recompile per patched value).
+                self.env[n.id] = const_env.get(n.id, n.args[0])
+            elif n.op == "input":
+                name = n.args[0]
+                if name not in inputs:
+                    raise KeyError(f"experiment input {name!r} not provided")
+                self.env[n.id] = inputs[name]
+        # Pre-site ops (pure functions of constants/inputs) run up front.
+        for node in self.plan.exec_at.get(PRE_SITE, []):
+            self._exec_node(node)
+
+    # ------------------------------------------------------------- resolve
+    def _resolve(self, obj: Any) -> Any:
+        return map_refs(obj, lambda r: self.env[r.node_id])
+
+    def _exec_node(self, node: Node) -> None:
+        if node.id in self._executed:
+            return
+        self._executed.add(node.id)
+        args = self._resolve(node.args)
+        kwargs = self._resolve(node.kwargs)
+        if node.op == "save":
+            self.env[node.id] = args[0]
+        elif node.op == "log":
+            self.env[node.id] = args[0]
+            self.logs.append((node.id, args[0]))
+        else:
+            self.env[node.id] = resolve_op(node.op)(*args, **kwargs)
+
+    # ------------------------------------------------------------- on_site
+    def on_site(self, name: str, value: Any, layer: Any = None) -> Any:
+        plan = self.plan
+        if plan.mode == "scan" and name in plan.schedule.scan_sites:
+            return self._on_scan_site(name, value, layer)
+
+        key = (name, layer)
+        for g in plan.getters_at.get(key, []):
+            self.env[g.id] = value
+        if key in self.perts:
+            value = jax.tree.map(lambda v, p: v + p, value, self.perts[key])
+            for g in plan.getters_at.get(key, []):
+                self.env[g.id] = value
+        idx = plan.site_index.get(key)
+        if idx is None:
+            return value
+        for node in plan.exec_at.get(idx, []):
+            self._exec_node(node)
+        for s in plan.setters_at.get(key, []):
+            self._executed.add(s.id)
+            value = self._resolve(s.args)[0]
+            self.env[s.id] = value
+        return value
+
+    def _on_scan_site(self, name: str, value: Any, layer: Any) -> Any:
+        plan = self.plan
+        if name in self.perts:
+            # pert is stacked (n_layers, *shape): pick this iteration's slab.
+            pert = jax.tree.map(lambda p: p[layer], self.perts[name])
+            value = jax.tree.map(lambda v, p: v + p, value, pert)
+        if name in plan.collect_sites:
+            # grouped scan bodies (VLM super-layers, Zamba2 groups) fire a
+            # site several times per iteration: keep every fire, in order.
+            self._scan_record.setdefault(name, []).append(value)
+        for g in plan.scan_getters.get(name, []):
+            # Per-iteration symbolic binding; only same-layer setter closures
+            # consume it (validated), under a layer-index mask.
+            self.env[g.id] = value
+        for node in plan.scan_exec.get(name, []):
+            self._exec_node(node)
+            self._executed.discard(node.id)  # may re-run post-scan
+        for s in plan.scan_setters.get(name, []):
+            new = self._resolve(s.args)[0]
+            cond = jnp.asarray(layer == s.layer)
+            value = jax.tree.map(
+                lambda n_, v_: jnp.where(cond, n_, v_), new, value
+            )
+            self._executed.add(s.id)
+        return value
+
+    # -------------------------------------------------------- scan plumbing
+    def scan_collect_values(self) -> dict:
+        """Sites recorded THIS scan body (multi-scan models — e.g. an
+        encoder scan then a decoder scan — each collect their own sites)."""
+        out = {}
+        for name, fires in self._scan_record.items():
+            out[name] = (
+                fires[0] if len(fires) == 1
+                else jax.tree.map(lambda *xs: jnp.stack(xs), *fires)
+            )
+        self._scan_record = {}
+        return out
+
+    def _site_layers(self, name: str) -> list[int]:
+        return [l for (n, l) in self.plan.schedule.order if n == name]
+
+    def deliver_scan(self, ys: dict) -> None:
+        """Model calls this right after ``lax.scan`` with the stacked ys.
+
+        ys[name] is (n_iter, ...) for once-per-iteration sites or
+        (n_iter, fires_per_iter, ...) for grouped bodies; a getter's global
+        layer maps to (iteration, slot) via the site schedule."""
+        for name, stacked in ys.items():
+            getters = self.plan.scan_getters.get(name, [])
+            if not getters:
+                continue
+            layers = self._site_layers(name)
+            n_iter = jax.tree.leaves(stacked)[0].shape[0]
+            fires = max(len(layers) // max(n_iter, 1), 1)
+            for g in getters:
+                pos = layers.index(g.layer)
+                if fires == 1:
+                    self.env[g.id] = jax.tree.map(
+                        lambda s: s[pos], stacked
+                    )
+                else:
+                    self.env[g.id] = jax.tree.map(
+                        lambda s: s[pos // fires, pos % fires], stacked
+                    )
+        for node in self.plan.exec_at.get(_POST_SCAN, []):
+            # drop any iteration-local value computed inside the scan body
+            # and recompute from the collected stacks.  Multi-scan models
+            # (enc-dec) deliver per scan: skip nodes whose getters belong to
+            # a scan that has not run yet.
+            deps_ready = all(
+                r.node_id in self.env or
+                self.plan.graph.node(r.node_id).op in ("constant", "input")
+                for r in node.refs()
+            )
+            if not deps_ready:
+                continue
+            self._executed.discard(node.id)
+            self.env.pop(node.id, None)
+            self._exec_node(node)
+
+    # ------------------------------------------------------------- finalize
+    def finalize(self, include_grad_dependents: bool = False) -> None:
+        """Execute everything not yet run (post-output nodes)."""
+        grad_ids = {n.id for n in self.plan.grad_nodes}
+        closure = self._grad_dependent_ids() if not include_grad_dependents else set()
+        for node in self.plan.graph.nodes:
+            if node.id in self._executed or node.id in self.env:
+                continue
+            if node.op in ("tap_get", "tap_set", "grad_get"):
+                if node.id not in grad_ids:
+                    raise GraphValidationError(
+                        f"node %{node.id} taps site ({node.site!r}, "
+                        f"{node.layer}) which never fired during execution"
+                    )
+                continue
+            if node.id in closure:
+                continue  # needs gradients; the grad driver runs it later
+            self._exec_node(node)
+
+    def _grad_dependent_ids(self) -> set[int]:
+        grad_ids = {n.id for n in self.plan.grad_nodes}
+        out: set[int] = set()
+        for node in self.plan.graph.nodes:
+            deps = {r.node_id for r in node.refs()}
+            if deps & (grad_ids | out):
+                out.add(node.id)
+        return out
+
+    def saves(self) -> dict[str, Any]:
+        return {
+            name: self.env[nid]
+            for name, nid in self.plan.graph.saves.items()
+            if nid in self.env
+        }
+
+
+# ----------------------------------------------------------------- capture
+class _ShapeCaptureState:
+    """Minimal state used under jax.eval_shape to learn tap-site shapes."""
+
+    def __init__(self, keys: set[Any], scan_sites: set[str]) -> None:
+        self.keys = keys
+        self.scan_sites = scan_sites
+        self.shapes: dict[Any, Any] = {}
+
+    def on_site(self, name: str, value: Any, layer: Any = None) -> Any:
+        spec = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(jnp.shape(v), jnp.result_type(v)),
+            value,
+        )
+        if name in self.scan_sites:
+            if name in self.keys:
+                self.shapes[name] = spec
+        else:
+            key = (name, layer)
+            if key in self.keys:
+                self.shapes[key] = spec
+        return value
+
+    def scan_collect_values(self) -> dict:
+        return {}
+
+    def deliver_scan(self, ys: dict) -> None:  # pragma: no cover - trivial
+        pass
+
+
+def capture_site_shapes(
+    model_fn: Callable[..., Any],
+    args: tuple,
+    kwargs: dict,
+    keys: set[Any],
+    scan_sites: tuple[str, ...],
+) -> dict[Any, Any]:
+    cap = _ShapeCaptureState(keys, set(scan_sites))
+
+    def run(a, k):
+        taps.push_state(cap)  # type: ignore[arg-type]
+        try:
+            return model_fn(*a, **k)
+        finally:
+            taps.pop_state()
+
+    jax.eval_shape(run, args, kwargs)
+    missing = keys - set(cap.shapes)
+    if missing:
+        raise GraphValidationError(f"grad sites never fired: {missing}")
+    return cap.shapes
+
+
+# ------------------------------------------------------------------ driver
+def run_interleaved(
+    model_fn: Callable[..., Any],
+    graph: InterventionGraph,
+    schedule: SiteSchedule,
+    args: tuple = (),
+    kwargs: dict | None = None,
+    *,
+    mode: str = "unrolled",
+    inputs: dict[str, Any] | None = None,
+    const_env: dict[int, Any] | None = None,
+) -> tuple[Any, dict[str, Any], list[tuple[int, Any]]]:
+    """Run ``model_fn(*args, **kwargs)`` with ``graph`` interleaved.
+
+    Pure function of its inputs — safe to wrap in ``jax.jit`` (the serving
+    engine does).  Returns ``(model_output, saves, logs)``.
+    """
+    kwargs = kwargs or {}
+    plan = Interleaver(graph, schedule, mode=mode)
+
+    if not plan.grad_nodes:
+        state = InterleaveState(plan, inputs=inputs, const_env=const_env)
+        taps.push_state(state)
+        try:
+            out = model_fn(*args, **kwargs)
+        finally:
+            taps.pop_state()
+        state.finalize(include_grad_dependents=True)
+        return out, state.saves(), state.logs
+
+    # --- gradient path -----------------------------------------------------
+    if mode == "scan":
+        pert_keys = {k[0] for k in plan.grad_keys}  # site names
+    else:
+        pert_keys = set(plan.grad_keys)
+    shapes = capture_site_shapes(
+        model_fn, args, kwargs, pert_keys, schedule.scan_sites
+    )
+
+    def zeros_for(key: Any) -> Any:
+        spec = shapes[key]
+        if mode == "scan" and key in schedule.scan_sites:
+            n = schedule.n_layers
+            return jax.tree.map(
+                lambda s: jnp.zeros((n,) + tuple(s.shape), s.dtype), spec
+            )
+        return jax.tree.map(
+            lambda s: jnp.zeros(tuple(s.shape), s.dtype), spec
+        )
+
+    perts0 = {key: zeros_for(key) for key in pert_keys}
+    grad_dependents = Interleaver(graph, schedule, mode=mode)  # fresh plan
+
+    def fwd(perts):
+        state = InterleaveState(plan, inputs=inputs, perts=perts,
+                                const_env=const_env)
+        taps.push_state(state)
+        try:
+            out = model_fn(*args, **kwargs)
+        finally:
+            taps.pop_state()
+        state.finalize(include_grad_dependents=False)
+        loss = state.env[graph.backward_loss]
+        # Everything grad-dependent nodes will need, keyed by node id.
+        needed = _env_needed_post_grad(plan)
+        carried = {nid: state.env[nid] for nid in needed if nid in state.env}
+        return loss, (out, state.saves(), state.logs, carried)
+
+    (_loss, (out, saves, logs, carried)), grads = jax.value_and_grad(
+        fwd, has_aux=True
+    )(perts0)
+
+    # Bind grad_get nodes and run the remaining (grad-dependent) subgraph.
+    state = InterleaveState.__new__(InterleaveState)
+    state.plan = grad_dependents
+    state.env = dict(carried)
+    state.logs = list(logs)
+    state.perts = {}
+    state._scan_record = {}
+    state._executed = set(carried.keys())
+    for n in plan.grad_nodes:
+        if mode == "scan" and n.site in schedule.scan_sites:
+            g = jax.tree.map(lambda p: p[n.layer], grads[n.site])
+        else:
+            g = grads[(n.site, n.layer)]
+        state.env[n.id] = g
+        state._executed.add(n.id)
+    for n in graph.nodes:
+        if n.op == "constant":
+            state.env.setdefault(n.id, (const_env or {}).get(n.id, n.args[0]))
+        elif n.op == "input":
+            state.env.setdefault(n.id, (inputs or {})[n.args[0]])
+    dep_ids = _grad_dependent_closure(graph, {n.id for n in plan.grad_nodes})
+    for node in graph.nodes:
+        if node.id in dep_ids and node.id not in state._executed:
+            state._exec_node(node)
+    saves = dict(saves)
+    saves.update(
+        {
+            name: state.env[nid]
+            for name, nid in graph.saves.items()
+            if nid in state.env and name not in saves
+        }
+    )
+    return out, saves, state.logs
+
+
+def _grad_dependent_closure(
+    graph: InterventionGraph, grad_ids: set[int]
+) -> set[int]:
+    out: set[int] = set()
+    for node in graph.nodes:
+        deps = {r.node_id for r in node.refs()}
+        if deps & (grad_ids | out):
+            out.add(node.id)
+    return out
+
+
+def _env_needed_post_grad(plan: Interleaver) -> set[int]:
+    """Node ids whose values the post-grad subgraph reads from the fwd env."""
+    graph = plan.graph
+    grad_ids = {n.id for n in plan.grad_nodes}
+    closure = _grad_dependent_closure(graph, grad_ids)
+    needed: set[int] = set()
+    for node in graph.nodes:
+        if node.id in closure:
+            for r in node.refs():
+                if r.node_id not in closure and r.node_id not in grad_ids:
+                    needed.add(r.node_id)
+    return needed

@@ -1,0 +1,159 @@
+"""Registry of pure ops an intervention graph may contain.
+
+The paper wraps "all 217 fundamental PyTorch tensor operations"; the JAX
+analogue is this extensible table of pure jnp/lax functions.  Keeping ops in a
+closed, named registry is what makes graphs (a) serializable, (b) safe to run
+co-tenant (no arbitrary code execution, unlike Garçon — see paper §5), and
+(c) jittable, since every entry is a pure JAX function.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OPS", "register_op", "resolve_op", "update_path", "apply_path"]
+
+OPS: dict[str, Callable[..., Any]] = {}
+
+
+def register_op(name: str, fn: Callable[..., Any] | None = None):
+    """Register ``fn`` under ``name``. Usable as a decorator."""
+
+    def _inner(f: Callable[..., Any]) -> Callable[..., Any]:
+        if name in OPS:
+            raise ValueError(f"op {name!r} already registered")
+        OPS[name] = f
+        return f
+
+    if fn is not None:
+        return _inner(fn)
+    return _inner
+
+
+def resolve_op(name: str) -> Callable[..., Any]:
+    try:
+        return OPS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown intervention op {name!r}; register it with register_op"
+        ) from None
+
+
+# --------------------------------------------------------------------- paths
+def apply_path(value: Any, path: tuple) -> Any:
+    """Follow a chain of getitem keys into a (possibly pytree) value."""
+    for key in path:
+        value = value[key]
+    return value
+
+
+def update_path(value: Any, path: tuple, new: Any) -> Any:
+    """Functionally write ``new`` at ``path`` inside ``value``.
+
+    Arrays use ``.at[key].set``; tuples/lists are rebuilt.  This implements
+    the NNsight idiom ``layer.output[0][1, tok, :] = x`` without mutation.
+    """
+    if not path:
+        return new
+    key, rest = path[0], path[1:]
+    if isinstance(value, (tuple, list)):
+        if isinstance(key, int):
+            items = list(value)
+            items[key] = update_path(items[key], rest, new)
+            return type(value)(items)
+        raise TypeError(f"cannot index {type(value).__name__} with {key!r}")
+    # Array leaf: remaining path keys collapse into one .at index.
+    if rest:
+        inner = update_path(value[key], rest, new)
+        return value.at[key].set(inner)
+    return value.at[key].set(new)
+
+
+# ----------------------------------------------------------------- operators
+register_op("getitem", lambda x, k: x[k])
+register_op("update_path", update_path)
+register_op("apply_path", apply_path)
+
+register_op("add", lambda a, b: a + b)
+register_op("sub", lambda a, b: a - b)
+register_op("rsub", lambda a, b: b - a)
+register_op("mul", lambda a, b: a * b)
+register_op("truediv", lambda a, b: a / b)
+register_op("rtruediv", lambda a, b: b / a)
+register_op("floordiv", lambda a, b: a // b)
+register_op("mod", lambda a, b: a % b)
+register_op("pow", lambda a, b: a**b)
+register_op("matmul", lambda a, b: a @ b)
+register_op("rmatmul", lambda a, b: b @ a)
+register_op("neg", lambda a: -a)
+register_op("abs", lambda a: jnp.abs(a))
+register_op("eq", lambda a, b: a == b)
+register_op("ne", lambda a, b: a != b)
+register_op("lt", lambda a, b: a < b)
+register_op("le", lambda a, b: a <= b)
+register_op("gt", lambda a, b: a > b)
+register_op("ge", lambda a, b: a >= b)
+register_op("and", lambda a, b: a & b)
+register_op("or", lambda a, b: a | b)
+register_op("invert", lambda a: ~a)
+
+# ------------------------------------------------------------- jnp functions
+_JNP_FUNCS = [
+    "sum", "mean", "max", "min", "argmax", "argmin", "prod", "var", "std",
+    "exp", "log", "log2", "sqrt", "tanh", "sin", "cos", "sign",
+    "reshape", "transpose", "squeeze", "expand_dims", "ravel",
+    "concatenate", "stack", "split", "where", "clip", "take",
+    "zeros_like", "ones_like", "full_like", "broadcast_to",
+    "cumsum", "sort", "argsort", "flip", "roll", "tile", "repeat",
+    "maximum", "minimum", "dot", "einsum", "tensordot", "outer",
+    "isnan", "isinf", "allclose", "array_equal", "diag", "tril", "triu",
+    "linalg.norm",
+]
+for _name in _JNP_FUNCS:
+    _obj = jnp
+    for part in _name.split("."):
+        _obj = getattr(_obj, part)
+    register_op(f"jnp.{_name}", _obj)
+
+register_op("astype", lambda x, dtype: x.astype(dtype))
+register_op("topk", lambda x, k: jax.lax.top_k(x, k))
+register_op("softmax", jax.nn.softmax)
+register_op("log_softmax", jax.nn.log_softmax)
+register_op("relu", jax.nn.relu)
+register_op("gelu", jax.nn.gelu)
+register_op("silu", jax.nn.silu)
+register_op("sigmoid", jax.nn.sigmoid)
+register_op("one_hot", jax.nn.one_hot)
+register_op("stop_gradient", jax.lax.stop_gradient)
+register_op(
+    "dynamic_slice_in_dim",
+    lambda x, start, size, axis=0: jax.lax.dynamic_slice_in_dim(
+        x, start, size, axis
+    ),
+)
+register_op(
+    "dynamic_update_slice_in_dim",
+    lambda x, upd, start, axis=0: jax.lax.dynamic_update_slice_in_dim(
+        x, upd, start, axis
+    ),
+)
+
+# ------------------------------------------------------------------- metrics
+# Server-side metrics (the Fig. 6c win: return a scalar, not hidden states).
+register_op(
+    "logit_diff",
+    lambda logits, tok_a, tok_b: logits[..., tok_a] - logits[..., tok_b],
+)
+register_op(
+    "nll",
+    lambda logits, targets: -jnp.take_along_axis(
+        jax.nn.log_softmax(logits, axis=-1), targets[..., None], axis=-1
+    )[..., 0],
+)
+register_op(
+    "mse",
+    lambda a, b: jnp.mean((a - b) ** 2),
+)
+register_op("identity", lambda x: x)

@@ -1,0 +1,188 @@
+"""Deferred-execution proxies (the paper's Proxy/Node pair, §B.1).
+
+Every operation on a :class:`Proxy` appends a node to the active
+:class:`~repro.core.graph.InterventionGraph` and returns a new proxy — the
+same deferred-computation idiom deep-learning frameworks use for autodiff
+(paper §1).  A proxy additionally carries *provenance*: if it was derived from
+a tap site purely via ``getitem``, in-place writes (``p[idx] = v``) are
+rewritten into a functional ``update_path`` + ``tap_set`` pair, reproducing
+the NNsight idiom ``layer.output[0][1, tok, :] = x``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, TYPE_CHECKING
+
+from repro.core.graph import InterventionGraph, Node, Ref
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.tracer import Tracer
+
+__all__ = ["Proxy", "unwrap", "wrap_args"]
+
+
+def unwrap(obj: Any) -> Any:
+    """Proxy -> Ref; containers mapped structurally; literals unchanged."""
+    if isinstance(obj, Proxy):
+        return Ref(obj.node.id)
+    if isinstance(obj, tuple):
+        return tuple(unwrap(o) for o in obj)
+    if isinstance(obj, list):
+        return [unwrap(o) for o in obj]
+    if isinstance(obj, dict):
+        return {k: unwrap(v) for k, v in obj.items()}
+    return obj
+
+
+def wrap_args(args: tuple, kwargs: dict) -> tuple[tuple, dict]:
+    return unwrap(args), unwrap(kwargs)
+
+
+class Proxy:
+    """A handle on a future value inside a tracing context."""
+
+    # Make numpy defer to our reflected operators.
+    __array_priority__ = 1000
+
+    def __init__(
+        self,
+        tracer: "Tracer",
+        node: Node,
+        root_site: str | None = None,
+        root_layer: int | None = None,
+        path: tuple = (),
+    ) -> None:
+        self._tracer = tracer
+        self.node = node
+        # Provenance: set only while the proxy is a pure getitem-chain off a
+        # tap site, enabling write-back semantics.
+        self._root_site = root_site
+        self._root_layer = root_layer
+        self._path = path
+
+    # ------------------------------------------------------------- plumbing
+    @property
+    def graph(self) -> InterventionGraph:
+        return self._tracer.graph
+
+    def _emit(self, op: str, *args: Any, **kwargs: Any) -> "Proxy":
+        a, k = wrap_args(args, kwargs)
+        node = self.graph.add(op, *a, **k)
+        return Proxy(self._tracer, node)
+
+    # ------------------------------------------------------------ protocols
+    def save(self, name: str | None = None) -> "Proxy":
+        """LockProtocol: make this value available after execution."""
+        a, _ = wrap_args((self,), {})
+        node = self.graph.add("save", *a)
+        name = name or f"save_{node.id}"
+        self.graph.mark_saved(name, node)
+        saved = Proxy(self._tracer, node)
+        saved._save_name = name  # type: ignore[attr-defined]
+        self._tracer._register_save(name, saved)
+        return saved
+
+    @property
+    def value(self) -> Any:
+        """After execution, the concrete value of a saved proxy."""
+        name = getattr(self, "_save_name", None)
+        if name is None:
+            raise ValueError(
+                "only .save()d proxies expose .value after execution"
+            )
+        return self._tracer.result(name)
+
+    @property
+    def grad(self) -> "Proxy":
+        """GradProtocol: d(backward loss)/d(this tap value)."""
+        if self._root_site is None or self._path:
+            raise ValueError(
+                ".grad is only available directly on tap-site proxies"
+            )
+        node = self.graph.add(
+            "grad_get", site=self._root_site, layer=self._root_layer
+        )
+        return Proxy(self._tracer, node)
+
+    def log(self) -> "Proxy":
+        a, _ = wrap_args((self,), {})
+        return Proxy(self._tracer, self.graph.add("log", *a))
+
+    # -------------------------------------------------------------- getitem
+    def __getitem__(self, key: Any) -> "Proxy":
+        out = self._emit("getitem", self, key)
+        if self._root_site is not None:
+            out._root_site = self._root_site
+            out._root_layer = self._root_layer
+            out._path = self._path + (key,)
+        return out
+
+    def __setitem__(self, key: Any, val: Any) -> None:
+        if self._root_site is None:
+            raise ValueError(
+                "in-place writes are only supported on values derived from "
+                "a tap site by indexing (the write-back target is the site)"
+            )
+        self._tracer._write_back(
+            self._root_site, self._root_layer, self._path + (key,), val
+        )
+
+    # ------------------------------------------------------------ operators
+    def __add__(self, o): return self._emit("add", self, o)
+    def __radd__(self, o): return self._emit("add", o, self)
+    def __sub__(self, o): return self._emit("sub", self, o)
+    def __rsub__(self, o): return self._emit("rsub", self, o)
+    def __mul__(self, o): return self._emit("mul", self, o)
+    def __rmul__(self, o): return self._emit("mul", o, self)
+    def __truediv__(self, o): return self._emit("truediv", self, o)
+    def __rtruediv__(self, o): return self._emit("rtruediv", self, o)
+    def __floordiv__(self, o): return self._emit("floordiv", self, o)
+    def __mod__(self, o): return self._emit("mod", self, o)
+    def __pow__(self, o): return self._emit("pow", self, o)
+    def __matmul__(self, o): return self._emit("matmul", self, o)
+    def __rmatmul__(self, o): return self._emit("rmatmul", self, o)
+    def __neg__(self): return self._emit("neg", self)
+    def __abs__(self): return self._emit("abs", self)
+    def __eq__(self, o): return self._emit("eq", self, o)  # type: ignore[override]
+    def __ne__(self, o): return self._emit("ne", self, o)  # type: ignore[override]
+    def __lt__(self, o): return self._emit("lt", self, o)
+    def __le__(self, o): return self._emit("le", self, o)
+    def __gt__(self, o): return self._emit("gt", self, o)
+    def __ge__(self, o): return self._emit("ge", self, o)
+    def __invert__(self): return self._emit("invert", self)
+    def __and__(self, o): return self._emit("and", self, o)
+    def __or__(self, o): return self._emit("or", self, o)
+
+    __hash__ = object.__hash__  # __eq__ override would otherwise kill hashing
+
+    # ------------------------------------------------------- ndarray-likes
+    def astype(self, dtype) -> "Proxy":
+        return self._emit("astype", self, str(dtype))
+
+    def sum(self, axis=None, **kw): return self._emit("jnp.sum", self, axis=axis, **kw)
+    def mean(self, axis=None, **kw): return self._emit("jnp.mean", self, axis=axis, **kw)
+    def max(self, axis=None, **kw): return self._emit("jnp.max", self, axis=axis, **kw)
+    def min(self, axis=None, **kw): return self._emit("jnp.min", self, axis=axis, **kw)
+    def argmax(self, axis=None): return self._emit("jnp.argmax", self, axis=axis)
+    def argmin(self, axis=None): return self._emit("jnp.argmin", self, axis=axis)
+    def reshape(self, *shape): return self._emit("jnp.reshape", self, shape)
+    def squeeze(self, axis=None): return self._emit("jnp.squeeze", self, axis=axis)
+    def ravel(self): return self._emit("jnp.ravel", self)
+    def norm(self, axis=None): return self._emit("jnp.linalg.norm", self, axis=axis)
+
+    @property
+    def T(self) -> "Proxy":
+        return self._emit("jnp.transpose", self)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        src = f" from {self._root_site}{list(self._path)}" if self._root_site else ""
+        return f"<Proxy %{self.node.id} op={self.node.op}{src}>"
+
+
+def make_op_caller(tracer: "Tracer", op_name: str) -> Callable[..., Proxy]:
+    """An ``nnsight.apply``-style helper: call a registry op on proxies."""
+
+    def _call(*args: Any, **kwargs: Any) -> Proxy:
+        a, k = wrap_args(args, kwargs)
+        return Proxy(tracer, tracer.graph.add(op_name, *a, **k))
+
+    return _call

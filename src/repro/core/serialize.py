@@ -1,0 +1,174 @@
+"""JSON wire format for intervention graphs (§3.1: "stored in JSON format,
+version-controlled, optimized, and sent to or retrieved from remote systems").
+
+The format is self-describing and versioned.  Only data ever crosses the
+wire — ops are *names* resolved against the server's registry, which is what
+makes co-tenancy safe (no arbitrary code execution, unlike Garçon; paper §5).
+
+Encoding rules (chosen to be round-trip exact):
+  Ref            {"__ref__": id}
+  tuple          {"__tuple__": [...]}           (JSON arrays decode as lists)
+  slice          {"__slice__": [start, stop, step]}
+  Ellipsis       {"__ellipsis__": true}
+  ndarray        {"__array__": {"dtype", "shape", "b64"}}
+  np scalar      {"__scalar__": {"dtype", "value"}}
+  dtype          {"__dtype__": "float32"}
+  None/bool/int/float/str/list/dict   native JSON
+"""
+from __future__ import annotations
+
+import base64
+import json
+from typing import Any
+
+import numpy as np
+
+from repro.core.graph import InterventionGraph, Node, Ref
+
+__all__ = [
+    "encode_value",
+    "decode_value",
+    "graph_to_json",
+    "graph_from_json",
+    "dumps",
+    "loads",
+]
+
+WIRE_VERSION = 1
+
+
+def encode_value(obj: Any) -> Any:
+    if isinstance(obj, Ref):
+        return {"__ref__": obj.node_id}
+    if obj is Ellipsis:
+        return {"__ellipsis__": True}
+    if isinstance(obj, slice):
+        return {"__slice__": [obj.start, obj.stop, obj.step]}
+    if isinstance(obj, tuple):
+        return {"__tuple__": [encode_value(o) for o in obj]}
+    if isinstance(obj, list):
+        return [encode_value(o) for o in obj]
+    if isinstance(obj, dict):
+        return {str(k): encode_value(v) for k, v in obj.items()}
+    if isinstance(obj, np.dtype):
+        return {"__dtype__": obj.name}
+    if isinstance(obj, np.generic):
+        return {"__scalar__": {"dtype": obj.dtype.name, "value": obj.item()}}
+    if hasattr(obj, "__array__") and not isinstance(obj, (bool, int, float, str)):
+        arr = np.asarray(obj)
+        return {
+            "__array__": {
+                "dtype": arr.dtype.name,
+                "shape": list(arr.shape),
+                "b64": base64.b64encode(np.ascontiguousarray(arr).tobytes()).decode(
+                    "ascii"
+                ),
+            }
+        }
+    if obj is None or isinstance(obj, (bool, int, float, str)):
+        return obj
+    raise TypeError(f"cannot serialize {type(obj).__name__} into a graph")
+
+
+def decode_value(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if "__ref__" in obj:
+            return Ref(obj["__ref__"])
+        if "__ellipsis__" in obj:
+            return Ellipsis
+        if "__slice__" in obj:
+            s = obj["__slice__"]
+            return slice(s[0], s[1], s[2])
+        if "__tuple__" in obj:
+            return tuple(decode_value(o) for o in obj["__tuple__"])
+        if "__dtype__" in obj:
+            return np.dtype(obj["__dtype__"])
+        if "__scalar__" in obj:
+            d = obj["__scalar__"]
+            return np.dtype(d["dtype"]).type(d["value"])
+        if "__array__" in obj:
+            d = obj["__array__"]
+            data = base64.b64decode(d["b64"])
+            return np.frombuffer(data, dtype=np.dtype(d["dtype"])).reshape(
+                d["shape"]
+            ).copy()
+        return {k: decode_value(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [decode_value(o) for o in obj]
+    return obj
+
+
+def graph_to_json(graph: InterventionGraph) -> dict:
+    return {
+        "version": WIRE_VERSION,
+        "nodes": [
+            {
+                "id": n.id,
+                "op": n.op,
+                "args": encode_value(n.args),
+                "kwargs": encode_value(n.kwargs),
+                "site": n.site,
+                "layer": n.layer,
+                "meta": encode_value(n.meta),
+            }
+            for n in graph.nodes
+        ],
+        "saves": dict(graph.saves),
+        "backward_loss": graph.backward_loss,
+    }
+
+
+def graph_from_json(payload: dict) -> InterventionGraph:
+    if payload.get("version") != WIRE_VERSION:
+        raise ValueError(
+            f"unsupported wire version {payload.get('version')!r} "
+            f"(expected {WIRE_VERSION})"
+        )
+    graph = InterventionGraph()
+    for spec in payload["nodes"]:
+        node = Node(
+            id=spec["id"],
+            op=spec["op"],
+            args=tuple(decode_value(spec["args"])),
+            kwargs=decode_value(spec["kwargs"]),
+            site=spec.get("site"),
+            layer=spec.get("layer"),
+            meta=decode_value(spec.get("meta", {})),
+        )
+        if node.id != len(graph.nodes):
+            raise ValueError("node ids must be dense and ordered")
+        for ref in node.refs():
+            if not 0 <= ref.node_id < node.id:
+                raise ValueError(
+                    f"node %{node.id} references %{ref.node_id} (forward or "
+                    "dangling reference — graph is not topologically ordered)"
+                )
+        graph.nodes.append(node)
+    graph.saves = {str(k): int(v) for k, v in payload["saves"].items()}
+    graph.backward_loss = payload.get("backward_loss")
+    return graph
+
+
+def structural_key(graph: InterventionGraph) -> bytes:
+    """Graph identity with constant VALUES abstracted to (shape, dtype).
+
+    The serving engine keys its compile cache on this: two activation-patch
+    requests differing only in the patched values share one XLA executable.
+    """
+    payload = graph_to_json(graph)
+    for spec, node in zip(payload["nodes"], graph.nodes):
+        if node.op == "constant":
+            val = node.args[0]
+            arr = np.asarray(val)
+            spec["args"] = {
+                "__const_spec__": [arr.dtype.name, list(arr.shape)]
+            }
+    return json.dumps(payload, separators=(",", ":"), sort_keys=True).encode()
+
+
+def dumps(graph: InterventionGraph) -> bytes:
+    return json.dumps(graph_to_json(graph), separators=(",", ":")).encode()
+
+
+def loads(data: bytes) -> InterventionGraph:
+    return graph_from_json(json.loads(data.decode()))

@@ -1,0 +1,71 @@
+"""Tap sites — the JAX replacement for PyTorch module hooks.
+
+Models in this framework are pure functions that call ``taps.site(name, v)``
+wherever the paper's NNsight would expose a module ``.input``/``.output``.
+With no interleave state active the call is the identity (and costs nothing
+after XLA DCE).  During an interleaved execution it hands the value to the
+active :class:`~repro.core.interleave.InterleaveState`, which may read it
+(getters), replace it (setters), or record it for collection.
+
+Layered models come in two flavours:
+
+* **unrolled** — a Python loop over layers; ``layer=i`` is a concrete int.
+  Fully general interventions (any cross-layer data flow).
+* **scan** — ``jax.lax.scan`` over stacked layer params; ``layer`` is a traced
+  index.  Compile time is O(1) in depth (required for the 62–100 layer
+  production configs).  Interventions are supported with one restriction,
+  validated up front: a setter inside the scan may only consume getters from
+  the *same* layer iteration (plus anything available before the scan).
+  Per-layer getter values are emitted as stacked scan outputs
+  (``taps.scan_outputs()``) so post-scan nodes see every layer.
+"""
+from __future__ import annotations
+
+from typing import Any, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.interleave import InterleaveState
+
+__all__ = ["site", "scan_outputs", "push_state", "pop_state", "active_state"]
+
+_ACTIVE: list["InterleaveState | None"] = []
+
+
+def push_state(state: "InterleaveState | None") -> None:
+    _ACTIVE.append(state)
+
+
+def pop_state() -> None:
+    _ACTIVE.pop()
+
+
+def active_state() -> "InterleaveState | None":
+    return _ACTIVE[-1] if _ACTIVE else None
+
+
+def site(name: str, value: Any, layer: Any = None) -> Any:
+    """Declare a tap site. Returns ``value``, possibly intervened upon."""
+    state = active_state()
+    if state is None:
+        return value
+    return state.on_site(name, value, layer)
+
+
+def deliver_scan(ys: dict) -> None:
+    """Model calls this right after ``lax.scan`` with the stacked ys dict."""
+    state = active_state()
+    if state is not None:
+        state.deliver_scan(ys)
+
+
+def scan_outputs() -> dict:
+    """Inside a scan body: per-iteration site values the executor collects.
+
+    Models in scan mode must include this dict in their ``lax.scan`` ys.
+    The structure is static (derived from the intervention graph), so with no
+    interventions it is ``{}`` and the scan signature is unchanged.
+    """
+    state = active_state()
+    if state is None:
+        return {}
+    return state.scan_collect_values()

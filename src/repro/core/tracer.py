@@ -1,0 +1,407 @@
+"""The NNsight-style user API: tracing contexts and the Envoy tree (§3.2).
+
+Usage mirrors the paper's Figure 3b::
+
+    lm = TracedModel(model_fn, params, schedule, ...)
+    with lm.trace(tokens) as tracer:
+        lm.layers[16].mlp.output[:, -1, neurons] = 10.0
+        out = lm.output.save()
+    print(out.value)
+
+Exiting the context finalizes the intervention graph and executes it —
+locally, or remotely when ``remote=True`` (serialized and shipped to the NDIF
+server, paper §3.3).  ``scan=True`` validates shapes via ``jax.eval_shape``
+without running the model (the paper's FakeTensor scanning).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.graph import GraphValidationError, InterventionGraph, Node
+from repro.core.interleave import SiteSchedule, run_interleaved
+from repro.core.proxy import Proxy, make_op_caller, unwrap
+
+__all__ = ["Tracer", "Envoy", "TracedModel", "Session"]
+
+
+class Envoy:
+    """Attribute-path access to tap sites, mirroring the module tree.
+
+    Built from the model's declared site names: ``layers.mlp.output`` with
+    per-layer flag yields ``lm.layers[5].mlp.output``.
+    """
+
+    def __init__(
+        self,
+        tracer: "Tracer",
+        prefix: str,
+        layer: int | None,
+        site_names: set[str],
+        per_layer_prefixes: set[str],
+    ) -> None:
+        object.__setattr__(self, "_tracer", tracer)
+        object.__setattr__(self, "_prefix", prefix)
+        object.__setattr__(self, "_layer", layer)
+        object.__setattr__(self, "_site_names", site_names)
+        object.__setattr__(self, "_per_layer_prefixes", per_layer_prefixes)
+
+    def _child_path(self, name: str) -> str:
+        return f"{self._prefix}.{name}" if self._prefix else name
+
+    def __getattr__(self, name: str) -> Any:
+        if name.startswith("_"):
+            raise AttributeError(name)
+        path = self._child_path(name)
+        if path in self._site_names:
+            return self._tracer._tap_proxy(path, self._layer)
+        if any(s == path or s.startswith(path + ".") for s in self._site_names):
+            return Envoy(
+                self._tracer,
+                path,
+                self._layer,
+                self._site_names,
+                self._per_layer_prefixes,
+            )
+        raise AttributeError(
+            f"no tap site or module path {path!r}; "
+            f"available: {sorted(self._site_names)}"
+        )
+
+    def __getitem__(self, layer: int) -> "Envoy":
+        if self._prefix not in self._per_layer_prefixes:
+            raise TypeError(f"{self._prefix!r} is not a layered module path")
+        if not isinstance(layer, int):
+            raise TypeError("layer index must be a concrete int")
+        return Envoy(
+            self._tracer,
+            self._prefix,
+            layer,
+            self._site_names,
+            self._per_layer_prefixes,
+        )
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        path = self._child_path(name)
+        if path in self._site_names:
+            self._tracer._write_back(path, self._layer, (), value)
+            return
+        raise AttributeError(f"cannot assign to non-site path {path!r}")
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<Envoy {self._prefix!r} layer={self._layer}>"
+
+
+class Tracer:
+    """Builds one intervention graph inside a ``with`` block."""
+
+    def __init__(
+        self,
+        model: "TracedModel",
+        model_args: tuple,
+        model_kwargs: dict,
+        *,
+        remote: bool = False,
+        scan: bool = False,
+        mode: str | None = None,
+        backend: Any | None = None,
+        graph: InterventionGraph | None = None,
+    ) -> None:
+        self.model = model
+        self.model_args = model_args
+        self.model_kwargs = model_kwargs
+        self.remote = remote
+        self.scan = scan
+        self.mode = mode or model.default_mode
+        self.backend = backend
+        self.graph = graph if graph is not None else InterventionGraph()
+        self._results: dict[str, Any] | None = None
+        self._saved_proxies: dict[str, Proxy] = {}
+        self._current: dict[tuple[str, int | None], Node] = {}
+        self._deferred = False  # True when owned by a Session
+        self.logs: list[tuple[int, Any]] = []
+
+    # ------------------------------------------------------------- plumbing
+    def _tap_proxy(self, site: str, layer: int | None) -> Proxy:
+        key = (site, layer)
+        if key not in self._current:
+            node = self.graph.add("tap_get", site=site, layer=layer)
+            self._current[key] = node
+        node = self._current[key]
+        return Proxy(self, node, root_site=site, root_layer=layer)
+
+    def _write_back(
+        self, site: str, layer: int | None, path: tuple, value: Any
+    ) -> None:
+        key = (site, layer)
+        if path:
+            current = self._current.get(key)
+            if current is None:
+                current = self.graph.add("tap_get", site=site, layer=layer)
+                self._current[key] = current
+            new = self.graph.add(
+                "update_path", _ref(current), path, unwrap(value)
+            )
+        else:
+            new = _as_node(self, value)
+        self.graph.add("tap_set", _ref(new), site=site, layer=layer)
+        self._current[key] = new
+
+    def _register_save(self, name: str, proxy: Proxy) -> None:
+        self._saved_proxies[name] = proxy
+
+    # ------------------------------------------------------------ protocols
+    def apply(self, op_name: str) -> Callable[..., Proxy]:
+        """Call a registry op on proxies (the paper's ``nnsight.apply``)."""
+        return make_op_caller(self, op_name)
+
+    def constant(self, value: Any) -> Proxy:
+        value = np.asarray(value) if not np.isscalar(value) else value
+        return Proxy(self, self.graph.add("constant", value))
+
+    def input(self, name: str) -> Proxy:
+        """A named experiment input, bound at execution time."""
+        return Proxy(self, self.graph.add("input", name))
+
+    def backward(self, loss: Proxy) -> None:
+        """Declare the scalar loss for the backward pass (GradProtocol)."""
+        self.graph.backward_loss = loss.node.id
+
+    def log(self, value: Any) -> None:
+        node = _as_node(self, value)
+        self.graph.add("log", _ref(node))
+
+    # -------------------------------------------------------------- results
+    def result(self, name: str) -> Any:
+        if self._results is None:
+            raise RuntimeError(
+                "results are only available after the trace context exits"
+            )
+        return self._results[name]
+
+    @property
+    def results(self) -> dict[str, Any]:
+        if self._results is None:
+            raise RuntimeError("trace has not executed yet")
+        return dict(self._results)
+
+    # ------------------------------------------------------------- context
+    def __enter__(self) -> "Tracer":
+        self.model._push_tracer(self)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.model._pop_tracer()
+        if exc_type is not None:
+            return
+        if self.scan:
+            self.validate_shapes()
+        if self._deferred:
+            return
+        self.execute()
+
+    def validate_shapes(self) -> None:
+        """The paper's FakeTensor scan: eval_shape the interleaved program."""
+        jax.eval_shape(
+            lambda a, k: run_interleaved(
+                self.model.wrapped_fn,
+                self.graph,
+                self.model.schedule,
+                a,
+                k,
+                mode=self.mode,
+            ),
+            self.model_args,
+            self.model_kwargs,
+        )
+
+    def execute(self) -> dict[str, Any]:
+        if self.remote:
+            backend = self.backend or self.model.backend
+            if backend is None:
+                raise RuntimeError(
+                    "remote=True requires a backend (NDIF client); pass "
+                    "backend= or attach one to the model"
+                )
+            self._results = backend.execute(self)
+            return self._results
+        self.graph.validate(self.model.schedule.order)
+        out, saves, logs = run_interleaved(
+            self.model.wrapped_fn,
+            self.graph,
+            self.model.schedule,
+            self.model_args,
+            self.model_kwargs,
+            mode=self.mode,
+        )
+        self._results = saves
+        self.logs = logs
+        return saves
+
+
+def _ref(node: Node):
+    from repro.core.graph import Ref
+
+    return Ref(node.id)
+
+
+def _as_node(tracer: Tracer, value: Any) -> Node:
+    if isinstance(value, Proxy):
+        return value.node
+    value = np.asarray(value) if not np.isscalar(value) else value
+    return tracer.graph.add("constant", value)
+
+
+def _encode_path(path: tuple) -> tuple:
+    return path
+
+
+class TracedModel:
+    """Wraps a pure model function + params into the NNsight-like object.
+
+    ``model_fn(params, *inputs)`` must call ``taps.site`` at its tap points
+    and finish by returning its output; the wrapper adds the ``output`` site.
+    """
+
+    def __init__(
+        self,
+        model_fn: Callable[..., Any],
+        params: Any,
+        schedule: SiteSchedule,
+        *,
+        name: str = "model",
+        default_mode: str = "unrolled",
+        backend: Any | None = None,
+    ) -> None:
+        self.model_fn = model_fn
+        self.params = params
+        self.name = name
+        self.default_mode = default_mode
+        self.backend = backend
+        self._tracers: list[Tracer] = []
+        order = list(schedule.order)
+        if ("output", None) not in order:
+            order = order + [("output", None)]
+        self.schedule = SiteSchedule(
+            order=order,
+            scan_sites=schedule.scan_sites,
+            n_layers=schedule.n_layers,
+        )
+        self.site_names = {name for name, _ in self.schedule.order}
+        self.per_layer_prefixes = _layer_prefixes(
+            {name for name, layer in self.schedule.order if layer is not None}
+        )
+
+        def wrapped(params_, *args, **kwargs):
+            from repro.core import taps
+
+            out = model_fn(params_, *args, **kwargs)
+            return taps.site("output", out)
+
+        self._wrapped = wrapped
+
+    @property
+    def wrapped_fn(self) -> Callable[..., Any]:
+        return self._wrapped
+
+    # ------------------------------------------------------------- tracing
+    def trace(self, *args: Any, **kwargs: Any) -> Tracer:
+        remote = kwargs.pop("remote", False)
+        scan = kwargs.pop("scan", False)
+        mode = kwargs.pop("mode", None)
+        backend = kwargs.pop("backend", None)
+        return Tracer(
+            self,
+            (self.params,) + args,
+            kwargs,
+            remote=remote,
+            scan=scan,
+            mode=mode,
+            backend=backend,
+        )
+
+    def session(self, *, remote: bool = False, backend: Any | None = None):
+        return Session(self, remote=remote, backend=backend)
+
+    def _push_tracer(self, tracer: Tracer) -> None:
+        self._tracers.append(tracer)
+
+    def _pop_tracer(self) -> None:
+        self._tracers.pop()
+
+    @property
+    def _active(self) -> Tracer:
+        if not self._tracers:
+            raise RuntimeError(
+                "tap sites are only accessible inside a trace context"
+            )
+        return self._tracers[-1]
+
+    def __getattr__(self, name: str) -> Any:
+        if name.startswith("_") or name in type(self).__dict__:
+            raise AttributeError(name)
+        tracer = self._active
+        root = Envoy(
+            tracer, "", None, self.site_names, self.per_layer_prefixes
+        )
+        return getattr(root, name)
+
+
+def _layer_prefixes(per_layer_sites: set[str]) -> set[str]:
+    """Module-path prefixes that accept a [layer] index."""
+    out: set[str] = set()
+    for name in per_layer_sites:
+        parts = name.split(".")
+        # by convention the first segment of a per-layer site is the stack
+        # ("layers", "blocks", "encoder", ...)
+        out.add(parts[0])
+    return out
+
+
+class Session:
+    """The paper's Session context: several traces, one remote request.
+
+    Traces created inside a session are deferred; on session exit they
+    execute sequentially (locally) or ship as one request (remotely),
+    ``saves`` from earlier traces usable by later ones is out of scope —
+    each trace is self-contained, matching the paper's performance benefit
+    (one request, N traces).
+    """
+
+    def __init__(
+        self, model: TracedModel, *, remote: bool, backend: Any | None
+    ) -> None:
+        self.model = model
+        self.remote = remote
+        self.backend = backend or model.backend
+        self.tracers: list[Tracer] = []
+        self._active = False
+
+    def trace(self, *args: Any, **kwargs: Any) -> Tracer:
+        if not self._active:
+            raise RuntimeError("session is not active")
+        tracer = self.model.trace(*args, **kwargs)
+        tracer._deferred = True
+        self.tracers.append(tracer)
+        return tracer
+
+    def __enter__(self) -> "Session":
+        self._active = True
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self._active = False
+        if exc_type is not None:
+            return
+        if self.remote:
+            if self.backend is None:
+                raise RuntimeError("remote session requires a backend")
+            results = self.backend.execute_session(self)
+            for tracer, res in zip(self.tracers, results):
+                tracer._results = res
+        else:
+            for tracer in self.tracers:
+                tracer._deferred = False
+                tracer.execute()

@@ -1,0 +1,93 @@
+"""Mesh registry + sharding-constraint helpers.
+
+Models annotate activations with ``shard_hint(x, P(...))``.  When no mesh is
+active (CPU unit tests) the hint is the identity; under the production mesh
+(``launch/mesh.py``) it becomes ``with_sharding_constraint``.  Axis names not
+present in the active mesh are dropped, so the same model code serves the
+single-pod ("data","model") and multi-pod ("pod","data","model") meshes.
+
+Divisibility guard: a dimension is only sharded if the named axes divide it —
+otherwise the hint silently falls back to replication for that dim (e.g. 8 KV
+heads cannot shard over 16 model devices; the cache stays head-replicated and
+we shard batch instead — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "active_mesh",
+    "use_mesh",
+    "shard_hint",
+    "named_sharding",
+    "sanitize_spec",
+    "BATCH_AXES",
+    "MODEL_AXIS",
+]
+
+BATCH_AXES = ("pod", "data")  # batch shards over whichever of these exist
+MODEL_AXIS = "model"
+
+_MESH: list[Mesh | None] = []
+
+
+def active_mesh() -> Mesh | None:
+    return _MESH[-1] if _MESH else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None) -> Iterator[None]:
+    """Register the mesh for shard_hint. NamedSharding carries the mesh
+    explicitly, so no jax-level context is required."""
+    _MESH.append(mesh)
+    try:
+        yield
+    finally:
+        _MESH.pop()
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def sanitize_spec(spec: P, dim_sizes: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop unknown axes; drop shardings that do not divide the dim."""
+    sizes = _axis_sizes(mesh)
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = tuple(a for a in axes if a in sizes)
+        if not axes:
+            out.append(None)
+            continue
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if i < len(dim_sizes) and dim_sizes[i] % total != 0:
+            out.append(None)  # replicate rather than fail
+            continue
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def shard_hint(x: Any, spec: P) -> Any:
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    safe = sanitize_spec(spec, tuple(getattr(x, "shape", ())), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, safe))
+
+
+def named_sharding(
+    mesh: Mesh, spec: P, shape: tuple[int, ...] | None = None
+) -> NamedSharding:
+    if shape is not None:
+        spec = sanitize_spec(spec, shape, mesh)
+    return NamedSharding(mesh, spec)

@@ -1,0 +1,60 @@
+"""jit'd kernel wrappers with runtime-appropriate dispatch.
+
+On the CPU container the kernels execute in interpret mode (Python
+evaluation of the kernel body — correctness only); on TPU they compile to
+Mosaic.  ``repro.models.common`` calls these when
+``set_attention_impl("pallas")`` is active.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_kernel_call
+from repro.kernels.ssd_scan import ssd_scan_kernel_call
+
+__all__ = ["flash_attention", "ssd_scan", "interpret_mode"]
+
+
+def interpret_mode() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    qg: jax.Array,  # (B, S, K, G, hd) — grouped layout from models/common
+    k: jax.Array,   # (B, T, K, hd)
+    v: jax.Array,
+    *,
+    q_pos=None,
+    k_pos=None,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Returns (B, S, K, G, hd) to match the chunked/dense paths."""
+    B, S, K, G, hd = qg.shape
+    q = qg.transpose(0, 2, 3, 1, 4).reshape(B, K * G, S, hd)  # (B, H, S, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B, K, T, hd)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_kernel_call(
+        q, kt, vt, causal=causal, window=window, interpret=interpret_mode()
+    )
+    return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4)
+
+
+def ssd_scan(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,   # (H,)
+    B_: jax.Array,  # (B, S, N)
+    C: jax.Array,   # (B, S, N)
+    D: jax.Array,   # (H,)
+    chunk: int = 128,
+) -> tuple[jax.Array, jax.Array]:
+    return ssd_scan_kernel_call(
+        x, dt, A, B_, C, D, chunk=chunk, interpret=interpret_mode()
+    )

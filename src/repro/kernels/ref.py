@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["reference_attention", "reference_ssd"]
+
+NEG_INF = -1e30
+
+
+def reference_attention(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, K, T, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    K, T = k.shape[1], k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, K, G, S, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgsh,bkth->bkgst", qg, k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(T)[None, :]
+    d = q_pos - k_pos
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bkth->bkgsh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, hd).astype(q.dtype)
+
+
+def reference_ssd(
+    x: jax.Array,   # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (post-softplus)
+    A: jax.Array,   # (H,) decay rate > 0
+    B_: jax.Array,  # (B, S, N)
+    C: jax.Array,   # (B, S, N)
+    D: jax.Array,   # (H,)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential (exact) SSD recurrence — the slowest, clearest oracle.
+
+    h[t] = h[t-1]·exp(-dt[t]·A) + dt[t]·x[t]⊗B[t];  y[t] = C[t]·h[t] + D·x[t]
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, Pd = x.shape
+    N = B_.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(-dtt * A[None, :])  # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, bt
+        )
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B_.transpose(1, 0, 2).astype(jnp.float32),
+        C.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, h

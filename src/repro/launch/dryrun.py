@@ -1,0 +1,281 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+For each combination this builds the production mesh (16×16 single-pod or
+2×16×16 multi-pod), abstract params (``jax.eval_shape`` — zero allocation),
+ShapeDtypeStruct inputs, explicit in/out shardings, then::
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...).lower(...)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis(), compiled.cost_analysis())
+
+Sharding mismatches, compile-time OOM, or unsupported collectives here are
+bugs in the system.  Results (FLOPs, bytes, per-collective bytes) are dumped
+as JSON for the roofline analysis (EXPERIMENTS.md §Dry-run/§Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out f.json]
+"""
+__doc__ = _DOC
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import named_sharding, use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as R
+from repro.models.registry import (SHAPES, batch_pspecs, fsdp_pspecs,
+                                   input_specs, param_pspecs)
+from repro.roofline.analysis import roofline_report
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.training.optimizer import AdamWConfig, adamw
+from repro.training.train_loop import loss_fn
+
+
+def _shardings_like(tree_specs, tree_vals, mesh):
+    return jax.tree.map(
+        lambda spec, val: named_sharding(mesh, spec, tuple(val.shape)),
+        tree_specs,
+        tree_vals,
+    )
+
+
+def build_step(arch: str, shape_name: str, mesh, mode: str = "scan",
+               microbatch: int = 1, sharding: str = "fsdp"):
+    """Returns (step_fn, example_args (SDS), in_shardings, out_shardings).
+
+    sharding: "fsdp" (weights over data+model; default — required for the
+    90–110B archs to fit) or "tp" (weights over model only; §Perf H2 — kills
+    the per-token weight all-gathers in decode for archs that fit).
+    """
+    cfg = R.get_config(arch)
+    shape = SHAPES[shape_name]
+    model = R.build_model(arch, cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    data_size = mesh.devices.shape[-2]
+    if sharding == "tp":
+        pspecs = param_pspecs(params_sds)
+    else:
+        pspecs = fsdp_pspecs(params_sds, data_size)
+    p_shard = _shardings_like(pspecs, params_sds, mesh)
+
+    specs = input_specs(cfg, shape, model=model)
+
+    if shape.kind == "train":
+        opt_init, opt_update = adamw(AdamWConfig())
+        opt_sds = jax.eval_shape(opt_init, params_sds)
+        # moments mirror the FSDP param shardings (ZeRO falls out for free)
+        opt_shard = {
+            "step": named_sharding(mesh, jax.sharding.PartitionSpec()),
+            "mu": _shardings_like(fsdp_pspecs(opt_sds["mu"], data_size),
+                                  opt_sds["mu"], mesh),
+            "nu": _shardings_like(fsdp_pspecs(opt_sds["nu"], data_size),
+                                  opt_sds["nu"], mesh),
+        }
+
+        def step(state, batch):
+            if microbatch <= 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: loss_fn(model, p, batch, mode=mode, remat=True),
+                    has_aux=True,
+                )(state["params"])
+            else:
+                # gradient accumulation: peak activation memory / microbatch
+                mbs = jax.tree.map(
+                    lambda a: a.reshape((microbatch, a.shape[0] // microbatch)
+                                        + a.shape[1:]),
+                    batch,
+                )
+
+                def mb_step(acc, mb):
+                    g_acc, l_acc = acc
+                    (l, _m), g = jax.value_and_grad(
+                        lambda p: loss_fn(model, p, mb, mode=mode, remat=True),
+                        has_aux=True,
+                    )(state["params"])
+                    g_acc = jax.tree.map(jnp.add, g_acc, g)
+                    return (g_acc, l_acc + l), None
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), state["params"]
+                )
+                (grads, loss), _ = jax.lax.scan(
+                    mb_step, (zeros, jnp.zeros((), jnp.float32)), mbs
+                )
+                grads = jax.tree.map(lambda g: g / microbatch, grads)
+                loss = loss / microbatch
+            new_params, new_opt, om = opt_update(grads, state["opt"], state["params"])
+            return {"params": new_params, "opt": new_opt}, {"loss": loss, **om}
+
+        state_sds = {"params": params_sds, "opt": opt_sds}
+        state_shard = {"params": p_shard, "opt": opt_shard}
+        batch_shard = _shardings_like(batch_pspecs(specs), specs, mesh)
+        args = (state_sds, specs)
+        in_sh = (state_shard, batch_shard)
+        out_sh = (state_shard, None)
+        return step, args, in_sh, out_sh
+
+    if shape.kind == "prefill":
+        def step(params, batch):
+            out, cache = model.prefill(params, batch, mode=mode)
+            return out["logits"][:, -1, :], cache
+
+        batch_shard = _shardings_like(batch_pspecs(specs), specs, mesh)
+        args = (params_sds, specs)
+        in_sh = (p_shard, batch_shard)
+        return step, args, in_sh, None
+
+    # decode: ONE token against a seq-length cache.
+    kind = R.decode_cache_kind(cfg, shape)
+
+    def step(params, cache, token, pos):
+        out, new_cache = model.decode_step(
+            params, cache, {"token": token, "pos": pos}, mode=mode
+        )
+        return out["logits"], new_cache
+
+    cache_sds = specs["cache"]
+    cache_shard = _shardings_like(batch_pspecs(cache_sds), cache_sds, mesh)
+    tok_shard = named_sharding(
+        mesh, jax.sharding.PartitionSpec(("pod", "data"), None),
+        tuple(specs["token"].shape))
+    pos_shard = named_sharding(
+        mesh, jax.sharding.PartitionSpec(("pod", "data")),
+        tuple(specs["pos"].shape))
+    args = (params_sds, cache_sds, specs["token"], specs["pos"])
+    in_sh = (p_shard, cache_shard, tok_shard, pos_shard)
+    out_sh = (None, cache_shard)
+    return step, args, in_sh, out_sh
+
+
+def dryrun_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    mode: str = "scan",
+    verbose: bool = True,
+    microbatch: int = 1,
+    sharding: str = "fsdp",
+) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with use_mesh(mesh):
+        step, args, in_sh, out_sh = build_step(arch, shape_name, mesh, mode,
+                                               microbatch=microbatch,
+                                               sharding=sharding)
+        # decode: donate the KV cache (in-place update, as serving would)
+        donate = (1,) if SHAPES[shape_name].kind == "decode" else ()
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # XLA's cost_analysis counts while (scan) bodies ONCE; analyze_hlo
+    # multiplies by known_trip_count (and catches collectives inside scans).
+    hc = analyze_hlo(hlo)
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "microbatch": microbatch,
+        "sharding": sharding,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "multi_pod": multi_pod,
+        "n_chips": n_chips,
+        # per-device program costs (SPMD: compiled module is one partition)
+        "flops": float(hc.flops),
+        "bytes_accessed": float(hc.bytes_accessed),
+        "collective_bytes": float(hc.collective_bytes),
+        "collectives": {k: float(v) for k, v in hc.collective_by_kind.items()},
+        "unknown_trip_whiles": hc.unknown_trip_whiles,
+        "xla_raw_flops": float(cost.get("flops", 0.0)),
+        "xla_raw_bytes": float(cost.get("bytes accessed", 0.0)),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": _mem_dict(mem),
+    }
+    rec["roofline"] = roofline_report(rec, R.get_config(arch), SHAPES[shape_name])
+    if verbose:
+        print(json.dumps(rec, indent=2, default=str))
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        if hasattr(mem, k):
+            out[k] = int(getattr(mem, k))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=_DOC)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="scan", choices=["scan", "unrolled"])
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--sharding", default="fsdp", choices=["fsdp", "tp"])
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for arch in R.list_archs():
+            for shape in SHAPES:
+                combos.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        print(f"=== dry-run {arch} × {shape} "
+              f"({'multi-pod 2x16x16' if args.multi_pod else 'single-pod 16x16'}) ===",
+              flush=True)
+        try:
+            rec = dryrun_one(arch, shape, multi_pod=args.multi_pod,
+                             mode=args.mode, microbatch=args.microbatch,
+                             sharding=args.sharding)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec, default=str) + "\n")
+        except Exception:
+            traceback.print_exc()
+            failures.append((arch, shape))
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        return 1
+    print(f"all {len(combos)} dry-runs compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

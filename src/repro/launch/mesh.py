@@ -1,0 +1,36 @@
+"""Production mesh factory.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; everyone else sees
+the real single CPU device).
+
+Target hardware: TPU v5e pods — 16×16 = 256 chips per pod; the multi-pod
+configuration is 2 pods = 512 chips with a leading "pod" axis (DCN between
+pods, ICI within).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+class HW:
+    """TPU v5e per-chip constants used by the roofline (§Roofline)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+    HBM_BW = 819e9  # bytes/s
+    ICI_BW = 50e9  # bytes/s per link
+    HBM_BYTES = 16 * 1024**3
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """A 1x1 mesh over the real local device (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,733 @@
+"""Shared model blocks: norms, RoPE, attention variants, SwiGLU, MoE, Mamba2.
+
+Everything is a pure function of (params, inputs).  Attention has three
+execution strategies, all numerically equivalent:
+
+  * ``dense``   — materializes (S, T) scores; fine for short sequences.
+  * ``chunked`` — ``lax.scan`` over key blocks with online softmax; memory is
+    O(S · block) instead of O(S²).  This is the XLA-expressible flash
+    attention used for long-prefill dry-runs on any backend.
+  * Pallas flash kernel (``repro.kernels``) — the TPU target, selected via
+    ``set_attention_impl("pallas")``; validated against ``dense`` in tests.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import shard_hint
+from repro.models.config import MLAConfig, ModelConfig
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "init_linear",
+    "linear",
+    "attention",
+    "gqa_init",
+    "gqa_apply",
+    "mla_init",
+    "mla_apply",
+    "swiglu_init",
+    "swiglu_apply",
+    "moe_init",
+    "moe_apply",
+    "mamba2_init",
+    "mamba2_apply",
+    "mamba2_decode_step",
+    "set_attention_impl",
+    "get_attention_impl",
+]
+
+_ATTN_IMPL = ["auto"]  # auto | dense | chunked | pallas
+# §Perf H1.3–H1.5 (see EXPERIMENTS.md): three XLA attention strategies.
+#   dense     S<=2048:      one-shot scores.
+#   q-chunked 2048<S<=8192: scan over QUERY blocks against dense keys —
+#             each accumulator written once (no online-softmax rewrites),
+#             block scores ~0.5 GB f32 fit HBM.  KV-chunking at this size
+#             was tried both ways and rejected: 512-blocks pay 8x acc
+#             rewrites (10 TB traffic), 2048-blocks trigger pathological
+#             SPMD re-sharding (5.2 TB all-gather).
+#   kv-chunked S>8192:      online softmax over 512-key blocks (memory
+#             bound otherwise).  On TPU the Pallas flash kernel replaces
+#             all of this (accumulators never leave VMEM).
+_CHUNKED_THRESHOLD = 8192
+_DENSE_THRESHOLD = 2048
+_Q_BLOCK = 1024
+_KV_BLOCK = 512
+# Finite mask value: -inf would produce NaN via (-inf) - (-inf) in the
+# online-softmax update when a whole KV block is masked.
+NEG_INF = -1e30
+
+
+def set_attention_impl(impl: str) -> None:
+    assert impl in ("auto", "dense", "chunked", "pallas"), impl
+    _ATTN_IMPL[0] = impl
+
+
+def get_attention_impl() -> str:
+    return _ATTN_IMPL[0]
+
+
+# ------------------------------------------------------------------- basics
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, theta: float = 1_000_000.0
+) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [
+            x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin,
+            x2.astype(jnp.float32) * cos + x1.astype(jnp.float32) * sin,
+        ],
+        axis=-1,
+    )
+    return out.astype(x.dtype)
+
+
+def init_linear(
+    key: jax.Array, d_in: int, d_out: int, dtype: Any, bias: bool = False
+) -> dict:
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------- attention
+def _mask_bias(
+    q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int | None
+) -> jax.Array:
+    """(..., S, T) additive bias: 0 allowed / -inf masked."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _dense_attention(q, k, v, q_pos, k_pos, causal, window, scale):
+    # q: (B,S,K,G,hd)  k,v: (B,T,K,hd)
+    # Operands stay in their native dtype (bf16 on TPU) with fp32 MXU
+    # accumulation — upcasting K/V wholesale doubles the KV-cache HBM
+    # traffic and forced whole-cache convert+gather chains (§Perf H2.3).
+    logits = jnp.einsum(
+        "bskgh,btkh->bkgst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    bias = _mask_bias(q_pos, k_pos, causal, window)  # (B,S,T) or (S,T)
+    while bias.ndim < logits.ndim:
+        bias = bias[..., None, :, :] if bias.ndim >= 2 else bias
+    logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgst,btkh->bskgh", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(v.dtype)
+
+
+def _qchunked_attention(q, k, v, q_pos, k_pos, causal, window, scale):
+    """Scan over QUERY blocks against dense keys: accumulators written once
+    per block (unlike online softmax), scores bounded to (bq, T)."""
+    B, S, K, G, hd = q.shape
+    bq = min(_Q_BLOCK, S)
+    pad = (-S) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, [(0, 0)] * (q_pos.ndim - 1) + [(0, pad)],
+                        constant_values=jnp.iinfo(jnp.int32).max // 2)
+    n_blocks = q.shape[1] // bq
+    qb = jnp.moveaxis(
+        q.reshape(B, n_blocks, bq, K, G, hd), 1, 0
+    )  # (n, B, bq, K, G, hd)
+    qpb = jnp.moveaxis(q_pos.reshape(q_pos.shape[:-1] + (n_blocks, bq)), -2, 0)
+
+    def step(_, blk):
+        qc, qpc = blk
+        out = _dense_attention(qc, k, v, qpc, k_pos, causal, window, scale)
+        return None, out
+
+    _, outs = jax.lax.scan(step, None, (qb, qpb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n_blocks * bq, K, G, v.shape[-1])
+    return out[:, :S]
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window, scale):
+    """Online-softmax over key blocks (XLA flash attention)."""
+    B, S, K, G, hd = q.shape
+    hd_k, hd_v = k.shape[-1], v.shape[-1]  # MLA: qk and v head dims differ
+    T = k.shape[1]
+    block = min(_KV_BLOCK, T)
+    pad = (-T) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, [(0, 0)] * (k_pos.ndim - 1) + [(0, pad)],
+                        constant_values=jnp.iinfo(jnp.int32).max // 2)
+    n_blocks = k.shape[1] // block
+    kb = k.reshape(B, n_blocks, block, K, hd_k).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block, K, hd_v).transpose(1, 0, 2, 3, 4)
+    kpb = k_pos.reshape(k_pos.shape[:-1] + (n_blocks, block))
+    kpb = jnp.moveaxis(kpb, -2, 0)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, kpc = blk
+        logits = jnp.einsum(
+            "bskgh,btkh->bkgst", q, kc, preferred_element_type=jnp.float32
+        ) * scale
+        bias = _mask_bias(q_pos, kpc, causal, window)
+        while bias.ndim < logits.ndim:
+            bias = bias[..., None, :, :]
+        logits = logits + bias
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, S), jnp.float32)
+    acc0 = jnp.zeros((B, K, G, S, hd_v), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, kpb))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).astype(v.dtype)  # (B,S,K,G,hd)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    causal: bool = True,
+    window: int | None = None,
+    impl: str | None = None,
+) -> jax.Array:
+    """Grouped-query attention core.
+
+    q: (B, S, H, hd) with H = K·G; k, v: (B, T, K, hd).
+    Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, S, K, G, hd)
+    impl = impl or get_attention_impl()
+    if impl == "auto":
+        T = k.shape[1]
+        if T <= _DENSE_THRESHOLD:
+            impl = "dense"
+        elif T <= _CHUNKED_THRESHOLD:
+            impl = "qchunked"
+        else:
+            impl = "chunked"
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        out = kernel_ops.flash_attention(
+            qg, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal, window=window
+        )
+    elif impl == "chunked":
+        out = _chunked_attention(qg, k, v, q_pos, k_pos, causal, window, scale)
+    elif impl == "qchunked":
+        out = _qchunked_attention(qg, k, v, q_pos, k_pos, causal, window, scale)
+    else:
+        out = _dense_attention(qg, k, v, q_pos, k_pos, causal, window, scale)
+    # Output head dim follows V (MLA has asymmetric qk/v head dims).
+    return out.reshape(B, S, H, v.shape[-1])
+
+
+# --------------------------------------------------------------------- GQA
+def gqa_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, cfg.dtype, cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, cfg.dtype, cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, cfg.dtype, cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), cfg.dtype)
+        p["k_norm"] = jnp.ones((hd,), cfg.dtype)
+    return p
+
+
+def gqa_project_qkv(
+    p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = linear(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = linear(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = linear(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard_hint(q, P(("pod", "data"), None, "model", None))
+    k = shard_hint(k, P(("pod", "data"), None, "model", None))
+    return q, k, v
+
+
+def gqa_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    kv: tuple[jax.Array, jax.Array] | None = None,
+    kv_positions: jax.Array | None = None,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Self-attention (kv=None) or attention against provided K/V (decode)."""
+    B, S, _ = x.shape
+    q, k_new, v_new = gqa_project_qkv(p, x, cfg, positions)
+    if kv is None:
+        k, v, k_pos = k_new, v_new, positions
+    else:
+        k, v = kv
+        k_pos = kv_positions
+    out = attention(
+        q, k, v, q_pos=positions, k_pos=k_pos, causal=causal, window=window
+    )
+    out = linear(p["wo"], out.reshape(B, S, -1))
+    return shard_hint(out, P(("pod", "data"), None, None))
+
+
+# --------------------------------------------------------------------- MLA
+def mla_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    m = cfg.mla or MLAConfig()
+    d = cfg.d_model
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": init_linear(ks[0], d, m.q_lora_rank, cfg.dtype),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), cfg.dtype),
+        "wq_b": init_linear(ks[1], m.q_lora_rank, cfg.n_heads * qk_dim, cfg.dtype),
+        "wkv_a": init_linear(
+            ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, cfg.dtype
+        ),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), cfg.dtype),
+        "wkv_b": init_linear(
+            ks[3],
+            m.kv_lora_rank,
+            cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim),
+            cfg.dtype,
+        ),
+        "wo": init_linear(ks[4], cfg.n_heads * m.v_head_dim, d, cfg.dtype),
+    }
+
+
+def mla_latent(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """Compressed KV: returns (latent (B,S,r), k_rope (B,S,1,rope_dim))."""
+    m = cfg.mla or MLAConfig()
+    kv_a = linear(p["wkv_a"], x)
+    latent = rms_norm(kv_a[..., : m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., m.kv_lora_rank :][:, :, None, :]
+    k_rope = rope(k_rope, positions, cfg.rope_theta)
+    return latent, k_rope
+
+
+def mla_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cached: tuple[jax.Array, jax.Array] | None = None,
+    kv_positions: jax.Array | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    latent_tap=None,
+) -> jax.Array:
+    """Multi-head latent attention (MiniCPM3/DeepSeek-V2 family).
+
+    ``cached`` carries (latent, k_rope) for decode — the MLA cache is the
+    *compressed* latent, the family's reason to exist.
+    ``latent_tap`` lets the model expose the latent as an intervention site.
+    """
+    m = cfg.mla or MLAConfig()
+    B, S, _ = x.shape
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = linear(p["wq_b"], rms_norm(linear(p["wq_a"], x), p["q_a_norm"], cfg.norm_eps))
+    q = q.reshape(B, S, cfg.n_heads, qk_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    latent_new, k_rope_new = mla_latent(p, x, cfg, positions)
+    if latent_tap is not None:
+        latent_new = latent_tap(latent_new)
+    if cached is None:
+        latent, k_rope, k_pos = latent_new, k_rope_new, positions
+    else:
+        latent, k_rope = cached
+        k_pos = kv_positions
+
+    kv = linear(p["wkv_b"], latent).reshape(
+        B, -1, cfg.n_heads, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+        axis=-1,
+    )
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = attention(
+        qq, k, v, q_pos=positions, k_pos=k_pos, causal=causal, window=window
+    )
+    out = linear(p["wo"], out.reshape(B, S, -1))
+    return shard_hint(out, P(("pod", "data"), None, None))
+
+
+def mla_apply_absorbed(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    latent: jax.Array,   # (B, T, r) cached compressed KV
+    k_rope: jax.Array,   # (B, T, 1, rope_dim) cached
+    kv_positions: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """MLA decode with ABSORBED projections (§Perf H3; DeepSeek-V2 §2.1.2).
+
+    The naive decode re-expands the whole latent cache through W_UK/W_UV
+    every step — O(T·r·H·(d_nope+d_v)) FLOPs per token.  Folding W_UK into
+    the query and W_UV after the probs keeps attention entirely in the
+    compressed latent space: scores = (W_UKᵀ q_nope)·latent + q_rope·k_rope,
+    ctx = probs·latent — O(T·r·H), an (d_nope+d_v)/1 ≈ 128x FLOP cut, and
+    the cache is read exactly once.
+    """
+    m = cfg.mla or MLAConfig()
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = linear(p["wq_b"], rms_norm(linear(p["wq_a"], x), p["q_a_norm"], cfg.norm_eps))
+    q = q.reshape(B, S, H, qk_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    wkv = p["wkv_b"]["w"].reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim
+    )
+    wk = wkv[..., : m.qk_nope_head_dim]   # (r, H, nope)
+    wv = wkv[..., m.qk_nope_head_dim :]   # (r, H, v)
+
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk,
+                       preferred_element_type=jnp.float32).astype(latent.dtype)
+    scale = 1.0 / math.sqrt(qk_dim)
+    scores = jnp.einsum("bshr,btr->bhst", q_lat, latent,
+                        preferred_element_type=jnp.float32)
+    scores = scores + jnp.einsum(
+        "bshd,btd->bhst", q_rope, k_rope[:, :, 0, :],
+        preferred_element_type=jnp.float32,
+    )
+    scores = scores * scale
+    bias = _mask_bias(positions, kv_positions, True, window)  # (B,S,T)
+    scores = scores + bias[:, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs.astype(latent.dtype), latent,
+                     preferred_element_type=jnp.float32).astype(latent.dtype)
+    out = jnp.einsum("bshr,rhv->bshv", ctx, wv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = linear(p["wo"], out.reshape(B, S, H * m.v_head_dim))
+    return shard_hint(out, P(("pod", "data"), None, None))
+
+
+# ------------------------------------------------------------------- SwiGLU
+def swiglu_init(key: jax.Array, d: int, d_ff: int, dtype: Any) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": init_linear(ks[0], d, d_ff, dtype),
+        "wu": init_linear(ks[1], d, d_ff, dtype),
+        "wd": init_linear(ks[2], d_ff, d, dtype),
+    }
+
+
+def swiglu_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wu"], x)
+    h = shard_hint(h, P(("pod", "data"), None, "model"))
+    return linear(p["wd"], h)
+
+
+# ---------------------------------------------------------------------- MoE
+def moe_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+    return {
+        "router": init_linear(ks[0], d, e, jnp.float32),
+        "wg": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in).astype(cfg.dtype),
+        "wu": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale_in).astype(cfg.dtype),
+        "wd": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * scale_out).astype(cfg.dtype),
+    }
+
+
+def moe_apply(
+    p: dict, x: jax.Array, cfg: ModelConfig, router_tap=None
+) -> tuple[jax.Array, jax.Array]:
+    """Dropless top-k MoE via sort + ``lax.ragged_dot``.
+
+    Returns (output, router aux loss).  ``router_tap`` exposes router logits
+    as an intervention site (load-balance interventions, routing analysis).
+    """
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = linear(p["router"], xt.astype(jnp.float32))  # (T, E)
+    if router_tap is not None:
+        logits = router_tap(logits.reshape(B, S, e)).reshape(T, e)
+    weights, ids = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    # Aux load-balance loss (Switch-style).
+    probs = jax.nn.softmax(logits, axis=-1)
+    density = probs.mean(axis=0)
+    hard = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (T * k)
+    aux = e * jnp.sum(density * hard)
+
+    flat_ids = ids.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_ids)
+    token_of = order // k
+    xs = xt[token_of]  # (T*k, d) sorted by expert
+    group_sizes = jnp.bincount(flat_ids, length=e).astype(jnp.int32)
+
+    h = jax.nn.silu(jax.lax.ragged_dot(xs, p["wg"], group_sizes)) * jax.lax.ragged_dot(
+        xs, p["wu"], group_sizes
+    )
+    h = shard_hint(h, P(None, "model"))
+    ys = jax.lax.ragged_dot(h, p["wd"], group_sizes)  # (T*k, d)
+
+    # Un-sort and combine with routing weights.
+    inv = jnp.argsort(order)
+    y = ys[inv].reshape(T, k, d)
+    out = jnp.einsum("tkd,tk->td", y.astype(jnp.float32), weights)
+    return out.reshape(B, S, d).astype(x.dtype), aux
+
+
+# ------------------------------------------------------------------- Mamba2
+def mamba2_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], d, 2 * di + 2 * n + h, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, conv_ch), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv_width)).astype(cfg.dtype),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.ones((di,), cfg.dtype),
+        "out_proj": init_linear(ks[2], di, d, cfg.dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv along seq. x: (B,S,C), w: (W,C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(W)
+    )
+    return out + b
+
+
+def _ssd_chunked(x, dt, A, B_, C, D, chunk):
+    """Mamba2 SSD, chunked (state-space duality form, arXiv:2405.21060 §6).
+
+    x: (B,S,H,P)  dt: (B,S,H)  A: (H,) >0 decay rate  B_,C: (B,S,N)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, Pd = x.shape
+    N = B_.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S2 = x.shape[1]
+    nc = S2 // chunk
+    xc = x.reshape(Bb, nc, chunk, H, Pd)
+    dtc = dt.reshape(Bb, nc, chunk, H)
+    Bc = B_.reshape(Bb, nc, chunk, N)
+    Cc = C.reshape(Bb, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]  # (B,nc,L,H) decay exponents (>=0)
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative decay
+    # intra-chunk: y[s] = sum_{t<=s} C[s]·B[t] exp(-(cum[s]-cum[t])) dt[t] x[t]
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # Mask BEFORE exp: upper-triangle seg is negative, exp(-seg) would be
+    # inf — masked in the forward but 0·inf = NaN in the backward pass.
+    seg = jnp.where(tri[None, None, :, :, None], seg, 0.0)
+    decay = jnp.exp(-seg) * tri[None, None, :, :, None]
+    cb = jnp.einsum("bcln,bctn->bclt", Cc, Bc)  # (B,nc,L,L)
+    y_diag = jnp.einsum(
+        "bclt,bclth,bcth,bcthp->bclhp",
+        cb.astype(jnp.float32),
+        decay,
+        dtc.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )
+
+    # chunk states: state_c = sum_t B[t] exp(-(cum[L-1]-cum[t])) dt[t] x[t]
+    total = cum[:, :, -1, :]  # (B,nc,H)
+    tail = jnp.exp(-(total[:, :, None, :] - cum))  # (B,nc,L,H)
+    states = jnp.einsum(
+        "bctn,bcth,bcth,bcthp->bchpn",
+        Bc.astype(jnp.float32),
+        tail,
+        dtc.astype(jnp.float32),
+        xc.astype(jnp.float32),
+    )  # (B,nc,H,P,N)
+
+    # inter-chunk recurrence over nc chunks.
+    def step(prev, inp):
+        st, tot = inp  # (B,H,P,N), (B,H)
+        new = prev * jnp.exp(-tot)[:, :, None, None] + st
+        return new, prev
+
+    init = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    final, prevs = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    prevs = prevs.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N) state entering chunk
+
+    # off-diagonal: y_off[s] = C[s] · (exp(-cum[s]) * prev_state)
+    y_off = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp",
+        Cc.astype(jnp.float32),
+        jnp.exp(-cum),
+        prevs,
+    )
+    y = (y_diag + y_off).reshape(Bb, S2, H, Pd)[:, :S]
+    y = y + x[:, :S].astype(jnp.float32) * D[None, None, :, None]
+    return y, final
+
+
+def mamba2_apply(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    state_tap=None,
+    impl: str | None = None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Full-sequence Mamba2 block. Returns (out, (ssm_state, conv_tail))."""
+    B, S, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = linear(p["in_proj"], x)
+    z, xin, B_, C, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, B_, C], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xin, B_, C = jnp.split(conv, [di, di + n], axis=-1)
+    xin = shard_hint(xin, P(("pod", "data"), None, "model"))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+    xh = xin.reshape(B, S, h, cfg.ssm_head_dim)
+
+    impl = impl or ("pallas" if get_attention_impl() == "pallas" else "jnp")
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        y, final = kernel_ops.ssd_scan(xh, dt, A, B_, C, p["D"], cfg.ssm_chunk)
+    else:
+        y, final = _ssd_chunked(xh, dt, A, B_, C, p["D"], cfg.ssm_chunk)
+    if state_tap is not None:
+        final = state_tap(final)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(p["out_proj"], y)
+    conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):, :]
+    return shard_hint(out, P(("pod", "data"), None, None)), (
+        final.astype(jnp.float32),
+        conv_tail,
+    )
+
+
+def mamba2_decode_step(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    state: tuple[jax.Array, jax.Array],
+    *,
+    state_tap=None,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """One-token recurrent update. x: (B,1,d); state: (ssm (B,H,P,N), conv)."""
+    B, _, d = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ssm_state, conv_tail = state  # conv_tail: (B, W-1, C)
+    zxbcdt = linear(p["in_proj"], x)
+    z, xin, B_, C, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, B_, C], axis=-1)  # (B,1,C)
+    window = jnp.concatenate([conv_tail, conv_in], axis=1)  # (B,W,C)
+    conv = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    ).astype(x.dtype)[:, None, :]
+    xin, B_, C = jnp.split(conv, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = jnp.exp(p["A_log"])
+    xh = xin.reshape(B, h, cfg.ssm_head_dim).astype(jnp.float32)
+    decay = jnp.exp(-dt * A[None, :])  # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, xh, B_[:, 0].astype(jnp.float32))
+    new_state = ssm_state * decay[..., None, None] + upd
+    if state_tap is not None:
+        new_state = state_tap(new_state)
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), new_state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = linear(p["out_proj"], y)
+    return out, (new_state, window[:, 1:, :])

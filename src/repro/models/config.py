@@ -1,0 +1,179 @@
+"""Model configuration dataclass shared by every architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig", "MLAConfig", "reduce_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head latent attention dims (MiniCPM3 / DeepSeek-V2 style)."""
+
+    q_lora_rank: int = 768
+    kv_lora_rank: int = 256
+    qk_nope_head_dim: int = 64
+    qk_rope_head_dim: int = 32
+    v_head_dim: int = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: int | None = None  # default: d_model // n_heads
+    attn_kind: str = "gqa"  # gqa | mla | none
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    mla: MLAConfig | None = None
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden dim (0 -> use d_ff)
+
+    # SSM (Mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+
+    # hybrid (Zamba2): one shared attention block applied every k layers
+    shared_attn_every: int = 0
+
+    # VLM: a cross-attention (image) layer every k layers
+    cross_attn_every: int = 0
+    n_image_tokens: int = 1601  # ViT patch-embedding count (stubbed frontend)
+
+    # encoder-decoder (audio)
+    encoder_layers: int = 0
+    n_source_frames: int = 3750  # mel-frontend output length (stubbed)
+
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    tie_embeddings: bool = False
+
+    # serving
+    sliding_window: int = 8192  # used by the long-context decode path
+
+    # citations ([hf:...] / [arXiv:...] per the assignment table)
+    source: str = ""
+
+    # ------------------------------------------------------------- derived
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.n_heads == 0:  # attention-free (SSM)
+            return 0
+        return self.d_model // self.n_heads
+
+    @property
+    def expert_d_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba2 inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def active_params(self) -> int:
+        """Parameter count actually touched per token (MoE: top_k experts)."""
+        return _param_count(self, active_only=True)
+
+    def total_params(self) -> int:
+        return _param_count(self, active_only=False)
+
+
+def _param_count(cfg: ModelConfig, active_only: bool) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    emb = cfg.vocab_size * d * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0
+    if cfg.attn_kind == "gqa":
+        qkv = d * (cfg.n_heads * hd) + 2 * d * (cfg.n_kv_heads * hd)
+        o = cfg.n_heads * hd * d
+        per_layer += qkv + o
+    elif cfg.attn_kind == "mla":
+        m = cfg.mla or MLAConfig()
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        per_layer += d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk_dim
+        per_layer += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+        per_layer += m.kv_lora_rank * cfg.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+        per_layer += cfg.n_heads * m.v_head_dim * d
+    if cfg.arch_type in ("ssm", "hybrid"):
+        di, n = cfg.d_inner, cfg.ssm_state
+        g = cfg.ssm_heads
+        in_proj = d * (2 * di + 2 * n + g)
+        per_layer = in_proj + di * d + cfg.ssm_conv_width * (di + 2 * n)
+    if cfg.is_moe:
+        k = cfg.top_k if active_only else cfg.n_experts
+        per_layer += d * cfg.n_experts  # router
+        per_layer += k * 3 * d * cfg.expert_d_ff
+    elif cfg.d_ff:
+        per_layer += 3 * d * cfg.d_ff
+    n_layers = cfg.n_layers + cfg.encoder_layers
+    total = emb + n_layers * per_layer
+    if cfg.cross_attn_every:
+        n_cross = cfg.n_layers // cfg.cross_attn_every
+        qkv = d * (cfg.n_heads * hd) + 2 * d * (cfg.n_kv_heads * hd)
+        total += n_cross * (qkv + cfg.n_heads * hd * d)
+    if cfg.shared_attn_every:
+        qkv = 4 * d * (cfg.n_heads * cfg.hd)
+        total += qkv + 3 * (2 * d) * cfg.d_ff  # one shared block (2d wide)
+    return total
+
+
+def reduce_config(cfg: ModelConfig, **overrides: Any) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests (<=2 layers, d<=512)."""
+    small: dict[str, Any] = dict(
+        n_layers=2,
+        d_model=min(cfg.d_model, 128),
+        n_heads=min(cfg.n_heads, 4),
+        n_kv_heads=min(cfg.n_kv_heads, max(1, min(cfg.n_heads, 4) // 2)),
+        d_ff=min(cfg.d_ff, 256) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        head_dim=32 if cfg.head_dim else None,
+        dtype=jnp.float32,
+        n_source_frames=16,
+        n_image_tokens=8,
+    )
+    if cfg.is_moe:
+        small.update(n_experts=min(cfg.n_experts, 4), top_k=min(cfg.top_k, 2),
+                     moe_d_ff=min(cfg.expert_d_ff, 64))
+    if cfg.arch_type in ("ssm", "hybrid"):
+        small.update(ssm_state=min(cfg.ssm_state, 16), ssm_head_dim=32,
+                     ssm_chunk=8)
+    if cfg.encoder_layers:
+        small.update(encoder_layers=2)
+    if cfg.cross_attn_every:
+        small.update(cross_attn_every=2)
+    if cfg.shared_attn_every:
+        small.update(shared_attn_every=2)
+    if cfg.mla is not None:
+        small.update(
+            mla=MLAConfig(q_lora_rank=48, kv_lora_rank=32,
+                          qk_nope_head_dim=16, qk_rope_head_dim=8,
+                          v_head_dim=16)
+        )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,340 @@
+"""Seamless-M4T-style encoder-decoder for speech-to-text [arXiv:2308.11596].
+
+Per the assignment carve-out, the audio frontend (mel-spectrogram + conv
+feature extractor) is STUBBED: ``src_embeds`` arrives as precomputed frame
+embeddings of shape (B, n_source_frames, d_model).  This module implements
+the transformer backbone: a bidirectional encoder and a causal decoder with
+per-layer cross-attention.
+
+Tap sites: ``encoder.{input,attn.output,mlp.output,output}`` and
+``decoder.{input,attn.output,cross.output,mlp.output,output}`` per layer,
+plus ``src_embed``/``embed``/``final_norm``/``logits``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import taps
+from repro.core.interleave import SiteSchedule
+from repro.distributed import shard_hint
+from repro.models import common as C
+from repro.models.config import ModelConfig
+from repro.models.transformer import KVCache, _write_rows
+
+__all__ = ["EncDecModel"]
+
+ENC_SITES = ["encoder.input", "encoder.attn.output", "encoder.mlp.output",
+             "encoder.output"]
+DEC_SITES = ["decoder.input", "decoder.attn.output", "decoder.cross.output",
+             "decoder.mlp.output", "decoder.output"]
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder_layers > 0
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k_emb, k_enc, k_dec, k_out = jax.random.split(key, 4)
+
+        def enc_layer(k):
+            ka, kf = jax.random.split(k)
+            return {
+                "attn_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+                "attn": C.gqa_init(ka, cfg),
+                "mlp_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mlp": C.swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype),
+            }
+
+        def dec_layer(k):
+            ka, kc, kf = jax.random.split(k, 3)
+            return {
+                "attn_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+                "attn": C.gqa_init(ka, cfg),
+                "cross_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+                "cross": C.gqa_init(kc, cfg),
+                "mlp_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mlp": C.swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.dtype),
+            }
+
+        return {
+            "embed": (
+                jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02
+            ).astype(cfg.dtype),
+            "encoder": jax.vmap(enc_layer)(
+                jax.random.split(k_enc, cfg.encoder_layers)
+            ),
+            "enc_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+            "decoder": jax.vmap(dec_layer)(
+                jax.random.split(k_dec, cfg.n_layers)
+            ),
+            "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+            "lm_head": C.init_linear(k_out, cfg.d_model, cfg.vocab_size, cfg.dtype),
+        }
+
+    def site_schedule(self, mode: str = "unrolled") -> SiteSchedule:
+        cfg = self.cfg
+        order: list[tuple[str, int | None]] = [("src_embed", None)]
+        for i in range(cfg.encoder_layers):
+            order += [(n, i) for n in ENC_SITES]
+        order += [("enc_output", None), ("embed", None)]
+        for i in range(cfg.n_layers):
+            order += [(n, i) for n in DEC_SITES]
+        order += [("final_norm", None), ("logits", None)]
+        return SiteSchedule(
+            order=order,
+            scan_sites=tuple(ENC_SITES + DEC_SITES) if mode == "scan" else (),
+            n_layers=cfg.n_layers,
+        )
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params: dict, src_embeds: jax.Array, *, mode="scan",
+               remat: bool = False):
+        cfg = self.cfg
+        B, T, _ = src_embeds.shape
+        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        h = taps.site("src_embed", src_embeds.astype(cfg.dtype))
+        h = shard_hint(h, P(("pod", "data"), None, None))
+
+        def layer(p, h, idx):
+            h = taps.site("encoder.input", h, layer=idx)
+            h = shard_hint(h, P(("pod", "data"), "model", None))
+            x = C.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+            a = C.gqa_apply(p["attn"], x, cfg, positions, causal=False)
+            a = taps.site("encoder.attn.output", a, layer=idx)
+            h = h + a
+            x = C.rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+            mo = C.swiglu_apply(p["mlp"], x)
+            mo = taps.site("encoder.mlp.output", mo, layer=idx)
+            h = h + mo
+            return taps.site("encoder.output", h, layer=idx)
+
+        if mode == "unrolled":
+            for i in range(cfg.encoder_layers):
+                p = jax.tree.map(lambda a: a[i], params["encoder"])
+                h = layer(p, h, i)
+        else:
+            def body(h, inp):
+                p, idx = inp
+                return layer(p, h, idx), taps.scan_outputs()
+
+            if remat:
+                body = jax.checkpoint(body)
+            h, ys = jax.lax.scan(
+                body, h, (params["encoder"], jnp.arange(cfg.encoder_layers))
+            )
+            taps.deliver_scan(ys)
+        h = C.rms_norm(h, params["enc_norm"], cfg.norm_eps)
+        return taps.site("enc_output", h)
+
+    # --------------------------------------------------------------- decoder
+    def _dec_layer(self, p, h, positions, enc_out, enc_pos, idx, *,
+                   cache_l=None, kv_positions=None, slot=None,
+                   cross_kv=None, window=None, decode=False):
+        cfg = self.cfg
+        hd = cfg.hd
+        h = taps.site("decoder.input", h, layer=idx)
+        h = shard_hint(h, P(("pod", "data"), "model", None))
+        x = C.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+        B, S, _ = x.shape
+        new_l = None
+        if decode:
+            q, k_new, v_new = C.gqa_project_qkv(p["attn"], x, cfg, positions)
+            k = _write_rows(cache_l["k"], slot, k_new)
+            v = _write_rows(cache_l["v"], slot, v_new)
+            o = C.attention(q, k, v, q_pos=positions, k_pos=kv_positions,
+                            causal=True, window=window, impl="dense")
+            a = C.linear(p["attn"]["wo"], o.reshape(B, S, -1))
+            new_l = {"k": k, "v": v}
+        else:
+            a = C.gqa_apply(p["attn"], x, cfg, positions, window=window)
+        a = taps.site("decoder.attn.output", a, layer=idx)
+        h = h + a
+
+        x = C.rms_norm(h, p["cross_norm"], cfg.norm_eps)
+        q = C.linear(p["cross"]["wq"], x).reshape(B, S, cfg.n_heads, hd)
+        if cross_kv is None:
+            T = enc_out.shape[1]
+            ck = C.linear(p["cross"]["wk"], enc_out).reshape(
+                B, T, cfg.n_kv_heads, hd)
+            cv = C.linear(p["cross"]["wv"], enc_out).reshape(
+                B, T, cfg.n_kv_heads, hd)
+        else:
+            ck, cv = cross_kv
+        co = C.attention(q, ck, cv, q_pos=positions, k_pos=enc_pos,
+                         causal=False, impl="dense" if decode else None)
+        co = C.linear(p["cross"]["wo"], co.reshape(B, S, -1))
+        co = taps.site("decoder.cross.output", co, layer=idx)
+        h = h + co
+
+        x = C.rms_norm(h, p["mlp_norm"], cfg.norm_eps)
+        mo = C.swiglu_apply(p["mlp"], x)
+        mo = taps.site("decoder.mlp.output", mo, layer=idx)
+        h = h + mo
+        return taps.site("decoder.output", h, layer=idx), new_l
+
+    def forward(self, params: dict, batch: dict, *, mode: str = "scan",
+                remat: bool = False) -> dict:
+        """batch: src_embeds (B,T,d) + tokens (B,S)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeds"], mode=mode,
+                              remat=remat)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        T = enc_out.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        enc_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        h = params["embed"][tokens].astype(cfg.dtype)
+        h = taps.site("embed", h)
+
+        if mode == "unrolled":
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["decoder"])
+                h, _ = self._dec_layer(p, h, positions, enc_out, enc_pos, i)
+        else:
+            def body(h, inp):
+                p, idx = inp
+                h, _ = self._dec_layer(p, h, positions, enc_out, enc_pos, idx)
+                return h, taps.scan_outputs()
+
+            if remat:
+                body = jax.checkpoint(body)
+            h, ys = jax.lax.scan(
+                body, h, (params["decoder"], jnp.arange(cfg.n_layers))
+            )
+            taps.deliver_scan(ys)
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
+        logits = C.linear(params["lm_head"], h)
+        logits = shard_hint(logits, P(("pod", "data"), None, "model"))
+        logits = taps.site("logits", logits)
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, max_len: int, kind: str = "full"):
+        cfg = self.cfg
+        hd = cfg.hd
+        T = min(max_len, cfg.sliding_window) if kind == "window" else max_len
+        Ts = cfg.n_source_frames
+        data = {
+            "k": jnp.zeros((cfg.n_layers, batch_size, T, cfg.n_kv_heads, hd),
+                           cfg.dtype),
+            "v": jnp.zeros((cfg.n_layers, batch_size, T, cfg.n_kv_heads, hd),
+                           cfg.dtype),
+            "cross_k": jnp.zeros(
+                (cfg.n_layers, batch_size, Ts, cfg.n_kv_heads, hd), cfg.dtype),
+            "cross_v": jnp.zeros(
+                (cfg.n_layers, batch_size, Ts, cfg.n_kv_heads, hd), cfg.dtype),
+        }
+        big = jnp.iinfo(jnp.int32).max // 2
+        return KVCache(kind, data, jnp.full((batch_size, T), big, jnp.int32),
+                       jnp.zeros((batch_size,), jnp.int32))
+
+    def prefill(self, params, batch, *, mode="scan", kind="full", max_len=None):
+        """Encode source + teacher-force target prefix, filling caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeds"], mode=mode)
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_len = max_len or S
+        cache = self.init_cache(B, max_len, kind=kind)
+        T = cache.positions.shape[1]
+        Tsrc = enc_out.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        enc_pos = jnp.broadcast_to(jnp.arange(Tsrc), (B, Tsrc))
+        h = params["embed"][tokens].astype(cfg.dtype)
+
+        ks, vs, cks, cvs = [], [], [], []
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["decoder"])
+            x = C.rms_norm(h, p["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = C.gqa_project_qkv(p["attn"], x, cfg, positions)
+            ks.append(k_new)
+            vs.append(v_new)
+            cks.append(C.linear(p["cross"]["wk"], enc_out).reshape(
+                B, Tsrc, cfg.n_kv_heads, cfg.hd))
+            cvs.append(C.linear(p["cross"]["wv"], enc_out).reshape(
+                B, Tsrc, cfg.n_kv_heads, cfg.hd))
+            h, _ = self._dec_layer(p, h, positions, enc_out, enc_pos, i)
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = C.linear(params["lm_head"], h)
+
+        k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
+        if kind == "window" and S > T:
+            k_arr = jnp.roll(k_arr[:, :, -T:], S % T, axis=2)
+            v_arr = jnp.roll(v_arr[:, :, -T:], S % T, axis=2)
+            kept = jnp.roll(positions[:, -T:], S % T, axis=1)
+        else:
+            kept = positions
+        if kept.shape[1] < T:
+            pad = T - kept.shape[1]
+            k_arr = jnp.pad(k_arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v_arr = jnp.pad(v_arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            kept = jnp.pad(kept, ((0, 0), (0, pad)),
+                           constant_values=jnp.iinfo(jnp.int32).max // 2)
+        data = {"k": k_arr, "v": v_arr,
+                "cross_k": jnp.stack(cks), "cross_v": jnp.stack(cvs)}
+        new_cache = KVCache(kind, data, kept, jnp.full((B,), S, jnp.int32))
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, new_cache
+
+    def decode_step(self, params, cache, batch, *, mode: str = "scan"):
+        cfg = self.cfg
+        token, pos = batch["token"], batch["pos"]
+        B = token.shape[0]
+        positions = pos[:, None]
+        window = cfg.sliding_window if cache.kind == "window" else None
+        T = cache.positions.shape[1]
+        slot = pos % T if cache.kind == "window" else pos
+        new_positions = _write_rows(cache.positions, slot, pos[:, None])
+        Ts = cache.data["cross_k"].shape[2]
+        enc_pos = jnp.broadcast_to(jnp.arange(Ts), (B, Ts))
+        h = params["embed"][token].astype(cfg.dtype)
+        h = taps.site("embed", h)
+
+        if mode == "unrolled":
+            new_k, new_v = list(cache.data["k"]), list(cache.data["v"])
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["decoder"])
+                h, new_l = self._dec_layer(
+                    p, h, positions, None, enc_pos, i,
+                    cache_l={"k": cache.data["k"][i], "v": cache.data["v"][i]},
+                    kv_positions=new_positions, slot=slot,
+                    cross_kv=(cache.data["cross_k"][i], cache.data["cross_v"][i]),
+                    window=window, decode=True,
+                )
+                new_k[i], new_v[i] = new_l["k"], new_l["v"]
+            data = {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                    "cross_k": cache.data["cross_k"],
+                    "cross_v": cache.data["cross_v"]}
+        else:
+            def body(h, inp):
+                p, kc, vc, ck, cv, idx = inp
+                h, new_l = self._dec_layer(
+                    p, h, positions, None, enc_pos, idx,
+                    cache_l={"k": kc, "v": vc}, kv_positions=new_positions,
+                    slot=slot, cross_kv=(ck, cv), window=window, decode=True,
+                )
+                return h, {**taps.scan_outputs(), "__k__": new_l["k"],
+                           "__v__": new_l["v"]}
+
+            h, ys = jax.lax.scan(
+                body, h,
+                (params["decoder"], cache.data["k"], cache.data["v"],
+                 cache.data["cross_k"], cache.data["cross_v"],
+                 jnp.arange(cfg.n_layers)),
+            )
+            data = {"k": ys.pop("__k__"), "v": ys.pop("__v__"),
+                    "cross_k": cache.data["cross_k"],
+                    "cross_v": cache.data["cross_v"]}
+            taps.deliver_scan(ys)
+
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
+        logits = C.linear(params["lm_head"], h)
+        logits = taps.site("logits", logits)
+        new_cache = KVCache(cache.kind, data, new_positions, cache.length + 1)
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, new_cache

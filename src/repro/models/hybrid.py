@@ -1,0 +1,382 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block
+[arXiv:2411.15242].
+
+Every ``shared_attn_every`` Mamba2 layers, a *single shared* transformer
+block (attention + MLP over the concat of the residual stream and the
+original embedding, width 2·d) runs, with a distinct output projection per
+application point — the Zamba parameter-sharing trick.  Interventions can
+tap both the recurrent state (``layers.ssm_state``) and each shared-block
+application (``shared.attn.output`` with layer = application index).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import taps
+from repro.core.interleave import SiteSchedule
+from repro.distributed import shard_hint
+from repro.models import common as C
+from repro.models.config import ModelConfig
+from repro.models.transformer import KVCache, _write_rows
+
+__all__ = ["Zamba2Model"]
+
+
+class Zamba2Model:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.shared_attn_every > 0
+        self.cfg = cfg
+        self.n_apps = cfg.n_layers // cfg.shared_attn_every
+
+    @property
+    def _d2(self) -> int:
+        return 2 * self.cfg.d_model
+
+    @property
+    def _hd2(self) -> int:
+        return self._d2 // self.cfg.n_heads
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        d2, hd2 = self._d2, self._hd2
+        k_emb, k_layers, k_shared, k_out, k_proj = jax.random.split(key, 5)
+
+        def layer_init(k):
+            return {
+                "norm": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mixer": C.mamba2_init(k, cfg),
+            }
+
+        layers = jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers))
+        ks = jax.random.split(k_shared, 6)
+        shared = {
+            "attn_norm": jnp.ones((d2,), cfg.dtype),
+            "wq": C.init_linear(ks[0], d2, cfg.n_heads * hd2, cfg.dtype),
+            "wk": C.init_linear(ks[1], d2, cfg.n_kv_heads * hd2, cfg.dtype),
+            "wv": C.init_linear(ks[2], d2, cfg.n_kv_heads * hd2, cfg.dtype),
+            "wo": C.init_linear(ks[3], cfg.n_heads * hd2, d2, cfg.dtype),
+            "mlp_norm": jnp.ones((d2,), cfg.dtype),
+            "mlp": C.swiglu_init(ks[4], d2, cfg.d_ff, cfg.dtype),
+        }
+        out_proj = jax.vmap(
+            lambda k: C.init_linear(k, d2, cfg.d_model, cfg.dtype)
+        )(jax.random.split(k_proj, self.n_apps))
+        return {
+            "embed": (
+                jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02
+            ).astype(cfg.dtype),
+            "layers": layers,
+            "shared": shared,
+            "shared_out": out_proj,
+            "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+            "lm_head": C.init_linear(k_out, cfg.d_model, cfg.vocab_size, cfg.dtype),
+        }
+
+    # -------------------------------------------------------------- schedule
+    def site_schedule(self, mode: str = "unrolled") -> SiteSchedule:
+        cfg = self.cfg
+        mamba_sites = ["layers.input", "layers.ssm_state",
+                       "layers.mixer.output", "layers.output"]
+        shared_sites = ["shared.input", "shared.attn.output", "shared.output"]
+        order: list[tuple[str, int | None]] = [("embed", None)]
+        for i in range(cfg.n_layers):
+            order += [(n, i) for n in mamba_sites]
+            if (i + 1) % cfg.shared_attn_every == 0:
+                g = (i + 1) // cfg.shared_attn_every - 1
+                order += [(n, g) for n in shared_sites]
+        order += [("final_norm", None), ("logits", None)]
+        return SiteSchedule(
+            order=order,
+            scan_sites=tuple(mamba_sites + shared_sites) if mode == "scan" else (),
+            n_layers=cfg.n_layers // cfg.shared_attn_every,
+        )
+
+    # ---------------------------------------------------------------- blocks
+    def _mamba_layer(self, p, h, layer):
+        cfg = self.cfg
+        h = taps.site("layers.input", h, layer=layer)
+        h = shard_hint(h, P(("pod", "data"), "model", None))
+        x = C.rms_norm(h, p["norm"], cfg.norm_eps)
+        state_tap = lambda v: taps.site("layers.ssm_state", v, layer=layer)
+        out, state = C.mamba2_apply(p["mixer"], x, cfg, state_tap=state_tap)
+        out = taps.site("layers.mixer.output", out, layer=layer)
+        h = h + out
+        return taps.site("layers.output", h, layer=layer), state
+
+    def _shared_block(
+        self, params, h, h0, g, positions, *,
+        kv=None, kv_positions=None, window=None, slot=None, decode=False,
+    ):
+        """One application of the shared attention block.
+
+        kv: cache (k, v) arrays (B,T,K,hd2) to update at `slot` (decode) or
+        None (full-sequence self-attention).
+        Returns (h, new_kv).
+        """
+        cfg = self.cfg
+        d2, hd2 = self._d2, self._hd2
+        sp = params["shared"]
+        xcat = jnp.concatenate([h0, h], axis=-1)
+        xcat = taps.site("shared.input", xcat, layer=g)
+        x = C.rms_norm(xcat, sp["attn_norm"], cfg.norm_eps)
+        B, S, _ = x.shape
+        q = C.linear(sp["wq"], x).reshape(B, S, cfg.n_heads, hd2)
+        k_new = C.linear(sp["wk"], x).reshape(B, S, cfg.n_kv_heads, hd2)
+        v_new = C.linear(sp["wv"], x).reshape(B, S, cfg.n_kv_heads, hd2)
+        q = C.rope(q, positions, cfg.rope_theta)
+        k_new = C.rope(k_new, positions, cfg.rope_theta)
+        new_kv = None
+        if decode:
+            k = _write_rows(kv[0], slot, k_new)
+            v = _write_rows(kv[1], slot, v_new)
+            k_pos = kv_positions
+            new_kv = (k, v)
+        else:
+            k, v, k_pos = k_new, v_new, positions
+        out = C.attention(
+            q, k, v, q_pos=positions, k_pos=k_pos, causal=True, window=window,
+            impl="dense" if decode else None,
+        )
+        out = C.linear(sp["wo"], out.reshape(B, S, -1))
+        out = taps.site("shared.attn.output", out, layer=g)
+        y = xcat + out
+        x2 = C.rms_norm(y, sp["mlp_norm"], cfg.norm_eps)
+        y = y + C.swiglu_apply(sp["mlp"], x2)
+        op = jax.tree.map(lambda a: a[g], params["shared_out"])
+        delta = C.linear(op, y)
+        h = h + delta
+        return taps.site("shared.output", h, layer=g), new_kv
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch, *, mode: str = "scan",
+                window: int | None = None, remat: bool = False) -> dict:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = params["embed"][tokens].astype(cfg.dtype)
+        h = shard_hint(h, P(("pod", "data"), None, None))
+        h = taps.site("embed", h)
+        h0 = h
+        k_every = cfg.shared_attn_every
+
+        if mode == "unrolled":
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                h, _ = self._mamba_layer(p, h, i)
+                if (i + 1) % k_every == 0:
+                    g = (i + 1) // k_every - 1
+                    h, _ = self._shared_block(
+                        params, h, h0, g, positions, window=window
+                    )
+        else:
+            grouped = jax.tree.map(
+                lambda a: a.reshape((self.n_apps, k_every) + a.shape[1:]),
+                params["layers"],
+            )
+
+            def body(h, inp):
+                pg, g = inp
+                for j in range(k_every):
+                    p = jax.tree.map(lambda a: a[j], pg)
+                    h, _ = self._mamba_layer(p, h, g * k_every + j)
+                h, _ = self._shared_block(params, h, h0, g, positions,
+                                          window=window)
+                return h, taps.scan_outputs()
+
+            if remat:
+                body = jax.checkpoint(body)
+            h, ys = jax.lax.scan(body, h, (grouped, jnp.arange(self.n_apps)))
+            taps.deliver_scan(ys)
+
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
+        logits = C.linear(params["lm_head"], h)
+        logits = shard_hint(logits, P(("pod", "data"), None, "model"))
+        logits = taps.site("logits", logits)
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, max_len: int, kind: str = "full"):
+        cfg = self.cfg
+        T = min(max_len, cfg.sliding_window) if kind == "window" else max_len
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        big = jnp.iinfo(jnp.int32).max // 2
+        data = {
+            "ssm": jnp.zeros(
+                (cfg.n_layers, batch_size, cfg.ssm_heads, cfg.ssm_head_dim,
+                 cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros(
+                (cfg.n_layers, batch_size, cfg.ssm_conv_width - 1, conv_ch),
+                cfg.dtype),
+            "k": jnp.zeros(
+                (self.n_apps, batch_size, T, cfg.n_kv_heads, self._hd2),
+                cfg.dtype),
+            "v": jnp.zeros(
+                (self.n_apps, batch_size, T, cfg.n_kv_heads, self._hd2),
+                cfg.dtype),
+        }
+        return KVCache(
+            kind, data,
+            jnp.full((batch_size, T), big, jnp.int32),
+            jnp.zeros((batch_size,), jnp.int32),
+        )
+
+    def prefill(self, params, batch, *, mode: str = "scan", kind="full",
+                max_len=None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        max_len = max_len or S
+        cache = self.init_cache(B, max_len, kind=kind)
+        T = cache.positions.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h = params["embed"][tokens].astype(cfg.dtype)
+        h0 = h
+        k_every = cfg.shared_attn_every
+        window = cfg.sliding_window if kind == "window" else None
+
+        ssm_states, conv_states, ks, vs = [], [], [], []
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["layers"])
+            x = C.rms_norm(h, p["norm"], cfg.norm_eps)
+            out, (s, c) = C.mamba2_apply(p["mixer"], x, cfg)
+            ssm_states.append(s)
+            conv_states.append(c)
+            h = h + out
+            if (i + 1) % k_every == 0:
+                g = (i + 1) // k_every - 1
+                sp = params["shared"]
+                xcat = jnp.concatenate([h0, h], axis=-1)
+                x2 = C.rms_norm(xcat, sp["attn_norm"], cfg.norm_eps)
+                hd2 = self._hd2
+                k_new = C.rope(
+                    C.linear(sp["wk"], x2).reshape(B, S, cfg.n_kv_heads, hd2),
+                    positions, cfg.rope_theta,
+                )
+                v_new = C.linear(sp["wv"], x2).reshape(B, S, cfg.n_kv_heads, hd2)
+                ks.append(k_new)
+                vs.append(v_new)
+                h, _ = self._shared_block(params, h, h0, g, positions,
+                                          window=window)
+
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = C.linear(params["lm_head"], h)
+
+        k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
+        if kind == "window" and S > T:
+            k_arr = jnp.roll(k_arr[:, :, -T:], S % T, axis=2)
+            v_arr = jnp.roll(v_arr[:, :, -T:], S % T, axis=2)
+            kept = jnp.roll(positions[:, -T:], S % T, axis=1)
+        else:
+            kept = positions
+        if kept.shape[1] < T:
+            pad = T - kept.shape[1]
+            k_arr = jnp.pad(k_arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v_arr = jnp.pad(v_arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            kept = jnp.pad(kept, ((0, 0), (0, pad)),
+                           constant_values=jnp.iinfo(jnp.int32).max // 2)
+        cache = KVCache(
+            kind,
+            {"ssm": jnp.stack(ssm_states), "conv": jnp.stack(conv_states),
+             "k": k_arr, "v": v_arr},
+            kept, jnp.full((B,), S, jnp.int32),
+        )
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, cache
+
+    def decode_step(self, params, cache, batch, *, mode: str = "scan"):
+        cfg = self.cfg
+        token, pos = batch["token"], batch["pos"]
+        B = token.shape[0]
+        positions = pos[:, None]
+        kind = cache.kind
+        window = cfg.sliding_window if kind == "window" else None
+        T = cache.positions.shape[1]
+        slot = pos % T if kind == "window" else pos
+        new_positions = _write_rows(cache.positions, slot, pos[:, None])
+
+        h = params["embed"][token].astype(cfg.dtype)
+        h = taps.site("embed", h)
+        h0 = h
+        k_every = cfg.shared_attn_every
+
+        def mamba_step(p, h, st, idx):
+            h = taps.site("layers.input", h, layer=idx)
+            x = C.rms_norm(h, p["norm"], cfg.norm_eps)
+            state_tap = lambda v: taps.site("layers.ssm_state", v, layer=idx)
+            out, new_st = C.mamba2_decode_step(p["mixer"], x, cfg, st,
+                                               state_tap=state_tap)
+            out = taps.site("layers.mixer.output", out, layer=idx)
+            h = h + out
+            return taps.site("layers.output", h, layer=idx), new_st
+
+        if mode == "unrolled":
+            new_ssm, new_conv = list(cache.data["ssm"]), list(cache.data["conv"])
+            new_k, new_v = list(cache.data["k"]), list(cache.data["v"])
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                h, (s, c) = mamba_step(p, h, (cache.data["ssm"][i], cache.data["conv"][i]), i)
+                new_ssm[i], new_conv[i] = s, c
+                if (i + 1) % k_every == 0:
+                    g = (i + 1) // k_every - 1
+                    h, kv = self._shared_block(
+                        params, h, h0, g, positions,
+                        kv=(cache.data["k"][g], cache.data["v"][g]),
+                        kv_positions=new_positions, window=window,
+                        slot=slot, decode=True,
+                    )
+                    new_k[g], new_v[g] = kv
+            new_cache = KVCache(
+                kind,
+                {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv),
+                 "k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+                new_positions, cache.length + 1,
+            )
+        else:
+            grouped = jax.tree.map(
+                lambda a: a.reshape((self.n_apps, k_every) + a.shape[1:]),
+                params["layers"],
+            )
+            ssm_g = cache.data["ssm"].reshape((self.n_apps, k_every) + cache.data["ssm"].shape[1:])
+            conv_g = cache.data["conv"].reshape((self.n_apps, k_every) + cache.data["conv"].shape[1:])
+
+            def body(h, inp):
+                pg, sg, cg, kg, vg, g = inp
+                new_s, new_c = [], []
+                for j in range(k_every):
+                    p = jax.tree.map(lambda a: a[j], pg)
+                    h, (s2, c2) = mamba_step(p, h, (sg[j], cg[j]), g * k_every + j)
+                    new_s.append(s2)
+                    new_c.append(c2)
+                h, kv = self._shared_block(
+                    params, h, h0, g, positions, kv=(kg, vg),
+                    kv_positions=new_positions, window=window,
+                    slot=slot, decode=True,
+                )
+                ys = {**taps.scan_outputs(),
+                      "__s__": jnp.stack(new_s), "__c__": jnp.stack(new_c),
+                      "__k__": kv[0], "__v__": kv[1]}
+                return h, ys
+
+            h, ys = jax.lax.scan(
+                body, h,
+                (grouped, ssm_g, conv_g, cache.data["k"], cache.data["v"],
+                 jnp.arange(self.n_apps)),
+            )
+            new_cache = KVCache(
+                kind,
+                {"ssm": ys.pop("__s__").reshape(cache.data["ssm"].shape),
+                 "conv": ys.pop("__c__").reshape(cache.data["conv"].shape),
+                 "k": ys.pop("__k__"), "v": ys.pop("__v__")},
+                new_positions, cache.length + 1,
+            )
+            taps.deliver_scan(ys)
+
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
+        logits = C.linear(params["lm_head"], h)
+        logits = taps.site("logits", logits)
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, new_cache

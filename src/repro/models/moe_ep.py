@@ -1,0 +1,184 @@
+"""Expert-parallel MoE via shard_map + explicit all-to-all (§Perf H1).
+
+The baseline ragged-dot MoE is correct but its global argsort/gather defeats
+the SPMD partitioner: XLA replicates the dispatch (and therefore the expert
+FLOPs) on every device — measured useful-FLOPs ratio 0.004 on
+qwen3-moe-30b × train_4k.  This module maps the canonical expert-parallel
+communication pattern onto jax-native constructs:
+
+  per device (data-shard tokens × model-shard experts):
+    1. route locally: top-k over ALL experts for the local token block;
+    2. pack tokens into a capacity-bounded (E, C, d) dispatch buffer with a
+       LOCAL sort (no cross-device gather);
+    3. ``all_to_all`` over the model axis: experts' inboxes converge on the
+       shard that owns them — (E, C, d) -> (E/M, M·C, d);
+    4. dense per-expert matmuls (MXU-friendly einsums);
+    5. ``all_to_all`` back; combine with routing weights locally.
+
+Capacity: C = ceil(k·T_local / E · capacity_factor); overflow tokens drop
+(standard Switch-style).  With no mesh active the baseline ragged path runs
+instead (exact, dropless) — serving/tests on CPU use that.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["moe_apply_ep", "EP_CAPACITY_FACTOR"]
+
+EP_CAPACITY_FACTOR = 1.25
+
+
+def _local_dispatch(xt, logits, e, k, capacity):
+    """Pack local tokens into (E, C, d) by expert. All-local (no comms).
+
+    Returns (dispatched (E,C,d), combine info: ids (T,k), weights (T,k),
+    pos (T,k), keep (T,k))."""
+    T, d = xt.shape
+    weights, ids = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(weights, axis=-1)
+    flat_ids = ids.reshape(-1)  # (T*k,)
+    order = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[order]
+    # position of each routed slot within its expert
+    start = jnp.searchsorted(sorted_ids, jnp.arange(e))
+    pos_sorted = jnp.arange(T * k) - start[sorted_ids]
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    pos = pos.reshape(T, k)
+    keep = pos < capacity
+
+    token_of = order // k
+    slot_expert = sorted_ids
+    slot_keep = pos_sorted < capacity
+    # scatter local tokens into the dispatch buffer
+    buf = jnp.zeros((e, capacity, d), xt.dtype)
+    safe_pos = jnp.where(slot_keep, pos_sorted, 0).astype(jnp.int32)
+    buf = buf.at[slot_expert, safe_pos].add(
+        jnp.where(slot_keep[:, None], xt[token_of], 0.0)
+    )
+    return buf, ids, weights, pos, keep
+
+
+def moe_apply_ep(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    mesh,
+    *,
+    router_tap=None,
+    capacity_factor: float = EP_CAPACITY_FACTOR,
+) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE. x: (B, S, d) sharded (batch over data)."""
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    f = cfg.expert_d_ff
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    M = axis_sizes.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    n_data = math.prod(axis_sizes[a] for a in data_axes) if data_axes else 1
+    assert e % M == 0, (e, M)
+    e_loc = e // M
+    # Tokens shard over data AND (via the sequence dim) over the model axis —
+    # otherwise the M model shards carry IDENTICAL token copies and the
+    # all-to-all ships M duplicate inboxes (measured: 15.7× redundant expert
+    # FLOPs).  Decode (S == 1) can't split the sequence; the duplication is
+    # one token per row there and irrelevant.
+    seq_shard = S % M == 0 and S >= M
+    # decode with tiny batches (long_500k: B=1) cannot shard rows over data
+    batch_shardable = B % n_data == 0 and B >= n_data
+    T_loc = max(
+        (B * S)
+        // (n_data if batch_shardable else 1)
+        // (M if seq_shard else 1),
+        1,
+    )
+    capacity = int(math.ceil(k * T_loc / e * capacity_factor))
+
+    def shard_fn(x_loc, logits_loc, wg, wu, wd):
+        # x_loc: (B_loc, S, d); logits_loc: (B_loc, S, e); experts (e_loc,d,f)
+        Bl, Sl, _ = x_loc.shape
+        xt = x_loc.reshape(Bl * Sl, d)
+        logits = logits_loc.reshape(Bl * Sl, e).astype(jnp.float32)
+        buf, ids, weights, pos, keep = _local_dispatch(
+            xt, logits, e, k, capacity
+        )
+        # aux load-balance loss (local stats; averaged over data shards)
+        probs = jax.nn.softmax(logits, axis=-1)
+        density = probs.mean(axis=0)
+        hard = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (
+            xt.shape[0] * k
+        )
+        aux = e * jnp.sum(density * hard)
+        aux = jax.lax.pmean(aux, axis_name="model")
+        if data_axes:
+            aux = jax.lax.pmean(aux, axis_name=data_axes)
+
+        # --- all-to-all over the model axis: (e, C, d) -> (e_loc, M*C, d)
+        if M > 1:
+            inbox = jax.lax.all_to_all(
+                buf.reshape(M, e_loc, capacity, d), "model",
+                split_axis=0, concat_axis=0, tiled=False,
+            )  # (M, e_loc, C, d): slice m came from model-shard m
+            inbox = inbox.transpose(1, 0, 2, 3).reshape(e_loc, M * capacity, d)
+        else:
+            inbox = buf.reshape(e_loc, capacity, d)
+
+        # --- dense per-expert FFN on the MXU
+        h = jax.nn.silu(
+            jnp.einsum("ecd,edf->ecf", inbox, wg)
+        ) * jnp.einsum("ecd,edf->ecf", inbox, wu)
+        y = jnp.einsum("ecf,efd->ecd", h, wd)  # (e_loc, M*C, d)
+
+        # --- all-to-all back: every shard recovers ITS tokens' outputs
+        if M > 1:
+            y = y.reshape(e_loc, M, capacity, d).transpose(1, 0, 2, 3)
+            y = jax.lax.all_to_all(
+                y, "model", split_axis=0, concat_axis=0, tiled=False
+            )  # (M, e_loc, C, d) for local tokens, experts re-spread
+            y = y.reshape(e, capacity, d)
+        else:
+            y = y.reshape(e, capacity, d)
+
+        # --- combine: gather each token's k slots, weight, sum
+        safe_pos = jnp.where(keep, pos, 0)
+        slots = y[ids.reshape(-1), safe_pos.reshape(-1)]  # (T*k, d)
+        slots = jnp.where(keep.reshape(-1)[:, None], slots, 0.0)
+        out = jnp.einsum(
+            "tkd,tk->td",
+            slots.reshape(-1, k, d).astype(jnp.float32),
+            weights,
+        ).astype(x_loc.dtype)
+        return out.reshape(Bl, Sl, d), aux
+
+    # Router logits computed OUTSIDE the shard_map so the intervention graph
+    # can both read and OVERRIDE them (load-balance interventions, routing
+    # analysis) — the tapped value is what the dispatch actually uses.
+    logits = (x.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    if router_tap is not None:
+        logits = router_tap(logits)
+
+    batch_spec = P(
+        data_axes if (data_axes and batch_shardable) else None,
+        "model" if seq_shard else None,
+        None,
+    )
+    out, aux = jax.shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(
+            batch_spec,
+            batch_spec,               # router logits, token-sharded
+            P("model", None, None),   # experts sharded over model
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=(batch_spec, P()),
+        check_vma=False,
+    )(x, logits, p["wg"], p["wu"], p["wd"])
+    return out, aux

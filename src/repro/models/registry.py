@@ -1,0 +1,279 @@
+"""Architecture registry: ``--arch <id>`` → config + model + specs.
+
+Also home of the assigned input-shape suite and the ShapeDtypeStruct
+factories the multi-pod dry-run lowers against (no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, reduce_config
+
+__all__ = [
+    "ARCHS",
+    "SHAPES",
+    "InputShape",
+    "get_config",
+    "build_model",
+    "input_specs",
+    "param_pspecs",
+    "batch_pspecs",
+    "list_archs",
+]
+
+# arch id -> (config module, model class path)
+ARCHS: dict[str, tuple[str, str]] = {
+    "minicpm3-4b": ("repro.configs.minicpm3_4b", "transformer.TransformerModel"),
+    "phi3.5-moe-42b-a6.6b": ("repro.configs.phi35_moe", "transformer.TransformerModel"),
+    "internlm2-20b": ("repro.configs.internlm2_20b", "transformer.TransformerModel"),
+    "zamba2-2.7b": ("repro.configs.zamba2_2_7b", "hybrid.Zamba2Model"),
+    "qwen1.5-110b": ("repro.configs.qwen15_110b", "transformer.TransformerModel"),
+    "mamba2-1.3b": ("repro.configs.mamba2_1_3b", "ssm.Mamba2Model"),
+    "seamless-m4t-large-v2": ("repro.configs.seamless_m4t", "encdec.EncDecModel"),
+    "qwen3-moe-30b-a3b": ("repro.configs.qwen3_moe_30b", "transformer.TransformerModel"),
+    "llama-3.2-vision-90b": ("repro.configs.llama32_vision_90b", "transformer.TransformerModel"),
+    "qwen3-8b": ("repro.configs.qwen3_8b", "transformer.TransformerModel"),
+    "paper-gpt-small": ("repro.configs.paper_gpt", "transformer.TransformerModel"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+    window: bool = False  # decode with sliding-window cache
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1, window=True),
+}
+
+
+def list_archs() -> list[str]:
+    return [a for a in ARCHS if a != "paper-gpt-small"]
+
+
+def get_config(arch: str, reduced: bool = False, **overrides) -> ModelConfig:
+    mod_name, _ = ARCHS[arch]
+    cfg = importlib.import_module(mod_name).CONFIG
+    if reduced:
+        cfg = reduce_config(cfg)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def build_model(arch: str, cfg: ModelConfig | None = None, reduced=False):
+    mod_name, cls_path = ARCHS[arch]
+    cfg = cfg or get_config(arch, reduced=reduced)
+    pkg, cls_name = cls_path.split(".")
+    mod = importlib.import_module(f"repro.models.{pkg}")
+    return getattr(mod, cls_name)(cfg)
+
+
+# ---------------------------------------------------------------- input specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: InputShape, model: Any = None
+) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run pattern).
+
+    train:   {tokens, labels [, image_embeds | src_embeds]}
+    prefill: {tokens [, extras]}
+    decode:  {token, pos, cache} — cache abstracted via model.init_cache.
+    """
+    B, S = shape.batch, shape.seq
+    extras: dict[str, Any] = {}
+    if cfg.arch_type == "vlm":
+        extras["image_embeds"] = _sds((B, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+    if cfg.arch_type == "audio":
+        extras["src_embeds"] = _sds((B, cfg.n_source_frames, cfg.d_model), cfg.dtype)
+
+    if shape.kind == "train":
+        return {
+            "tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32),
+            **extras,
+        }
+    if shape.kind == "prefill":
+        return {"tokens": _sds((B, S), jnp.int32), **extras}
+    # decode: ONE new token with a seq-long cache.
+    if model is None:
+        model = build_model(cfg.name, cfg)
+    kind = "window" if (shape.window and _needs_window(cfg)) else "full"
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, kind=kind))
+    return {
+        "token": _sds((B, 1), jnp.int32),
+        "pos": _sds((B,), jnp.int32),
+        "cache": cache,
+    }
+
+
+def _needs_window(cfg: ModelConfig) -> bool:
+    """SSM is attention-free; hybrid attends at shared blocks only — the
+    long-context policy (DESIGN.md §4): dense/MoE/VLM use the sliding-window
+    decode path for long_500k; SSM runs natively; hybrid windows its shared
+    attention blocks."""
+    return cfg.arch_type != "ssm"
+
+
+def decode_cache_kind(cfg: ModelConfig, shape: InputShape) -> str:
+    if shape.window and _needs_window(cfg) and cfg.arch_type != "ssm":
+        return "window"
+    return "full"
+
+
+# ------------------------------------------------------------ sharding specs
+_RULES: list[tuple[tuple[str, ...], P]] = [
+    # (path substring match, spec for the *trailing* dims)
+    (("embed",), P("model", None)),
+    (("lm_head", "w"), P(None, "model")),
+    (("lm_head", "b"), P("model")),
+    (("router", "w"), P(None, None)),
+    (("wq", "w"), P(None, "model")),
+    (("wk", "w"), P(None, "model")),
+    (("wv", "w"), P(None, "model")),
+    (("wq_a", "w"), P(None, None)),
+    (("wq_b", "w"), P(None, "model")),
+    (("wkv_a", "w"), P(None, None)),
+    (("wkv_b", "w"), P(None, "model")),
+    (("wo", "w"), P("model", None)),
+    (("wg", "w"), P(None, "model")),
+    (("wu", "w"), P(None, "model")),
+    (("wd", "w"), P("model", None)),
+    (("moe", "wg"), P("model", None, None)),  # expert-parallel
+    (("moe", "wu"), P("model", None, None)),
+    (("moe", "wd"), P("model", None, None)),
+    (("in_proj", "w"), P(None, "model")),
+    (("out_proj", "w"), P("model", None)),
+    (("conv_w",), P(None, "model")),
+    (("conv_b",), P("model")),
+    (("A_log",), P("model")),
+    (("D",), P("model")),
+    (("dt_bias",), P("model")),
+    (("shared_out", "w"), P(None, None)),
+]
+
+
+def _path_names(path) -> tuple[str, ...]:
+    out = []
+    for entry in path:
+        if hasattr(entry, "key"):
+            out.append(str(entry.key))
+        elif hasattr(entry, "name"):
+            out.append(str(entry.name))
+        else:
+            out.append(str(entry))
+    return tuple(out)
+
+
+def _spec_for(path_names: tuple[str, ...], ndim: int) -> P:
+    best: P | None = None
+    best_len = -1
+    for pat, spec in _RULES:
+        if len(pat) > len(path_names):
+            continue
+        # match pattern as a subsequence anchored at the end
+        tail = path_names[-len(pat):] if len(pat) > 1 else None
+        if len(pat) == 1:
+            hit = pat[0] in path_names
+        else:
+            hit = all(p in path_names for p in pat) and path_names[-1] == pat[-1]
+        if hit and len(pat) > best_len:
+            best, best_len = spec, len(pat)
+    if best is None:
+        return P(*([None] * ndim))
+    spec = list(best)
+    while len(spec) < ndim:
+        spec.insert(0, None)  # stacked-layer leading dims replicate
+    return P(*spec[:ndim] if len(spec) > ndim else spec)
+
+
+def param_pspecs(params: Any) -> Any:
+    """PartitionSpec pytree mirroring ``params`` (rule-based, path-matched)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(_path_names(path), np.ndim(leaf)
+                                     if not hasattr(leaf, "ndim") else leaf.ndim),
+        params,
+    )
+
+
+def fsdp_pspecs(params: Any, data_axis_size: int, axis: str = "data") -> Any:
+    """Tensor-parallel rules + FSDP: additionally shard the first unsharded,
+    divisible dim of every weight over the data axis.  This is the baseline
+    policy — the 90–110B assigned archs do not fit 16 GB/chip under pure TP
+    (weights/16 > HBM), so weight FSDP over the full 256-chip pod is the
+    production-sane default; XLA inserts the per-layer all-gather /
+    grad reduce-scatter.
+    """
+    base = param_pspecs(params)
+
+    def widen(spec, leaf):
+        ndim = leaf.ndim
+        entries = list(spec) + [None] * (ndim - len(spec))
+        if ndim == 0:
+            return jax.sharding.PartitionSpec()
+        for i, e in enumerate(entries):
+            if e is None and leaf.shape[i] % data_axis_size == 0 and leaf.shape[i] >= data_axis_size:
+                entries[i] = axis
+                break
+        return jax.sharding.PartitionSpec(*entries)
+
+    return jax.tree.map(
+        widen, base, params,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
+
+
+def batch_pspecs(specs: Any) -> Any:
+    """Inputs shard on the batch axis; caches shard batch + KV heads."""
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        ndim = leaf.ndim
+        kv_names = ("k", "v", "latent", "k_rope", "cross_k", "cross_v")
+        if any(n in kv_names for n in names):
+            if ndim >= 3:
+                # (L, B, T, ...) KV caches: batch over data, SEQUENCE over
+                # model (flash-decoding: every chip reads cache/T_model per
+                # token; softmax/PV partial-combine via tiny all-reduces —
+                # §Perf H2.4.  Head-sharding was rejected: GQA head counts
+                # (4–8) don't divide the 16-way model axis and XLA fell back
+                # to whole-cache re-shard gathers).
+                spec = [None] * ndim
+                spec[1] = ("pod", "data")
+                spec[2] = "model"
+                return P(*spec)
+        if "cache" in names or any(n in ("ssm", "conv") for n in names):
+            if ndim >= 2:
+                spec = [None] * ndim
+                spec[1] = ("pod", "data")
+                if ndim >= 4:
+                    spec[3] = "model"
+                return P(*spec)
+        if names and names[-1] == "positions":
+            return P(("pod", "data"), "model")
+        if names and names[-1] == "length":
+            return P(("pod", "data"))
+        if ndim == 0:
+            return P()
+        spec = [None] * ndim
+        spec[0] = ("pod", "data")
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, specs)

@@ -1,0 +1,184 @@
+"""Mamba2 (SSD) language model — attention-free [arXiv:2405.21060].
+
+Tap sites expose the *recurrent state* (``layers.ssm_state``) — a capability
+the paper never demonstrates (PyTorch hooks see module boundaries, not fused
+scan internals); here the state is a first-class intervention target.
+Decode is O(1) in context length, so this family runs ``long_500k`` natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import taps
+from repro.core.interleave import SiteSchedule
+from repro.distributed import shard_hint
+from repro.models import common as C
+from repro.models.config import ModelConfig
+
+__all__ = ["Mamba2Model"]
+
+
+class Mamba2Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        k_emb, k_layers, k_out = jax.random.split(key, 3)
+
+        def layer_init(k):
+            return {
+                "norm": jnp.ones((cfg.d_model,), cfg.dtype),
+                "mixer": C.mamba2_init(k, cfg),
+            }
+
+        layers = jax.vmap(layer_init)(jax.random.split(k_layers, cfg.n_layers))
+        return {
+            "embed": (
+                jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02
+            ).astype(cfg.dtype),
+            "layers": layers,
+            "final_norm": jnp.ones((cfg.d_model,), cfg.dtype),
+            "lm_head": C.init_linear(k_out, cfg.d_model, cfg.vocab_size, cfg.dtype),
+        }
+
+    def site_names(self) -> list[str]:
+        return ["layers.input", "layers.ssm_state", "layers.mixer.output",
+                "layers.output"]
+
+    def site_schedule(self, mode: str = "unrolled") -> SiteSchedule:
+        body = self.site_names()
+        order: list[tuple[str, int | None]] = [("embed", None)]
+        for i in range(self.cfg.n_layers):
+            order += [(n, i) for n in body]
+        order += [("final_norm", None), ("logits", None)]
+        return SiteSchedule(
+            order=order,
+            scan_sites=tuple(body) if mode == "scan" else (),
+            n_layers=self.cfg.n_layers,
+        )
+
+    # ---------------------------------------------------------------- layers
+    def _layer(self, p, h, layer):
+        cfg = self.cfg
+        h = taps.site("layers.input", h, layer=layer)
+        h = shard_hint(h, P(("pod", "data"), "model", None))
+        x = C.rms_norm(h, p["norm"], cfg.norm_eps)
+        state_tap = lambda v: taps.site("layers.ssm_state", v, layer=layer)
+        out, state = C.mamba2_apply(p["mixer"], x, cfg, state_tap=state_tap)
+        out = taps.site("layers.mixer.output", out, layer=layer)
+        h = h + out
+        h = taps.site("layers.output", h, layer=layer)
+        return h, state
+
+    def forward(self, params: dict, batch: dict, *, mode: str = "scan",
+                remat: bool = False) -> dict:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"][tokens].astype(cfg.dtype)
+        h = shard_hint(h, P(("pod", "data"), None, None))
+        h = taps.site("embed", h)
+        if mode == "unrolled":
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                h, _ = self._layer(p, h, i)
+        else:
+            def body(h, inp):
+                p, idx = inp
+                h, _ = self._layer(p, h, idx)
+                return h, taps.scan_outputs()
+
+            if remat:
+                body = jax.checkpoint(body)
+            h, ys = jax.lax.scan(
+                body, h, (params["layers"], jnp.arange(cfg.n_layers))
+            )
+            taps.deliver_scan(ys)
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
+        logits = C.linear(params["lm_head"], h)
+        logits = shard_hint(logits, P(("pod", "data"), None, "model"))
+        logits = taps.site("logits", logits)
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, max_len: int = 0, kind: str = "full"):
+        cfg = self.cfg
+        L, H, Pd, N = cfg.n_layers, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "ssm": jnp.zeros((L, batch_size, H, Pd, N), jnp.float32),
+            "conv": jnp.zeros(
+                (L, batch_size, cfg.ssm_conv_width - 1, conv_ch), cfg.dtype
+            ),
+        }
+
+    def prefill(self, params, batch, *, mode: str = "scan", kind="full",
+                max_len=None):
+        """Forward + per-layer final states (O(1)-size cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h = params["embed"][tokens].astype(cfg.dtype)
+
+        def body(h, inp):
+            p, idx = inp
+            x = C.rms_norm(h, p["norm"], cfg.norm_eps)
+            out, state = C.mamba2_apply(p["mixer"], x, cfg)
+            return h + out, state
+
+        h, states = jax.lax.scan(
+            body, h, (params["layers"], jnp.arange(cfg.n_layers))
+        )
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = C.linear(params["lm_head"], h)
+        cache = {"ssm": states[0], "conv": states[1]}
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, cache
+
+    def decode_step(self, params, cache, batch, *, mode: str = "scan"):
+        cfg = self.cfg
+        token = batch["token"]  # (B, 1)
+        h = params["embed"][token].astype(cfg.dtype)
+        h = taps.site("embed", h)
+
+        def layer_step(p, h, st, idx):
+            h = taps.site("layers.input", h, layer=idx)
+            x = C.rms_norm(h, p["norm"], cfg.norm_eps)
+            state_tap = lambda v: taps.site("layers.ssm_state", v, layer=idx)
+            out, new_st = C.mamba2_decode_step(
+                p["mixer"], x, cfg, st, state_tap=state_tap
+            )
+            out = taps.site("layers.mixer.output", out, layer=idx)
+            h = h + out
+            h = taps.site("layers.output", h, layer=idx)
+            return h, new_st
+
+        if mode == "unrolled":
+            new_ssm, new_conv = [], []
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                st = (cache["ssm"][i], cache["conv"][i])
+                h, (s, c) = layer_step(p, h, st, i)
+                new_ssm.append(s)
+                new_conv.append(c)
+            new_cache = {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv)}
+        else:
+            def body(h, inp):
+                p, s, c, idx = inp
+                h, (s2, c2) = layer_step(p, h, (s, c), idx)
+                return h, {**taps.scan_outputs(), "__s__": s2, "__c__": c2}
+
+            h, ys = jax.lax.scan(
+                body, h,
+                (params["layers"], cache["ssm"], cache["conv"],
+                 jnp.arange(cfg.n_layers)),
+            )
+            new_cache = {"ssm": ys.pop("__s__"), "conv": ys.pop("__c__")}
+            taps.deliver_scan(ys)
+        h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
+        logits = C.linear(params["lm_head"], h)
+        logits = taps.site("logits", logits)
+        return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, new_cache

@@ -1,0 +1,40 @@
+"""Bind a zoo model to the NNsight-style tracing API.
+
+``traced_lm(model, params)`` gives the paper's Figure-3b UX::
+
+    lm = traced_lm(build_model("qwen3-8b", cfg), params)
+    with lm.trace(tokens) as tr:
+        lm.layers[16].mlp.output[:, -1, neurons] = 10.0
+        out = lm.output.save()
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.tracer import TracedModel
+
+__all__ = ["traced_lm"]
+
+
+def traced_lm(
+    model: Any,
+    params: Any,
+    *,
+    mode: str = "unrolled",
+    backend: Any | None = None,
+    name: str | None = None,
+) -> TracedModel:
+    def model_fn(params_, tokens, **extras):
+        batch = {"tokens": tokens, **extras}
+        return model.forward(params_, batch, mode=mode)["logits"]
+
+    tm = TracedModel(
+        model_fn,
+        params,
+        model.site_schedule(mode),
+        name=name or model.cfg.name,
+        default_mode=mode,
+        backend=backend,
+    )
+    tm.zoo_model = model
+    return tm

@@ -1,0 +1,144 @@
+"""Roofline analysis from compiled dry-run artifacts (§Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs   / (chips × 197 TFLOP/s bf16)
+  memory     = HLO_bytes   / (chips × 819 GB/s HBM)
+  collective = coll_bytes  / (chips × 50 GB/s ICI/link)
+
+``cost_analysis()`` supplies FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so :func:`collective_bytes_from_hlo` parses the compiled HLO
+text and sums operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Also reported: MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the
+usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+__all__ = [
+    "collective_bytes_from_hlo",
+    "model_flops",
+    "roofline_report",
+    "HW",
+]
+
+
+class HW:
+    PEAK_FLOPS_BF16 = 197e12
+    HBM_BW = 819e9
+    ICI_BW = 50e9
+    HBM_BYTES = 16 * 1024**3
+
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  "bf16[2,4096,512]{2,1,0}"  or  "f32[128]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an HLO instruction line:  %name = TYPE[...] op-name(...)  OR fused tuples
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[\w\[\],{}\s/]+?\)?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO module.
+
+    Uses the *result* shape of each collective (the data that actually moves
+    through the interconnect at least once).  ``-start``/``-done`` pairs are
+    counted once (on the start op).
+    """
+    by_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "-done(" in stripped:
+            continue  # counted at -start
+        m = _INSTR_RE.search(stripped)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        by_kind[kind] += _shape_bytes(type_str)
+        counts[kind] += 1
+    total = sum(by_kind.values())
+    return {
+        "total": int(total),
+        "by_kind": {k: int(v) for k, v in by_kind.items() if v},
+        "counts": {k: v for k, v in counts.items() if v},
+    }
+
+
+def model_flops(cfg: Any, shape: Any) -> float:
+    """6·N·D with N = active params, D = tokens processed by the step."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.batch * shape.seq
+        return 2.0 * n_active * tokens  # forward only
+    # decode: one token per row.
+    return 2.0 * n_active * shape.batch
+
+
+def roofline_report(rec: dict, cfg: Any, shape: Any) -> dict:
+    """rec carries PER-DEVICE flops/bytes (the SPMD module is one partition),
+    so each term divides by a single chip's peak.  Equivalent to the spec's
+    global-total/(chips × peak) formulation."""
+    chips = rec["n_chips"]
+    flops = rec["flops"]
+    mem_bytes = rec["bytes_accessed"]
+    coll = rec["collective_bytes"]
+
+    t_compute = flops / HW.PEAK_FLOPS_BF16
+    t_memory = mem_bytes / HW.HBM_BW
+    t_coll = coll / HW.ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / chips
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": (mf_dev / flops) if flops else None,
+        "bound_time_s": max(terms.values()),
+        "mfu_bound": (mf_dev / HW.PEAK_FLOPS_BF16) / max(terms.values())
+        if max(terms.values()) > 0 else None,
+    }

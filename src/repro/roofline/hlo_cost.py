@@ -1,0 +1,310 @@
+"""HLO-text cost model with while-loop trip-count awareness.
+
+``compiled.cost_analysis()`` counts each while (scan) body ONCE, which
+undercounts a 36-layer scanned transformer by ~36× and — worse — miscounts
+collectives issued inside the scan.  This module parses the compiled HLO
+module text, builds the computation graph, and computes
+
+    flops             (dots: 2·M·N·K; elementwise: 1/elem)
+    bytes_accessed    (operands + result per top-level instruction; fusion
+                       internals excluded — that is what fusion is for)
+    collective_bytes  (result bytes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute)
+
+with every while body multiplied by its ``known_trip_count``.  Validated in
+tests against hand-computed counts on small programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+__all__ = ["analyze_hlo", "HloCost"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ZERO_COST_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+# elementwise-ish ops that cost ~1 flop per output element
+_EW_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "cosine", "sine", "and", "or", "xor", "not", "compare", "select",
+    "clamp", "floor", "ceil", "round-nearest-afz", "exponential-minus-one",
+    "log-plus-one", "atan2", "remainder",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for dtype, dims in _SHAPE_TOKEN.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_TOKEN.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    operands: list[str]
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(default_factory=dict)
+    transcendentals: float = 0.0
+    unknown_trip_whiles: int = 0
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes_accessed += other.bytes_accessed * mult
+        self.collective_bytes += other.collective_bytes * mult
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+        for k, v in other.collective_by_kind.items():
+            self.collective_by_kind[k] = (
+                self.collective_by_kind.get(k, 0.0) + v * mult
+            )
+
+
+def _parse_computations(text: str) -> tuple[dict, str]:
+    comps: dict[str, list[_Instr]] = {}
+    entry = None
+    current: list[_Instr] | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if current is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                comps[name] = []
+                current = comps[name]
+                if m.group(1):
+                    entry = name
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # operand names: inside the first balanced paren group only
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operands = _OPERAND.findall(rest[:end])
+        current.append(_Instr(name, type_str, op, rest, operands))
+    return comps, entry
+
+
+def _dot_flops(instr: _Instr, shapes: dict[str, str]) -> float:
+    _, out_elems = 1, _shape_elems_bytes(instr.type_str)[0]
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    if not m or not instr.operands:
+        return 2.0 * out_elems  # fallback
+    lhs_type = shapes.get(instr.operands[0], "")
+    dims = _shape_dims(lhs_type)
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _comp_cost(
+    name: str,
+    comps: dict,
+    cache: dict,
+    *,
+    fusion_internal: bool = False,
+) -> HloCost:
+    key = (name, fusion_internal)
+    if key in cache:
+        return cache[key]
+    cost = HloCost()
+    cache[key] = cost  # pre-insert (cycles impossible in HLO, but cheap)
+    shapes = {i.name: i.type_str for i in comps[name]}
+    for instr in comps[name]:
+        op = instr.op
+        _, out_bytes = _shape_elems_bytes(instr.type_str)
+        out_elems = _shape_elems_bytes(instr.type_str)[0]
+        if op in _ZERO_COST_OPS:
+            continue
+        if op == "while":
+            body = _BODY.search(instr.rest)
+            cond = _COND.search(instr.rest)
+            trip_m = _TRIP.search(instr.rest)
+            trips = int(trip_m.group(1)) if trip_m else 1
+            if not trip_m:
+                cost.unknown_trip_whiles += 1
+            if body:
+                cost.add(_comp_cost(body.group(1), comps, cache), trips)
+            if cond:
+                cost.add(_comp_cost(cond.group(1), comps, cache), trips)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for cm in _CALLS.finditer(instr.rest):
+                cost.add(_comp_cost(cm.group(1), comps, cache))
+            continue
+        # bytes: operands + result (skip for fusion internals)
+        if not fusion_internal:
+            operand_bytes = sum(
+                _shape_elems_bytes(shapes.get(o, ""))[1] for o in instr.operands
+            )
+            cost.bytes_accessed += operand_bytes + out_bytes
+        base = op.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES:
+            if op.endswith("-done"):
+                continue
+            cost.collective_bytes += out_bytes
+            cost.collective_by_kind[base] = (
+                cost.collective_by_kind.get(base, 0.0) + out_bytes
+            )
+            continue
+        if op == "fusion":
+            cm = _CALLS.search(instr.rest)
+            if cm:
+                inner = _comp_cost(
+                    cm.group(1), comps, cache, fusion_internal=True
+                )
+                cost.flops += inner.flops
+                cost.collective_bytes += inner.collective_bytes
+                for k, v in inner.collective_by_kind.items():
+                    cost.collective_by_kind[k] = (
+                        cost.collective_by_kind.get(k, 0.0) + v
+                    )
+            continue
+        if op in ("dot", "dot-general"):
+            cost.flops += _dot_flops(instr, shapes)
+            continue
+        if op == "convolution":
+            # rough: 2 * output elems * kernel elems (we use no big convs)
+            cost.flops += 2.0 * out_elems
+            continue
+        if op in ("reduce", "reduce-window", "scatter", "map", "sort"):
+            cm = _CALLS.search(instr.rest)
+            cost.flops += out_elems  # ~1 op per output element
+            if cm and comps.get(cm.group(1)):
+                pass  # applied computations are tiny scalars; approximated
+            continue
+        if op in _EW_FLOP_OPS:
+            cost.flops += out_elems
+            if op in ("exponential", "log", "tanh", "rsqrt", "sqrt",
+                      "cosine", "sine", "power"):
+                cost.transcendentals += out_elems
+            continue
+        # everything else (copy, broadcast, reshape, slice, dus, gather,
+        # transpose, convert, pad, concatenate, ...) — bytes already counted.
+    return cost
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    return _comp_cost(entry, comps, {})
+
+
+def breakdown_hlo(text: str, top: int = 25) -> list[tuple[str, float, float]]:
+    """Per-instruction byte/flop attribution with trip-count multipliers.
+
+    Returns [(label, bytes, flops)] sorted by bytes — the 'profile' the perf
+    loop reads on a no-hardware dry-run (op_name metadata gives the model
+    source line)."""
+    comps, entry = _parse_computations(text)
+    rows: list[tuple[str, float, float]] = []
+
+    def walk(name: str, mult: float) -> None:
+        shapes = {i.name: i.type_str for i in comps[name]}
+        for instr in comps[name]:
+            op = instr.op
+            if op in _ZERO_COST_OPS:
+                continue
+            if op == "while":
+                body = _BODY.search(instr.rest)
+                trip_m = _TRIP.search(instr.rest)
+                trips = int(trip_m.group(1)) if trip_m else 1
+                if body:
+                    walk(body.group(1), mult * trips)
+                continue
+            if op in ("call", "conditional"):
+                for cm in _CALLS.finditer(instr.rest):
+                    walk(cm.group(1), mult)
+                continue
+            _, out_bytes = _shape_elems_bytes(instr.type_str)
+            operand_bytes = sum(
+                _shape_elems_bytes(shapes.get(o, ""))[1]
+                for o in instr.operands
+            )
+            flops = 0.0
+            if op in ("dot", "dot-general"):
+                flops = _dot_flops(instr, shapes)
+            elif op == "fusion":
+                cm = _CALLS.search(instr.rest)
+                if cm:
+                    inner = _comp_cost(cm.group(1), comps, {},
+                                       fusion_internal=True)
+                    flops = inner.flops
+            m = re.search(r'op_name="([^"]*)"', instr.rest)
+            label = f"{op}:{m.group(1)[:90]}" if m else f"{op}:{instr.name}"
+            rows.append((label, (operand_bytes + out_bytes) * mult,
+                         flops * mult))
+
+    walk(entry, 1.0)
+    agg: dict[str, list[float]] = {}
+    for label, b, f in rows:
+        a = agg.setdefault(label, [0.0, 0.0])
+        a[0] += b
+        a[1] += f
+    out = [(k, v[0], v[1]) for k, v in agg.items()]
+    out.sort(key=lambda r: -r[1])
+    return out[:top]

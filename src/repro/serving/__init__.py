@@ -1,0 +1,16 @@
+"""NDIF-style shared inference service (paper §3.3)."""
+from repro.serving.client import NDIFClient
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import CoTenantScheduler, Request, Ticket
+from repro.serving.server import NDIFServer
+from repro.serving.transport import LoopbackTransport
+
+__all__ = [
+    "NDIFClient",
+    "InferenceEngine",
+    "CoTenantScheduler",
+    "Request",
+    "Ticket",
+    "NDIFServer",
+    "LoopbackTransport",
+]

@@ -1,0 +1,109 @@
+"""NDIF client: the backend behind ``remote=True`` (paper Fig. 3b line 7).
+
+Serializes the tracer's intervention graph + model inputs, ships them over a
+transport, and inserts the returned ``.save()`` leaves back into the local
+trace — the paper's "local WebSocket client pulls the final results from the
+Object Store and inserts the result back into the local intervention graph".
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import numpy as np
+
+from repro.core.serialize import decode_value, encode_value, graph_to_json
+
+__all__ = ["NDIFClient"]
+
+
+class NDIFClient:
+    def __init__(self, transport: Any, model_name: str) -> None:
+        self.transport = transport
+        self.model_name = model_name
+
+    # Tracer-facing API ------------------------------------------------
+    def execute(self, tracer) -> dict[str, Any]:
+        batch = self._tracer_batch(tracer)
+        msg = {
+            "kind": "trace",
+            "model": self.model_name,
+            "graph": graph_to_json(tracer.graph),
+            "batch": batch,
+        }
+        reply = self._roundtrip(msg)
+        return reply["results"]
+
+    def execute_session(self, session) -> list[dict[str, Any]]:
+        msg = {
+            "kind": "session",
+            "model": self.model_name,
+            "traces": [
+                {
+                    "graph": graph_to_json(t.graph),
+                    "batch": self._tracer_batch(t),
+                }
+                for t in session.tracers
+            ],
+        }
+        reply = self._roundtrip(msg)
+        return reply["results"]
+
+    # Remote module training (paper Code Example 5) ----------------------
+    def train_module(self, graph, batch, *, trainable, loss="loss",
+                     fixed_inputs=None, steps=50, lr=1e-2):
+        """Ship an experiment whose ``input`` nodes are trainable; the
+        server differentiates the interleaved program and optimizes them.
+        Only the trained parameters + loss curve cross the wire back."""
+        from repro.core.serialize import graph_to_json
+
+        msg = {
+            "kind": "train_module",
+            "model": self.model_name,
+            "graph": graph_to_json(graph),
+            "batch": {k: np.asarray(v) for k, v in batch.items()},
+            "trainable": {k: np.asarray(v) for k, v in trainable.items()},
+            "fixed_inputs": {k: np.asarray(v)
+                             for k, v in (fixed_inputs or {}).items()},
+            "loss": loss,
+            "steps": steps,
+            "lr": lr,
+        }
+        return self._roundtrip(msg)["results"]
+
+    # Plain-inference APIs (benchmark comparisons) ----------------------
+    def generate(self, tokens, max_new_tokens: int = 16, **extras):
+        msg = {
+            "kind": "generate",
+            "model": self.model_name,
+            "batch": {"tokens": np.asarray(tokens), **extras},
+            "max_new_tokens": max_new_tokens,
+        }
+        return self._roundtrip(msg)["results"]
+
+    def hidden_states(self, tokens, **extras):
+        msg = {
+            "kind": "hidden_states",
+            "model": self.model_name,
+            "batch": {"tokens": np.asarray(tokens), **extras},
+        }
+        return self._roundtrip(msg)["results"]["hidden"]
+
+    # -------------------------------------------------------------- wires
+    def _tracer_batch(self, tracer) -> dict:
+        # model_args = (params, tokens, ...) — params never leave the server.
+        args = tracer.model_args[1:]
+        batch = {}
+        if args:
+            batch["tokens"] = np.asarray(args[0])
+        for k, v in tracer.model_kwargs.items():
+            batch[k] = np.asarray(v)
+        return batch
+
+    def _roundtrip(self, msg: dict) -> dict:
+        payload = json.dumps(encode_value(msg), separators=(",", ":")).encode()
+        raw = self.transport.request(payload)
+        reply = decode_value(json.loads(raw.decode()))
+        if not reply.get("ok"):
+            raise RuntimeError(f"NDIF error: {reply.get('error')}")
+        return reply

@@ -1,0 +1,150 @@
+"""Inference engine: executes intervention graphs against a preloaded model.
+
+The NDIF compute core (paper §3.3 / B.2).  One engine per hosted model:
+
+  * compiles ``run_interleaved(model_fn, graph, …)`` under ``jax.jit`` with
+    explicit in/out shardings when a mesh is active;
+  * caches executables by the graph's *structural key* + input shapes, with
+    constant values passed as runtime args (no recompile per patched value);
+  * supports plain generation (prefill + decode loop) for the inference-API
+    comparison benchmarks (Fig. 6c "standard remote inference").
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import taps
+from repro.core.graph import InterventionGraph
+from repro.core.interleave import SiteSchedule, run_interleaved
+from repro.core.serialize import structural_key
+
+__all__ = ["InferenceEngine", "EngineStats"]
+
+
+class EngineStats:
+    def __init__(self) -> None:
+        self.compiles = 0
+        self.executions = 0
+        self.cache_hits = 0
+        self.exec_seconds = 0.0
+
+
+class InferenceEngine:
+    def __init__(
+        self,
+        model: Any,
+        params: Any,
+        *,
+        mode: str = "unrolled",
+        name: str | None = None,
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.mode = mode
+        self.name = name or model.cfg.name
+        self.schedule = self._full_schedule()
+        self.stats = EngineStats()
+        self._cache: dict[Any, Callable] = {}
+
+    def _full_schedule(self) -> SiteSchedule:
+        sched = self.model.site_schedule(self.mode)
+        order = list(sched.order)
+        if ("output", None) not in order:
+            order.append(("output", None))
+        return SiteSchedule(order, sched.scan_sites, sched.n_layers)
+
+    # ----------------------------------------------------------------- fwd
+    def _model_fn(self, params: Any, batch: dict) -> Any:
+        out = self.model.forward(params, batch, mode=self.mode)["logits"]
+        return taps.site("output", out)
+
+    # ------------------------------------------------------------- execute
+    def execute(
+        self, graph: InterventionGraph, batch: dict
+    ) -> tuple[dict[str, Any], Any]:
+        """Run ``graph`` interleaved with one forward. Returns (saves, out)."""
+        graph.validate(self.schedule.order)
+        const_env = {
+            n.id: n.args[0] for n in graph.nodes if n.op == "constant"
+        }
+        key = (
+            structural_key(graph),
+            tuple(sorted(
+                (k, tuple(np.shape(v)), str(np.asarray(v).dtype) if not hasattr(v, "dtype") else str(v.dtype))
+                for k, v in batch.items()
+            )),
+        )
+        fn = self._cache.get(key)
+        if fn is None:
+            self.stats.compiles += 1
+
+            @partial(jax.jit, static_argnames=())
+            def fn(params, batch_, consts):
+                out, saves, logs = run_interleaved(
+                    self._model_fn,
+                    graph,
+                    self.schedule,
+                    (params, batch_),
+                    {},
+                    mode=self.mode,
+                    const_env=consts,
+                )
+                return saves, out
+
+            self._cache[key] = fn
+        else:
+            self.stats.cache_hits += 1
+        t0 = time.perf_counter()
+        saves, out = fn(self.params, batch, const_env)
+        saves = jax.tree.map(lambda x: jax.device_get(x), saves)
+        self.stats.exec_seconds += time.perf_counter() - t0
+        self.stats.executions += 1
+        return saves, out
+
+    # ------------------------------------------------------------ generate
+    def generate(
+        self, tokens: jax.Array, max_new_tokens: int = 16, **extras
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Greedy generation (prefill + decode loop). Returns (tokens, logits)."""
+        B, S = tokens.shape
+        out, cache = self.model.prefill(
+            self.params, {"tokens": tokens, **extras},
+            max_len=S + max_new_tokens,
+        )
+        logits = out["logits"][:, -1]
+        new = [jnp.argmax(logits, axis=-1).astype(jnp.int32)]
+        step = jax.jit(
+            lambda params, cache, token, pos: self.model.decode_step(
+                params, cache, {"token": token, "pos": pos}
+            )
+        )
+        for t in range(max_new_tokens - 1):
+            pos = jnp.full((B,), S + t, jnp.int32)
+            out, cache = step(self.params, cache, new[-1][:, None], pos)
+            new.append(jnp.argmax(out["logits"][:, 0], axis=-1).astype(jnp.int32))
+        gen = jnp.stack(new, axis=1)
+        return np.asarray(gen), np.asarray(out["logits"])
+
+    def hidden_states(self, tokens: jax.Array, **extras) -> np.ndarray:
+        """Petals-style API: run the stack, return FINAL hidden states.
+
+        Used by the Fig. 6c comparison — this is what a swarm client receives
+        when it must do interventions locally."""
+        with_graph = InterventionGraph()
+        g = with_graph.add("tap_get", site="final_norm")
+        s = with_graph.add("save", _ref(g))
+        with_graph.mark_saved("hidden", with_graph.nodes[s.id])
+        saves, _ = self.execute(with_graph, {"tokens": tokens, **extras})
+        return np.asarray(saves["hidden"])
+
+
+def _ref(node):
+    from repro.core.graph import Ref
+
+    return Ref(node.id)

@@ -1,0 +1,152 @@
+"""Request scheduler: sequential and parallel co-tenancy.
+
+The paper ships *sequential* co-tenancy (one queue per model instance,
+Appendix D.2 — response time grows linearly with concurrent users) and
+sketches *parallel* co-tenancy via batch grouping (Appendix B.2, future
+work).  Both are implemented here; fig9 benchmarks them against each other.
+
+Grouping rule for parallel mode: requests are batch-mergeable when they
+share every non-batch input dim and dtype and use no ``.grad`` — the merger
+(:mod:`repro.core.batching`) then rewrites getters/setters into row slices
+and ONE forward serves the whole group.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.batching import merge_graphs, split_results
+from repro.core.graph import InterventionGraph
+
+__all__ = ["Request", "Ticket", "CoTenantScheduler"]
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    graph: InterventionGraph
+    batch: dict  # model inputs; leading dim of each array = this user's rows
+    request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+
+
+@dataclasses.dataclass
+class Ticket:
+    request_id: int
+    submit_time: float
+    start_time: float | None = None
+    finish_time: float | None = None
+    result: dict | None = None
+    error: str | None = None
+
+    @property
+    def response_time(self) -> float:
+        return (self.finish_time or time.perf_counter()) - self.submit_time
+
+
+def _merge_key(req: Request) -> tuple | None:
+    if any(n.op == "grad_get" for n in req.graph.nodes):
+        return None  # grads never merge — sequential fallback
+    items = []
+    for k in sorted(req.batch):
+        v = np.asarray(req.batch[k])
+        if v.ndim == 0:
+            return None
+        items.append((k, v.shape[1:], str(v.dtype)))
+    return tuple(items)
+
+
+class CoTenantScheduler:
+    def __init__(
+        self,
+        engine: Any,
+        *,
+        policy: str = "parallel",
+        max_batch_rows: int = 64,
+    ) -> None:
+        assert policy in ("sequential", "parallel")
+        self.engine = engine
+        self.policy = policy
+        self.max_batch_rows = max_batch_rows
+        self.queue: list[tuple[Request, Ticket]] = []
+        self.completed: list[Ticket] = []
+
+    def submit(self, req: Request) -> Ticket:
+        ticket = Ticket(req.request_id, submit_time=time.perf_counter())
+        self.queue.append((req, ticket))
+        return ticket
+
+    # ------------------------------------------------------------- draining
+    def drain(self) -> list[Ticket]:
+        """Process the whole queue; returns finished tickets in order."""
+        done: list[Ticket] = []
+        while self.queue:
+            if self.policy == "sequential":
+                done.append(self._run_one(*self.queue.pop(0)))
+            else:
+                done.extend(self._run_group(self._take_group()))
+        self.completed.extend(done)
+        return done
+
+    def _run_one(self, req: Request, ticket: Ticket) -> Ticket:
+        ticket.start_time = time.perf_counter()
+        try:
+            saves, _ = self.engine.execute(req.graph, req.batch)
+            ticket.result = saves
+        except Exception as e:  # surface per-request, keep serving
+            ticket.error = f"{type(e).__name__}: {e}"
+        ticket.finish_time = time.perf_counter()
+        return ticket
+
+    def _take_group(self) -> list[tuple[Request, Ticket]]:
+        head_req, _ = self.queue[0]
+        key = _merge_key(head_req)
+        if key is None:
+            return [self.queue.pop(0)]
+        group = []
+        rows = 0
+        remaining = []
+        for item in self.queue:
+            req, _t = item
+            b = int(np.asarray(next(iter(req.batch.values()))).shape[0])
+            if _merge_key(req) == key and rows + b <= self.max_batch_rows:
+                group.append(item)
+                rows += b
+            else:
+                remaining.append(item)
+        self.queue = remaining
+        return group
+
+    def _run_group(self, group: list[tuple[Request, Ticket]]) -> list[Ticket]:
+        if len(group) == 1:
+            return [self._run_one(*group[0])]
+        t0 = time.perf_counter()
+        reqs = [r for r, _ in group]
+        tickets = [t for _, t in group]
+        for t in tickets:
+            t.start_time = t0
+        try:
+            sizes = [
+                int(np.asarray(next(iter(r.batch.values()))).shape[0])
+                for r in reqs
+            ]
+            merged = merge_graphs([r.graph for r in reqs], sizes)
+            batch = {
+                k: np.concatenate([np.asarray(r.batch[k]) for r in reqs])
+                for k in reqs[0].batch
+            }
+            saves, _ = self.engine.execute(merged.graph, batch)
+            per_req = split_results(saves, merged)
+            for t, res in zip(tickets, per_req):
+                t.result = res
+        except Exception as e:
+            for t in tickets:
+                t.error = f"{type(e).__name__}: {e}"
+        t1 = time.perf_counter()
+        for t in tickets:
+            t.finish_time = t1
+        return tickets

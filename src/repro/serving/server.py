@@ -1,0 +1,153 @@
+"""The NDIF server: preloaded models, request handling, safe co-tenancy.
+
+Paper §3.3 / Figure 4.  Responsibilities implemented here:
+
+  * **model service layer** — hosts named (model, params) pairs, preloaded
+    once (the Fig. 6a win: setup time is ~constant for users);
+  * **request processing** — decode JSON requests, validate the graph against
+    the op registry and the model's site schedule *before* execution (safe
+    co-tenancy: ops are registry names, never user code — contrast Garçon);
+  * **object store** — results parked under a request id; the client pulls
+    saved values only (the Fig. 6c win: server-side metrics, tiny replies);
+  * **scheduling** — sequential or parallel co-tenancy per model.
+
+The wire protocol is a dict (JSON-encodable via repro.core.serialize):
+  {"kind": "trace",   "model": str, "graph": {...}, "batch": {...}}
+  {"kind": "session", "model": str, "traces": [{graph, batch}, ...]}
+  {"kind": "generate","model": str, "batch": {...}, "max_new_tokens": int}
+Reply: {"ok": bool, "results": ... | "error": str}
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+import numpy as np
+
+from repro.core.graph import GraphValidationError, InterventionGraph
+from repro.core.op_registry import OPS
+from repro.core.serialize import decode_value, encode_value, graph_from_json
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import CoTenantScheduler, Request
+
+__all__ = ["NDIFServer"]
+
+_PROTOCOL_OPS = {"tap_get", "tap_set", "grad_get", "save", "log", "constant",
+                 "input"}
+
+
+class NDIFServer:
+    def __init__(self) -> None:
+        self.engines: dict[str, InferenceEngine] = {}
+        self.schedulers: dict[str, CoTenantScheduler] = {}
+        self.object_store: dict[int, Any] = {}
+
+    # ------------------------------------------------------------- hosting
+    def host(
+        self,
+        name: str,
+        model: Any,
+        params: Any,
+        *,
+        mode: str = "unrolled",
+        policy: str = "sequential",
+        max_batch_rows: int = 64,
+    ) -> None:
+        """Preload a model (the expensive step users never pay for)."""
+        engine = InferenceEngine(model, params, mode=mode, name=name)
+        self.engines[name] = engine
+        self.schedulers[name] = CoTenantScheduler(
+            engine, policy=policy, max_batch_rows=max_batch_rows
+        )
+
+    def hosted(self) -> list[str]:
+        return sorted(self.engines)
+
+    # ------------------------------------------------------ graph security
+    def _validate_graph(self, engine: InferenceEngine, graph: InterventionGraph):
+        for n in graph.nodes:
+            if n.op not in OPS and n.op not in _PROTOCOL_OPS:
+                raise GraphValidationError(
+                    f"op {n.op!r} is not in the server op registry "
+                    "(arbitrary code execution is not permitted)"
+                )
+        graph.validate(engine.schedule.order)
+
+    # ------------------------------------------------------------ handling
+    def handle(self, payload: bytes) -> bytes:
+        try:
+            msg = decode_value(json.loads(payload.decode()))
+            reply = self._dispatch(msg)
+        except Exception as e:  # noqa: BLE001 — protocol boundary
+            reply = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+        return json.dumps(encode_value(reply), separators=(",", ":")).encode()
+
+    def _dispatch(self, msg: dict) -> dict:
+        kind = msg.get("kind")
+        name = msg.get("model")
+        if name not in self.engines:
+            return {
+                "ok": False,
+                "error": f"model {name!r} is not hosted "
+                         f"(available: {self.hosted()})",
+            }
+        engine = self.engines[name]
+        sched = self.schedulers[name]
+        if kind == "trace":
+            graph = graph_from_json(msg["graph"])
+            self._validate_graph(engine, graph)
+            batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
+            ticket = sched.submit(Request(graph=graph, batch=batch))
+            sched.drain()
+            if ticket.error:
+                return {"ok": False, "error": ticket.error}
+            self.object_store[ticket.request_id] = ticket.result
+            return {"ok": True, "results": self.object_store.pop(
+                ticket.request_id), "request_id": ticket.request_id}
+        if kind == "session":
+            results = []
+            tickets = []
+            for tr in msg["traces"]:
+                graph = graph_from_json(tr["graph"])
+                self._validate_graph(engine, graph)
+                batch = {k: np.asarray(v) for k, v in tr["batch"].items()}
+                tickets.append(sched.submit(Request(graph=graph, batch=batch)))
+            sched.drain()
+            for t in tickets:
+                if t.error:
+                    return {"ok": False, "error": t.error}
+                results.append(t.result)
+            return {"ok": True, "results": results}
+        if kind == "train_module":
+            from repro.serving.remote_train import train_graph_inputs
+
+            graph = graph_from_json(msg["graph"])
+            self._validate_graph(engine, graph)
+            batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
+            trained, history = train_graph_inputs(
+                engine, graph, batch,
+                trainable={k: np.asarray(v)
+                           for k, v in msg["trainable"].items()},
+                fixed_inputs={k: np.asarray(v)
+                              for k, v in msg.get("fixed_inputs", {}).items()},
+                loss_name=msg["loss"],
+                steps=int(msg.get("steps", 50)),
+                lr=float(msg.get("lr", 1e-2)),
+            )
+            return {"ok": True,
+                    "results": {"params": trained, "losses": history}}
+        if kind == "generate":
+            batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
+            tokens = batch.pop("tokens")
+            gen, logits = engine.generate(
+                tokens, msg.get("max_new_tokens", 16), **batch
+            )
+            return {"ok": True, "results": {"tokens": gen, "logits": logits}}
+        if kind == "hidden_states":
+            batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
+            tokens = batch.pop("tokens")
+            return {
+                "ok": True,
+                "results": {"hidden": engine.hidden_states(tokens, **batch)},
+            }
+        return {"ok": False, "error": f"unknown request kind {kind!r}"}

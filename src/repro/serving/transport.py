@@ -1,0 +1,47 @@
+"""Transport abstraction with byte accounting and modeled link bandwidth.
+
+The wire format is what the paper standardizes; sockets are incidental.
+``LoopbackTransport`` runs the server in-process but meters every byte both
+ways and can model a network bandwidth (the paper's Petals comparison ran on
+a ~60 MB/s link), exposing ``modeled_transfer_seconds`` so benchmarks can
+report transfer cost without real NICs.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+__all__ = ["LoopbackTransport", "TransportStats"]
+
+
+class TransportStats:
+    def __init__(self) -> None:
+        self.requests = 0
+        self.bytes_sent = 0
+        self.bytes_received = 0
+
+    def modeled_transfer_seconds(self, bandwidth_bytes_per_s: float) -> float:
+        return (self.bytes_sent + self.bytes_received) / bandwidth_bytes_per_s
+
+
+class LoopbackTransport:
+    def __init__(
+        self,
+        handler: Callable[[bytes], bytes],
+        *,
+        bandwidth_bytes_per_s: float | None = 60e6,
+    ) -> None:
+        self.handler = handler
+        self.bandwidth = bandwidth_bytes_per_s
+        self.stats = TransportStats()
+
+    def request(self, payload: bytes) -> bytes:
+        self.stats.requests += 1
+        self.stats.bytes_sent += len(payload)
+        reply = self.handler(payload)
+        self.stats.bytes_received += len(reply)
+        return reply
+
+    def last_modeled_latency(self, req_bytes: int, rep_bytes: int) -> float:
+        if not self.bandwidth:
+            return 0.0
+        return (req_bytes + rep_bytes) / self.bandwidth

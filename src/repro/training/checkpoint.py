@@ -1,0 +1,86 @@
+"""msgpack checkpointing for params/optimizer state (pytree <-> bytes).
+
+Layout: a directory with ``manifest.json`` (tree structure + dtypes/shapes +
+step metadata) and one ``arrays.msgpack`` blob.  Restores to host numpy; the
+launcher re-device_puts against the mesh (resharding on restore is therefore
+free — the checkpoint is sharding-agnostic, unlike raw per-device dumps).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: int, extra: dict | None = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = [np.asarray(x) for x in leaves]
+    blob = msgpack.packb(
+        [a.tobytes() for a in arrays], use_bin_type=True
+    )
+    ckpt_dir = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    with open(os.path.join(ckpt_dir, "arrays.msgpack"), "wb") as f:
+        f.write(blob)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "tree": jax.tree_util.tree_structure(tree).serialize_using_proto().hex(),
+        "leaves": [
+            {"dtype": a.dtype.name, "shape": list(a.shape)} for a in arrays
+        ],
+        "extra": extra or {},
+    }
+    with open(os.path.join(ckpt_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return ckpt_dir
+
+
+def load_checkpoint(path: str, step: int | None = None) -> tuple[Any, dict]:
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    ckpt_dir = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(ckpt_dir, "arrays.msgpack"), "rb") as f:
+        raw = msgpack.unpackb(f.read(), raw=False)
+    leaves = [
+        np.frombuffer(buf, dtype=np.dtype(meta["dtype"])).reshape(meta["shape"]).copy()
+        for buf, meta in zip(raw, manifest["leaves"])
+    ]
+    treedef = jax.tree_util.tree_structure_from_proto_bytes(
+        bytes.fromhex(manifest["tree"])
+    ) if hasattr(jax.tree_util, "tree_structure_from_proto_bytes") else None
+    if treedef is None:
+        from jax.tree_util import PyTreeDef
+
+        treedef = PyTreeDef.deserialize_using_proto(
+            jax.tree_util.default_registry, bytes.fromhex(manifest["tree"])
+        )
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(path)
+        if d.startswith("step_") and os.path.isdir(os.path.join(path, d))
+    ]
+    return max(steps) if steps else None

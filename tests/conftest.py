@@ -1,0 +1,69 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see ONE real device
+(the 512-device override belongs exclusively to repro.launch.dryrun)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.interleave import SiteSchedule
+from repro.core.tracer import TracedModel
+from repro.core import taps
+
+
+def make_tiny_model(n_layers=3, d=4, scan=False):
+    """A minimal layered model for core tests: h -> h @ ((i+1)·I)."""
+    ws = jnp.stack(
+        [jnp.eye(d, dtype=jnp.float32) * (i + 1) for i in range(n_layers)]
+    )
+    params = {"w": ws}
+
+    if not scan:
+        def model_fn(params, x):
+            h = taps.site("embed", x)
+            for i in range(n_layers):
+                h = taps.site("layers.input", h, layer=i)
+                h = h @ params["w"][i]
+                h = taps.site("layers.output", h, layer=i)
+            return taps.site("logits", h)
+        scan_sites = ()
+    else:
+        def model_fn(params, x):
+            h = taps.site("embed", x)
+
+            def body(h, inp):
+                w, idx = inp
+                h = taps.site("layers.input", h, layer=idx)
+                h = h @ w
+                h = taps.site("layers.output", h, layer=idx)
+                return h, taps.scan_outputs()
+
+            h, ys = jax.lax.scan(body, h, (params["w"], jnp.arange(n_layers)))
+            taps.deliver_scan(ys)
+            return taps.site("logits", h)
+        scan_sites = ("layers.input", "layers.output")
+
+    order = [("embed", None)]
+    for i in range(n_layers):
+        order += [("layers.input", i), ("layers.output", i)]
+    order += [("logits", None)]
+    schedule = SiteSchedule(order=order, scan_sites=scan_sites,
+                            n_layers=n_layers)
+    return TracedModel(
+        model_fn, params, schedule, name="tiny",
+        default_mode="scan" if scan else "unrolled",
+    )
+
+
+@pytest.fixture
+def tiny():
+    return make_tiny_model()
+
+
+@pytest.fixture
+def tiny_scan():
+    return make_tiny_model(scan=True)
+
+
+@pytest.fixture
+def x2x4():
+    return jnp.arange(8, dtype=jnp.float32).reshape(2, 4)

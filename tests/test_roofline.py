@@ -1,0 +1,86 @@
+"""HLO cost model: trip-count awareness, dot flops, collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import model_flops, roofline_report
+from repro.roofline.hlo_cost import analyze_hlo
+
+
+def _compiled(fn, *args, **jit_kw):
+    return jax.jit(fn, **jit_kw).lower(*args).compile()
+
+
+def test_plain_dot_flops():
+    x = jnp.ones((32, 48))
+    w = jnp.ones((48, 64))
+    c = analyze_hlo(_compiled(lambda a, b: a @ b, x, w).as_text())
+    assert c.flops == pytest.approx(2 * 32 * 48 * 64, rel=0.05)
+
+
+def test_scan_trip_count_multiplied():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        out, _ = jax.lax.scan(body, x, None, length=9)
+        return out
+
+    x = jnp.ones((32, 32))
+    c = analyze_hlo(_compiled(f, x).as_text())
+    assert c.flops == pytest.approx(9 * 2 * 32**3, rel=0.05)
+    assert c.unknown_trip_whiles == 0
+
+
+def test_nested_scan():
+    def f(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    x = jnp.ones((16, 16))
+    c = analyze_hlo(_compiled(f, x).as_text())
+    assert c.flops == pytest.approx(12 * 2 * 16**3, rel=0.1)
+
+
+def test_collective_bytes_inside_scan():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device; covered by dry-run environment")
+
+
+def test_bytes_accessed_scale():
+    x = jnp.ones((1024, 1024), jnp.float32)
+    c = analyze_hlo(_compiled(lambda a: a + 1.0, x).as_text())
+    # read + write of 4 MB
+    assert 0.5 * 8 * 2**20 <= c.bytes_accessed <= 3 * 8 * 2**20
+
+
+def test_model_flops_dense_vs_moe():
+    from repro.models import registry as R
+
+    dense = R.get_config("qwen3-8b")
+    moe = R.get_config("qwen3-moe-30b-a3b")
+    shp = R.SHAPES["train_4k"]
+    # MoE active params ~3B << total ~30B
+    assert moe.active_params() < 0.25 * moe.total_params()
+    mf = model_flops(dense, shp)
+    assert mf == pytest.approx(6 * dense.active_params() * 4096 * 256)
+
+
+def test_roofline_report_terms():
+    from repro.models import registry as R
+
+    rec = {"n_chips": 256, "flops": 197e12, "bytes_accessed": 819e9,
+           "collective_bytes": 50e9}
+    rep = roofline_report(rec, R.get_config("qwen3-8b"), R.SHAPES["train_4k"])
+    assert rep["t_compute_s"] == pytest.approx(1.0)
+    assert rep["t_memory_s"] == pytest.approx(1.0)
+    assert rep["t_collective_s"] == pytest.approx(1.0)
+    assert rep["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,259 @@
+"""NDIF serving stack: server, client, schedulers, security, sessions."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import InterventionGraph, Ref
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving import (
+    CoTenantScheduler,
+    LoopbackTransport,
+    NDIFClient,
+    NDIFServer,
+    Request,
+)
+
+
+@pytest.fixture(scope="module")
+def hosted():
+    cfg = R.get_config("paper-gpt-small")
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host("paper-gpt-small", model, params, policy="sequential")
+    transport = LoopbackTransport(server.handle)
+    client = NDIFClient(transport, "paper-gpt-small")
+    toks = np.asarray(
+        jax.random.randint(jax.random.key(1), (2, 12), 0, cfg.vocab_size)
+    )
+    return cfg, model, params, server, transport, client, toks
+
+
+def test_remote_equals_local(hosted):
+    cfg, model, params, server, transport, client, toks = hosted
+    lm_remote = traced_lm(model, None, backend=client)
+    with lm_remote.trace(toks, remote=True):
+        lm_remote.layers[3].output[1, 4, :] = lm_remote.layers[3].output[0, 2, :]
+        out_r = lm_remote.output.save("out")
+    lm_local = traced_lm(model, params)
+    with lm_local.trace(jnp.asarray(toks)):
+        lm_local.layers[3].output[1, 4, :] = lm_local.layers[3].output[0, 2, :]
+        out_l = lm_local.output.save("out")
+    np.testing.assert_allclose(np.asarray(out_r.value),
+                               np.asarray(out_l.value), rtol=1e-4, atol=1e-4)
+
+
+def test_server_side_metric_is_small_on_wire(hosted):
+    """Fig. 6c: returning a metric beats returning hidden states."""
+    cfg, model, params, server, transport, client, toks = hosted
+    lm = traced_lm(model, None, backend=client)
+
+    b0 = (transport.stats.bytes_sent, transport.stats.bytes_received)
+    with lm.trace(toks, remote=True):
+        logits = lm.output
+        (logits[:, -1, 7] - logits[:, -1, 3]).save("logit_diff")
+    small = transport.stats.bytes_received - b0[1]
+
+    b1 = transport.stats.bytes_received
+    hidden = client.hidden_states(toks)
+    big = transport.stats.bytes_received - b1
+    assert hidden.shape == (2, 12, cfg.d_model)
+    assert big > 50 * small, (big, small)
+
+
+def test_unknown_model_rejected(hosted):
+    cfg, model, params, server, transport, client, toks = hosted
+    bad = NDIFClient(transport, "not-hosted")
+    with pytest.raises(RuntimeError, match="not hosted"):
+        bad.hidden_states(toks)
+
+
+def test_unregistered_op_rejected(hosted):
+    """Safe co-tenancy: ops outside the registry never execute."""
+    cfg, model, params, server, transport, client, toks = hosted
+    g = InterventionGraph()
+    t = g.add("tap_get", site="logits")
+    g.nodes.append(
+        type(g.nodes[0])(id=1, op="os.system", args=(Ref(0),), kwargs={})
+    )
+    from repro.core.serialize import graph_to_json
+
+    payload = json.dumps({
+        "kind": "trace", "model": "paper-gpt-small",
+        "graph": graph_to_json(g),
+        "batch": {"tokens": {"__array__": {
+            "dtype": "int32", "shape": [1, 4],
+            "b64": __import__("base64").b64encode(
+                np.zeros((1, 4), np.int32).tobytes()).decode(),
+        }}},
+    }).encode()
+    reply = json.loads(server.handle(payload).decode())
+    assert not reply["ok"]
+    assert "not in the server op registry" in reply["error"]
+
+
+def test_weights_never_cross_the_wire(hosted):
+    cfg, model, params, server, transport, client, toks = hosted
+    lm = traced_lm(model, None, backend=client)
+    sent0 = transport.stats.bytes_sent
+    with lm.trace(toks, remote=True):
+        lm.layers[0].output.save("acts")
+    sent = transport.stats.bytes_sent - sent0
+    # request = graph + tokens; must be far smaller than the params blob
+    n_param_bytes = sum(
+        np.asarray(x).nbytes for x in jax.tree.leaves(params)
+    )
+    assert sent < n_param_bytes / 100
+
+
+def test_session_single_request(hosted):
+    cfg, model, params, server, transport, client, toks = hosted
+    lm = traced_lm(model, None, backend=client)
+    req0 = transport.stats.requests
+    with lm.session(remote=True, backend=client) as sess:
+        with sess.trace(toks) as t1:
+            a = lm.layers[1].output.save("a")
+        with sess.trace(toks) as t2:
+            b = lm.layers[2].output.save("b")
+    assert transport.stats.requests - req0 == 1  # N traces, ONE request
+    assert np.asarray(t1.result("a")).shape == (2, 12, cfg.d_model)
+    assert np.asarray(t2.result("b")).shape == (2, 12, cfg.d_model)
+
+
+def test_generate_api(hosted):
+    cfg, model, params, server, transport, client, toks = hosted
+    res = client.generate(toks, max_new_tokens=3)
+    assert res["tokens"].shape == (2, 3)
+
+
+# ------------------------------------------------------------- schedulers
+def _layer_req(cfg, layer, rows, seq=10, seed=0):
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.output", layer=layer)
+    s = g.add("save", Ref(t.id))
+    g.mark_saved("acts", s)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, (rows, seq)).astype(np.int32)
+    return Request(graph=g, batch={"tokens": toks})
+
+
+def test_parallel_cotenancy_merges(hosted):
+    cfg, model, params, *_ = hosted
+    from repro.serving.engine import InferenceEngine
+
+    engine = InferenceEngine(model, params, name="t")
+    sched = CoTenantScheduler(engine, policy="parallel", max_batch_rows=16)
+    tickets = [sched.submit(_layer_req(cfg, i % 4, rows=1 + i % 2, seed=i))
+               for i in range(5)]
+    sched.drain()
+    assert engine.stats.executions == 1  # ONE merged forward
+    for i, t in enumerate(tickets):
+        assert t.error is None
+        assert t.result["acts"].shape[0] == 1 + i % 2
+
+
+def test_sequential_cotenancy_runs_n(hosted):
+    cfg, model, params, *_ = hosted
+    from repro.serving.engine import InferenceEngine
+
+    engine = InferenceEngine(model, params, name="t")
+    sched = CoTenantScheduler(engine, policy="sequential")
+    for i in range(3):
+        sched.submit(_layer_req(cfg, 0, rows=1, seed=i))
+    done = sched.drain()
+    assert engine.stats.executions == 3
+    assert all(t.error is None for t in done)
+
+
+def test_engine_compile_cache(hosted):
+    """Same structural graph + shapes, different constants: one compile."""
+    cfg, model, params, *_ = hosted
+    from repro.serving.engine import InferenceEngine
+
+    engine = InferenceEngine(model, params, name="t")
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)
+    for val in (0.0, 1.0, 2.0):
+        g = InterventionGraph()
+        t = g.add("tap_get", site="layers.output", layer=1)
+        c = g.add("constant", np.full((cfg.d_model,), val, np.float32))
+        u = g.add("add", Ref(t.id), Ref(c.id))
+        g.add("tap_set", Ref(u.id), site="layers.output", layer=1)
+        s = g.add("save", Ref(t.id))
+        g.mark_saved("x", s)
+        engine.execute(g, {"tokens": toks})
+    assert engine.stats.compiles == 1
+    assert engine.stats.cache_hits == 2
+
+
+def test_scheduler_survives_bad_request(hosted):
+    cfg, model, params, *_ = hosted
+    from repro.serving.engine import InferenceEngine
+
+    engine = InferenceEngine(model, params, name="t")
+    sched = CoTenantScheduler(engine, policy="sequential")
+    bad = InterventionGraph()
+    bad.add("tap_get", site="never-a-site")
+    t1 = sched.submit(Request(graph=bad, batch={
+        "tokens": np.zeros((1, 4), np.int32)}))
+    t2 = sched.submit(_layer_req(cfg, 0, 1))
+    sched.drain()
+    assert t1.error is not None
+    assert t2.error is None and t2.result is not None
+
+
+def test_remote_lora_training(hosted):
+    """Paper Code Example 5: a LoRA adapter expressed AS an intervention
+    graph, trained server-side; only params + losses return."""
+    from repro.serving.remote_train import lora_graph
+
+    cfg, model, params, server, transport, client, toks = hosted
+    g, init = lora_graph(layer=2, d_model=cfg.d_model, rank=4,
+                         vocab_size=cfg.vocab_size, alpha=2.0)
+    labels = np.roll(toks, -1, axis=1)
+    res = client.train_module(
+        g, {"tokens": toks}, trainable=init,
+        fixed_inputs={"labels": labels}, steps=15, lr=5e-3,
+    )
+    assert res["losses"][-1] < res["losses"][0]
+    assert res["params"]["WA"].shape == (cfg.d_model, 4)
+    assert np.abs(res["params"]["WB"]).sum() > 0  # actually trained
+
+
+def test_remote_train_rejects_bad_loss(hosted):
+    from repro.serving.remote_train import lora_graph
+
+    cfg, model, params, server, transport, client, toks = hosted
+    g, init = lora_graph(layer=0, d_model=cfg.d_model, rank=2,
+                         vocab_size=cfg.vocab_size)
+    with pytest.raises(RuntimeError, match="nope"):
+        client.train_module(g, {"tokens": toks}, trainable=init,
+                            fixed_inputs={"labels": toks}, loss="nope",
+                            steps=1)
+
+
+def test_mla_model_serving_roundtrip():
+    """The absorbed-MLA decode path serves correctly end-to-end."""
+    cfg = R.get_config("minicpm3-4b", reduced=True)
+    model = R.build_model("minicpm3-4b", cfg)
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host(cfg.name, model, params)
+    client = NDIFClient(LoopbackTransport(server.handle), cfg.name)
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    res = client.generate(toks, max_new_tokens=3)
+    assert res["tokens"].shape == (2, 3)
+    # greedy step-1 equals forward argmax (exercises absorbed decode)
+    full = model.forward(params, {"tokens": jnp.asarray(toks)})["logits"]
+    np.testing.assert_array_equal(
+        res["tokens"][:, 0], np.argmax(np.asarray(full)[:, -1], -1))
+    # and the MLA latent is a servable intervention site
+    lm = traced_lm(model, None, backend=client)
+    with lm.trace(toks, remote=True):
+        lat = lm.layers[1].attn.kv_latent.save("lat")
+    assert np.asarray(lat.value).shape == (2, 6, cfg.mla.kv_lora_rank)

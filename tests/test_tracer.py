@@ -1,0 +1,128 @@
+"""Tracer/Envoy API edges, op registry, update_path semantics."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.op_registry import OPS, apply_path, register_op, update_path
+from repro.core.tracer import Session
+
+
+class TestEnvoy:
+    def test_unknown_path_raises(self, tiny, x2x4):
+        with tiny.trace(x2x4) as tr:
+            tr._deferred = True
+            with pytest.raises(AttributeError, match="no tap site"):
+                tiny.layers[0].bogus
+
+    def test_per_layer_site_without_index_rejected(self, tiny, x2x4):
+        from repro.core.graph import GraphValidationError
+
+        with pytest.raises(GraphValidationError, match="unknown site"):
+            with tiny.trace(x2x4):
+                # layers.output requires a [layer] index — layer=None is not
+                # in the schedule and must be caught at validation.
+                tiny.layers.output.save("x")
+
+    def test_access_outside_trace_raises(self, tiny):
+        with pytest.raises(RuntimeError, match="inside a trace context"):
+            tiny.layers
+
+    def test_exception_in_context_skips_execution(self, tiny, x2x4):
+        with pytest.raises(ValueError, match="boom"):
+            with tiny.trace(x2x4) as tr:
+                tiny.output.save("x")
+                raise ValueError("boom")
+        with pytest.raises(RuntimeError):
+            tr.result("x")
+
+    def test_value_before_execution_raises(self, tiny, x2x4):
+        with pytest.raises(RuntimeError):
+            with tiny.trace(x2x4):
+                v = tiny.output.save("v")
+                _ = v.value  # context not exited yet
+
+    def test_save_auto_names_unique(self, tiny, x2x4):
+        with tiny.trace(x2x4) as tr:
+            a = tiny.layers[0].output.save()
+            b = tiny.layers[1].output.save()
+        assert not np.allclose(np.asarray(a.value), np.asarray(b.value))
+
+
+class TestSessionLocal:
+    def test_local_session_runs_on_exit(self, tiny, x2x4):
+        with tiny.session() as sess:
+            with sess.trace(x2x4) as t1:
+                t1_out = tiny.output.save("o")
+            with pytest.raises(RuntimeError):
+                t1.result("o")  # deferred until session exit
+            with sess.trace(2 * x2x4) as t2:
+                t2_out = tiny.output.save("o")
+        a = np.asarray(t1.result("o"))
+        b = np.asarray(t2.result("o"))
+        np.testing.assert_allclose(2 * a, b, rtol=1e-6)
+
+    def test_trace_outside_session_raises(self, tiny, x2x4):
+        sess = Session(tiny, remote=False, backend=None)
+        with pytest.raises(RuntimeError, match="not active"):
+            sess.trace(x2x4)
+
+
+class TestOpRegistry:
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_op("add", lambda a, b: a + b)
+
+    def test_core_ops_present(self):
+        for name in ("add", "mul", "getitem", "update_path", "softmax",
+                     "jnp.sum", "logit_diff", "nll", "topk"):
+            assert name in OPS
+
+    def test_update_path_array(self):
+        x = jnp.zeros((3, 4))
+        y = update_path(x, ((1, slice(0, 2)),), 7.0)
+        assert float(y[1, 0]) == 7.0 and float(y[1, 2]) == 0.0
+        assert float(x[1, 0]) == 0.0  # functional
+
+    def test_update_path_tuple(self):
+        x = (jnp.zeros((2,)), jnp.ones((2,)))
+        y = update_path(x, (0, (1,)), 5.0)
+        assert float(y[0][1]) == 5.0
+        assert float(y[1][0]) == 1.0
+
+    def test_apply_path(self):
+        x = (jnp.arange(6).reshape(2, 3),)
+        assert int(apply_path(x, (0, (1, 2)))) == 5
+
+
+@given(
+    st.integers(0, 2),
+    st.integers(0, 3),
+    st.floats(-10, 10, width=32),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_update_path_roundtrip(i, j, val):
+    x = jnp.zeros((3, 4))
+    y = update_path(x, ((i, j),), np.float32(val))
+    assert float(apply_path(y, ((i, j),))) == pytest.approx(float(np.float32(val)))
+    # everything else untouched
+    mask = np.ones((3, 4), bool)
+    mask[i, j] = False
+    assert np.all(np.asarray(y)[mask] == 0)
+
+
+def test_engine_generate_matches_forward_argmax():
+    import jax
+
+    from repro.models import registry as R
+    from repro.serving.engine import InferenceEngine
+
+    cfg = R.get_config("paper-gpt-small")
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params)
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    gen, _ = engine.generate(jnp.asarray(toks), max_new_tokens=3)
+    # greedy decode step 1 == argmax of the teacher-forcing forward
+    full = model.forward(params, {"tokens": jnp.asarray(toks)})["logits"]
+    np.testing.assert_array_equal(gen[:, 0], np.argmax(np.asarray(full)[:, -1], -1))
