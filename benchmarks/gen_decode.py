@@ -1,0 +1,72 @@
+"""Generation decode-path benchmark: cached compiled step vs per-call jit.
+
+The seed's ``InferenceEngine.generate`` rebuilt ``jax.jit(lambda ...)`` on
+every call, so the decode step re-traced and re-compiled per ``generate()``
+invocation.  The engine now caches ONE jitted prefill and ONE jitted decode
+step; this module measures what that buys, plus the cost of riding an
+intervention graph along the decode loop.
+
+Rows:
+  gen_cached_decode     engine.generate after warmup (zero retraces)
+  gen_fresh_jit_decode  the seed's pattern: fresh jax.jit per call
+  gen_interleaved_1step one decode step instrumented (logit collection)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, build, opt_suite, timeit
+from repro.core.graph import InterventionGraph, Ref
+from repro.serving.engine import InferenceEngine
+
+N_NEW = 8
+
+
+def rows() -> list[Row]:
+    cfg = opt_suite(("2m",))["2m"]
+    model, params = build(cfg)
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size, (4, 16), np.int64)
+        .astype(np.int32)
+    )
+    out = []
+
+    engine = InferenceEngine(model, params)
+    engine.generate(toks, max_new_tokens=N_NEW)  # warm the caches
+    c0 = engine.stats.compiles
+    mean, _ = timeit(lambda: engine.generate(toks, max_new_tokens=N_NEW), n=5)
+    retr = engine.stats.compiles - c0
+    out.append(Row("gen_cached_decode", mean * 1e6,
+                   f"retraces_per_call={retr / 5:.1f}"))
+
+    def fresh_jit_generate():
+        # the seed's anti-pattern: a new jit closure every call
+        B, S = toks.shape
+        o, cache = model.prefill(params, {"tokens": toks},
+                                 max_len=S + N_NEW)
+        step = jax.jit(
+            lambda p, c, t, ps: model.decode_step(
+                p, c, {"token": t, "pos": ps})
+        )
+        tok = jnp.argmax(o["logits"][:, -1], -1).astype(jnp.int32)[:, None]
+        for t in range(N_NEW - 1):
+            pos = jnp.full((B,), S + t, jnp.int32)
+            o, cache = step(params, cache, tok, pos)
+            tok = jnp.argmax(o["logits"][:, 0], -1).astype(jnp.int32)[:, None]
+
+    mean, _ = timeit(fresh_jit_generate, n=5, warmup=1)
+    out.append(Row("gen_fresh_jit_decode", mean * 1e6,
+                   "retraces_per_call=1.0"))
+
+    g = InterventionGraph()
+    t = g.add("tap_get", site="logits", step=3)
+    sv = g.add("save", Ref(t.id))
+    g.mark_saved("lg@step3", sv)
+    engine.generate_interleaved(g, {"tokens": toks}, N_NEW)  # warm
+    mean, _ = timeit(
+        lambda: engine.generate_interleaved(g, {"tokens": toks}, N_NEW), n=5
+    )
+    out.append(Row("gen_interleaved_1step", mean * 1e6, "steps_tapped=1"))
+    return out

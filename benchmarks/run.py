@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.fig6_remote",
     "benchmarks.fig6c_petals_comparison",
     "benchmarks.fig9_concurrent_users",
+    "benchmarks.gen_decode",
     "benchmarks.kernel_bench",
 ]
 

@@ -1,0 +1,63 @@
+"""Steered generation: intervene on activations at chosen decode steps.
+
+The paper's multi-invoke tracing (§3.2) applied to a full decode loop —
+the workload class FlexModel and nnterp call table stakes for
+interpretability tooling: activation steering DURING generation, per-token
+logit-lens collection, and cached per-step activations.
+
+Run:  PYTHONPATH=src python examples/steered_generation.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving.engine import InferenceEngine
+
+cfg = R.get_config("paper-gpt-small")
+model = R.build_model("paper-gpt-small", cfg)
+params = model.init(jax.random.key(0))
+tokens = jnp.asarray(
+    np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 6), dtype=np.int32)
+)
+
+lm = traced_lm(model, params)
+N = 8
+
+# ---------------------------------------------------------------- baseline
+engine = InferenceEngine(model, params)
+plain, _ = engine.generate(tokens, max_new_tokens=N)
+print("plain tokens:   ", plain[0])
+c0 = engine.stats.compiles
+engine.generate(tokens, max_new_tokens=N)
+print(f"decode is cached: {engine.stats.compiles - c0} new compiles "
+      "on the second generate()")
+
+# ------------------------------------------------- steer + collect per step
+with lm.generate(tokens, max_new_tokens=N) as tr:
+    # steer one layer's MLP at steps 3..5 only
+    for s in tr.steps(3, 6):
+        lm.layers[2].mlp.output += 25.0
+    # collect the (post-intervention) logits of EVERY step; saving under
+    # one name across steps stacks them along the token axis
+    for s in tr.steps():
+        lm.logits.save("logits")
+
+print("steered tokens: ", tr.output_tokens[0])
+print("stacked logits: ", np.asarray(tr.result("logits")).shape)  # (B, N, V)
+
+# per-token logit lens: entropy of each decode step's distribution
+lg = np.asarray(tr.result("logits"))
+p = jax.nn.softmax(jnp.asarray(lg), axis=-1)
+ent = -np.asarray((p * jnp.log(p + 1e-9)).sum(-1))[:, :, None].squeeze(-1)
+print("per-step entropy (row 0):", np.round(ent[0], 2))
+
+# -------------------------------------------------- broadcast + prefill tap
+with lm.generate(tokens, max_new_tokens=4) as tr2:
+    with tr2.prefill():
+        lm.layers[0].output.save("prompt_acts")   # prompt-phase collection
+    with tr2.all_steps():
+        lm.layers[2].mlp.output += 25.0           # steer every decode step
+print("prompt acts:    ", np.asarray(tr2.result("prompt_acts")).shape)
+print("broadcast steer:", tr2.output_tokens[0])

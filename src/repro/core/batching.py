@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.graph import InterventionGraph, Node, Ref, map_refs
+from repro.core.graph import ALL_STEPS, InterventionGraph, Node, Ref, map_refs
 
 __all__ = ["MergedBatch", "merge_graphs", "split_results"]
 
@@ -47,12 +47,22 @@ def merge_graphs(
                     "graphs using .grad cannot be batch-merged; "
                     "schedule them sequentially"
                 )
+            if n.op == "tap_set" and n.step == ALL_STEPS:
+                # A merged setter is a read-modify-write, and ALL_STEPS
+                # getters are invalid — expand to concrete steps client-side
+                # or run solo.
+                raise ValueError(
+                    "graphs using all_steps() setters cannot be "
+                    "batch-merged; schedule them sequentially"
+                )
 
     merged = InterventionGraph()
-    # Per (site, layer): the pristine shared getter and the current
-    # (post-previous-setters) value node.
-    shared_get: dict[tuple[str | None, int | None], Node] = {}
-    current: dict[tuple[str | None, int | None], Node] = {}
+    # Per (site, layer, step): the pristine shared getter and the current
+    # (post-previous-setters) value node.  Step is part of the key so merged
+    # generation requests tapping one site at different decode steps never
+    # alias (None for single-forward graphs).
+    shared_get: dict[tuple[str | None, int | None, int | None], Node] = {}
+    current: dict[tuple[str | None, int | None, int | None], Node] = {}
 
     starts: list[int] = []
     acc = 0
@@ -72,10 +82,12 @@ def merge_graphs(
             return map_refs(obj, lambda ref: Ref(idmap[ref.node_id]))
 
         for n in g.nodes:
-            key = (n.site, n.layer)
+            key = (n.site, n.layer, n.step)
             if n.op == "tap_get":
                 if key not in shared_get:
-                    node = merged.add("tap_get", site=n.site, layer=n.layer)
+                    node = merged.add(
+                        "tap_get", site=n.site, layer=n.layer, step=n.step
+                    )
                     shared_get[key] = node
                     current.setdefault(key, node)
                 sl = merged.add(
@@ -88,7 +100,9 @@ def merge_graphs(
                 idmap[n.id] = sl.id
             elif n.op == "tap_set":
                 if key not in current:
-                    node = merged.add("tap_get", site=n.site, layer=n.layer)
+                    node = merged.add(
+                        "tap_get", site=n.site, layer=n.layer, step=n.step
+                    )
                     shared_get.setdefault(key, node)
                     current[key] = node
                 val_ref = remap(n.args[0])
@@ -99,7 +113,10 @@ def merge_graphs(
                     start,
                     axis=BATCH_AXIS,
                 )
-                merged.add("tap_set", Ref(upd.id), site=n.site, layer=n.layer)
+                merged.add(
+                    "tap_set", Ref(upd.id),
+                    site=n.site, layer=n.layer, step=n.step,
+                )
                 current[key] = upd
                 idmap[n.id] = upd.id
             elif n.op == "input":
@@ -111,6 +128,7 @@ def merge_graphs(
                     *remap(n.args),
                     site=n.site,
                     layer=n.layer,
+                    step=n.step,
                     meta=dict(n.meta),
                     **remap(n.kwargs),
                 )

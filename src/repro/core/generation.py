@@ -1,0 +1,329 @@
+"""Intervention-aware generation: interleave a step-annotated graph with a
+multi-token decode loop.
+
+The paper's NNsight traces *generation*, not just single forwards (§3.2,
+multi-invoke/``.next()`` semantics): users read and write activations at
+every decoded token.  This module is the execution engine behind
+``lm.generate(tokens, max_new_tokens=N)`` (:mod:`repro.core.tracer`) and the
+serving engine's graph-bearing generation path.
+
+Execution model
+---------------
+A generation request runs the model ``1 + N`` times::
+
+    prefill(tokens[:, :-1])                # step PREFILL_STEP (-1)
+    decode_step(tokens[:, -1],  pos=S-1)   # step 0 -> logits for new tok 0
+    decode_step(new_tok_0,      pos=S)     # step 1 -> logits for new tok 1
+    ...                                    # step N-1
+
+The prompt's last token goes through the *decode* path so every decode step
+has identical shapes — per-step values are ``(B, 1, ...)`` and stack to
+``(B, N, ...)`` — and step 0 is interveneable like any other step.
+
+The step-annotated intervention graph (``Node.step``) is *sliced* into one
+sub-graph per model execution (:func:`slice_steps`): each slice keeps that
+step's tap nodes plus the op nodes first ready at that step; values flowing
+across steps become ``input`` nodes bound from a persistent environment, and
+values needed later are exported as internal saves.  Each slice then runs
+through the ordinary single-forward interleaver
+(:func:`repro.core.interleave.run_interleaved`), so site scheduling, scan
+mode, and setter validation are inherited unchanged.  Steps whose slice is
+empty take a caller-provided fast path (the serving engine passes its cached
+compiled prefill/decode functions, so uninstrumented steps never retrace).
+
+Greedy sampling reads the *post-intervention* logits: a setter on the
+``logits`` site (or anything upstream) steers which token is fed back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import (
+    ALL_STEPS,
+    PRE_STEP,
+    PREFILL_STEP,
+    GraphValidationError,
+    InterventionGraph,
+    Node,
+    Ref,
+    assign_steps,
+    map_refs,
+)
+from repro.core.interleave import SiteSchedule, run_interleaved
+
+__all__ = ["StepSlice", "slice_steps", "run_generation", "GenerationResult"]
+
+_ENV = "__env%d"  # import/export name for a cross-step value (by orig id)
+
+
+@dataclasses.dataclass
+class StepSlice:
+    """The sub-graph of one model execution inside a generation trace."""
+
+    step: int
+    graph: InterventionGraph
+    imports: dict[str, int]  # input name -> ORIGINAL node id (bound from env)
+    exports: dict[str, int]  # save name  -> ORIGINAL node id (put into env)
+
+    def is_empty(self) -> bool:
+        return not self.graph.nodes
+
+
+def slice_steps(
+    graph: InterventionGraph, n_steps: int
+) -> dict[int, StepSlice]:
+    """Partition a step-annotated graph into per-execution sub-graphs.
+
+    Returns slices keyed by step (``PREFILL_STEP`` and ``0..n_steps-1``);
+    steps with no work are omitted.  Raises
+    :class:`~repro.core.graph.GraphValidationError` on cross-step rule
+    violations (see :func:`repro.core.graph.assign_steps`).
+    """
+    ready = assign_steps(graph, n_steps)
+
+    # Which original node ids each step's slice contains.  PRE_STEP nodes
+    # (constants/inputs and pure functions of them) are replicated into every
+    # slice that uses them — recomputing a handful of scalar ops per step is
+    # cheaper than threading them through the environment.
+    members: dict[int, set[int]] = {}
+
+    def want(step: int, nid: int) -> None:
+        node = graph.node(nid)
+        if node.op == "tap_set":  # setters are claimed by their own step
+            return
+        # PRE_STEP and ALL_STEPS nodes are replicated into any slice that
+        # needs them; same-step nodes are included directly.
+        if ready[nid] in (step, PRE_STEP, ALL_STEPS):
+            if nid in members.setdefault(step, set()):
+                return
+            members[step].add(nid)
+            for r in node.refs():
+                want(step, r.node_id)
+
+    for n in graph.nodes:
+        s = ready[n.id]
+        if s == PRE_STEP:
+            # Pure functions of constants are pulled in on demand by want();
+            # but a user-visible save/log of one must still execute somewhere
+            # — pin it to the prefill execution.
+            if n.op not in ("save", "log") and n.id not in graph.saves.values():
+                continue
+            s = PREFILL_STEP
+        steps = (
+            list(range(n_steps)) if s == ALL_STEPS else [s]
+        )
+        for step in steps:
+            members.setdefault(step, set()).add(n.id)
+            for r in n.refs():
+                want(step, r.node_id)
+
+    # Cross-step edges: node produced at step s, consumed at step s' > s
+    # (imports pull from the persistent env; exports feed it).
+    needs_export: set[int] = set()
+    for n in graph.nodes:
+        s = ready[n.id]
+        if s == PRE_STEP:
+            continue
+        for r in n.refs():
+            rs = ready[r.node_id]
+            if rs not in (PRE_STEP, s) and rs != ALL_STEPS:
+                needs_export.add(r.node_id)
+
+    slices: dict[int, StepSlice] = {}
+    for step in sorted(members):
+        ids = sorted(members[step])
+        sub = InterventionGraph()
+        idmap: dict[int, int] = {}
+        imports: dict[str, int] = {}
+        exports: dict[str, int] = {}
+
+        def local_ref(ref: Ref) -> Ref:
+            nid = ref.node_id
+            if nid in idmap:
+                return Ref(idmap[nid])
+            # produced at an earlier step: import from the environment
+            name = _ENV % nid
+            inp = sub.add("input", name)
+            imports[name] = nid
+            idmap[nid] = inp.id
+            return Ref(inp.id)
+
+        for nid in ids:
+            n = graph.node(nid)
+            new = sub.add(
+                n.op,
+                *map_refs(n.args, local_ref),
+                site=n.site,
+                layer=n.layer,
+                step=n.step,
+                meta=dict(n.meta),
+                **map_refs(n.kwargs, local_ref),
+            )
+            idmap[nid] = new.id
+            if nid in needs_export:
+                name = _ENV % nid
+                sv = sub.add("save", Ref(new.id))
+                sub.mark_saved(name, sv)
+                exports[name] = nid
+
+        # user saves whose save node lives in this slice
+        for name, nid in graph.saves.items():
+            if nid in idmap:
+                sub.saves[name] = idmap[nid]
+
+        slices[step] = StepSlice(
+            step=step, graph=sub, imports=imports, exports=exports
+        )
+    return slices
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: Any  # (B, N) generated token ids
+    logits: Any  # (B, 1, V) post-intervention logits of the LAST step
+    saves: dict[str, Any]
+    logs: list
+
+
+def _step_order(schedule: SiteSchedule) -> SiteSchedule:
+    """The per-execution tap-site order (drop the wrapper-only 'output')."""
+    order = [k for k in schedule.order if k[0] != "output"]
+    return SiteSchedule(order, schedule.scan_sites, schedule.n_layers)
+
+
+def run_generation(
+    model: Any,
+    params: Any,
+    graph: InterventionGraph,
+    tokens: jax.Array,
+    max_new_tokens: int,
+    *,
+    mode: str = "unrolled",
+    extras: dict | None = None,
+    inputs: dict[str, Any] | None = None,
+    prefill_fn: Callable | None = None,
+    decode_fn: Callable | None = None,
+    cache_kind: str = "full",
+) -> GenerationResult:
+    """Greedy-decode ``max_new_tokens`` with ``graph`` interleaved.
+
+    ``model`` is a zoo model object (``prefill`` / ``decode_step`` /
+    ``site_schedule``).  ``prefill_fn(params, batch, max_len)`` and
+    ``decode_fn(params, cache, token, pos)`` are optional fast paths used
+    for steps with no interventions (the serving engine passes its cached
+    jitted functions); instrumented steps always run through
+    :func:`run_interleaved`.
+    """
+    extras = dict(extras or {})
+    B, S = tokens.shape
+    if S < 2:
+        raise ValueError(
+            "generation tracing requires a prompt of >= 2 tokens (the last "
+            "prompt token is decoded as step 0 so all steps share shapes)"
+        )
+    N = int(max_new_tokens)
+    if N < 1:
+        raise ValueError("max_new_tokens must be >= 1")
+
+    slices = slice_steps(graph, N)
+    schedule = _step_order(model.site_schedule(mode))
+    max_len = S - 1 + N
+
+    env: dict[int, Any] = {}
+    saves: dict[str, Any] = {}
+    logs: list = []
+
+    def run_slice(sl: StepSlice, model_fn, args: tuple) -> Any:
+        sl.graph.validate(schedule.order)
+        bound = {name: env[nid] for name, nid in sl.imports.items()}
+        if inputs:
+            for n in sl.graph.nodes:
+                if n.op == "input" and not n.args[0].startswith("__env"):
+                    bound[n.args[0]] = inputs[n.args[0]]
+        out, sl_saves, sl_logs = run_interleaved(
+            model_fn, sl.graph, schedule, args, {}, mode=mode, inputs=bound,
+        )
+        for name, nid in sl.exports.items():
+            env[nid] = sl_saves.pop(name)
+        saves.update(sl_saves)
+        logs.extend(sl_logs)
+        return out
+
+    # ------------------------------------------------------------- prefill
+    prompt = {"tokens": tokens[:, :-1], **extras}
+    pre_slice = slices.get(PREFILL_STEP)
+    if pre_slice is None and prefill_fn is not None:
+        out, cache = prefill_fn(params, prompt, max_len)
+    elif pre_slice is None:
+        out, cache = model.prefill(
+            params, prompt, mode=mode, kind=cache_kind, max_len=max_len
+        )
+    else:
+        def pre_fn(params_, batch_):
+            return model.prefill(
+                params_, batch_, mode=mode, kind=cache_kind, max_len=max_len
+            )
+
+        out, cache = run_slice(pre_slice, pre_fn, (params, prompt))
+
+    # -------------------------------------------------------------- decode
+    def plain_decode(params_, cache_, token_, pos_):
+        if decode_fn is not None:
+            return decode_fn(params_, cache_, token_, pos_)
+        return model.decode_step(
+            params_, cache_, {"token": token_, "pos": pos_}, mode=mode
+        )
+
+    token = tokens[:, -1:]
+    new_tokens = []
+    logits = None
+    for t in range(N):
+        pos = jnp.full((B,), S - 1 + t, jnp.int32)
+        sl = slices.get(t)
+        if sl is None or sl.is_empty():
+            out, cache = plain_decode(params, cache, token, pos)
+        else:
+            def step_fn(params_, cache_, token_, pos_):
+                return model.decode_step(
+                    params_, cache_, {"token": token_, "pos": pos_},
+                    mode=mode,
+                )
+
+            out, cache = run_slice(sl, step_fn, (params, cache, token, pos))
+        logits = out["logits"]
+        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        new_tokens.append(token[:, 0])
+
+    return GenerationResult(
+        tokens=jnp.stack(new_tokens, axis=1),
+        logits=logits,
+        saves=saves,
+        logs=logs,
+    )
+
+
+def stack_step_saves(
+    per_step: dict[int, Any], axis: int = 1
+) -> Any:
+    """Stack one save name's per-step values in step order.
+
+    Values shaped ``(B, 1, ...)`` (token-axis singletons, the common case
+    for decode-step activations) concatenate along the token axis to
+    ``(B, n_steps, ...)``; anything else stacks along a new leading axis.
+    """
+    steps = sorted(per_step)
+    vals = [per_step[s] for s in steps]
+
+    def stack(*xs):
+        if all(
+            hasattr(x, "ndim") and x.ndim >= 2 and x.shape[1] == 1
+            for x in xs
+        ):
+            return jnp.concatenate(xs, axis=axis)
+        return jnp.stack(xs, axis=0)
+
+    return jax.tree.map(stack, *vals)

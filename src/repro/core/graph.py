@@ -14,6 +14,12 @@ ids, so node-id order is a topological order.  The paper's validity rule
 node") becomes a *site-schedule* check: every node is assigned the earliest
 model tap site at which all of its dependencies are available, and a
 ``tap_set`` at site S must be computable no later than S.
+
+Generation traces add a second scheduling axis: ``Node.step`` places a tap
+on one execution of a multi-token decode loop (prefill + N decode steps,
+NNsight's ``.next()``/iteration semantics).  :func:`assign_steps` is the
+step-level analogue of :meth:`InterventionGraph.schedule`; per-step site
+scheduling is then inherited unchanged (see :mod:`repro.core.generation`).
 """
 from __future__ import annotations
 
@@ -27,11 +33,23 @@ __all__ = [
     "GraphValidationError",
     "PRE_SITE",
     "POST_SITE",
+    "PREFILL_STEP",
+    "ALL_STEPS",
+    "PRE_STEP",
+    "assign_steps",
 ]
 
 # Pseudo-site indices used by the scheduler.
 PRE_SITE = -1      # available before the model runs (constants, inputs)
 POST_SITE = 1 << 30  # only available after the forward completes
+
+# Pseudo-step indices used by generation traces (see repro.core.generation).
+# Decode steps are 0..N-1; the prompt prefill is PREFILL_STEP; a broadcast
+# setter (fires at every decode step) is ALL_STEPS; constants/inputs and
+# pure functions thereof are PRE_STEP (available at any step).
+PREFILL_STEP = -1
+ALL_STEPS = -2
+PRE_STEP = -3
 
 
 class GraphValidationError(ValueError):
@@ -68,6 +86,11 @@ class Node:
     kwargs: dict
     site: str | None = None
     layer: int | None = None  # for scan-mode per-layer sites
+    # Generation-step coordinate (NNsight's .next()/iteration semantics).
+    # None in single-forward traces; in a generation trace, tap nodes carry
+    # the decode step they fire at (0..N-1), PREFILL_STEP for the prompt
+    # forward, or ALL_STEPS for broadcast setters.
+    step: int | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
     def refs(self) -> Iterator[Ref]:
@@ -116,6 +139,7 @@ class InterventionGraph:
         *args: Any,
         site: str | None = None,
         layer: int | None = None,
+        step: int | None = None,
         meta: dict | None = None,
         **kwargs: Any,
     ) -> Node:
@@ -130,6 +154,7 @@ class InterventionGraph:
             kwargs=kwargs,
             site=site,
             layer=layer,
+            step=step,
             meta=meta or {},
         )
         self.nodes.append(node)
@@ -223,7 +248,102 @@ class InterventionGraph:
             tag = f" @{n.site}" if n.site else ""
             if n.layer is not None:
                 tag += f"[layer={n.layer}]"
+            if n.step is not None:
+                tag += f"[step={n.step}]"
             lines.append(f"  %{n.id} = {n.op}{tag} {n.args!r}")
         if self.saves:
             lines.append(f"  saves: {self.saves}")
         return "\n".join(lines)
+
+
+def assign_steps(graph: InterventionGraph, n_steps: int) -> dict[int, int]:
+    """Assign every node the earliest generation step at which it can run.
+
+    The multi-token analogue of :meth:`InterventionGraph.schedule`: a
+    generation trace executes the model ``1 + n_steps`` times (one prompt
+    prefill, ``n_steps`` decode steps) and every node must be placed on one
+    of those executions.  Returns node id -> step, where step is
+    ``PRE_STEP`` (available at any step: constants, inputs, and pure
+    functions thereof), ``PREFILL_STEP``, or a decode step in
+    ``[0, n_steps)``.  ``ALL_STEPS`` setters stay at ``ALL_STEPS``.
+
+    Validity rules (the paper's setter-acyclicity rule lifted to steps):
+      * a tap node must carry a concrete step (the tracer stamps it);
+      * an op's step is the max of its dependencies' steps;
+      * a setter at step s may not depend on values first available at a
+        LATER step (within-step site ordering is validated per step by the
+        interleaver);
+      * ``ALL_STEPS`` values (broadcast reads/writes and ops between them)
+        are *replicated* into every decode step; they may not mix with
+        single-step values and may not be saved — read each step explicitly
+        with ``steps()`` to collect per-step values.
+    """
+    ready: dict[int, int] = {}
+    for n in graph.nodes:
+        if n.op in ("constant", "input"):
+            ready[n.id] = PRE_STEP
+            continue
+        if n.op == "grad_get":
+            raise GraphValidationError(
+                ".grad is not supported inside a generation trace"
+            )
+        if n.op in ("tap_get", "tap_set"):
+            if n.step is None:
+                raise GraphValidationError(
+                    f"node %{n.id} taps ({n.site!r}, layer={n.layer}) with "
+                    "no step; generation-trace taps must be made inside "
+                    "tracer.steps()/step(s)/prefill()/all_steps()"
+                )
+            if n.step != ALL_STEPS and not (
+                PREFILL_STEP <= n.step < n_steps
+            ):
+                raise GraphValidationError(
+                    f"node %{n.id} targets step {n.step}, outside "
+                    f"[{PREFILL_STEP}, {n_steps})"
+                )
+        dep_steps = [ready[r.node_id] for r in n.refs()]
+        broadcast = ALL_STEPS in dep_steps
+        concrete = [d for d in dep_steps if d not in (PRE_STEP, ALL_STEPS)]
+        if broadcast and concrete:
+            raise GraphValidationError(
+                f"node %{n.id} mixes an all_steps() value with a "
+                "single-step value; broadcast chains may only touch "
+                "constants/inputs"
+            )
+        avail = ALL_STEPS if broadcast else max(concrete, default=PRE_STEP)
+        if n.op == "tap_get":
+            ready[n.id] = n.step
+        elif n.op == "tap_set":
+            target = n.step
+            if target == ALL_STEPS:
+                if avail not in (PRE_STEP, ALL_STEPS):
+                    raise GraphValidationError(
+                        f"all_steps() setter %{n.id} depends on a "
+                        "single-step value; broadcast writes must be "
+                        "functions of constants/inputs or broadcast reads"
+                    )
+                ready[n.id] = ALL_STEPS
+            else:
+                if avail == ALL_STEPS:
+                    raise GraphValidationError(
+                        f"setter %{n.id} at step {target} consumes an "
+                        "all_steps() value; broadcast values only feed "
+                        "all_steps() writes"
+                    )
+                if avail > target:
+                    raise GraphValidationError(
+                        f"setter %{n.id} at step {target} depends on values "
+                        f"only available at step {avail} (writes cannot "
+                        "flow backwards in decode time)"
+                    )
+                ready[n.id] = target
+        else:
+            if broadcast and (
+                n.op in ("save", "log") or n.id in graph.saves.values()
+            ):
+                raise GraphValidationError(
+                    f"%{n.id}: all_steps() values cannot be saved/logged "
+                    "(ambiguous step); iterate steps() to collect per-step"
+                )
+            ready[n.id] = avail
+    return ready

@@ -15,6 +15,12 @@ Gradient support (the paper's GradProtocol) uses the *perturbation trick*:
 for every tapped value ``v`` with a ``.grad`` consumer we add a zeros
 perturbation ``v + p`` and differentiate the in-graph loss w.r.t. ``p``;
 ``dL/dp == dL/dv`` and the whole thing stays jittable.
+
+Multi-token generation reuses this machinery unchanged: a step-annotated
+graph is sliced into one sub-graph per model execution (prefill / each
+decode step) and every slice runs through :func:`run_interleaved`, so site
+scheduling, scan mode, and setter validation apply per step — see
+:mod:`repro.core.generation`.
 """
 from __future__ import annotations
 

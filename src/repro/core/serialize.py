@@ -109,6 +109,7 @@ def graph_to_json(graph: InterventionGraph) -> dict:
                 "kwargs": encode_value(n.kwargs),
                 "site": n.site,
                 "layer": n.layer,
+                "step": n.step,
                 "meta": encode_value(n.meta),
             }
             for n in graph.nodes
@@ -133,6 +134,7 @@ def graph_from_json(payload: dict) -> InterventionGraph:
             kwargs=decode_value(spec["kwargs"]),
             site=spec.get("site"),
             layer=spec.get("layer"),
+            step=spec.get("step"),
             meta=decode_value(spec.get("meta", {})),
         )
         if node.id != len(graph.nodes):

@@ -12,19 +12,43 @@ Exiting the context finalizes the intervention graph and executes it —
 locally, or remotely when ``remote=True`` (serialized and shipped to the NDIF
 server, paper §3.3).  ``scan=True`` validates shapes via ``jax.eval_shape``
 without running the model (the paper's FakeTensor scanning).
+
+Generation tracing (the paper's multi-invoke / ``.next()`` semantics, §3.2)
+interleaves interventions with a multi-token greedy decode loop; models
+bound via :func:`repro.models.traced.traced_lm` support::
+
+    with lm.generate(tokens, max_new_tokens=8) as tr:
+        for s in tr.steps():                      # decode steps 0..7
+            lm.layers[4].mlp.output += steer      # write THIS step
+            lm.logits.save("logits")              # same name every step
+    tr.result("logits")                           # stacked (B, 8, V)
+    tr.output_tokens                              # (B, 8) generated ids
+
+``tr.step(k)`` targets one chosen step, ``tr.all_steps()`` broadcasts a
+setter over every decode step, and ``tr.prefill()`` taps the prompt
+forward.  Values saved under one name at several steps come back stacked
+along the token axis.  See :mod:`repro.core.generation` for the execution
+model.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+import contextlib
+from typing import Any, Callable, Iterator
 
 import jax
 import numpy as np
 
-from repro.core.graph import GraphValidationError, InterventionGraph, Node
+from repro.core.graph import (
+    ALL_STEPS,
+    PREFILL_STEP,
+    GraphValidationError,
+    InterventionGraph,
+    Node,
+)
 from repro.core.interleave import SiteSchedule, run_interleaved
 from repro.core.proxy import Proxy, make_op_caller, unwrap
 
-__all__ = ["Tracer", "Envoy", "TracedModel", "Session"]
+__all__ = ["Tracer", "GenerateTracer", "Envoy", "TracedModel", "Session"]
 
 
 class Envoy:
@@ -119,15 +143,20 @@ class Tracer:
         self.graph = graph if graph is not None else InterventionGraph()
         self._results: dict[str, Any] | None = None
         self._saved_proxies: dict[str, Proxy] = {}
-        self._current: dict[tuple[str, int | None], Node] = {}
+        # Generation-step pointer: None for single-forward traces; the
+        # GenerateTracer subclass moves it so taps are stamped per step.
+        self._step: int | None = None
+        self._current: dict[tuple[str, int | None, int | None], Node] = {}
         self._deferred = False  # True when owned by a Session
         self.logs: list[tuple[int, Any]] = []
 
     # ------------------------------------------------------------- plumbing
     def _tap_proxy(self, site: str, layer: int | None) -> Proxy:
-        key = (site, layer)
+        key = (site, layer, self._step)
         if key not in self._current:
-            node = self.graph.add("tap_get", site=site, layer=layer)
+            node = self.graph.add(
+                "tap_get", site=site, layer=layer, step=self._step
+            )
             self._current[key] = node
         node = self._current[key]
         return Proxy(self, node, root_site=site, root_layer=layer)
@@ -135,18 +164,22 @@ class Tracer:
     def _write_back(
         self, site: str, layer: int | None, path: tuple, value: Any
     ) -> None:
-        key = (site, layer)
+        key = (site, layer, self._step)
         if path:
             current = self._current.get(key)
             if current is None:
-                current = self.graph.add("tap_get", site=site, layer=layer)
+                current = self.graph.add(
+                    "tap_get", site=site, layer=layer, step=self._step
+                )
                 self._current[key] = current
             new = self.graph.add(
                 "update_path", _ref(current), path, unwrap(value)
             )
         else:
             new = _as_node(self, value)
-        self.graph.add("tap_set", _ref(new), site=site, layer=layer)
+        self.graph.add(
+            "tap_set", _ref(new), site=site, layer=layer, step=self._step
+        )
         self._current[key] = new
 
     def _register_save(self, name: str, proxy: Proxy) -> None:
@@ -241,6 +274,151 @@ class Tracer:
         return saves
 
 
+class GenerateTracer(Tracer):
+    """Builds a step-annotated graph over a multi-token decode loop.
+
+    Tap nodes are stamped with the *current step* — decode step ``0`` by
+    default; move the pointer with :meth:`steps` (iterate all), :meth:`step`
+    (one chosen step), :meth:`all_steps` (broadcast setters), or
+    :meth:`prefill` (the prompt forward).  ``.save(name)`` at several steps
+    under one name yields per-step values stacked along the token axis.
+    """
+
+    def __init__(
+        self,
+        model: "TracedModel",
+        tokens: Any,
+        max_new_tokens: int,
+        *,
+        mode: str | None = None,
+        extras: dict | None = None,
+    ) -> None:
+        super().__init__(model, (tokens,), dict(extras or {}), mode=mode)
+        self.tokens = tokens
+        self.max_new_tokens = int(max_new_tokens)
+        self._step: int = 0
+        # base save name -> {step -> wire save name}
+        self._step_save_names: dict[str, dict[int, str]] = {}
+        self.output_tokens: np.ndarray | None = None
+        self.output_logits: Any | None = None
+
+    # ------------------------------------------------------- step pointer
+    def steps(self, start: int = 0, stop: int | None = None) -> Iterator[int]:
+        """Iterate decode steps, moving the tap pointer to each in turn."""
+        stop = self.max_new_tokens if stop is None else stop
+        prev = self._step
+        try:
+            for s in range(start, stop):
+                self._step = s
+                yield s
+        finally:
+            # restore the enclosing pointer even on early break — a loop
+            # nested in step()/prefill() must not leak its last step
+            self._step = prev
+
+    @contextlib.contextmanager
+    def step(self, s: int):
+        """Target one chosen decode step (0-based)."""
+        prev, self._step = self._step, int(s)
+        try:
+            yield self
+        finally:
+            self._step = prev
+
+    @contextlib.contextmanager
+    def all_steps(self):
+        """Broadcast over every decode step.
+
+        Read-modify-write chains (``site += delta``) are replicated into
+        each step; only *saving* a broadcast value is rejected (ambiguous
+        step) — iterate :meth:`steps` to collect per-step values.
+        """
+        prev, self._step = self._step, ALL_STEPS
+        try:
+            yield self
+        finally:
+            self._step = prev
+
+    @contextlib.contextmanager
+    def prefill(self):
+        """Tap the prompt-prefill forward (full prompt-length shapes)."""
+        prev, self._step = self._step, PREFILL_STEP
+        try:
+            yield self
+        finally:
+            self._step = prev
+
+    # ------------------------------------------------------ stacked saves
+    def _register_save(self, name: str, proxy: Proxy) -> None:
+        by_step = self._step_save_names.setdefault(name, {})
+        mixed = (self._step == PREFILL_STEP and any(
+            s != PREFILL_STEP for s in by_step
+        )) or (self._step != PREFILL_STEP and PREFILL_STEP in by_step)
+        if mixed:
+            raise GraphValidationError(
+                f"save {name!r} mixes prefill() and decode-step values; "
+                "prefill shapes are prompt-length and cannot stack with "
+                "per-step values — use a different name for the prefill "
+                "save"
+            )
+        nid = self.graph.saves.pop(name)
+        wire = f"{name}@step{self._step}"
+        self.graph.saves[wire] = nid
+        by_step[self._step] = wire
+        self._saved_proxies[name] = proxy
+
+    # ---------------------------------------------------------- execution
+    def validate_shapes(self) -> None:  # pragma: no cover - guard
+        raise NotImplementedError(
+            "scan=True shape validation is not supported for generation "
+            "traces yet"
+        )
+
+    def execute(self) -> dict[str, Any]:
+        from repro.core.generation import run_generation, stack_step_saves
+
+        if self.remote:
+            raise NotImplementedError(
+                "remote generation traces are not wired up yet; run "
+                "locally or use the engine's generate path"
+            )
+        zoo = self.model.zoo_model
+        if zoo is None:
+            raise RuntimeError(
+                "lm.generate requires a model bound via traced_lm (needs "
+                "prefill/decode_step); plain TracedModel wraps only a "
+                "single forward"
+            )
+        res = run_generation(
+            zoo,
+            self.model.params,
+            self.graph,
+            jax.numpy.asarray(self.tokens),
+            self.max_new_tokens,
+            mode=self.mode,
+            extras=self.model_kwargs,
+        )
+        self.output_tokens = np.asarray(res.tokens)
+        self.output_logits = res.logits
+        self.logs = res.logs
+        results: dict[str, Any] = {}
+        for base, by_step in self._step_save_names.items():
+            vals = {s: res.saves[w] for s, w in by_step.items()
+                    if w in res.saves}
+            if not vals:
+                continue
+            if len(vals) == 1:
+                results[base] = next(iter(vals.values()))
+            else:
+                results[base] = stack_step_saves(vals)
+        # saves made outside the tracer API (hand-built graphs)
+        for name, val in res.saves.items():
+            if "@step" not in name:
+                results.setdefault(name, val)
+        self._results = results
+        return results
+
+
 def _ref(node: Node):
     from repro.core.graph import Ref
 
@@ -280,6 +458,9 @@ class TracedModel:
         self.name = name
         self.default_mode = default_mode
         self.backend = backend
+        # zoo-model binding (prefill/decode_step), set by traced_lm;
+        # required for lm.generate
+        self.zoo_model: Any | None = None
         self._tracers: list[Tracer] = []
         order = list(schedule.order)
         if ("output", None) not in order:
@@ -320,6 +501,24 @@ class TracedModel:
             scan=scan,
             mode=mode,
             backend=backend,
+        )
+
+    def generate(
+        self,
+        tokens: Any,
+        max_new_tokens: int = 8,
+        *,
+        mode: str | None = None,
+        **extras: Any,
+    ) -> "GenerateTracer":
+        """Trace a multi-token greedy decode loop (see GenerateTracer).
+
+        Requires a zoo-model binding (:func:`repro.models.traced.traced_lm`)
+        because generation needs ``prefill``/``decode_step``, not just the
+        wrapped single forward.
+        """
+        return GenerateTracer(
+            self, tokens, max_new_tokens, mode=mode, extras=extras
         )
 
     def session(self, *, remote: bool = False, backend: Any | None = None):

@@ -378,13 +378,13 @@ def mla_apply(
     kv_positions: jax.Array | None = None,
     causal: bool = True,
     window: int | None = None,
-    latent_tap=None,
 ) -> jax.Array:
     """Multi-head latent attention (MiniCPM3/DeepSeek-V2 family).
 
-    ``cached`` carries (latent, k_rope) for decode — the MLA cache is the
-    *compressed* latent, the family's reason to exist.
-    ``latent_tap`` lets the model expose the latent as an intervention site.
+    ``cached`` carries (latent, k_rope) — the MLA cache is the *compressed*
+    latent, the family's reason to exist.  Models that tap the latent as an
+    intervention site project it themselves (``mla_latent``) and pass it in,
+    so the intervened value is the one attended over.
     """
     m = cfg.mla or MLAConfig()
     B, S, _ = x.shape
@@ -394,12 +394,13 @@ def mla_apply(
     q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
-    latent_new, k_rope_new = mla_latent(p, x, cfg, positions)
-    if latent_tap is not None:
-        latent_new = latent_tap(latent_new)
     if cached is None:
-        latent, k_rope, k_pos = latent_new, k_rope_new, positions
+        latent, k_rope = mla_latent(p, x, cfg, positions)
+        k_pos = positions
     else:
+        # caller already projected (and possibly tapped) the latent —
+        # recomputing it here would double the projection work on
+        # eager/interleaved paths where XLA DCE can't remove it
         latent, k_rope = cached
         k_pos = kv_positions
 

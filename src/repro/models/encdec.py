@@ -134,7 +134,8 @@ class EncDecModel:
     # --------------------------------------------------------------- decoder
     def _dec_layer(self, p, h, positions, enc_out, enc_pos, idx, *,
                    cache_l=None, kv_positions=None, slot=None,
-                   cross_kv=None, window=None, decode=False):
+                   cross_kv=None, window=None, decode=False,
+                   collect=False):
         cfg = self.cfg
         hd = cfg.hd
         h = taps.site("decoder.input", h, layer=idx)
@@ -150,6 +151,14 @@ class EncDecModel:
                             causal=True, window=window, impl="dense")
             a = C.linear(p["attn"]["wo"], o.reshape(B, S, -1))
             new_l = {"k": k, "v": v}
+        elif collect:
+            # prefill: same math as gqa_apply, but the fresh K/V are kept
+            # so the cache reflects any intervention on decoder.input
+            q, k_new, v_new = C.gqa_project_qkv(p["attn"], x, cfg, positions)
+            o = C.attention(q, k_new, v_new, q_pos=positions, k_pos=positions,
+                            causal=True, window=window)
+            a = C.linear(p["attn"]["wo"], o.reshape(B, S, -1))
+            new_l = {"k": k_new, "v": v_new}
         else:
             a = C.gqa_apply(p["attn"], x, cfg, positions, window=window)
         a = taps.site("decoder.attn.output", a, layer=idx)
@@ -163,6 +172,8 @@ class EncDecModel:
                 B, T, cfg.n_kv_heads, hd)
             cv = C.linear(p["cross"]["wv"], enc_out).reshape(
                 B, T, cfg.n_kv_heads, hd)
+            if collect:
+                new_l = dict(new_l or {}, cross_k=ck, cross_v=cv)
         else:
             ck, cv = cross_kv
         co = C.attention(q, ck, cv, q_pos=positions, k_pos=enc_pos,
@@ -247,21 +258,22 @@ class EncDecModel:
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         enc_pos = jnp.broadcast_to(jnp.arange(Tsrc), (B, Tsrc))
         h = params["embed"][tokens].astype(cfg.dtype)
+        h = taps.site("embed", h)
 
         ks, vs, cks, cvs = [], [], [], []
         for i in range(cfg.n_layers):
             p = jax.tree.map(lambda a: a[i], params["decoder"])
-            x = C.rms_norm(h, p["attn_norm"], cfg.norm_eps)
-            q, k_new, v_new = C.gqa_project_qkv(p["attn"], x, cfg, positions)
-            ks.append(k_new)
-            vs.append(v_new)
-            cks.append(C.linear(p["cross"]["wk"], enc_out).reshape(
-                B, Tsrc, cfg.n_kv_heads, cfg.hd))
-            cvs.append(C.linear(p["cross"]["wv"], enc_out).reshape(
-                B, Tsrc, cfg.n_kv_heads, cfg.hd))
-            h, _ = self._dec_layer(p, h, positions, enc_out, enc_pos, i)
+            h, new_l = self._dec_layer(
+                p, h, positions, enc_out, enc_pos, i, collect=True
+            )
+            ks.append(new_l["k"])
+            vs.append(new_l["v"])
+            cks.append(new_l["cross_k"])
+            cvs.append(new_l["cross_v"])
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
         logits = C.linear(params["lm_head"], h)
+        logits = taps.site("logits", logits)
 
         k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
         if kind == "window" and S > T:

@@ -128,7 +128,6 @@ class Zamba2Model:
         v_new = C.linear(sp["wv"], x).reshape(B, S, cfg.n_kv_heads, hd2)
         q = C.rope(q, positions, cfg.rope_theta)
         k_new = C.rope(k_new, positions, cfg.rope_theta)
-        new_kv = None
         if decode:
             k = _write_rows(kv[0], slot, k_new)
             v = _write_rows(kv[1], slot, v_new)
@@ -136,6 +135,7 @@ class Zamba2Model:
             new_kv = (k, v)
         else:
             k, v, k_pos = k_new, v_new, positions
+            new_kv = (k_new, v_new)  # prefill collects these into the cache
         out = C.attention(
             q, k, v, q_pos=positions, k_pos=k_pos, causal=True, window=window,
             impl="dense" if decode else None,
@@ -235,36 +235,29 @@ class Zamba2Model:
         T = cache.positions.shape[1]
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
         h = params["embed"][tokens].astype(cfg.dtype)
-        h0 = h
         k_every = cfg.shared_attn_every
         window = cfg.sliding_window if kind == "window" else None
 
+        h = taps.site("embed", h)
+        h0 = h
         ssm_states, conv_states, ks, vs = [], [], [], []
         for i in range(cfg.n_layers):
             p = jax.tree.map(lambda a: a[i], params["layers"])
-            x = C.rms_norm(h, p["norm"], cfg.norm_eps)
-            out, (s, c) = C.mamba2_apply(p["mixer"], x, cfg)
+            h, (s, c) = self._mamba_layer(p, h, i)
             ssm_states.append(s)
             conv_states.append(c)
-            h = h + out
             if (i + 1) % k_every == 0:
                 g = (i + 1) // k_every - 1
-                sp = params["shared"]
-                xcat = jnp.concatenate([h0, h], axis=-1)
-                x2 = C.rms_norm(xcat, sp["attn_norm"], cfg.norm_eps)
-                hd2 = self._hd2
-                k_new = C.rope(
-                    C.linear(sp["wk"], x2).reshape(B, S, cfg.n_kv_heads, hd2),
-                    positions, cfg.rope_theta,
+                h, (k_new, v_new) = self._shared_block(
+                    params, h, h0, g, positions, window=window
                 )
-                v_new = C.linear(sp["wv"], x2).reshape(B, S, cfg.n_kv_heads, hd2)
                 ks.append(k_new)
                 vs.append(v_new)
-                h, _ = self._shared_block(params, h, h0, g, positions,
-                                          window=window)
 
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
         logits = C.linear(params["lm_head"], h)
+        logits = taps.site("logits", logits)
 
         k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
         if kind == "window" and S > T:

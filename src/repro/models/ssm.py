@@ -118,22 +118,39 @@ class Mamba2Model:
 
     def prefill(self, params, batch, *, mode: str = "scan", kind="full",
                 max_len=None):
-        """Forward + per-layer final states (O(1)-size cache)."""
+        """Forward + per-layer final states (O(1)-size cache).
+
+        Fires the same tap sites as ``forward`` so generation traces can
+        intervene on (or collect from) the prompt prefill.
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
         h = params["embed"][tokens].astype(cfg.dtype)
+        h = taps.site("embed", h)
 
-        def body(h, inp):
-            p, idx = inp
-            x = C.rms_norm(h, p["norm"], cfg.norm_eps)
-            out, state = C.mamba2_apply(p["mixer"], x, cfg)
-            return h + out, state
+        if mode == "unrolled":
+            ssm_states, conv_states = [], []
+            for i in range(cfg.n_layers):
+                p = jax.tree.map(lambda a: a[i], params["layers"])
+                h, (s, c) = self._layer(p, h, i)
+                ssm_states.append(s)
+                conv_states.append(c)
+            states = (jnp.stack(ssm_states), jnp.stack(conv_states))
+        else:
+            def body(h, inp):
+                p, idx = inp
+                h, state = self._layer(p, h, idx)
+                return h, {**taps.scan_outputs(), "__state__": state}
 
-        h, states = jax.lax.scan(
-            body, h, (params["layers"], jnp.arange(cfg.n_layers))
-        )
+            h, ys = jax.lax.scan(
+                body, h, (params["layers"], jnp.arange(cfg.n_layers))
+            )
+            states = ys.pop("__state__")
+            taps.deliver_scan(ys)
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
         logits = C.linear(params["lm_head"], h)
+        logits = taps.site("logits", logits)
         cache = {"ssm": states[0], "conv": states[1]}
         return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, cache
 

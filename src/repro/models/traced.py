@@ -6,6 +6,19 @@
     with lm.trace(tokens) as tr:
         lm.layers[16].mlp.output[:, -1, neurons] = 10.0
         out = lm.output.save()
+
+Because the zoo model carries ``prefill``/``decode_step``, the binding also
+enables generation tracing (multi-token decode with per-step
+interventions)::
+
+    with lm.generate(tokens, max_new_tokens=8) as tr:
+        for s in tr.steps():
+            lm.layers[4].mlp.output += steer   # write at this decode step
+            lm.logits.save("logits")           # stacked to (B, 8, V)
+    tr.output_tokens                           # (B, 8) greedy ids
+
+See :class:`repro.core.tracer.GenerateTracer` and
+:mod:`repro.core.generation` for semantics and the execution model.
 """
 from __future__ import annotations
 

@@ -559,7 +559,9 @@ class TransformerModel:
                 image_embeds=image_embeds, collect=True,
             )
             h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+            h = taps.site("final_norm", h)
             logits = self._lm_head(params, h)
+            logits = taps.site("logits", logits)
             data = dict(data)
             if self.is_vlm and cross is not None:
                 data["cross_k"], data["cross_v"] = cross
@@ -574,9 +576,12 @@ class TransformerModel:
             x = C.rms_norm(h, p["attn_norm"], cfg.norm_eps)
             if cfg.attn_kind == "mla":
                 latent, k_rope = C.mla_latent(p["attn"], x, cfg, positions)
+                latent = taps.site("layers.attn.kv_latent", latent, layer=i)
                 new_layers.append({"latent": latent, "k_rope": k_rope})
                 attn_out = C.mla_apply(
-                    p["attn"], x, cfg, positions, window=window
+                    p["attn"], x, cfg, positions,
+                    cached=(latent, k_rope), kv_positions=positions,
+                    window=window,
                 )
             else:
                 q, k_new, v_new = C.gqa_project_qkv(p["attn"], x, cfg, positions)
@@ -603,10 +608,14 @@ class TransformerModel:
                 )
                 cout = C.linear(cross_p["attn"]["wo"], cout.reshape(B, S, -1))
                 cout = jnp.tanh(cross_p["gate"]).astype(cout.dtype) * cout
+                cout = taps.site("layers.cross.output", cout, layer=i)
                 h = h + cout
             x = C.rms_norm(h, p["mlp_norm"], cfg.norm_eps)
             if cfg.is_moe:
-                mlp_out, aux = _moe(p["moe"], x, cfg, None)
+                router_tap = lambda v, i=i: taps.site(
+                    "layers.mlp.router", v, layer=i
+                )
+                mlp_out, aux = _moe(p["moe"], x, cfg, router_tap)
                 aux_total += aux
             else:
                 mlp_out = C.swiglu_apply(p["mlp"], x)
@@ -614,7 +623,9 @@ class TransformerModel:
             h = taps.site("layers.output", h, layer=i)
 
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        h = taps.site("final_norm", h)
         logits = self._lm_head(params, h)
+        logits = taps.site("logits", logits)
 
         data = jax.tree.map(lambda *xs: jnp.stack(xs), *new_layers)
         if self.is_vlm:

@@ -72,13 +72,19 @@ class NDIFClient:
         return self._roundtrip(msg)["results"]
 
     # Plain-inference APIs (benchmark comparisons) ----------------------
-    def generate(self, tokens, max_new_tokens: int = 16, **extras):
+    def generate(self, tokens, max_new_tokens: int = 16, *, graph=None,
+                 **extras):
+        """Server-side generation; ``graph`` may carry a step-annotated
+        intervention graph (see repro.core.generation) to steer or record
+        the decode loop remotely."""
         msg = {
             "kind": "generate",
             "model": self.model_name,
             "batch": {"tokens": np.asarray(tokens), **extras},
             "max_new_tokens": max_new_tokens,
         }
+        if graph is not None:
+            msg["graph"] = graph_to_json(graph)
         return self._roundtrip(msg)["results"]
 
     def hidden_states(self, tokens, **extras):

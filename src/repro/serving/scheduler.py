@@ -9,6 +9,11 @@ Grouping rule for parallel mode: requests are batch-mergeable when they
 share every non-batch input dim and dtype and use no ``.grad`` — the merger
 (:mod:`repro.core.batching`) then rewrites getters/setters into row slices
 and ONE forward serves the whole group.
+
+Generation requests (``max_new_tokens`` set) merge the same way: groups
+additionally require an equal step count, their graphs merge with the step
+coordinate preserved, and ONE prefill + decode loop serves the whole group
+(per-request rows split back out of the generated tokens and saves).
 """
 from __future__ import annotations
 
@@ -20,7 +25,7 @@ from typing import Any
 import numpy as np
 
 from repro.core.batching import merge_graphs, split_results
-from repro.core.graph import InterventionGraph
+from repro.core.graph import ALL_STEPS, InterventionGraph
 
 __all__ = ["Request", "Ticket", "CoTenantScheduler"]
 
@@ -31,6 +36,9 @@ _ids = itertools.count()
 class Request:
     graph: InterventionGraph
     batch: dict  # model inputs; leading dim of each array = this user's rows
+    # None => single interleaved forward; an int => generation request
+    # (prefill + that many decode steps, graph nodes carry step coords).
+    max_new_tokens: int | None = None
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
 
@@ -49,15 +57,19 @@ class Ticket:
 
 
 def _merge_key(req: Request) -> tuple | None:
-    if any(n.op == "grad_get" for n in req.graph.nodes):
-        return None  # grads never merge — sequential fallback
+    for n in req.graph.nodes:
+        if n.op == "grad_get":
+            return None  # grads never merge — sequential fallback
+        if n.op == "tap_set" and n.step == ALL_STEPS:
+            return None  # broadcast setters run solo (see merge_graphs)
     items = []
     for k in sorted(req.batch):
         v = np.asarray(req.batch[k])
         if v.ndim == 0:
             return None
         items.append((k, v.shape[1:], str(v.dtype)))
-    return tuple(items)
+    # generation requests only merge with equal step counts
+    return (req.max_new_tokens, tuple(items))
 
 
 class CoTenantScheduler:
@@ -95,8 +107,20 @@ class CoTenantScheduler:
     def _run_one(self, req: Request, ticket: Ticket) -> Ticket:
         ticket.start_time = time.perf_counter()
         try:
-            saves, _ = self.engine.execute(req.graph, req.batch)
-            ticket.result = saves
+            if req.max_new_tokens is not None:
+                res = self.engine.generate_interleaved(
+                    req.graph, req.batch, req.max_new_tokens
+                )
+                # reserved keys win: "tokens"/"logits" always mean the
+                # generated output, never a same-named user save
+                ticket.result = {
+                    **res.saves,
+                    "tokens": np.asarray(res.tokens),
+                    "logits": np.asarray(res.logits),
+                }
+            else:
+                saves, _ = self.engine.execute(req.graph, req.batch)
+                ticket.result = saves
         except Exception as e:  # surface per-request, keep serving
             ticket.error = f"{type(e).__name__}: {e}"
         ticket.finish_time = time.perf_counter()
@@ -139,10 +163,27 @@ class CoTenantScheduler:
                 k: np.concatenate([np.asarray(r.batch[k]) for r in reqs])
                 for k in reqs[0].batch
             }
-            saves, _ = self.engine.execute(merged.graph, batch)
-            per_req = split_results(saves, merged)
-            for t, res in zip(tickets, per_req):
-                t.result = res
+            n_new = reqs[0].max_new_tokens
+            if n_new is not None:
+                res = self.engine.generate_interleaved(
+                    merged.graph, batch, n_new
+                )
+                per_req = split_results(res.saves, merged)
+                toks = np.asarray(res.tokens)
+                logits = np.asarray(res.logits)
+                for t, (start, size), saves_r in zip(
+                    tickets, merged.row_slices, per_req
+                ):
+                    t.result = {
+                        **saves_r,
+                        "tokens": toks[start:start + size],
+                        "logits": logits[start:start + size],
+                    }
+            else:
+                saves, _ = self.engine.execute(merged.graph, batch)
+                per_req = split_results(saves, merged)
+                for t, res in zip(tickets, per_req):
+                    t.result = res
         except Exception as e:
             for t in tickets:
                 t.error = f"{type(e).__name__}: {e}"

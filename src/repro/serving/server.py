@@ -64,14 +64,25 @@ class NDIFServer:
         return sorted(self.engines)
 
     # ------------------------------------------------------ graph security
-    def _validate_graph(self, engine: InferenceEngine, graph: InterventionGraph):
+    def _check_registry(self, graph: InterventionGraph) -> None:
+        """Safe co-tenancy gate: every op must be a registry name."""
         for n in graph.nodes:
             if n.op not in OPS and n.op not in _PROTOCOL_OPS:
                 raise GraphValidationError(
                     f"op {n.op!r} is not in the server op registry "
                     "(arbitrary code execution is not permitted)"
                 )
+
+    def _validate_graph(self, engine: InferenceEngine, graph: InterventionGraph):
+        self._check_registry(graph)
         graph.validate(engine.schedule.order)
+
+    def _validate_generation_graph(
+        self, engine: InferenceEngine, graph: InterventionGraph
+    ) -> None:
+        """Registry check only; step/site scheduling is validated per step
+        by the generation driver (repro.core.generation.slice_steps)."""
+        self._check_registry(graph)
 
     # ------------------------------------------------------------ handling
     def handle(self, payload: bytes) -> bytes:
@@ -137,12 +148,23 @@ class NDIFServer:
             return {"ok": True,
                     "results": {"params": trained, "losses": history}}
         if kind == "generate":
-            batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
-            tokens = batch.pop("tokens")
-            gen, logits = engine.generate(
-                tokens, msg.get("max_new_tokens", 16), **batch
+            # Routed through the scheduler so compatible generation
+            # requests batch-merge exactly like single-forward traces.
+            graph = (
+                graph_from_json(msg["graph"]) if msg.get("graph")
+                else InterventionGraph()
             )
-            return {"ok": True, "results": {"tokens": gen, "logits": logits}}
+            if graph.nodes:
+                self._validate_generation_graph(engine, graph)
+            batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
+            ticket = sched.submit(Request(
+                graph=graph, batch=batch,
+                max_new_tokens=int(msg.get("max_new_tokens", 16)),
+            ))
+            sched.drain()
+            if ticket.error:
+                return {"ok": False, "error": ticket.error}
+            return {"ok": True, "results": ticket.result}
         if kind == "hidden_states":
             batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
             tokens = batch.pop("tokens")

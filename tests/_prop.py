@@ -1,0 +1,120 @@
+"""Property-testing shim: use hypothesis when available, else a tiny
+seeded-random fallback.
+
+Tier-1 must collect and pass offline, where ``hypothesis`` is not
+installed.  Test modules import ``given``/``settings``/``st`` from here::
+
+    from tests._prop import given, settings, st
+
+When hypothesis is importable the real library is re-exported unchanged.
+Otherwise the fallback below provides the (small) API surface the suite
+uses — ``st.integers``, ``st.floats``, ``st.sampled_from``, ``st.lists``,
+``st.tuples``, ``st.composite`` — backed by a deterministically seeded
+``random.Random``, running each property ``max_examples`` times.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # type: ignore
+    from hypothesis import strategies as st  # type: ignore
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+
+    import random
+    import struct
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: ``draw(rng)`` produces one example."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, width: int = 64, **_kw):
+            def draw(rng):
+                v = rng.uniform(min_value, max_value)
+                if width == 32:
+                    # round-trip through f32 so values are exactly
+                    # representable, like hypothesis' width=32
+                    v = struct.unpack("f", struct.pack("f", v))[0]
+                return v
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size: int = 0, max_size: int = 10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+        @staticmethod
+        def composite(fn):
+            """``@st.composite`` — the wrapped fn receives a ``draw`` callable."""
+
+            def factory(*args, **kwargs):
+                return _Strategy(
+                    lambda rng: fn(lambda s: s.draw(rng), *args, **kwargs)
+                )
+
+            return factory
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 100, **_ignored):
+        """Record run parameters on the test fn (deadline etc. ignored)."""
+
+        def deco(fn):
+            # works whether applied above or below @given
+            target = getattr(fn, "__wrapped_property__", fn)
+            target.__prop_max_examples__ = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying __wrapped__/signature would
+            # make pytest treat the strategy-bound params as fixtures.
+            def runner(*args, **kwargs):
+                n = getattr(fn, "__prop_max_examples__", None)
+                n = n or getattr(runner, "__prop_max_examples__", None) or 25
+                for i in range(n):
+                    rng = random.Random(0xA5EED + 7919 * i)
+                    drawn = [s.draw(rng) for s in strategies]
+                    drawn_kw = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            runner.__name__ = fn.__name__
+            runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner.__wrapped_property__ = fn
+            return runner
+
+        return deco

@@ -10,6 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full model zoo: minutes on CPU (pytest.ini)
+
 from repro.data.pipeline import DataConfig, synthetic_lm_data
 from repro.models import registry as R
 from repro.training.optimizer import AdamWConfig

@@ -6,7 +6,7 @@ the same interventions executed separately — user isolation is structural.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._prop import given, settings, st
 
 from repro.core.batching import merge_graphs, split_results
 from repro.core.graph import InterventionGraph, Ref
@@ -61,6 +61,82 @@ def test_save_name_collision_safe():
     merged = merge_graphs(graphs, [1, 1])
     names = set(merged.graph.saves)
     assert names == {"r0/out", "r1/out"}
+
+
+def test_cross_request_same_site_isolated():
+    """Request A writes a site, request B reads the SAME site: B must see
+    its own rows untouched by A's write (and vice versa)."""
+    model = make_tiny_model()
+    ga = InterventionGraph()
+    t = ga.add("tap_get", site="layers.output", layer=1)
+    v = ga.add("mul", Ref(t.id), np.float32(100.0))
+    ga.add("tap_set", Ref(v.id), site="layers.output", layer=1)
+    o = ga.add("tap_get", site="logits")
+    ga.mark_saved("out", ga.add("save", Ref(o.id)))
+
+    gb = InterventionGraph()
+    tb = gb.add("tap_get", site="layers.output", layer=1)
+    gb.mark_saved("acts", gb.add("save", Ref(tb.id)))
+    ob = gb.add("tap_get", site="logits")
+    gb.mark_saved("out", gb.add("save", Ref(ob.id)))
+
+    xa = np.ones((1, 4), np.float32)
+    xb = 3 * np.ones((2, 4), np.float32)
+    merged = merge_graphs([ga, gb], [1, 2])
+    saves = run(model, merged.graph, jnp.asarray(np.concatenate([xa, xb])))
+    res_a, res_b = split_results(saves, merged)
+
+    solo_a = run(model, ga, jnp.asarray(xa))
+    solo_b = run(model, gb, jnp.asarray(xb))
+    # B's read of the shared site sees ONLY its own (unscaled) rows
+    np.testing.assert_allclose(res_b["acts"], solo_b["acts"], rtol=1e-6)
+    assert np.abs(np.asarray(res_b["acts"])).max() < 50  # A's 100x absent
+    # and downstream outputs match solo runs on both sides
+    np.testing.assert_allclose(res_a["out"], solo_a["out"], rtol=1e-6)
+    np.testing.assert_allclose(res_b["out"], solo_b["out"], rtol=1e-6)
+
+
+def test_cross_request_reader_before_writer_isolated():
+    """Same as above with the reader submitted FIRST (order must not
+    matter: the reader's slice comes from the pristine shared getter)."""
+    model = make_tiny_model()
+    gb = InterventionGraph()
+    tb = gb.add("tap_get", site="layers.output", layer=0)
+    gb.mark_saved("acts", gb.add("save", Ref(tb.id)))
+
+    ga = InterventionGraph()
+    t = ga.add("tap_get", site="layers.output", layer=0)
+    v = ga.add("add", Ref(t.id), np.float32(99.0))
+    ga.add("tap_set", Ref(v.id), site="layers.output", layer=0)
+    o = ga.add("tap_get", site="logits")
+    ga.mark_saved("out", ga.add("save", Ref(o.id)))
+
+    xb = np.ones((1, 4), np.float32)
+    xa = np.ones((1, 4), np.float32)
+    merged = merge_graphs([gb, ga], [1, 1])
+    saves = run(model, merged.graph, jnp.asarray(np.concatenate([xb, xa])))
+    res_b, res_a = split_results(saves, merged)
+    np.testing.assert_allclose(
+        res_b["acts"], run(model, gb, jnp.asarray(xb))["acts"], rtol=1e-6)
+    np.testing.assert_allclose(
+        res_a["out"], run(model, ga, jnp.asarray(xa))["out"], rtol=1e-6)
+
+
+def test_split_results_save_name_containing_slash():
+    """User save names may contain '/' — only the FIRST separator is the
+    request prefix."""
+    g = InterventionGraph()
+    t = g.add("tap_get", site="logits")
+    g.mark_saved("probe/layer0/acts", g.add("save", Ref(t.id)))
+    merged = merge_graphs([g, g], [1, 1])
+    assert set(merged.graph.saves) == {
+        "r0/probe/layer0/acts", "r1/probe/layer0/acts"
+    }
+    out = split_results(
+        {"r0/probe/layer0/acts": 1, "r1/probe/layer0/acts": 2}, merged
+    )
+    assert out[0] == {"probe/layer0/acts": 1}
+    assert out[1] == {"probe/layer0/acts": 2}
 
 
 @given(

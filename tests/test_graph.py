@@ -9,7 +9,7 @@ import json
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._prop import given, settings, st
 
 from repro.core.graph import (
     GraphValidationError,

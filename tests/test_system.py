@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # end-to-end zoo loop: minutes on CPU
+
 from repro.models import registry as R
 from repro.models.traced import traced_lm
 from repro.serving import LoopbackTransport, NDIFClient, NDIFServer

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._prop import given, settings, st
 
 from repro.core.op_registry import OPS, apply_path, register_op, update_path
 from repro.core.tracer import Session
