@@ -1,0 +1,81 @@
+"""Ragged-traffic co-tenancy: throughput under three scheduling policies.
+
+Real traffic sends prompts of DIFFERENT lengths, so the exact-shape merger
+(`pad_slack=0`, PR 1 and earlier) almost never groups requests and degrades
+to the paper's sequential baseline (Appendix D.2: response time linear in
+users).  This benchmark submits one burst of N requests with prompt lengths
+drawn from a small range and measures
+
+  sequential            — the paper's one-at-a-time queue,
+  parallel/exact        — batch merging, exact length match only,
+  parallel/padded       — padding-aware merging (this PR): lengths bucketed
+                          by ``pad_slack``, shorter rows padded + masked.
+
+`derived` reports executions (forwards actually run), the merged-group
+sizes, and the padding-waste fraction — the cost the slack bounds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, build, timeit
+from repro.core.graph import InterventionGraph, Ref
+from repro.models import registry as R
+from repro.serving import NDIFServer, Request
+from repro.serving.scheduler import CoTenantScheduler
+
+
+def user_request(cfg, rng) -> Request:
+    g = InterventionGraph()
+    layer = int(rng.integers(0, cfg.n_layers))
+    t = g.add("tap_get", site="layers.output", layer=layer)
+    g.mark_saved("acts", g.add("save", Ref(t.id)))
+    # the paper's fig9 workload, but RAGGED: prompts of 12..28 tokens
+    seq = int(rng.integers(12, 29))
+    toks = rng.integers(0, cfg.vocab_size, (1, seq)).astype(np.int32)
+    return Request(graph=g, batch={"tokens": toks})
+
+
+POLICIES = [
+    ("sequential", dict(policy="sequential")),
+    ("parallel_exact", dict(policy="parallel", pad_slack=0)),
+    ("parallel_padded", dict(policy="parallel", pad_slack=16)),
+]
+
+
+def rows() -> list[Row]:
+    cfg = R.get_config("paper-gpt-small")
+    model, params = build(cfg)
+    out: list[Row] = []
+    n_users = 24
+    for name, kw in POLICIES:
+        server = NDIFServer()
+        server.host(cfg.name, model, params, max_batch_rows=128, **kw)
+        sched = server.schedulers[cfg.name]
+        engine = server.engines[cfg.name]
+
+        def burst():
+            rng = np.random.default_rng(7)
+            tickets = [sched.submit(user_request(cfg, rng))
+                       for _ in range(n_users)]
+            sched.drain()
+            assert all(t.error is None for t in tickets), [t.error for t in tickets]
+            return tickets
+
+        burst()  # warm: compile every group executable once
+        e0 = engine.stats.executions
+        mean_s, _ = timeit(burst, n=3, warmup=0)
+        execs = (engine.stats.executions - e0) // 3
+        snap = engine.stats.snapshot()
+        out.append(Row(
+            f"cotenancy_ragged/{name}/users_{n_users}",
+            mean_s * 1e6 / n_users,  # us per request served
+            f"executions={execs};groups={snap['group_sizes'][-8:]};"
+            f"padding_waste={snap['padding_waste']:.3f}",
+        ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

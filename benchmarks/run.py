@@ -6,6 +6,8 @@ One module per paper table/figure:
   fig6_remote                -> paper Fig. 6a/6b + Table 2
   fig6c_petals_comparison    -> paper Fig. 6c
   fig9_concurrent_users      -> paper Fig. 9 (+ beyond-paper parallel mode)
+  cotenancy_ragged           -> ragged traffic: sequential vs exact-match vs
+                                padding-aware parallel co-tenancy
   kernel_bench               -> kernels/fallbacks microbench
 """
 import argparse
@@ -17,6 +19,7 @@ MODULES = [
     "benchmarks.fig6_remote",
     "benchmarks.fig6c_petals_comparison",
     "benchmarks.fig9_concurrent_users",
+    "benchmarks.cotenancy_ragged",
     "benchmarks.gen_decode",
     "benchmarks.kernel_bench",
 ]

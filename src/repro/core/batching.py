@@ -1,6 +1,6 @@
 """Parallel co-tenancy: merge many users' intervention graphs into ONE
 forward pass (paper Appendix B.2 — listed there as future work; implemented
-here as a beyond-paper feature and benchmarked in fig9).
+here as a beyond-paper feature and benchmarked in fig9 / cotenancy_ragged).
 
 Each request owns a contiguous group of batch rows.  The merger rewrites
 every getter into a batch-slice of the shared tap value and every setter into
@@ -10,22 +10,50 @@ rows, and the model weights are untouched (pure function).  This is the
 "extracts appropriate slices while preserving gradient propagation" design
 the paper sketches, realized with JAX functional updates.
 
+Ragged lengths (pad-and-mask merging)
+-------------------------------------
+Requests do NOT need equal sequence lengths: the scheduler right-pads each
+model input to the group maximum and passes a per-request ``lengths`` record
+here.  For every tap site with a sequence axis (``site_length_key`` maps the
+site to the input whose axis-1 length it follows), a shorter request's
+getter is additionally sliced to its TRUE length — user ops downstream see
+exactly the shapes a solo run would produce (so positional indexing like
+``x[:, -1]`` grabs the real last token, never padding) — and its setter is
+written back with ``batch_update_slice``, confined to its real rows AND real
+positions.  Padded positions carry sentinel position ids which the model
+side (``repro.models.common._mask_bias``, dt-masked SSD scans) proves inert,
+so every unpadded save is identical to solo execution.
+
 Limitations (documented, enforced):
-  * all requests must share non-batch input dims (the scheduler groups
-    compatible requests);
+  * requests must share dtypes and every non-batch dim EXCEPT the sequence
+    axis of declared ragged inputs (the scheduler buckets lengths with a
+    configurable ``pad_slack`` bounding wasted padding compute);
+  * sites with no sequence axis (e.g. ``layers.ssm_state``) merge on batch
+    rows only — their values are per-row, never per-position;
   * requests using ``.grad`` are executed solo (cross-user losses would have
     to be summed, entangling perturbation bookkeeping) — the scheduler falls
-    back to sequential co-tenancy for those, exactly the paper's baseline.
+    back to sequential co-tenancy for those, exactly the paper's baseline;
+  * ``all_steps()`` setters run solo (a merged setter is a read-modify-write
+    and broadcast getters are invalid — expand to concrete steps instead).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
-from repro.core.graph import ALL_STEPS, InterventionGraph, Node, Ref, map_refs
+from repro.core.graph import (
+    ALL_STEPS,
+    PREFILL_STEP,
+    InterventionGraph,
+    Node,
+    Ref,
+    map_refs,
+)
 
 __all__ = ["MergedBatch", "merge_graphs", "split_results"]
 
 BATCH_AXIS = 0
+SEQ_AXIS = 1
 
 
 @dataclasses.dataclass
@@ -33,13 +61,30 @@ class MergedBatch:
     graph: InterventionGraph
     row_slices: list[tuple[int, int]]  # (start, size) per request
     save_prefixes: list[str]
+    # per-request tap-site lengths (input key -> true length), None = uniform
+    lengths: list[dict[str, int]] | None = None
 
 
 def merge_graphs(
-    graphs: list[InterventionGraph], batch_sizes: list[int]
+    graphs: list[InterventionGraph],
+    batch_sizes: list[int],
+    *,
+    lengths: list[dict[str, int]] | None = None,
+    site_length_key: Callable[[str], str | None] | None = None,
 ) -> MergedBatch:
+    """Merge per-request graphs into one batched graph.
+
+    ``lengths`` (optional) holds one dict per request mapping a ragged input
+    key (e.g. ``"tokens"``) to that request's TRUE axis-1 length at tap
+    sites; the model inputs are assumed right-padded to the group max.
+    ``site_length_key(site)`` maps a tap-site name to the input key its
+    value's axis 1 follows (``None`` = no sequence axis); defaults to
+    ``"tokens"`` for every site.
+    """
     if len(graphs) != len(batch_sizes):
         raise ValueError("one batch size per graph required")
+    if lengths is not None and len(lengths) != len(graphs):
+        raise ValueError("one lengths record per graph required")
     for g in graphs:
         for n in g.nodes:
             if n.op == "grad_get":
@@ -55,6 +100,31 @@ def merge_graphs(
                     "graphs using all_steps() setters cannot be "
                     "batch-merged; schedule them sequentially"
                 )
+
+    length_key = site_length_key or (lambda site: "tokens")
+    group_max: dict[str, int] = {}
+    if lengths is not None:
+        for rec in lengths:
+            for k, v in rec.items():
+                group_max[k] = max(group_max.get(k, 0), int(v))
+
+    def true_length(r: int, n: Node) -> int | None:
+        """The request's tap-value length at this node, when it is SHORTER
+        than the group max (i.e. the value is padded and needs slicing).
+
+        Decode-step taps (step >= 0) are per-token — their axis 1 is the
+        singleton decode axis, identical for every request — so only
+        single-forward (step None) and prefill taps are length-sliced.
+        """
+        if lengths is None or n.site is None:
+            return None
+        if n.step is not None and n.step != PREFILL_STEP:
+            return None
+        key = length_key(n.site)
+        if key is None or key not in lengths[r]:
+            return None
+        L = int(lengths[r][key])
+        return L if L < group_max.get(key, L) else None
 
     merged = InterventionGraph()
     # Per (site, layer, step): the pristine shared getter and the current
@@ -97,6 +167,12 @@ def merge_graphs(
                     size,
                     axis=BATCH_AXIS,
                 )
+                L = true_length(r, n)
+                if L is not None:
+                    # unpad: the request's ops see its solo shapes
+                    sl = merged.add(
+                        "dynamic_slice_in_dim", Ref(sl.id), 0, L, axis=SEQ_AXIS
+                    )
                 idmap[n.id] = sl.id
             elif n.op == "tap_set":
                 if key not in current:
@@ -106,13 +182,23 @@ def merge_graphs(
                     shared_get.setdefault(key, node)
                     current[key] = node
                 val_ref = remap(n.args[0])
-                upd = merged.add(
-                    "dynamic_update_slice_in_dim",
-                    Ref(current[key].id),
-                    val_ref,
-                    start,
-                    axis=BATCH_AXIS,
-                )
+                if true_length(r, n) is not None:
+                    # ragged write: confined to real rows AND real positions
+                    # (the update value is solo-shaped, start = (row, 0, ...))
+                    upd = merged.add(
+                        "batch_update_slice",
+                        Ref(current[key].id),
+                        val_ref,
+                        start,
+                    )
+                else:
+                    upd = merged.add(
+                        "dynamic_update_slice_in_dim",
+                        Ref(current[key].id),
+                        val_ref,
+                        start,
+                        axis=BATCH_AXIS,
+                    )
                 merged.add(
                     "tap_set", Ref(upd.id),
                     site=n.site, layer=n.layer, step=n.step,
@@ -137,7 +223,12 @@ def merge_graphs(
         for name, nid in g.saves.items():
             merged.saves[f"{prefix}/{name}"] = idmap[nid]
 
-    return MergedBatch(graph=merged, row_slices=row_slices, save_prefixes=prefixes)
+    return MergedBatch(
+        graph=merged,
+        row_slices=row_slices,
+        save_prefixes=prefixes,
+        lengths=lengths,
+    )
 
 
 def split_results(

@@ -207,7 +207,9 @@ def run_generation(
     inputs: dict[str, Any] | None = None,
     prefill_fn: Callable | None = None,
     decode_fn: Callable | None = None,
+    empty_cache_fn: Callable | None = None,
     cache_kind: str = "full",
+    lengths: Any | None = None,
 ) -> GenerationResult:
     """Greedy-decode ``max_new_tokens`` with ``graph`` interleaved.
 
@@ -217,35 +219,58 @@ def run_generation(
     for steps with no interventions (the serving engine passes its cached
     jitted functions); instrumented steps always run through
     :func:`run_interleaved`.
+
+    ``lengths`` (B,) gives each row's TRUE prompt length for right-padded
+    ragged batches: prefill masks padding (sentinel cache positions, dt=0
+    SSD scans), each row's LAST REAL token is decoded as step 0 at its own
+    position, and decode step ``t`` runs at ``lengths - 1 + t`` per row —
+    so prompts of different lengths share ONE prefill and ONE decode loop.
+
+    A single-token prompt (``S == 1``) skips prefill entirely: the cache is
+    initialized empty (``model.empty_cache``) and the whole prompt is
+    decoded as step 0.  Graphs tapping ``prefill()`` therefore require
+    prompts of >= 2 tokens.
     """
     extras = dict(extras or {})
     B, S = tokens.shape
-    if S < 2:
-        raise ValueError(
-            "generation tracing requires a prompt of >= 2 tokens (the last "
-            "prompt token is decoded as step 0 so all steps share shapes)"
-        )
+    if S < 1:
+        raise ValueError("generation requires a non-empty prompt")
     N = int(max_new_tokens)
     if N < 1:
         raise ValueError("max_new_tokens must be >= 1")
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        if lengths.shape != (B,):
+            raise ValueError(f"lengths must be shape ({B},), got {lengths.shape}")
 
     slices = slice_steps(graph, N)
     schedule = _step_order(model.site_schedule(mode))
-    max_len = S - 1 + N
+    # Families whose prefill runs a Python layer loop (hybrid, enc-dec) fire
+    # taps eagerly per layer — scan-site scheduling would mis-place them, so
+    # the prefill slice is forced onto the unrolled schedule (decode_step
+    # uses lax.scan in scan mode for every family and stays as requested).
+    pre_mode = mode
+    pre_schedule = schedule
+    if mode == "scan" and not getattr(model, "scan_prefill", True):
+        pre_mode = "unrolled"
+        pre_schedule = _step_order(model.site_schedule("unrolled"))
+    max_len = S - 1 + N if S > 1 else N
 
     env: dict[int, Any] = {}
     saves: dict[str, Any] = {}
     logs: list = []
 
-    def run_slice(sl: StepSlice, model_fn, args: tuple) -> Any:
-        sl.graph.validate(schedule.order)
+    def run_slice(sl: StepSlice, model_fn, args: tuple,
+                  sl_schedule: SiteSchedule, sl_mode: str) -> Any:
+        sl.graph.validate(sl_schedule.order)
         bound = {name: env[nid] for name, nid in sl.imports.items()}
         if inputs:
             for n in sl.graph.nodes:
                 if n.op == "input" and not n.args[0].startswith("__env"):
                     bound[n.args[0]] = inputs[n.args[0]]
         out, sl_saves, sl_logs = run_interleaved(
-            model_fn, sl.graph, schedule, args, {}, mode=mode, inputs=bound,
+            model_fn, sl.graph, sl_schedule, args, {}, mode=sl_mode,
+            inputs=bound,
         )
         for name, nid in sl.exports.items():
             env[nid] = sl_saves.pop(name)
@@ -254,21 +279,36 @@ def run_generation(
         return out
 
     # ------------------------------------------------------------- prefill
-    prompt = {"tokens": tokens[:, :-1], **extras}
     pre_slice = slices.get(PREFILL_STEP)
-    if pre_slice is None and prefill_fn is not None:
-        out, cache = prefill_fn(params, prompt, max_len)
-    elif pre_slice is None:
-        out, cache = model.prefill(
-            params, prompt, mode=mode, kind=cache_kind, max_len=max_len
-        )
-    else:
-        def pre_fn(params_, batch_):
-            return model.prefill(
-                params_, batch_, mode=mode, kind=cache_kind, max_len=max_len
+    if S == 1:
+        if pre_slice is not None:
+            raise GraphValidationError(
+                "prefill() taps require a prompt of >= 2 tokens; a "
+                "single-token prompt has no prefill execution (the whole "
+                "prompt is decoded as step 0)"
             )
+        make_cache = empty_cache_fn or model.empty_cache
+        cache = make_cache(params, extras, B, max_len, cache_kind)
+    else:
+        prompt = {"tokens": tokens[:, :-1], **extras}
+        if lengths is not None:
+            prompt["lengths"] = lengths - 1
+        if pre_slice is None and prefill_fn is not None:
+            out, cache = prefill_fn(params, prompt, max_len)
+        elif pre_slice is None:
+            out, cache = model.prefill(
+                params, prompt, mode=mode, kind=cache_kind, max_len=max_len
+            )
+        else:
+            def pre_fn(params_, batch_):
+                return model.prefill(
+                    params_, batch_, mode=pre_mode, kind=cache_kind,
+                    max_len=max_len,
+                )
 
-        out, cache = run_slice(pre_slice, pre_fn, (params, prompt))
+            out, cache = run_slice(
+                pre_slice, pre_fn, (params, prompt), pre_schedule, pre_mode
+            )
 
     # -------------------------------------------------------------- decode
     def plain_decode(params_, cache_, token_, pos_):
@@ -278,11 +318,17 @@ def run_generation(
             params_, cache_, {"token": token_, "pos": pos_}, mode=mode
         )
 
-    token = tokens[:, -1:]
+    if lengths is None:
+        token = tokens[:, -1:]
+        base_pos = jnp.full((B,), S - 1, jnp.int32)
+    else:
+        # each row's LAST REAL token, decoded as step 0 at its own position
+        token = jnp.take_along_axis(tokens, (lengths - 1)[:, None], axis=1)
+        base_pos = lengths - 1
     new_tokens = []
     logits = None
     for t in range(N):
-        pos = jnp.full((B,), S - 1 + t, jnp.int32)
+        pos = base_pos + t
         sl = slices.get(t)
         if sl is None or sl.is_empty():
             out, cache = plain_decode(params, cache, token, pos)
@@ -293,7 +339,9 @@ def run_generation(
                     mode=mode,
                 )
 
-            out, cache = run_slice(sl, step_fn, (params, cache, token, pos))
+            out, cache = run_slice(
+                sl, step_fn, (params, cache, token, pos), schedule, mode
+            )
         logits = out["logits"]
         token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         new_tokens.append(token[:, 0])

@@ -140,6 +140,20 @@ register_op(
     ),
 )
 
+
+def _batch_update_slice(x, upd, start):
+    """Write ``upd`` into ``x`` at batch-row ``start``, position 0 on every
+    other axis.  Rank-polymorphic so the batch merger can confine a ragged
+    request's setter to its real rows AND real positions without knowing the
+    tap value's rank."""
+    upd = jnp.asarray(upd, dtype=jnp.result_type(x))
+    return jax.lax.dynamic_update_slice(
+        x, upd, (start,) + (0,) * (upd.ndim - 1)
+    )
+
+
+register_op("batch_update_slice", _batch_update_slice)
+
 # ------------------------------------------------------------------- metrics
 # Server-side metrics (the Fig. 6c win: return a scalar, not hidden states).
 register_op(

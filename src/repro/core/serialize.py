@@ -14,6 +14,12 @@ Encoding rules (chosen to be round-trip exact):
   np scalar      {"__scalar__": {"dtype", "value"}}
   dtype          {"__dtype__": "float32"}
   None/bool/int/float/str/list/dict   native JSON
+
+Ragged-length requests need no special encoding: per-row valid lengths
+travel as ordinary ``(B,)`` int arrays under the reserved batch keys
+``lengths`` / ``src_lengths`` (see repro.serving.server), and the merger's
+unpadding ops (``dynamic_slice_in_dim`` / ``batch_update_slice``) are plain
+registry ops, so padding-aware merged graphs round-trip unchanged.
 """
 from __future__ import annotations
 

@@ -389,6 +389,8 @@ class GenerateTracer(Tracer):
                 "prefill/decode_step); plain TracedModel wraps only a "
                 "single forward"
             )
+        extras = dict(self.model_kwargs)
+        lengths = extras.pop("lengths", None)
         res = run_generation(
             zoo,
             self.model.params,
@@ -396,7 +398,8 @@ class GenerateTracer(Tracer):
             jax.numpy.asarray(self.tokens),
             self.max_new_tokens,
             mode=self.mode,
-            extras=self.model_kwargs,
+            extras=extras,
+            lengths=lengths,
         )
         self.output_tokens = np.asarray(res.tokens)
         self.output_logits = res.logits

@@ -42,6 +42,10 @@ __all__ = [
     "mamba2_decode_step",
     "set_attention_impl",
     "get_attention_impl",
+    "length_mask",
+    "valid_positions",
+    "PAD_POS",
+    "PAD_LIMIT",
 ]
 
 _ATTN_IMPL = ["auto"]  # auto | dense | chunked | pallas
@@ -63,6 +67,37 @@ _KV_BLOCK = 512
 # Finite mask value: -inf would produce NaN via (-inf) - (-inf) in the
 # online-softmax update when a whole KV block is masked.
 NEG_INF = -1e30
+# Sentinel position for padded / unwritten slots.  Any key whose position is
+# >= PAD_LIMIT is masked by _mask_bias for EVERY query — causal or not — so
+# right-padded batch rows and unwritten cache slots are provably inert.
+PAD_POS = jnp.iinfo(jnp.int32).max // 2
+PAD_LIMIT = jnp.iinfo(jnp.int32).max // 4
+
+
+def length_mask(lengths: jax.Array, seq_len: int) -> jax.Array:
+    """(B, S) bool: True where the position index is < the row's length."""
+    return jnp.arange(seq_len)[None, :] < lengths[:, None]
+
+
+def valid_positions(lengths: jax.Array | None, batch: int, seq_len: int):
+    """(B, S) positions with padded slots set to the PAD sentinel.
+
+    With ``lengths=None`` this is the plain broadcast ``arange`` every model
+    used before ragged co-tenancy existed — bit-identical fast path.
+    """
+    pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                           (batch, seq_len))
+    if lengths is None:
+        return pos
+    if get_attention_impl() == "pallas":
+        # The flash kernel rebuilds iota positions internally and would
+        # silently attend to padded keys — fail loudly instead of leaking.
+        raise NotImplementedError(
+            "ragged-length masking is not supported with the pallas "
+            "attention kernel yet; use set_attention_impl('auto'/'dense'/"
+            "'chunked') for padded batches"
+        )
+    return jnp.where(length_mask(lengths, seq_len), pos, PAD_POS)
 
 
 def set_attention_impl(impl: str) -> None:
@@ -126,9 +161,14 @@ def linear(p: dict, x: jax.Array) -> jax.Array:
 def _mask_bias(
     q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int | None
 ) -> jax.Array:
-    """(..., S, T) additive bias: 0 allowed / -inf masked."""
+    """(..., S, T) additive bias: 0 allowed / -inf masked.
+
+    Keys carrying a sentinel position (>= PAD_LIMIT: padded batch rows,
+    unwritten cache slots) are masked for every query, including non-causal
+    attention — this is what makes ragged-length batch merging inert.
+    """
     d = q_pos[..., :, None] - k_pos[..., None, :]
-    ok = jnp.ones(d.shape, bool)
+    ok = jnp.broadcast_to((k_pos < PAD_LIMIT)[..., None, :], d.shape)
     if causal:
         ok &= d >= 0
     if window is not None:
@@ -662,8 +702,17 @@ def mamba2_apply(
     *,
     state_tap=None,
     impl: str | None = None,
+    lengths: jax.Array | None = None,
 ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
-    """Full-sequence Mamba2 block. Returns (out, (ssm_state, conv_tail))."""
+    """Full-sequence Mamba2 block. Returns (out, (ssm_state, conv_tail)).
+
+    ``lengths`` (B,) marks per-row valid prefixes for ragged batch merging:
+    padded positions get ``dt = 0`` (decay 1, update 0 — the state passes
+    through them unchanged, exactly like the chunk padding the SSD scan
+    already does), so the final state and every real position's output are
+    bit-identical to an unpadded run.  The conv tail is gathered per row
+    from the last ``W-1`` REAL positions.
+    """
     B, S, d = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
     zxbcdt = linear(p["in_proj"], x)
@@ -673,6 +722,8 @@ def mamba2_apply(
     xin, B_, C = jnp.split(conv, [di, di + n], axis=-1)
     xin = shard_hint(xin, P(("pod", "data"), None, "model"))
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if lengths is not None:
+        dt = jnp.where(length_mask(lengths, S)[..., None], dt, 0.0)
     A = jnp.exp(p["A_log"])
     xh = xin.reshape(B, S, h, cfg.ssm_head_dim)
 
@@ -688,7 +739,19 @@ def mamba2_apply(
     y = y.reshape(B, S, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
     out = linear(p["out_proj"], y)
-    conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):, :]
+    W = cfg.ssm_conv_width
+    if lengths is None:
+        conv_tail = conv_in[:, -(W - 1):, :]
+    else:
+        # per-row window of the last W-1 REAL conv inputs (zero-filled when
+        # the row is shorter than the window, matching a fresh cache)
+        idx = lengths[:, None] - (W - 1) + jnp.arange(W - 1)[None, :]
+        tail = jnp.take_along_axis(
+            conv_in, jnp.clip(idx, 0, S - 1)[:, :, None], axis=1
+        )
+        conv_tail = jnp.where((idx >= 0)[:, :, None], tail, 0.0).astype(
+            conv_in.dtype
+        )
     return shard_hint(out, P(("pod", "data"), None, None)), (
         final.astype(jnp.float32),
         conv_tail,

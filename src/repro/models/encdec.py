@@ -32,9 +32,20 @@ DEC_SITES = ["decoder.input", "decoder.attn.output", "decoder.cross.output",
 
 
 class EncDecModel:
+    # prefill() runs a Python decoder-layer loop — generation traces tapping
+    # it must be scheduled unrolled (repro.core.generation forces this).
+    scan_prefill = False
+
     def __init__(self, cfg: ModelConfig):
         assert cfg.encoder_layers > 0
         self.cfg = cfg
+
+    def site_length_key(self, site: str) -> str | None:
+        """Encoder sites follow the source-frame axis, decoder sites the
+        target-token axis — ragged merging pads/unpads each independently."""
+        if site in ("src_embed", "enc_output") or site.startswith("encoder."):
+            return "src_embeds"
+        return "tokens"
 
     def init(self, key: jax.Array) -> dict:
         cfg = self.cfg
@@ -93,10 +104,14 @@ class EncDecModel:
 
     # --------------------------------------------------------------- encoder
     def encode(self, params: dict, src_embeds: jax.Array, *, mode="scan",
-               remat: bool = False):
+               remat: bool = False, src_lengths: jax.Array | None = None):
+        """Bidirectional encoder.  ``src_lengths`` (B,) marks per-row valid
+        frames: padded frames get sentinel positions, which ``_mask_bias``
+        excludes for every (non-causal) query — without this, right-padding
+        would leak into every real frame."""
         cfg = self.cfg
         B, T, _ = src_embeds.shape
-        positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+        positions = C.valid_positions(src_lengths, B, T)
         h = taps.site("src_embed", src_embeds.astype(cfg.dtype))
         h = shard_hint(h, P(("pod", "data"), None, None))
 
@@ -132,6 +147,16 @@ class EncDecModel:
         return taps.site("enc_output", h)
 
     # --------------------------------------------------------------- decoder
+    def _project_cross_kv(self, p, enc_out):
+        """One decoder layer's cross-attention K/V from encoder output."""
+        cfg = self.cfg
+        B, T, _ = enc_out.shape
+        ck = C.linear(p["cross"]["wk"], enc_out).reshape(
+            B, T, cfg.n_kv_heads, cfg.hd)
+        cv = C.linear(p["cross"]["wv"], enc_out).reshape(
+            B, T, cfg.n_kv_heads, cfg.hd)
+        return ck, cv
+
     def _dec_layer(self, p, h, positions, enc_out, enc_pos, idx, *,
                    cache_l=None, kv_positions=None, slot=None,
                    cross_kv=None, window=None, decode=False,
@@ -167,11 +192,7 @@ class EncDecModel:
         x = C.rms_norm(h, p["cross_norm"], cfg.norm_eps)
         q = C.linear(p["cross"]["wq"], x).reshape(B, S, cfg.n_heads, hd)
         if cross_kv is None:
-            T = enc_out.shape[1]
-            ck = C.linear(p["cross"]["wk"], enc_out).reshape(
-                B, T, cfg.n_kv_heads, hd)
-            cv = C.linear(p["cross"]["wv"], enc_out).reshape(
-                B, T, cfg.n_kv_heads, hd)
+            ck, cv = self._project_cross_kv(p, enc_out)
             if collect:
                 new_l = dict(new_l or {}, cross_k=ck, cross_v=cv)
         else:
@@ -190,15 +211,18 @@ class EncDecModel:
 
     def forward(self, params: dict, batch: dict, *, mode: str = "scan",
                 remat: bool = False) -> dict:
-        """batch: src_embeds (B,T,d) + tokens (B,S)."""
+        """batch: src_embeds (B,T,d) + tokens (B,S)
+        [+ lengths (B,) / src_lengths (B,) valid prefixes for padded rows]."""
         cfg = self.cfg
+        src_lengths = batch.get("src_lengths")
         enc_out = self.encode(params, batch["src_embeds"], mode=mode,
-                              remat=remat)
+                              remat=remat, src_lengths=src_lengths)
         tokens = batch["tokens"]
         B, S = tokens.shape
         T = enc_out.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        enc_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        positions = C.valid_positions(batch.get("lengths"), B, S)
+        # padded source frames are sentinel-masked in cross-attention too
+        enc_pos = C.valid_positions(src_lengths, B, T)
         h = params["embed"][tokens].astype(cfg.dtype)
         h = taps.site("embed", h)
 
@@ -240,6 +264,10 @@ class EncDecModel:
                 (cfg.n_layers, batch_size, Ts, cfg.n_kv_heads, hd), cfg.dtype),
             "cross_v": jnp.zeros(
                 (cfg.n_layers, batch_size, Ts, cfg.n_kv_heads, hd), cfg.dtype),
+            # per-row source positions (sentinel where padded) so decode
+            # cross-attention masks ragged source lengths
+            "cross_pos": jnp.broadcast_to(
+                jnp.arange(Ts, dtype=jnp.int32), (batch_size, Ts)),
         }
         big = jnp.iinfo(jnp.int32).max // 2
         return KVCache(kind, data, jnp.full((batch_size, T), big, jnp.int32),
@@ -248,15 +276,18 @@ class EncDecModel:
     def prefill(self, params, batch, *, mode="scan", kind="full", max_len=None):
         """Encode source + teacher-force target prefix, filling caches."""
         cfg = self.cfg
-        enc_out = self.encode(params, batch["src_embeds"], mode=mode)
+        lengths = batch.get("lengths")
+        src_lengths = batch.get("src_lengths")
+        enc_out = self.encode(params, batch["src_embeds"], mode=mode,
+                              src_lengths=src_lengths)
         tokens = batch["tokens"]
         B, S = tokens.shape
         max_len = max_len or S
         cache = self.init_cache(B, max_len, kind=kind)
         T = cache.positions.shape[1]
         Tsrc = enc_out.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        enc_pos = jnp.broadcast_to(jnp.arange(Tsrc), (B, Tsrc))
+        positions = C.valid_positions(lengths, B, S)
+        enc_pos = C.valid_positions(src_lengths, B, Tsrc)
         h = params["embed"][tokens].astype(cfg.dtype)
         h = taps.site("embed", h)
 
@@ -276,6 +307,13 @@ class EncDecModel:
         logits = taps.site("logits", logits)
 
         k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
+        if kind == "window" and S > T and lengths is not None:
+            # see TransformerModel._assemble_cache: a uniform column crop
+            # would evict a short row's still-in-window keys
+            raise NotImplementedError(
+                "ragged prompts with a sliding-window cache are not "
+                "supported when the padded prompt exceeds the window"
+            )
         if kind == "window" and S > T:
             k_arr = jnp.roll(k_arr[:, :, -T:], S % T, axis=2)
             v_arr = jnp.roll(v_arr[:, :, -T:], S % T, axis=2)
@@ -289,9 +327,33 @@ class EncDecModel:
             kept = jnp.pad(kept, ((0, 0), (0, pad)),
                            constant_values=jnp.iinfo(jnp.int32).max // 2)
         data = {"k": k_arr, "v": v_arr,
-                "cross_k": jnp.stack(cks), "cross_v": jnp.stack(cvs)}
-        new_cache = KVCache(kind, data, kept, jnp.full((B,), S, jnp.int32))
+                "cross_k": jnp.stack(cks), "cross_v": jnp.stack(cvs),
+                "cross_pos": enc_pos}
+        written = (jnp.full((B,), S, jnp.int32) if lengths is None
+                   else jnp.asarray(lengths, jnp.int32))
+        new_cache = KVCache(kind, data, kept, written)
         return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, new_cache
+
+    def empty_cache(self, params, batch, batch_size, max_len, kind="full"):
+        """Decode-ready cache with no target tokens written: the encoder
+        still runs (cross K/V must exist before the first decode step)."""
+        cfg = self.cfg
+        src_lengths = batch.get("src_lengths")
+        enc_out = self.encode(params, batch["src_embeds"], mode="unrolled",
+                              src_lengths=src_lengths)
+        Tsrc = enc_out.shape[1]
+        cache = self.init_cache(batch_size, max_len, kind=kind)
+        cks, cvs = [], []
+        for i in range(cfg.n_layers):
+            p = jax.tree.map(lambda a: a[i], params["decoder"])
+            ck, cv = self._project_cross_kv(p, enc_out)
+            cks.append(ck)
+            cvs.append(cv)
+        cache.data["cross_k"] = jnp.stack(cks)
+        cache.data["cross_v"] = jnp.stack(cvs)
+        cache.data["cross_pos"] = C.valid_positions(
+            src_lengths, batch_size, Tsrc)
+        return cache
 
     def decode_step(self, params, cache, batch, *, mode: str = "scan"):
         cfg = self.cfg
@@ -303,7 +365,9 @@ class EncDecModel:
         slot = pos % T if cache.kind == "window" else pos
         new_positions = _write_rows(cache.positions, slot, pos[:, None])
         Ts = cache.data["cross_k"].shape[2]
-        enc_pos = jnp.broadcast_to(jnp.arange(Ts), (B, Ts))
+        enc_pos = cache.data.get("cross_pos")
+        if enc_pos is None:
+            enc_pos = jnp.broadcast_to(jnp.arange(Ts), (B, Ts))
         h = params["embed"][token].astype(cfg.dtype)
         h = taps.site("embed", h)
 
@@ -321,7 +385,8 @@ class EncDecModel:
                 new_k[i], new_v[i] = new_l["k"], new_l["v"]
             data = {"k": jnp.stack(new_k), "v": jnp.stack(new_v),
                     "cross_k": cache.data["cross_k"],
-                    "cross_v": cache.data["cross_v"]}
+                    "cross_v": cache.data["cross_v"],
+                    "cross_pos": enc_pos}
         else:
             def body(h, inp):
                 p, kc, vc, ck, cv, idx = inp
@@ -341,7 +406,8 @@ class EncDecModel:
             )
             data = {"k": ys.pop("__k__"), "v": ys.pop("__v__"),
                     "cross_k": cache.data["cross_k"],
-                    "cross_v": cache.data["cross_v"]}
+                    "cross_v": cache.data["cross_v"],
+                    "cross_pos": enc_pos}
             taps.deliver_scan(ys)
 
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)

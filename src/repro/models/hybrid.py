@@ -25,10 +25,17 @@ __all__ = ["Zamba2Model"]
 
 
 class Zamba2Model:
+    # prefill() runs a Python layer loop — generation traces tapping it must
+    # be scheduled unrolled (repro.core.generation forces this).
+    scan_prefill = False
+
     def __init__(self, cfg: ModelConfig):
         assert cfg.shared_attn_every > 0
         self.cfg = cfg
         self.n_apps = cfg.n_layers // cfg.shared_attn_every
+
+    def site_length_key(self, site: str) -> str | None:
+        return None if site == "layers.ssm_state" else "tokens"
 
     @property
     def _d2(self) -> int:
@@ -95,13 +102,14 @@ class Zamba2Model:
         )
 
     # ---------------------------------------------------------------- blocks
-    def _mamba_layer(self, p, h, layer):
+    def _mamba_layer(self, p, h, layer, lengths=None):
         cfg = self.cfg
         h = taps.site("layers.input", h, layer=layer)
         h = shard_hint(h, P(("pod", "data"), "model", None))
         x = C.rms_norm(h, p["norm"], cfg.norm_eps)
         state_tap = lambda v: taps.site("layers.ssm_state", v, layer=layer)
-        out, state = C.mamba2_apply(p["mixer"], x, cfg, state_tap=state_tap)
+        out, state = C.mamba2_apply(p["mixer"], x, cfg, state_tap=state_tap,
+                                    lengths=lengths)
         out = taps.site("layers.mixer.output", out, layer=layer)
         h = h + out
         return taps.site("layers.output", h, layer=layer), state
@@ -156,7 +164,8 @@ class Zamba2Model:
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        lengths = batch.get("lengths")
+        positions = C.valid_positions(lengths, B, S)
         h = params["embed"][tokens].astype(cfg.dtype)
         h = shard_hint(h, P(("pod", "data"), None, None))
         h = taps.site("embed", h)
@@ -166,7 +175,7 @@ class Zamba2Model:
         if mode == "unrolled":
             for i in range(cfg.n_layers):
                 p = jax.tree.map(lambda a: a[i], params["layers"])
-                h, _ = self._mamba_layer(p, h, i)
+                h, _ = self._mamba_layer(p, h, i, lengths)
                 if (i + 1) % k_every == 0:
                     g = (i + 1) // k_every - 1
                     h, _ = self._shared_block(
@@ -182,7 +191,7 @@ class Zamba2Model:
                 pg, g = inp
                 for j in range(k_every):
                     p = jax.tree.map(lambda a: a[j], pg)
-                    h, _ = self._mamba_layer(p, h, g * k_every + j)
+                    h, _ = self._mamba_layer(p, h, g * k_every + j, lengths)
                 h, _ = self._shared_block(params, h, h0, g, positions,
                                           window=window)
                 return h, taps.scan_outputs()
@@ -230,10 +239,11 @@ class Zamba2Model:
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
+        lengths = batch.get("lengths")
         max_len = max_len or S
         cache = self.init_cache(B, max_len, kind=kind)
         T = cache.positions.shape[1]
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        positions = C.valid_positions(lengths, B, S)
         h = params["embed"][tokens].astype(cfg.dtype)
         k_every = cfg.shared_attn_every
         window = cfg.sliding_window if kind == "window" else None
@@ -243,7 +253,7 @@ class Zamba2Model:
         ssm_states, conv_states, ks, vs = [], [], [], []
         for i in range(cfg.n_layers):
             p = jax.tree.map(lambda a: a[i], params["layers"])
-            h, (s, c) = self._mamba_layer(p, h, i)
+            h, (s, c) = self._mamba_layer(p, h, i, lengths)
             ssm_states.append(s)
             conv_states.append(c)
             if (i + 1) % k_every == 0:
@@ -260,6 +270,13 @@ class Zamba2Model:
         logits = taps.site("logits", logits)
 
         k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
+        if kind == "window" and S > T and lengths is not None:
+            # see TransformerModel._assemble_cache: a uniform column crop
+            # would evict a short row's still-in-window keys
+            raise NotImplementedError(
+                "ragged prompts with a sliding-window cache are not "
+                "supported when the padded prompt exceeds the window"
+            )
         if kind == "window" and S > T:
             k_arr = jnp.roll(k_arr[:, :, -T:], S % T, axis=2)
             v_arr = jnp.roll(v_arr[:, :, -T:], S % T, axis=2)
@@ -272,13 +289,18 @@ class Zamba2Model:
             v_arr = jnp.pad(v_arr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
             kept = jnp.pad(kept, ((0, 0), (0, pad)),
                            constant_values=jnp.iinfo(jnp.int32).max // 2)
+        written = (jnp.full((B,), S, jnp.int32) if lengths is None
+                   else jnp.asarray(lengths, jnp.int32))
         cache = KVCache(
             kind,
             {"ssm": jnp.stack(ssm_states), "conv": jnp.stack(conv_states),
              "k": k_arr, "v": v_arr},
-            kept, jnp.full((B,), S, jnp.int32),
+            kept, written,
         )
         return {"logits": logits, "aux_loss": jnp.zeros((), jnp.float32)}, cache
+
+    def empty_cache(self, params, batch, batch_size, max_len, kind="full"):
+        return self.init_cache(batch_size, max_len, kind=kind)
 
     def decode_step(self, params, cache, batch, *, mode: str = "scan"):
         cfg = self.cfg

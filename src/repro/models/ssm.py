@@ -21,8 +21,14 @@ __all__ = ["Mamba2Model"]
 
 
 class Mamba2Model:
+    scan_prefill = True
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+
+    def site_length_key(self, site: str) -> str | None:
+        # the recurrent state (B,H,P,N) has no sequence axis
+        return None if site == "layers.ssm_state" else "tokens"
 
     def init(self, key: jax.Array) -> dict:
         cfg = self.cfg
@@ -62,13 +68,14 @@ class Mamba2Model:
         )
 
     # ---------------------------------------------------------------- layers
-    def _layer(self, p, h, layer):
+    def _layer(self, p, h, layer, lengths=None):
         cfg = self.cfg
         h = taps.site("layers.input", h, layer=layer)
         h = shard_hint(h, P(("pod", "data"), "model", None))
         x = C.rms_norm(h, p["norm"], cfg.norm_eps)
         state_tap = lambda v: taps.site("layers.ssm_state", v, layer=layer)
-        out, state = C.mamba2_apply(p["mixer"], x, cfg, state_tap=state_tap)
+        out, state = C.mamba2_apply(p["mixer"], x, cfg, state_tap=state_tap,
+                                    lengths=lengths)
         out = taps.site("layers.mixer.output", out, layer=layer)
         h = h + out
         h = taps.site("layers.output", h, layer=layer)
@@ -78,17 +85,18 @@ class Mamba2Model:
                 remat: bool = False) -> dict:
         cfg = self.cfg
         tokens = batch["tokens"]
+        lengths = batch.get("lengths")
         h = params["embed"][tokens].astype(cfg.dtype)
         h = shard_hint(h, P(("pod", "data"), None, None))
         h = taps.site("embed", h)
         if mode == "unrolled":
             for i in range(cfg.n_layers):
                 p = jax.tree.map(lambda a: a[i], params["layers"])
-                h, _ = self._layer(p, h, i)
+                h, _ = self._layer(p, h, i, lengths)
         else:
             def body(h, inp):
                 p, idx = inp
-                h, _ = self._layer(p, h, idx)
+                h, _ = self._layer(p, h, idx, lengths)
                 return h, taps.scan_outputs()
 
             if remat:
@@ -116,15 +124,22 @@ class Mamba2Model:
             ),
         }
 
+    def empty_cache(self, params, batch, batch_size, max_len, kind="full"):
+        return self.init_cache(batch_size, max_len, kind=kind)
+
     def prefill(self, params, batch, *, mode: str = "scan", kind="full",
                 max_len=None):
         """Forward + per-layer final states (O(1)-size cache).
 
         Fires the same tap sites as ``forward`` so generation traces can
-        intervene on (or collect from) the prompt prefill.
+        intervene on (or collect from) the prompt prefill.  With
+        ``batch["lengths"]``, padded rows' states stop at their last real
+        token (dt-masked in the SSD scan) and the conv tail is gathered from
+        real positions, so ragged prompts share one prefill.
         """
         cfg = self.cfg
         tokens = batch["tokens"]
+        lengths = batch.get("lengths")
         h = params["embed"][tokens].astype(cfg.dtype)
         h = taps.site("embed", h)
 
@@ -132,14 +147,14 @@ class Mamba2Model:
             ssm_states, conv_states = [], []
             for i in range(cfg.n_layers):
                 p = jax.tree.map(lambda a: a[i], params["layers"])
-                h, (s, c) = self._layer(p, h, i)
+                h, (s, c) = self._layer(p, h, i, lengths)
                 ssm_states.append(s)
                 conv_states.append(c)
             states = (jnp.stack(ssm_states), jnp.stack(conv_states))
         else:
             def body(h, inp):
                 p, idx = inp
-                h, state = self._layer(p, h, idx)
+                h, state = self._layer(p, h, idx, lengths)
                 return h, {**taps.scan_outputs(), "__state__": state}
 
             h, ys = jax.lax.scan(

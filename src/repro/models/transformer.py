@@ -54,9 +54,21 @@ jax.tree_util.register_pytree_node(
 
 
 class TransformerModel:
+    # prefill() honours mode="scan" (taps fire inside lax.scan and are
+    # delivered); families whose prefill runs a Python layer loop set False
+    # and generation traces force unrolled scheduling for the prefill slice.
+    scan_prefill = True
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         self.is_vlm = cfg.cross_attn_every > 0
+
+    def site_length_key(self, site: str) -> str | None:
+        """Which batch input's axis-1 length a tap value's axis 1 follows.
+
+        Used by ragged batch merging to slice saves back to each request's
+        true length; ``None`` marks sites with no sequence axis."""
+        return "tokens"
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> dict:
@@ -231,11 +243,12 @@ class TransformerModel:
         window: int | None = None,
         remat: bool = False,
     ) -> dict:
-        """Teacher-forcing forward. batch: tokens (B,S) [+ image_embeds]."""
+        """Teacher-forcing forward. batch: tokens (B,S) [+ image_embeds;
+        + lengths (B,) per-row valid prefixes for right-padded rows]."""
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        positions = C.valid_positions(batch.get("lengths"), B, S)
         h = params["embed"][tokens].astype(cfg.dtype)
         h = shard_hint(h, P(("pod", "data"), None, None))
         h = taps.site("embed", h)
@@ -539,14 +552,17 @@ class TransformerModel:
         """Full-sequence forward that also fills the KV cache.
 
         ``max_len`` reserves headroom for subsequent decode steps.
+        ``batch["lengths"]`` (B,) marks per-row valid prefixes: padded slots
+        get sentinel positions, so the cache they fill is never attended.
         """
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
+        lengths = batch.get("lengths")
         max_len = max_len or S
         cache = self.init_cache(B, max_len, kind=kind)
         # Build the cache by re-projecting K/V per layer (single pass).
-        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        positions = C.valid_positions(lengths, B, S)
         h = params["embed"][tokens].astype(cfg.dtype)
         h = taps.site("embed", h)
         window = cfg.sliding_window if kind == "window" else None
@@ -566,7 +582,8 @@ class TransformerModel:
             if self.is_vlm and cross is not None:
                 data["cross_k"], data["cross_v"] = cross
             return {"logits": logits, "aux_loss": aux_total}, \
-                self._assemble_cache(cache, data, positions, kind, B, S)
+                self._assemble_cache(cache, data, positions, kind, B, S,
+                                     lengths)
 
         aux_total = jnp.zeros((), jnp.float32)
         new_layers = []
@@ -641,13 +658,21 @@ class TransformerModel:
             data["cross_k"] = jnp.stack(cks)
             data["cross_v"] = jnp.stack(cvs)
         return {"logits": logits, "aux_loss": aux_total}, \
-            self._assemble_cache(cache, data, positions, kind, B, S)
+            self._assemble_cache(cache, data, positions, kind, B, S, lengths)
 
-    def _assemble_cache(self, cache, data, positions, kind, B, S) -> KVCache:
+    def _assemble_cache(self, cache, data, positions, kind, B, S,
+                        lengths=None) -> KVCache:
         """Ring-align / pad freshly-collected K/V into the decode cache."""
         T = cache.positions.shape[1]
         cross = {k: v for k, v in data.items() if k.startswith("cross")}
         data = {k: v for k, v in data.items() if not k.startswith("cross")}
+        if kind == "window" and S > T and lengths is not None:
+            # the uniform last-T column crop would evict a SHORT row's real
+            # keys that are still inside ITS window — refuse, don't corrupt
+            raise NotImplementedError(
+                "ragged prompts with a sliding-window cache are not "
+                "supported when the padded prompt exceeds the window"
+            )
         if kind == "window" and S > T:
             # Ring alignment: position p must live at slot p % T so decode
             # writes (slot = pos % T) evict exactly the out-of-window key.
@@ -668,7 +693,30 @@ class TransformerModel:
                 constant_values=jnp.iinfo(jnp.int32).max // 2,
             )
         data.update(cross)
-        return KVCache(cache.kind, data, kept, jnp.full((B,), S, jnp.int32))
+        written = (jnp.full((B,), S, jnp.int32) if lengths is None
+                   else jnp.asarray(lengths, jnp.int32))
+        return KVCache(cache.kind, data, kept, written)
+
+    def empty_cache(
+        self, params: dict, batch: dict, batch_size: int, max_len: int,
+        kind: str = "full",
+    ) -> KVCache:
+        """A decode-ready cache with NO prompt tokens written (the S == 1
+        generation path decodes the whole prompt as step 0).  VLM cross K/V
+        still come from the image embeddings."""
+        cache = self.init_cache(batch_size, max_len, kind=kind)
+        if self.is_vlm:
+            n_cross = self.cfg.n_layers // self.cfg.cross_attn_every
+            cks, cvs = [], []
+            for ci in range(n_cross):
+                _cp, (ck, cv, _pos) = self._cross_kv(
+                    params, batch["image_embeds"], ci
+                )
+                cks.append(ck)
+                cvs.append(cv)
+            cache.data["cross_k"] = jnp.stack(cks)
+            cache.data["cross_v"] = jnp.stack(cvs)
+        return cache
 
 
 def _moe(p, x, cfg, router_tap):

@@ -73,19 +73,31 @@ class NDIFClient:
 
     # Plain-inference APIs (benchmark comparisons) ----------------------
     def generate(self, tokens, max_new_tokens: int = 16, *, graph=None,
-                 **extras):
+                 lengths=None, **extras):
         """Server-side generation; ``graph`` may carry a step-annotated
         intervention graph (see repro.core.generation) to steer or record
-        the decode loop remotely."""
+        the decode loop remotely.  ``lengths`` (B,) marks per-row valid
+        prefixes of a right-padded ``tokens`` batch — rows of different
+        prompt lengths then share one prefill and one decode loop."""
+        batch = {"tokens": np.asarray(tokens), **extras}
+        if lengths is not None:
+            batch["lengths"] = np.asarray(lengths, np.int32)
         msg = {
             "kind": "generate",
             "model": self.model_name,
-            "batch": {"tokens": np.asarray(tokens), **extras},
+            "batch": batch,
             "max_new_tokens": max_new_tokens,
         }
         if graph is not None:
             msg["graph"] = graph_to_json(graph)
         return self._roundtrip(msg)["results"]
+
+    def stats(self) -> dict:
+        """The hosted engine's EngineStats snapshot (compiles, generations,
+        merged-group sizes, padding waste) for capacity planning."""
+        return self._roundtrip(
+            {"kind": "stats", "model": self.model_name}
+        )["results"]
 
     def hidden_states(self, tokens, **extras):
         msg = {

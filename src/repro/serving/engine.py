@@ -35,6 +35,10 @@ __all__ = ["InferenceEngine", "EngineStats"]
 
 
 class EngineStats:
+    # group_sizes keeps the most recent merged-group sizes only (the
+    # aggregate counters are unbounded; the ring is for dashboards)
+    GROUP_HISTORY = 512
+
     def __init__(self) -> None:
         self.compiles = 0        # XLA traces (graph execs + prefill/decode)
         self.executions = 0
@@ -42,6 +46,42 @@ class EngineStats:
         self.exec_seconds = 0.0
         self.generations = 0     # generate() calls served
         self.gen_tokens = 0      # total tokens decoded
+        self.merged_groups = 0   # parallel co-tenancy groups executed
+        self.merged_requests = 0  # requests served inside merged groups
+        self.group_sizes: list[int] = []  # recent merged-group sizes
+        self.padded_tokens = 0   # padding cells added by ragged merging
+        self.real_tokens = 0     # real cells in merged ragged inputs
+
+    def record_group(self, n_requests: int, padded: int, real: int) -> None:
+        """Scheduler hook: one parallel co-tenancy group was executed."""
+        self.merged_groups += 1
+        self.merged_requests += int(n_requests)
+        self.group_sizes.append(int(n_requests))
+        del self.group_sizes[:-self.GROUP_HISTORY]
+        self.padded_tokens += int(padded)
+        self.real_tokens += int(real)
+
+    def snapshot(self) -> dict:
+        """JSON-ready view for the server's ``stats`` endpoint."""
+        cells = self.padded_tokens + self.real_tokens
+        return {
+            "compiles": self.compiles,
+            "executions": self.executions,
+            "cache_hits": self.cache_hits,
+            "exec_seconds": self.exec_seconds,
+            "generations": self.generations,
+            "gen_tokens": self.gen_tokens,
+            "merged_groups": self.merged_groups,
+            "merged_requests": self.merged_requests,
+            "group_sizes": list(self.group_sizes),
+            "mean_group_size": (
+                self.merged_requests / self.merged_groups
+                if self.merged_groups else 0.0
+            ),
+            "padded_tokens": self.padded_tokens,
+            "real_tokens": self.real_tokens,
+            "padding_waste": self.padded_tokens / cells if cells else 0.0,
+        }
 
 
 class InferenceEngine:
@@ -68,6 +108,10 @@ class InferenceEngine:
             self._prefill_counted, static_argnames=("max_len",)
         )
         self._decode_jit = jax.jit(self._decode_counted)
+        self._empty_cache_jit = jax.jit(
+            self._empty_cache_counted,
+            static_argnames=("batch_size", "max_len", "kind"),
+        )
 
     def _full_schedule(self) -> SiteSchedule:
         sched = self.model.site_schedule(self.mode)
@@ -91,6 +135,12 @@ class InferenceEngine:
         self.stats.compiles += 1  # fires at trace time only
         return self.model.decode_step(
             params, cache, {"token": token, "pos": pos}, mode=self.mode
+        )
+
+    def _empty_cache_counted(self, params, batch, batch_size, max_len, kind):
+        self.stats.compiles += 1  # fires at trace time only
+        return self.model.empty_cache(
+            params, batch, batch_size, max_len, kind=kind
         )
 
     # ------------------------------------------------------------- execute
@@ -166,54 +216,29 @@ class InferenceEngine:
         """
         batch = dict(batch)
         tokens = jnp.asarray(batch.pop("tokens"))
+        lengths = batch.pop("lengths", None)
         t0 = time.perf_counter()
-        if tokens.shape[1] < 2 and not graph.nodes:
-            # Uninstrumented single-token prompts don't need the
-            # step-aligned prompt split — prefill the whole prompt and
-            # decode from its logits (tracing still requires S >= 2).
-            res = self._generate_short_prompt(tokens, max_new_tokens, batch)
-        else:
-            res = run_generation(
-                self.model,
-                self.params,
-                graph,
-                tokens,
-                max_new_tokens,
-                mode=self.mode,
-                extras=batch,
-                prefill_fn=lambda p, b, ml: self._prefill_jit(p, b, max_len=ml),
-                decode_fn=self._decode_jit,
-            )
+        res = run_generation(
+            self.model,
+            self.params,
+            graph,
+            tokens,
+            max_new_tokens,
+            mode=self.mode,
+            extras=batch,
+            prefill_fn=lambda p, b, ml: self._prefill_jit(p, b, max_len=ml),
+            decode_fn=self._decode_jit,
+            empty_cache_fn=lambda p, b, bs, ml, kind: self._empty_cache_jit(
+                p, b, batch_size=bs, max_len=ml, kind=kind
+            ),
+            lengths=lengths,
+        )
         res.saves = jax.tree.map(lambda x: jax.device_get(x), res.saves)
         self.stats.exec_seconds += time.perf_counter() - t0
         self.stats.executions += 1
         self.stats.generations += 1
         self.stats.gen_tokens += int(res.tokens.shape[0] * res.tokens.shape[1])
         return res
-
-    def _generate_short_prompt(
-        self, tokens: jax.Array, max_new_tokens: int, extras: dict
-    ) -> GenerationResult:
-        """Graph-free decode for prompts the step-split can't handle."""
-        B, S = tokens.shape
-        N = int(max_new_tokens)
-        if N < 1:
-            raise ValueError("max_new_tokens must be >= 1")
-        out, cache = self._prefill_jit(
-            self.params, {"tokens": tokens, **extras}, max_len=S + N - 1
-        )
-        logits = out["logits"][:, -1:]
-        token = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        new = [token[:, 0]]
-        for t in range(N - 1):
-            pos = jnp.full((B,), S + t, jnp.int32)
-            out, cache = self._decode_jit(self.params, cache, token, pos)
-            logits = out["logits"]
-            token = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            new.append(token[:, 0])
-        return GenerationResult(
-            tokens=jnp.stack(new, axis=1), logits=logits, saves={}, logs=[]
-        )
 
     def hidden_states(self, tokens: jax.Array, **extras) -> np.ndarray:
         """Petals-style API: run the stack, return FINAL hidden states.

@@ -10,10 +10,19 @@ share every non-batch input dim and dtype and use no ``.grad`` — the merger
 (:mod:`repro.core.batching`) then rewrites getters/setters into row slices
 and ONE forward serves the whole group.
 
+Ragged lengths (padding-aware merging): for the declared ragged inputs
+(``tokens``, ``src_embeds``) requests only need to land in the same LENGTH
+BUCKET — lengths within ``pad_slack`` of each other merge; shorter requests
+are right-padded to the group max and a per-request lengths record drives
+position-aware unpadding of saves (see :mod:`repro.core.batching`) plus
+sentinel-masked model execution, so results are identical to solo runs.
+``pad_slack=0`` degenerates to the old exact-shape match.
+
 Generation requests (``max_new_tokens`` set) merge the same way: groups
 additionally require an equal step count, their graphs merge with the step
-coordinate preserved, and ONE prefill + decode loop serves the whole group
-(per-request rows split back out of the generated tokens and saves).
+coordinate preserved, and ONE prefill + decode loop serves the whole group —
+ragged prompts included (each row's last real token decodes as step 0 at its
+own position; per-request rows split back out of tokens and saves).
 """
 from __future__ import annotations
 
@@ -27,9 +36,14 @@ import numpy as np
 from repro.core.batching import merge_graphs, split_results
 from repro.core.graph import ALL_STEPS, InterventionGraph
 
-__all__ = ["Request", "Ticket", "CoTenantScheduler"]
+__all__ = ["Request", "Ticket", "CoTenantScheduler", "RAGGED_INPUTS"]
 
 _ids = itertools.count()
+
+# Model inputs whose axis 1 may differ across merged requests, and the
+# batch key carrying per-row valid lengths for each.  Other 2D+ inputs
+# (e.g. fixed-size image embeddings) still require an exact match.
+RAGGED_INPUTS = {"tokens": "lengths", "src_embeds": "src_lengths"}
 
 
 @dataclasses.dataclass
@@ -56,7 +70,7 @@ class Ticket:
         return (self.finish_time or time.perf_counter()) - self.submit_time
 
 
-def _merge_key(req: Request) -> tuple | None:
+def _merge_key(req: Request, pad_slack: int = 0) -> tuple | None:
     for n in req.graph.nodes:
         if n.op == "grad_get":
             return None  # grads never merge — sequential fallback
@@ -67,7 +81,20 @@ def _merge_key(req: Request) -> tuple | None:
         v = np.asarray(req.batch[k])
         if v.ndim == 0:
             return None
-        items.append((k, v.shape[1:], str(v.dtype)))
+        if k in RAGGED_INPUTS and v.ndim >= 2 and pad_slack > 0:
+            # length-bucketed: lengths within one bucket merge (padding a
+            # request wastes at most pad_slack positions per row)
+            bucket = v.shape[1] // (pad_slack + 1)
+            items.append((k, ("bucket", bucket) + v.shape[2:], str(v.dtype)))
+        else:
+            items.append((k, v.shape[1:], str(v.dtype)))
+    if req.max_new_tokens is not None:
+        t = req.batch.get("tokens")
+        if t is not None and np.asarray(t).shape[1] == 1:
+            # S == 1 decodes from an EMPTY cache (no prefill execution);
+            # merged into a longer-prompt group it would get a zero-length
+            # prefill instead of the solo path's clear error/eager init.
+            return None
     # generation requests only merge with equal step counts
     return (req.max_new_tokens, tuple(items))
 
@@ -79,11 +106,17 @@ class CoTenantScheduler:
         *,
         policy: str = "parallel",
         max_batch_rows: int = 64,
+        pad_slack: int = 16,
     ) -> None:
+        """``pad_slack`` bounds the wasted padding compute per merged row:
+        requests whose ragged-input lengths fall in one bucket of width
+        ``pad_slack + 1`` merge (0 = exact-length match only)."""
         assert policy in ("sequential", "parallel")
+        assert pad_slack >= 0
         self.engine = engine
         self.policy = policy
         self.max_batch_rows = max_batch_rows
+        self.pad_slack = pad_slack
         self.queue: list[tuple[Request, Ticket]] = []
         self.completed: list[Ticket] = []
 
@@ -128,7 +161,7 @@ class CoTenantScheduler:
 
     def _take_group(self) -> list[tuple[Request, Ticket]]:
         head_req, _ = self.queue[0]
-        key = _merge_key(head_req)
+        key = _merge_key(head_req, self.pad_slack)
         if key is None:
             return [self.queue.pop(0)]
         group = []
@@ -137,13 +170,75 @@ class CoTenantScheduler:
         for item in self.queue:
             req, _t = item
             b = int(np.asarray(next(iter(req.batch.values()))).shape[0])
-            if _merge_key(req) == key and rows + b <= self.max_batch_rows:
+            if (_merge_key(req, self.pad_slack) == key
+                    and rows + b <= self.max_batch_rows):
                 group.append(item)
                 rows += b
             else:
                 remaining.append(item)
         self.queue = remaining
         return group
+
+    def _merge_batch(
+        self, reqs: list[Request], sizes: list[int]
+    ) -> tuple[dict, list[dict[str, int]] | None, int, int]:
+        """Right-pad ragged inputs to the group max and concatenate rows.
+
+        Returns ``(batch, tap_lengths, real_cells, padded_cells)`` where
+        ``tap_lengths`` is the per-request record driving save unpadding
+        (None when the group is shape-uniform).  Per-row valid-length arrays
+        (``lengths`` / ``src_lengths``) are synthesized for the model unless
+        the requests already carry them.
+        """
+        ragged_keys = [
+            k for k in reqs[0].batch
+            if k in RAGGED_INPUTS and np.asarray(reqs[0].batch[k]).ndim >= 2
+        ]
+        maxes = {
+            k: max(int(np.asarray(r.batch[k]).shape[1]) for r in reqs)
+            for k in ragged_keys
+        }
+        ragged = any(
+            int(np.asarray(r.batch[k]).shape[1]) != maxes[k]
+            for r in reqs for k in ragged_keys
+        )
+        batch = {}
+        for k in reqs[0].batch:
+            arrs = [np.asarray(r.batch[k]) for r in reqs]
+            if k in maxes:
+                arrs = [
+                    np.pad(a, ((0, 0), (0, maxes[k] - a.shape[1]))
+                           + ((0, 0),) * (a.ndim - 2))
+                    for a in arrs
+                ]
+            batch[k] = np.concatenate(arrs)
+        real = padded = 0
+        for r, rows in zip(reqs, sizes):
+            for k in ragged_keys:
+                L = int(np.asarray(r.batch[k]).shape[1])
+                real += rows * L
+                padded += rows * (maxes[k] - L)
+        tap_lengths = None
+        if ragged:
+            is_gen = reqs[0].max_new_tokens is not None
+            tap_lengths = []
+            for r in reqs:
+                rec = {}
+                for k in ragged_keys:
+                    L = int(np.asarray(r.batch[k]).shape[1])
+                    # generation prefill taps see the prompt MINUS the
+                    # step-0 token, so prefill saves unpad to L - 1
+                    rec[k] = L - 1 if (is_gen and k == "tokens") else L
+                tap_lengths.append(rec)
+            for k in ragged_keys:
+                lk = RAGGED_INPUTS[k]
+                if lk not in batch:
+                    batch[lk] = np.concatenate([
+                        np.full(rows, np.asarray(r.batch[k]).shape[1],
+                                np.int32)
+                        for r, rows in zip(reqs, sizes)
+                    ])
+        return batch, tap_lengths, real, padded
 
     def _run_group(self, group: list[tuple[Request, Ticket]]) -> list[Ticket]:
         if len(group) == 1:
@@ -158,11 +253,15 @@ class CoTenantScheduler:
                 int(np.asarray(next(iter(r.batch.values()))).shape[0])
                 for r in reqs
             ]
-            merged = merge_graphs([r.graph for r in reqs], sizes)
-            batch = {
-                k: np.concatenate([np.asarray(r.batch[k]) for r in reqs])
-                for k in reqs[0].batch
-            }
+            batch, tap_lengths, real, padded = self._merge_batch(reqs, sizes)
+            merged = merge_graphs(
+                [r.graph for r in reqs], sizes,
+                lengths=tap_lengths,
+                site_length_key=getattr(
+                    self.engine.model, "site_length_key", None
+                ),
+            )
+            self.engine.stats.record_group(len(group), padded, real)
             n_new = reqs[0].max_new_tokens
             if n_new is not None:
                 res = self.engine.generate_interleaved(

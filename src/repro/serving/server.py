@@ -15,7 +15,16 @@ The wire protocol is a dict (JSON-encodable via repro.core.serialize):
   {"kind": "trace",   "model": str, "graph": {...}, "batch": {...}}
   {"kind": "session", "model": str, "traces": [{graph, batch}, ...]}
   {"kind": "generate","model": str, "batch": {...}, "max_new_tokens": int}
+  {"kind": "stats",   "model": str}
 Reply: {"ok": bool, "results": ... | "error": str}
+
+Ragged lengths cross the wire as ordinary batch arrays: a right-padded
+``batch`` may carry ``lengths`` (B,) — per-row valid token counts — and,
+for encoder-decoder models, ``src_lengths`` (B,).  The scheduler also pads
+and synthesizes these itself when bucket-compatible requests of different
+lengths merge (see repro.serving.scheduler), so clients never need to pad.
+``stats`` returns the engine's EngineStats snapshot (compiles, generations,
+merged-group sizes, padding waste) for capacity planning.
 """
 from __future__ import annotations
 
@@ -52,12 +61,14 @@ class NDIFServer:
         mode: str = "unrolled",
         policy: str = "sequential",
         max_batch_rows: int = 64,
+        pad_slack: int = 16,
     ) -> None:
         """Preload a model (the expensive step users never pay for)."""
         engine = InferenceEngine(model, params, mode=mode, name=name)
         self.engines[name] = engine
         self.schedulers[name] = CoTenantScheduler(
-            engine, policy=policy, max_batch_rows=max_batch_rows
+            engine, policy=policy, max_batch_rows=max_batch_rows,
+            pad_slack=pad_slack,
         )
 
     def hosted(self) -> list[str]:
@@ -165,6 +176,8 @@ class NDIFServer:
             if ticket.error:
                 return {"ok": False, "error": ticket.error}
             return {"ok": True, "results": ticket.result}
+        if kind == "stats":
+            return {"ok": True, "results": engine.stats.snapshot()}
         if kind == "hidden_states":
             batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
             tokens = batch.pop("tokens")

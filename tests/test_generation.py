@@ -320,8 +320,8 @@ def test_engine_generate_zero_recompiles(gpt):
 
 
 def test_engine_generate_single_token_prompt(gpt):
-    """Plain (graph-free) generation still serves S == 1 prompts; only
-    generation TRACING requires S >= 2."""
+    """S == 1 prompts decode from a directly-initialized empty cache (the
+    whole prompt is decoded as step 0); only prefill() taps need S >= 2."""
     cfg, model, params, toks = gpt
     engine = InferenceEngine(model, params)
     gen, logits = engine.generate(toks[:, :1], max_new_tokens=3)

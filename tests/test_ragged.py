@@ -1,0 +1,478 @@
+"""Padding-aware parallel co-tenancy: ragged-length requests merged into one
+forward / one decode loop.
+
+Layers under test:
+  * model level — a right-padded row with ``lengths`` masking is BIT-exact
+    vs the same row run solo (same batch size, so no GEMM-tiling noise);
+  * merger level — position-aware unpadding: saves come back at each
+    request's true length, setters confined to real rows AND positions;
+  * scheduler level — length-bucketed grouping (``pad_slack``), padding
+    stats, ragged generation sharing one decode loop;
+  * serving level — ``lengths`` on the wire, the ``stats`` endpoint.
+
+Merged-vs-solo comparisons use the same 1e-5 tolerance as the pre-existing
+exact-shape merging tests: executing B rows in one batch instead of two
+reorders GEMM reductions at the ~1e-6 level even WITHOUT padding (verified
+by test_same_shape_merge_noise_baseline); padding adds nothing on top.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batching import merge_graphs, split_results
+from repro.core.generation import run_generation
+from repro.core.graph import GraphValidationError, InterventionGraph, Ref
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving import LoopbackTransport, NDIFClient, NDIFServer
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import CoTenantScheduler, Request, _merge_key
+
+FAMILIES = {
+    "paper-gpt-small": "transformer",
+    "mamba2-1.3b": "ssm",
+    "zamba2-2.7b": "hybrid",
+    "seamless-m4t-large-v2": "encdec",
+}
+
+
+@pytest.fixture(scope="module", params=sorted(FAMILIES))
+def family(request):
+    arch = request.param
+    cfg = R.get_config(arch, reduced=True)
+    model = R.build_model(arch, cfg)
+    params = model.init(jax.random.key(0))
+    return arch, cfg, model, params
+
+
+def _batch(cfg, rows, seq, seed, src=None):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": rng.integers(0, cfg.vocab_size, (rows, seq)).astype(np.int32)}
+    if cfg.arch_type == "audio":
+        T = src or cfg.n_source_frames
+        batch["src_embeds"] = rng.standard_normal(
+            (rows, T, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+def _probe_site(cfg):
+    return "decoder.output" if cfg.arch_type == "audio" else "layers.output"
+
+
+def _probe_req(cfg, layer, rows, seq, seed, scale=None, site=None):
+    """Save activations (+ optionally scale-set them) at `site`, save logits."""
+    site = site or _probe_site(cfg)
+    g = InterventionGraph()
+    t = g.add("tap_get", site=site, layer=layer)
+    if scale is not None:
+        v = g.add("mul", Ref(t.id), np.float32(scale))
+        g.add("tap_set", Ref(v.id), site=site, layer=layer)
+    g.mark_saved("acts", g.add("save", Ref(t.id)))
+    o = g.add("tap_get", site="logits")
+    g.mark_saved("out", g.add("save", Ref(o.id)))
+    return Request(graph=g, batch=_batch(cfg, rows, seq, seed))
+
+
+# ------------------------------------------------------------- model level
+def test_padded_row_bit_exact_vs_solo(family):
+    """Right padding + lengths masking is inert: real rows' logits are
+    BIT-identical to an unpadded forward (encdec: 1e-5, its non-causal
+    encoder softmax reorders one reduction over masked keys)."""
+    arch, cfg, model, params = family
+    rng = np.random.default_rng(0)
+    B, S, pad = 2, 10, 5
+    batch = _batch(cfg, B, S + pad, 0)
+    batch["lengths"] = np.array([S + pad, S], np.int32)
+    if cfg.arch_type == "audio":
+        batch["src_lengths"] = np.array(
+            [cfg.n_source_frames, cfg.n_source_frames - 6], np.int32)
+        batch["src_embeds"][1, cfg.n_source_frames - 6:] = 7.7  # poison pad
+    batch["tokens"][1, S:] = 3  # poison the padding — it must not matter
+    out = model.forward(params, batch, mode="unrolled")
+
+    solo_batch = {"tokens": batch["tokens"][1:2, :S]}
+    if cfg.arch_type == "audio":
+        solo_batch["src_embeds"] = batch["src_embeds"][1:2, :cfg.n_source_frames - 6]
+    solo = model.forward(params, solo_batch, mode="unrolled")
+    got = np.asarray(out["logits"])[1, :S]
+    want = np.asarray(solo["logits"])[0]
+    if FAMILIES[arch] == "encdec":
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(got, want)
+
+
+def test_same_shape_merge_noise_baseline():
+    """The pre-existing exact-shape merger is NOT bit-exact vs solo (GEMM
+    tiling differs with batch size) — documents why merged-vs-solo
+    comparisons below use 1e-5, while padded-vs-solo at fixed batch size
+    (above) is held to exact."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params)
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=0)
+    reqs = [_probe_req(cfg, 0, 1, 8, s) for s in range(2)]
+    tickets = [sched.submit(r) for r in reqs]
+    sched.drain()
+    for r, t in zip(reqs, tickets):
+        solo, _ = InferenceEngine(model, params).execute(r.graph, r.batch)
+        np.testing.assert_allclose(
+            np.asarray(t.result["out"]), np.asarray(solo["out"]),
+            rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------ merged-save parity
+def test_ragged_merge_saves_match_solo(family):
+    """A group of different-length requests runs as ONE forward; every
+    unpadded save matches that request's solo run."""
+    arch, cfg, model, params = family
+    engine = InferenceEngine(model, params)
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=16)
+    lens = [6, 11, 9]
+    reqs = [_probe_req(cfg, s % cfg.n_layers, 1 + s % 2, L, seed=s)
+            for s, L in enumerate(lens)]
+    tickets = [sched.submit(r) for r in reqs]
+    sched.drain()
+    assert engine.stats.executions == 1, "ragged group must merge"
+    assert engine.stats.merged_groups == 1
+    assert engine.stats.padded_tokens > 0
+    for r, t in zip(reqs, tickets):
+        assert t.error is None, t.error
+        solo, _ = InferenceEngine(model, params).execute(r.graph, r.batch)
+        S = r.batch["tokens"].shape[1]
+        assert t.result["acts"].shape[1] == S, "save must be unpadded"
+        for k in ("acts", "out"):
+            np.testing.assert_allclose(
+                np.asarray(t.result[k]), np.asarray(solo[k]),
+                rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_setter_confined_to_real_positions():
+    """A SHORT request's setter must not touch other requests' rows nor its
+    own padded positions; a LONG reader sees its rows pristine."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params)
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=16)
+    writer = _probe_req(cfg, 1, 1, 5, seed=0, scale=100.0)
+    reader = _probe_req(cfg, 1, 2, 12, seed=1)
+    t_w = sched.submit(writer)
+    t_r = sched.submit(reader)
+    sched.drain()
+    assert engine.stats.executions == 1
+    solo_w, _ = InferenceEngine(model, params).execute(writer.graph, writer.batch)
+    solo_r, _ = InferenceEngine(model, params).execute(reader.graph, reader.batch)
+    # reader's rows (merged at FULL length alongside a padded writer) pristine
+    np.testing.assert_allclose(np.asarray(t_r.result["acts"]),
+                               np.asarray(solo_r["acts"]), rtol=1e-5, atol=1e-5)
+    # writer's own downstream logits match its solo intervened run
+    np.testing.assert_allclose(np.asarray(t_w.result["out"]),
+                               np.asarray(solo_w["out"]), rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_user_ops_see_solo_shapes():
+    """Positional indexing inside a user graph (x[:, -1]) must grab the
+    request's REAL last token, not padding."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+
+    def last_tok_req(seq, seed):
+        g = InterventionGraph()
+        t = g.add("tap_get", site="logits")
+        last = g.add("getitem", Ref(t.id), (slice(None), -1))
+        g.mark_saved("last", g.add("save", Ref(last.id)))
+        return Request(graph=g, batch=_batch(cfg, 1, seq, seed))
+
+    engine = InferenceEngine(model, params)
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=16)
+    reqs = [last_tok_req(5, 0), last_tok_req(9, 1)]
+    tickets = [sched.submit(r) for r in reqs]
+    sched.drain()
+    assert engine.stats.executions == 1
+    for r, t in zip(reqs, tickets):
+        solo, _ = InferenceEngine(model, params).execute(r.graph, r.batch)
+        np.testing.assert_allclose(np.asarray(t.result["last"]),
+                                   np.asarray(solo["last"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ bucket policy
+def test_pad_slack_zero_degenerates_to_exact_match():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params)
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=0)
+    for s, L in enumerate([6, 7, 6]):
+        sched.submit(_probe_req(cfg, 0, 1, L, seed=s))
+    done = sched.drain()
+    assert engine.stats.executions == 2  # {6, 6} merge, 7 runs alone
+    assert all(t.error is None for t in done)
+
+
+def test_pad_slack_bounds_bucket_width():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    slack = 4
+    k0 = _merge_key(_probe_req(cfg, 0, 1, 10, 0), slack)
+    assert k0 == _merge_key(_probe_req(cfg, 0, 1, 14, 1), slack)  # same bucket
+    assert k0 != _merge_key(_probe_req(cfg, 0, 1, 15, 2), slack)  # next bucket
+    # slack=0 keeps the legacy exact-shape key
+    assert (_merge_key(_probe_req(cfg, 0, 1, 10, 0), 0)
+            != _merge_key(_probe_req(cfg, 0, 1, 11, 0), 0))
+
+
+def test_grad_requests_still_run_solo():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    g = InterventionGraph()
+    g.add("grad_get", site="logits")
+    req = Request(graph=g, batch=_batch(cfg, 1, 6, 0))
+    assert _merge_key(req, 16) is None
+
+
+# ------------------------------------------------------- ragged generation
+def test_ragged_generation_matches_solo(family):
+    """Different prompt lengths share ONE prefill + decode loop; each row's
+    generated tokens equal its solo run (greedy ids are exact)."""
+    arch, cfg, model, params = family
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=16)
+    lens = [7, 4, 6]
+    reqs = [Request(graph=InterventionGraph(), batch=_batch(cfg, 1, L, seed=s),
+                    max_new_tokens=3)
+            for s, L in enumerate(lens)]
+    tickets = [sched.submit(r) for r in reqs]
+    sched.drain()
+    assert engine.stats.generations == 1, "ragged gen requests must merge"
+    for r, t in zip(reqs, tickets):
+        assert t.error is None, t.error
+        solo = InferenceEngine(model, params, mode="unrolled")
+        res = solo.generate_interleaved(InterventionGraph(), dict(r.batch), 3)
+        np.testing.assert_array_equal(t.result["tokens"], np.asarray(res.tokens))
+
+
+def test_ragged_generation_with_step_graph_saves():
+    """Per-step saves ride the ragged decode loop; prefill saves unpad."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+
+    def gen_req(seq, seed):
+        g = InterventionGraph()
+        t = g.add("tap_get", site="logits", step=0)
+        g.mark_saved("lg0", g.add("save", Ref(t.id)))
+        from repro.core.graph import PREFILL_STEP
+        p = g.add("tap_get", site="embed", step=PREFILL_STEP)
+        g.mark_saved("emb", g.add("save", Ref(p.id)))
+        return Request(graph=g, batch=_batch(cfg, 1, seq, seed),
+                       max_new_tokens=2)
+
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=16)
+    reqs = [gen_req(5, 0), gen_req(8, 1)]
+    tickets = [sched.submit(r) for r in reqs]
+    sched.drain()
+    assert engine.stats.generations == 1
+    for r, t in zip(reqs, tickets):
+        assert t.error is None, t.error
+        S = r.batch["tokens"].shape[1]
+        assert t.result["emb"].shape[1] == S - 1, "prefill save unpads to S-1"
+        assert t.result["lg0"].shape == (1, 1, cfg.vocab_size)
+        solo = InferenceEngine(model, params, mode="unrolled")
+        res = solo.generate_interleaved(r.graph, dict(r.batch), 2)
+        np.testing.assert_allclose(np.asarray(t.result["emb"]),
+                                   np.asarray(res.saves["emb"]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(t.result["tokens"],
+                                      np.asarray(res.tokens))
+
+
+def test_explicit_per_row_lengths_in_one_request():
+    """A client may submit ONE right-padded batch with per-row lengths —
+    each row decodes from its own last real token."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (2, 8)).astype(np.int32)
+    lengths = np.array([8, 5], np.int32)
+    padded = toks.copy()
+    padded[1, 5:] = 0
+    res = engine.generate_interleaved(
+        InterventionGraph(),
+        {"tokens": padded, "lengths": lengths}, 4)
+    for r, L in enumerate(lengths):
+        solo = InferenceEngine(model, params).generate_interleaved(
+            InterventionGraph(), {"tokens": toks[r:r + 1, :L]}, 4)
+        np.testing.assert_array_equal(np.asarray(res.tokens)[r],
+                                      np.asarray(solo.tokens)[0])
+
+
+# ------------------------------------------------------------------ S == 1
+def test_single_token_prompt_generation_tracing(family):
+    """lm.generate now accepts S == 1 (direct cache init, the whole prompt
+    decoded as step 0) for every family."""
+    arch, cfg, model, params = family
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 1)).astype(np.int32))
+    extras = {}
+    if cfg.arch_type == "audio":
+        extras["src_embeds"] = jnp.asarray(rng.standard_normal(
+            (2, cfg.n_source_frames, cfg.d_model)).astype(np.float32))
+    lm = traced_lm(model, params)
+    with lm.generate(toks, max_new_tokens=3, **extras) as tr:
+        for _ in tr.steps():
+            lm.logits.save("lg")
+    assert tr.output_tokens.shape == (2, 3)
+    assert np.asarray(tr.result("lg")).shape == (2, 3, cfg.vocab_size)
+    # step-0 token == argmax of the single-token forward
+    full = model.forward(params, {"tokens": toks, **extras},
+                         mode="unrolled")["logits"]
+    np.testing.assert_array_equal(
+        tr.output_tokens[:, 0], np.argmax(np.asarray(full)[:, -1], -1))
+
+
+def test_single_token_prompt_rejects_prefill_taps():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    lm = traced_lm(model, params)
+    toks = jnp.ones((1, 1), jnp.int32)
+    with pytest.raises(GraphValidationError, match="prefill"):
+        with lm.generate(toks, max_new_tokens=2) as tr:
+            with tr.prefill():
+                lm.embed.save("emb")
+
+
+# ------------------------------------------- scan-mode prefill (hybrid/encdec)
+def test_scan_mode_prefill_taps_forced_unrolled():
+    """Hybrid/encdec prefill runs a Python layer loop; a generation trace in
+    scan mode tapping prefill must still schedule correctly (the prefill
+    slice is forced onto the unrolled schedule)."""
+    for arch in ("zamba2-2.7b", "seamless-m4t-large-v2"):
+        cfg = R.get_config(arch, reduced=True)
+        model = R.build_model(arch, cfg)
+        assert model.scan_prefill is False
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 6)).astype(np.int32))
+        extras = {}
+        if cfg.arch_type == "audio":
+            extras["src_embeds"] = jnp.asarray(rng.standard_normal(
+                (1, cfg.n_source_frames, cfg.d_model)).astype(np.float32))
+        results = {}
+        for mode in ("unrolled", "scan"):
+            lm = traced_lm(model, params, mode=mode)
+            with lm.generate(toks, max_new_tokens=2, **extras) as tr:
+                with tr.prefill():
+                    if cfg.arch_type == "audio":
+                        lm.decoder[1].output.save("pre")
+                    else:
+                        lm.layers[1].output.save("pre")
+                for _ in tr.steps():
+                    lm.logits.save("lg")
+            results[mode] = tr
+        np.testing.assert_array_equal(results["scan"].output_tokens,
+                                      results["unrolled"].output_tokens)
+        np.testing.assert_allclose(
+            np.asarray(results["scan"].result("pre")),
+            np.asarray(results["unrolled"].result("pre")),
+            rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------- serving wire
+def test_server_stats_endpoint_and_ragged_wire():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host(cfg.name, model, params, policy="parallel", pad_slack=16)
+    client = NDIFClient(LoopbackTransport(server.handle), cfg.name)
+
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (2, 8)).astype(np.int32)
+    lengths = np.array([8, 5], np.int32)
+    res = client.generate(toks, max_new_tokens=3, lengths=lengths)
+    assert res["tokens"].shape == (2, 3)
+    solo = client.generate(toks[1:2, :5], max_new_tokens=3)
+    np.testing.assert_array_equal(res["tokens"][1], solo["tokens"][0])
+
+    stats = client.stats()
+    assert stats["generations"] == 2
+    assert stats["gen_tokens"] == 9
+    assert "padding_waste" in stats and "group_sizes" in stats
+    assert stats["compiles"] > 0
+
+
+def test_pallas_impl_refuses_ragged_masking():
+    """The flash kernel ignores PAD sentinels (it rebuilds iota positions)
+    — ragged masking must fail loudly under it, not leak padding."""
+    from repro.models import common as C
+
+    C.set_attention_impl("pallas")
+    try:
+        with pytest.raises(NotImplementedError, match="pallas"):
+            C.valid_positions(jnp.array([3, 5]), 2, 8)
+    finally:
+        C.set_attention_impl("auto")
+    assert C.valid_positions(jnp.array([3, 5]), 2, 8).shape == (2, 8)
+
+
+def test_single_token_generation_request_runs_solo():
+    """An S == 1 generation request must not merge into a longer-prompt
+    group (it has no prefill execution; merged it would get a zero-length
+    prefill slice instead of the solo path's behavior)."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    req1 = Request(graph=InterventionGraph(), batch=_batch(cfg, 1, 1, 0),
+                   max_new_tokens=2)
+    assert _merge_key(req1, 16) is None
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params)
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=16)
+    t1 = sched.submit(Request(graph=InterventionGraph(),
+                              batch=_batch(cfg, 1, 1, 0), max_new_tokens=2))
+    t2 = sched.submit(Request(graph=InterventionGraph(),
+                              batch=_batch(cfg, 1, 6, 1), max_new_tokens=2))
+    sched.drain()
+    assert t1.error is None and t2.error is None
+    assert engine.stats.generations == 2  # ran separately
+    assert t1.result["tokens"].shape == (1, 2)
+
+
+def test_ragged_window_cache_prefill_refuses():
+    """A uniform window crop would evict a short row's still-in-window
+    keys — prefill must refuse rather than decode from a corrupt cache."""
+    cfg = R.get_config("paper-gpt-small", reduced=True, sliding_window=8)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (2, 12)).astype(np.int32)
+    with pytest.raises(NotImplementedError, match="sliding-window"):
+        model.prefill(params, {"tokens": toks,
+                               "lengths": np.array([12, 5], np.int32)},
+                      mode="unrolled", kind="window", max_len=12)
+
+
+def test_merge_graphs_lengths_record_roundtrip():
+    """Unit-level: merge_graphs with a lengths record emits unpadding
+    slices only for the short request and records lengths on the result."""
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.output", layer=0)
+    g.mark_saved("acts", g.add("save", Ref(t.id)))
+    merged = merge_graphs(
+        [g, g], [1, 1],
+        lengths=[{"tokens": 4}, {"tokens": 7}],
+        site_length_key=lambda s: "tokens",
+    )
+    assert merged.lengths == [{"tokens": 4}, {"tokens": 7}]
+    slices = [n for n in merged.graph.nodes if n.op == "dynamic_slice_in_dim"]
+    # r0 (short): row slice + length slice; r1 (max): row slice only
+    assert len(slices) == 3
+    assert sorted(n.kwargs["axis"] for n in slices) == [0, 0, 1]
+    out = split_results({"r0/acts": 1, "r1/acts": 2}, merged)
+    assert out == [{"acts": 1}, {"acts": 2}]
