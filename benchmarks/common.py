@@ -65,6 +65,20 @@ class Row:
     name: str
     us_per_call: float
     derived: str
+    # Optional machine-readable payload (per-benchmark timing distributions,
+    # occupancy/waste stats); run.py folds it into BENCH_<name>.json so the
+    # perf trajectory is trackable across PRs.  Not part of the CSV line.
+    extra: dict | None = None
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+    def to_json(self) -> dict:
+        out = {
+            "name": self.name,
+            "us_per_call": round(self.us_per_call, 3),
+            "derived": self.derived,
+        }
+        if self.extra:
+            out["extra"] = self.extra
+        return out

@@ -72,6 +72,14 @@ def rows() -> list[Row]:
             mean_s * 1e6 / n_users,  # us per request served
             f"executions={execs};groups={snap['group_sizes'][-8:]};"
             f"padding_waste={snap['padding_waste']:.3f}",
+            extra={
+                "executions_per_burst": execs,
+                "group_sizes": snap["group_sizes"][-8:],
+                "padding_waste": round(snap["padding_waste"], 4),
+                "mean_group_size": round(snap["mean_group_size"], 3),
+                "cap_splits_rows": snap["cap_splits_rows"],
+                "cap_splits_cells": snap["cap_splits_cells"],
+            },
         ))
     return out
 

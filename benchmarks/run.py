@@ -1,5 +1,5 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: python -m benchmarks.run [--only substr]
+"""Benchmark harness: python -m benchmarks.run [--only substr] [--json-dir D]
 
 One module per paper table/figure:
   table1_framework_overhead  -> paper Table 1
@@ -8,9 +8,18 @@ One module per paper table/figure:
   fig9_concurrent_users      -> paper Fig. 9 (+ beyond-paper parallel mode)
   cotenancy_ragged           -> ragged traffic: sequential vs exact-match vs
                                 padding-aware parallel co-tenancy
+  cotenancy_continuous       -> staggered arrivals: sequential vs burst-drain
+                                vs continuous (slot-table) batching
   kernel_bench               -> kernels/fallbacks microbench
+
+Besides the CSV on stdout, every module's rows are written to
+``<json-dir>/BENCH_<module>.json`` (timings + any machine-readable stats the
+module attaches via ``Row.extra``) so the perf trajectory is tracked across
+PRs; disable with ``--json-dir ''``.
 """
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -20,14 +29,29 @@ MODULES = [
     "benchmarks.fig6c_petals_comparison",
     "benchmarks.fig9_concurrent_users",
     "benchmarks.cotenancy_ragged",
+    "benchmarks.cotenancy_continuous",
     "benchmarks.gen_decode",
     "benchmarks.kernel_bench",
 ]
 
 
+def write_json(json_dir: str, mod_name: str, rows) -> None:
+    short = mod_name.rsplit(".", 1)[-1]
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{short}.json")
+    payload = {"benchmark": short, "rows": [r.to_json() for r in rows]}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json-dir", default="benchmarks/out",
+        help="directory for BENCH_<name>.json files ('' disables)",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = []
@@ -38,8 +62,11 @@ def main() -> int:
             continue
         try:
             mod = importlib.import_module(mod_name)
-            for row in mod.rows():
+            rows = list(mod.rows())
+            for row in rows:
                 print(row.csv(), flush=True)
+            if args.json_dir:
+                write_json(args.json_dir, mod_name, rows)
         except Exception:
             traceback.print_exc()
             failures.append(mod_name)

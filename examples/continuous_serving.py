@@ -1,0 +1,97 @@
+"""Continuous batching walkthrough: two clients with DIFFERENT generation
+lengths share ONE running decode loop.
+
+    PYTHONPATH=src python examples/continuous_serving.py
+
+The engine owns a persistent slot table (here 4 rows of preallocated cache).
+Alice asks for a long completion; one decode step later Bob arrives with a
+short, steered one.  Under burst-drain scheduling Bob would wait for Alice's
+whole decode loop; with ``policy="continuous"`` he is admitted into free
+slot rows at the next step boundary, decodes alongside her, RETIRES first
+(his ``max_new_tokens`` is smaller), and his slots are immediately reusable
+— all through the one compiled decode step (zero retraces).
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.graph import InterventionGraph, Ref
+from repro.models import registry as R
+from repro.serving import NDIFServer, Request
+
+
+def alice_request(cfg, rng):
+    """A long completion with per-step logit saves."""
+    g = InterventionGraph()
+    n_new = 12
+    for s in range(n_new):
+        t = g.add("tap_get", site="logits", step=s)
+        g.mark_saved(f"lg@step{s}", g.add("save", Ref(t.id)))
+    toks = rng.integers(0, cfg.vocab_size, (1, 14)).astype(np.int32)
+    return Request(graph=g, batch={"tokens": toks}, max_new_tokens=n_new)
+
+
+def bob_request(cfg, rng):
+    """A short completion, steered toward token 7 at step 0."""
+    g = InterventionGraph()
+    t = g.add("tap_get", site="logits", step=0)
+    bias = np.zeros((cfg.vocab_size,), np.float32)
+    bias[7] = 1e4
+    c = g.add("constant", bias)
+    v = g.add("add", Ref(t.id), Ref(c.id))
+    g.add("tap_set", Ref(v.id), site="logits", step=0)
+    toks = rng.integers(0, cfg.vocab_size, (1, 9)).astype(np.int32)
+    return Request(graph=g, batch={"tokens": toks}, max_new_tokens=4)
+
+
+def main() -> None:
+    cfg = R.get_config("paper-gpt-small")
+    model = R.build_model("paper-gpt-small", cfg)
+    t0 = time.time()
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host(cfg.name, model, params, policy="continuous",
+                num_slots=4, slot_max_len=48, pad_slack=7)
+    print(f"preloaded {cfg.name} in {time.time() - t0:.2f}s "
+          "(slot table: 4 rows x 48 positions)")
+
+    sched = server.schedulers[cfg.name]
+    engine = server.engines[cfg.name]
+    rng = np.random.default_rng(0)
+
+    # Alice arrives first and starts decoding...
+    t_alice = sched.submit(alice_request(cfg, rng))
+    sched.pump()   # admit Alice + one decode step
+    print(f"step 1: occupancy {sched.loop.occupancy():.0%}, "
+          f"resident={[sr.request_id for sr in sched.loop.resident]}")
+
+    # ...Bob arrives ONE STEP LATER and joins the RUNNING loop.
+    t_bob = sched.submit(bob_request(cfg, rng))
+    done = []
+    step = 1
+    while len(done) < 2:
+        finished = sched.pump()
+        step += 1
+        for t in finished:
+            print(f"step {step}: request {t.request_id} retired, "
+                  f"occupancy {sched.loop.occupancy():.0%} — "
+                  "its slots are free while co-tenants keep decoding")
+        done += finished
+
+    for name, t in (("alice", t_alice), ("bob", t_bob)):
+        assert t.error is None, t.error
+        print(f"  {name}: tokens {t.result['tokens'].tolist()} "
+              f"[{t.response_time * 1e3:.1f} ms]")
+    assert t_bob.result["tokens"][0, 0] == 7, "Bob's steering applied"
+    assert t_bob.finish_time < t_alice.finish_time, "Bob retires first"
+
+    snap = engine.stats.snapshot()
+    print(f"admissions={snap['admissions']} retires={snap['retires']} "
+          f"decode_steps={snap['slot_steps']} "
+          f"slot_occupancy={snap['slot_occupancy']:.2f} "
+          f"compiles={snap['compiles']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -50,10 +50,16 @@ from repro.core.graph import (
     map_refs,
 )
 
-__all__ = ["MergedBatch", "merge_graphs", "split_results"]
+__all__ = ["MergedBatch", "merge_graphs", "split_results", "RAGGED_INPUTS"]
 
 BATCH_AXIS = 0
 SEQ_AXIS = 1
+
+# Model inputs whose axis 1 may differ across merged requests, and the
+# batch key carrying per-row valid lengths for each.  Other 2D+ inputs
+# (e.g. fixed-size image embeddings) still require an exact match.  Shared
+# by the burst scheduler and the continuous-batching admission path.
+RAGGED_INPUTS = {"tokens": "lengths", "src_embeds": "src_lengths"}
 
 
 @dataclasses.dataclass
@@ -63,6 +69,16 @@ class MergedBatch:
     save_prefixes: list[str]
     # per-request tap-site lengths (input key -> true length), None = uniform
     lengths: list[dict[str, int]] | None = None
+    # per-request [start, end) ranges of merged-graph node ids — log entries
+    # (node_id, value) are attributed back to their owning request with this
+    node_ranges: list[tuple[int, int]] | None = None
+
+    def owner_of(self, node_id: int) -> int | None:
+        """Index of the request whose segment produced ``node_id``."""
+        for r, (lo, hi) in enumerate(self.node_ranges or ()):
+            if lo <= node_id < hi:
+                return r
+        return None
 
 
 def merge_graphs(
@@ -71,6 +87,9 @@ def merge_graphs(
     *,
     lengths: list[dict[str, int]] | None = None,
     site_length_key: Callable[[str], str | None] | None = None,
+    starts: list[int] | None = None,
+    normalize_steps: bool = False,
+    length_pad_to: dict[str, int] | None = None,
 ) -> MergedBatch:
     """Merge per-request graphs into one batched graph.
 
@@ -80,11 +99,36 @@ def merge_graphs(
     ``site_length_key(site)`` maps a tap-site name to the input key its
     value's axis 1 follows (``None`` = no sequence axis); defaults to
     ``"tokens"`` for every site.
+
+    ``starts`` (optional) pins each request to an EXPLICIT batch-row offset
+    instead of packing requests contiguously from row 0.  This is the
+    slot-table form used by continuous batching: a request admitted into a
+    running decode loop keeps its slot rows for its whole lifetime, so its
+    getters/setters are rewritten against those rows while other slots (free,
+    or owned by co-tenant requests at other decode steps) stay untouched.
+
+    ``length_pad_to`` overrides the padded width the inputs were actually
+    padded to (per ragged key) when it EXCEEDS the group's own maximum —
+    continuous batching pads every admission to its length-bucket ceiling so
+    repeated admissions share one compiled prefill, which means even the
+    longest request of a group may be padded and need length slicing.
+
+    ``normalize_steps=True`` strips the generation-step coordinate from tap
+    nodes.  Per-execution slice graphs (:func:`repro.core.generation
+    .slice_steps`) already encode WHICH execution they run in, but co-tenant
+    requests inside one slot-table decode step sit at *different* local step
+    indices; normalizing lets their taps share one getter and one
+    read-modify-write setter chain per (site, layer).  ``ALL_STEPS`` setters
+    are allowed in this form — the slicer has already replicated them into
+    concrete executions, so the merged setter is an ordinary row-confined
+    write.
     """
     if len(graphs) != len(batch_sizes):
         raise ValueError("one batch size per graph required")
     if lengths is not None and len(lengths) != len(graphs):
         raise ValueError("one lengths record per graph required")
+    if starts is not None and len(starts) != len(graphs):
+        raise ValueError("one row start per graph required")
     for g in graphs:
         for n in g.nodes:
             if n.op == "grad_get":
@@ -92,7 +136,8 @@ def merge_graphs(
                     "graphs using .grad cannot be batch-merged; "
                     "schedule them sequentially"
                 )
-            if n.op == "tap_set" and n.step == ALL_STEPS:
+            if (n.op == "tap_set" and n.step == ALL_STEPS
+                    and not normalize_steps):
                 # A merged setter is a read-modify-write, and ALL_STEPS
                 # getters are invalid — expand to concrete steps client-side
                 # or run solo.
@@ -107,6 +152,8 @@ def merge_graphs(
         for rec in lengths:
             for k, v in rec.items():
                 group_max[k] = max(group_max.get(k, 0), int(v))
+        for k, v in (length_pad_to or {}).items():
+            group_max[k] = max(group_max.get(k, 0), int(v))
 
     def true_length(r: int, n: Node) -> int | None:
         """The request's tap-value length at this node, when it is SHORTER
@@ -134,29 +181,33 @@ def merge_graphs(
     shared_get: dict[tuple[str | None, int | None, int | None], Node] = {}
     current: dict[tuple[str | None, int | None, int | None], Node] = {}
 
-    starts: list[int] = []
-    acc = 0
-    for b in batch_sizes:
-        starts.append(acc)
-        acc += b
+    if starts is None:
+        starts = []
+        acc = 0
+        for b in batch_sizes:
+            starts.append(acc)
+            acc += b
 
     row_slices = []
     prefixes = []
+    node_ranges = []
     for r, (g, start, size) in enumerate(zip(graphs, starts, batch_sizes)):
         row_slices.append((start, size))
         prefix = f"r{r}"
         prefixes.append(prefix)
+        range_start = len(merged.nodes)
         idmap: dict[int, int] = {}
 
         def remap(obj):
             return map_refs(obj, lambda ref: Ref(idmap[ref.node_id]))
 
         for n in g.nodes:
-            key = (n.site, n.layer, n.step)
+            n_step = None if normalize_steps else n.step
+            key = (n.site, n.layer, n_step)
             if n.op == "tap_get":
                 if key not in shared_get:
                     node = merged.add(
-                        "tap_get", site=n.site, layer=n.layer, step=n.step
+                        "tap_get", site=n.site, layer=n.layer, step=n_step
                     )
                     shared_get[key] = node
                     current.setdefault(key, node)
@@ -177,7 +228,7 @@ def merge_graphs(
             elif n.op == "tap_set":
                 if key not in current:
                     node = merged.add(
-                        "tap_get", site=n.site, layer=n.layer, step=n.step
+                        "tap_get", site=n.site, layer=n.layer, step=n_step
                     )
                     shared_get.setdefault(key, node)
                     current[key] = node
@@ -201,7 +252,7 @@ def merge_graphs(
                     )
                 merged.add(
                     "tap_set", Ref(upd.id),
-                    site=n.site, layer=n.layer, step=n.step,
+                    site=n.site, layer=n.layer, step=n_step,
                 )
                 current[key] = upd
                 idmap[n.id] = upd.id
@@ -222,12 +273,14 @@ def merge_graphs(
 
         for name, nid in g.saves.items():
             merged.saves[f"{prefix}/{name}"] = idmap[nid]
+        node_ranges.append((range_start, len(merged.nodes)))
 
     return MergedBatch(
         graph=merged,
         row_slices=row_slices,
         save_prefixes=prefixes,
         lengths=lengths,
+        node_ranges=node_ranges,
     )
 
 

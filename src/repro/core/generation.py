@@ -41,6 +41,7 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import (
     ALL_STEPS,
@@ -55,7 +56,15 @@ from repro.core.graph import (
 )
 from repro.core.interleave import SiteSchedule, run_interleaved
 
-__all__ = ["StepSlice", "slice_steps", "run_generation", "GenerationResult"]
+__all__ = [
+    "StepSlice",
+    "slice_steps",
+    "run_generation",
+    "GenerationResult",
+    "DecodeLoop",
+    "SlotRequest",
+    "SlotAllocationError",
+]
 
 _ENV = "__env%d"  # import/export name for a cross-step value (by orig id)
 
@@ -230,8 +239,12 @@ def run_generation(
     initialized empty (``model.empty_cache``) and the whole prompt is
     decoded as step 0.  Graphs tapping ``prefill()`` therefore require
     prompts of >= 2 tokens.
+
+    Since the continuous-batching refactor this is a thin wrapper: the
+    request is admitted into a :class:`DecodeLoop` whose slot table is
+    exactly its own rows and stepped to completion — one execution engine
+    serves solo runs, burst-merged groups, and in-flight admission alike.
     """
-    extras = dict(extras or {})
     B, S = tokens.shape
     if S < 1:
         raise ValueError("generation requires a non-empty prompt")
@@ -243,115 +256,694 @@ def run_generation(
         if lengths.shape != (B,):
             raise ValueError(f"lengths must be shape ({B},), got {lengths.shape}")
 
-    slices = slice_steps(graph, N)
-    schedule = _step_order(model.site_schedule(mode))
-    # Families whose prefill runs a Python layer loop (hybrid, enc-dec) fire
-    # taps eagerly per layer — scan-site scheduling would mis-place them, so
-    # the prefill slice is forced onto the unrolled schedule (decode_step
-    # uses lax.scan in scan mode for every family and stays as requested).
-    pre_mode = mode
-    pre_schedule = schedule
-    if mode == "scan" and not getattr(model, "scan_prefill", True):
-        pre_mode = "unrolled"
-        pre_schedule = _step_order(model.site_schedule("unrolled"))
-    max_len = S - 1 + N if S > 1 else N
+    loop = DecodeLoop(
+        model,
+        params,
+        num_slots=B,
+        max_len=S - 1 + N if S > 1 else N,
+        mode=mode,
+        cache_kind=cache_kind,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        empty_cache_fn=empty_cache_fn,
+    )
+    batch = {"tokens": tokens, **(extras or {})}
+    if lengths is not None:
+        batch["lengths"] = lengths
+    sr = loop.admit(graph, batch, N, inputs=inputs)
+    loop.run_to_completion()
+    return sr.result()
 
-    env: dict[int, Any] = {}
-    saves: dict[str, Any] = {}
-    logs: list = []
 
-    def run_slice(sl: StepSlice, model_fn, args: tuple,
-                  sl_schedule: SiteSchedule, sl_mode: str) -> Any:
-        sl.graph.validate(sl_schedule.order)
-        bound = {name: env[nid] for name, nid in sl.imports.items()}
-        if inputs:
-            for n in sl.graph.nodes:
-                if n.op == "input" and not n.args[0].startswith("__env"):
-                    bound[n.args[0]] = inputs[n.args[0]]
-        out, sl_saves, sl_logs = run_interleaved(
-            model_fn, sl.graph, sl_schedule, args, {}, mode=sl_mode,
-            inputs=bound,
+# --------------------------------------------------------------------------
+# Continuous batching: a persistent slot-table decode loop.
+# --------------------------------------------------------------------------
+
+# Position fed for FREE slot rows.  It matches the cache sentinel
+# (repro.models.common.PAD_POS): attention masks every key for such a query,
+# and the decode-step cache write at slot == pos is out of bounds, which JAX
+# scatter semantics DROP — so free rows compute garbage that touches nothing.
+_FREE_POS = np.iinfo(np.int32).max // 2
+
+
+class SlotAllocationError(RuntimeError):
+    """No contiguous run of free slot rows is available RIGHT NOW.
+
+    Distinct from other runtime failures on purpose: the scheduler retries
+    the admission at the next step boundary (rows free as co-tenants
+    retire), whereas any other exception fails the request's ticket."""
+
+
+@dataclasses.dataclass
+class SlotRequest:
+    """One request resident in the slot table of a :class:`DecodeLoop`.
+
+    The request owns batch rows ``[start, start + size)`` of the shared
+    cache for its whole lifetime (admission -> retirement); ``t`` is its own
+    decode-step index, independent of every co-tenant's.
+    """
+
+    request_id: Any
+    start: int
+    size: int
+    max_new_tokens: int
+    slices: dict[int, StepSlice]
+    inputs: dict[str, Any] | None = None
+    env: dict[int, Any] = dataclasses.field(default_factory=dict)
+    saves: dict[str, Any] = dataclasses.field(default_factory=dict)
+    logs: list = dataclasses.field(default_factory=list)
+    # set when the request was EVICTED by a step-time failure of its own
+    # intervention graph; result() is unavailable in that case
+    error: str | None = None
+    t: int = 0
+    base_pos: Any = None  # (size,) int32 — each row's step-0 position
+    new_tokens: list = dataclasses.field(default_factory=list)
+    last_logits: Any = None
+
+    @property
+    def rows(self) -> np.ndarray:
+        return np.arange(self.start, self.start + self.size)
+
+    def done(self) -> bool:
+        return self.t >= self.max_new_tokens
+
+    def result(self) -> GenerationResult:
+        """Per-request result, identical in shape to a solo run's."""
+        if self.error is not None:
+            raise RuntimeError(
+                f"request {self.request_id!r} was evicted: {self.error}"
+            )
+        return GenerationResult(
+            tokens=jnp.stack(self.new_tokens, axis=1),
+            logits=self.last_logits,
+            saves=self.saves,
+            logs=self.logs,
         )
-        for name, nid in sl.exports.items():
-            env[nid] = sl_saves.pop(name)
-        saves.update(sl_saves)
-        logs.extend(sl_logs)
+
+
+class DecodeLoop:
+    """A persistent, fixed-capacity decode loop (continuous batching).
+
+    The loop owns ``num_slots`` rows of preallocated cache (shape
+    ``(num_slots, max_len, ...)`` — never reshaped, so the compiled decode
+    step is traced ONCE) and exposes the vLLM-style lifecycle:
+
+      * :meth:`admit` / :meth:`admit_group` — prefill an arriving request
+        (solo, or bucket-merged with simultaneous arrivals) and scatter its
+        cache rows into free slots (``model.cache_write_rows``);
+      * :meth:`step` — decode ONE token for every resident request, each at
+        its own position and local step; requests whose intervention graph
+        has work at their current step run through the interleaver with
+        their getters/setters rewritten against their slot rows
+        (slot-scoped merging, re-sliced whenever membership changes);
+      * retirement (inside :meth:`step`) — a row that reaches its own
+        ``max_new_tokens`` is cleared (``model.cache_clear_rows``) and its
+        slots are immediately reusable, while co-tenants keep decoding.
+
+    Free rows ride along in every decode step at a sentinel position: the
+    mask machinery of ragged co-tenancy proves their compute inert, and
+    their out-of-bounds cache writes are dropped.  Parity: a request's saves
+    and tokens are bit-exact (causal families) vs admitting it alone,
+    regardless of what is admitted or retired around it.
+    """
+
+    def __init__(
+        self,
+        model: Any,
+        params: Any,
+        num_slots: int,
+        max_len: int,
+        *,
+        mode: str = "unrolled",
+        cache_kind: str = "full",
+        prefill_fn: Callable | None = None,
+        decode_fn: Callable | None = None,
+        empty_cache_fn: Callable | None = None,
+        write_rows_fn: Callable | None = None,
+        clear_rows_fn: Callable | None = None,
+        stats: Any = None,
+    ) -> None:
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.model = model
+        self.params = params
+        self.num_slots = int(num_slots)
+        self.max_len = int(max_len)
+        self.mode = mode
+        self.cache_kind = cache_kind
+        self._prefill_fn = prefill_fn
+        self._decode_fn = decode_fn
+        self._empty_cache_fn = empty_cache_fn
+        self._write_rows_fn = write_rows_fn or model.cache_write_rows
+        self._clear_rows_fn = clear_rows_fn or model.cache_clear_rows
+        self.stats = stats
+        self.schedule = _step_order(model.site_schedule(mode))
+        # The slot table is allocated lazily: a whole-table admission (the
+        # run_generation solo path) adopts the prefilled cache directly and
+        # never pays for a throwaway zero table.
+        self.cache = None
+        self.token = jnp.zeros((num_slots, 1), jnp.int32)
+        self.resident: list[SlotRequest] = []
+        self._free = set(range(num_slots))
+        self.steps_run = 0
+
+    # ------------------------------------------------------------ occupancy
+    @property
+    def active(self) -> list[SlotRequest]:
+        return list(self.resident)
+
+    def free_rows(self) -> int:
+        return len(self._free)
+
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.num_slots
+
+    def find_run(self, size: int, exclude: set | frozenset = frozenset()
+                 ) -> int | None:
+        """First-fit contiguous free run of ``size`` rows (or None).
+
+        ``exclude`` marks rows already promised to earlier members of an
+        in-flight admission group."""
+        run = 0
+        for row in range(self.num_slots):
+            ok = row in self._free and row not in exclude
+            run = run + 1 if ok else 0
+            if run == size:
+                return row - size + 1
+        return None
+
+    def _fixed_extra_widths(self, extras: dict) -> dict[str, int]:
+        """Ragged extras the slot table preallocates at a FIXED width
+        (enc-dec cross K/V at ``cfg.n_source_frames``): partial admissions
+        must pad to it so their cache rows scatter into the table."""
+        out: dict[str, int] = {}
+        nsf = getattr(getattr(self.model, "cfg", None),
+                      "n_source_frames", None)
+        if nsf and "src_embeds" in extras:
+            if int(np.asarray(extras["src_embeds"]).shape[1]) != int(nsf):
+                out["src_embeds"] = int(nsf)
         return out
 
-    # ------------------------------------------------------------- prefill
-    pre_slice = slices.get(PREFILL_STEP)
-    if S == 1:
-        if pre_slice is not None:
-            raise GraphValidationError(
-                "prefill() taps require a prompt of >= 2 tokens; a "
-                "single-token prompt has no prefill execution (the whole "
-                "prompt is decoded as step 0)"
+    def _validate_slices(self, slices: dict[int, StepSlice]) -> None:
+        """Admission-time validation of DECODE-step slices (site scheduling
+        errors surface as per-request admission failures, not step-time
+        crashes that would take co-tenants down with them)."""
+        for step, sl in slices.items():
+            if step != PREFILL_STEP and not sl.is_empty():
+                sl.graph.validate(self.schedule.order)
+
+    # ------------------------------------------------------------ admission
+    def admit(
+        self,
+        graph: InterventionGraph,
+        batch: dict,
+        max_new_tokens: int,
+        *,
+        request_id: Any = None,
+        inputs: dict[str, Any] | None = None,
+        pad_to: int | None = None,
+    ) -> SlotRequest:
+        """Admit one request (solo prefill).  See :meth:`admit_group`."""
+        return self.admit_group(
+            [(graph, batch, max_new_tokens, request_id)],
+            inputs=[inputs] if inputs else None,
+            pad_to=pad_to,
+        )[0]
+
+    def admit_group(
+        self,
+        items: list[tuple],
+        *,
+        inputs: list[dict | None] | None = None,
+        pad_to: int | None = None,
+    ) -> list[SlotRequest]:
+        """Admit simultaneous arrivals through ONE (merged) prefill.
+
+        ``items`` is ``[(graph, batch, max_new_tokens, request_id), ...]``;
+        each item's rows land in their own slot run and retire independently
+        (``max_new_tokens`` may differ).  Ragged prompt widths are
+        right-padded to the group max — or to ``pad_to`` (the scheduler
+        passes the length-bucket ceiling so REPEATED admissions share one
+        compiled prefill shape).  Saves still come back at each request's
+        true solo shape.  A single-token prompt (no prefill execution) must
+        be admitted alone: its cache rows are initialized empty.
+        """
+        from repro.core.batching import RAGGED_INPUTS, merge_graphs, split_results
+
+        if not items:
+            return []
+        parsed = []
+        for graph, batch, n_new, req_id in items:
+            batch = dict(batch)
+            tokens = jnp.asarray(batch.pop("tokens"))
+            lengths = batch.pop("lengths", None)
+            if lengths is not None:
+                lengths = jnp.asarray(lengths, jnp.int32)
+            N = int(n_new)
+            if N < 1:
+                raise ValueError("max_new_tokens must be >= 1")
+            parsed.append((graph, tokens, lengths, batch, N, req_id))
+
+        widths = [t.shape[1] for _, t, *_ in parsed]
+        if 1 in widths and len(items) > 1:
+            raise ValueError(
+                "single-token prompts have no prefill execution and must be "
+                "admitted alone"
             )
-        make_cache = empty_cache_fn or model.empty_cache
-        cache = make_cache(params, extras, B, max_len, cache_kind)
-    else:
-        prompt = {"tokens": tokens[:, :-1], **extras}
-        if lengths is not None:
-            prompt["lengths"] = lengths - 1
-        if pre_slice is None and prefill_fn is not None:
-            out, cache = prefill_fn(params, prompt, max_len)
-        elif pre_slice is None:
-            out, cache = model.prefill(
-                params, prompt, mode=mode, kind=cache_kind, max_len=max_len
-            )
-        else:
-            def pre_fn(params_, batch_):
-                return model.prefill(
-                    params_, batch_, mode=pre_mode, kind=cache_kind,
-                    max_len=max_len,
+
+        # ---- allocate slot runs up front (all-or-nothing) ----------------
+        placed: list[tuple[int, int]] = []
+        taken: set[int] = set()
+        for _, tokens, *_ in parsed:
+            size = tokens.shape[0]
+            start = self.find_run(size, exclude=taken)
+            if start is None:
+                raise SlotAllocationError(
+                    f"no contiguous run of {size} free slot rows "
+                    f"({len(self._free) - len(taken)} free of {self.num_slots})"
                 )
+            placed.append((start, size))
+            taken.update(range(start, start + size))
 
-            out, cache = run_slice(
-                pre_slice, pre_fn, (params, prompt), pre_schedule, pre_mode
+        # ---- single-token prompt: empty cache, whole prompt is step 0 ----
+        if widths[0] == 1:
+            graph, tokens, lengths, extras, N, req_id = parsed[0]
+            if N > self.max_len:
+                raise ValueError(
+                    f"request needs {N} cache slots, table has {self.max_len}"
+                )
+            slices = slice_steps(graph, N)
+            if slices.get(PREFILL_STEP) is not None:
+                raise GraphValidationError(
+                    "prefill() taps require a prompt of >= 2 tokens; a "
+                    "single-token prompt has no prefill execution"
+                )
+            self._validate_slices(slices)
+            B = tokens.shape[0]
+            if B != self.num_slots:
+                # partial admission: fixed-width extras (enc-dec source
+                # frames) must match the preallocated slot-table shape
+                for k, w in self._fixed_extra_widths(extras).items():
+                    a = np.asarray(extras[k])
+                    if w > a.shape[1]:
+                        lk = RAGGED_INPUTS.get(k)
+                        if lk and lk not in extras:
+                            extras[lk] = np.full(a.shape[0], a.shape[1],
+                                                 np.int32)
+                        extras[k] = np.pad(
+                            a, ((0, 0), (0, w - a.shape[1]))
+                            + ((0, 0),) * (a.ndim - 2))
+            make_cache = self._empty_cache_fn or self.model.empty_cache
+            src = make_cache(self.params, extras, B, self.max_len,
+                             self.cache_kind)
+            start, size = placed[0]
+            sr = SlotRequest(
+                request_id=req_id, start=start, size=size,
+                max_new_tokens=N, slices=slices,
+                inputs=(inputs[0] if inputs else None),
+                base_pos=jnp.zeros((B,), jnp.int32),
             )
+            self._install(sr, src, None, tokens)
+            return [sr]
 
-    # -------------------------------------------------------------- decode
-    def plain_decode(params_, cache_, token_, pos_):
-        if decode_fn is not None:
-            return decode_fn(params_, cache_, token_, pos_)
-        return model.decode_step(
-            params_, cache_, {"token": token_, "pos": pos_}, mode=mode
+        # ---- pad prompts to the group max / bucket ceiling ---------------
+        target = max(max(widths), pad_to or 0)
+        tok_arrs, len_arrs, recs = [], [], []
+        for _, tokens, lengths, _, _, _ in parsed:
+            B, S = tokens.shape
+            if lengths is None:
+                lengths = jnp.full((B,), S, jnp.int32)
+            if S < target:
+                tokens = jnp.pad(tokens, ((0, 0), (0, target - S)))
+            tok_arrs.append(tokens)
+            len_arrs.append(lengths)
+            recs.append({"tokens": S - 1})
+        group_tokens = jnp.concatenate(tok_arrs)
+        group_lengths = jnp.concatenate(len_arrs)
+        # the model only needs per-row lengths when some row is actually
+        # shorter than the padded width — a uniform unpadded prompt keeps
+        # the legacy lengths-free prefill (bit-identical, and the path
+        # pallas/window guards expect)
+        needs_lengths = target > min(widths) or any(
+            l is not None for _, _, l, _, _, _ in parsed
         )
+        whole_table = (len(parsed) == 1
+                       and parsed[0][1].shape[0] == self.num_slots)
 
-    if lengths is None:
-        token = tokens[:, -1:]
-        base_pos = jnp.full((B,), S - 1, jnp.int32)
-    else:
-        # each row's LAST REAL token, decoded as step 0 at its own position
-        token = jnp.take_along_axis(tokens, (lengths - 1)[:, None], axis=1)
-        base_pos = lengths - 1
-    new_tokens = []
-    logits = None
-    for t in range(N):
-        pos = base_pos + t
-        sl = slices.get(t)
-        if sl is None or sl.is_empty():
-            out, cache = plain_decode(params, cache, token, pos)
+        # extras must be shape-uniform across the group (the scheduler's
+        # admission key guarantees it); ragged extras (src_embeds) merge by
+        # right-padding with synthesized per-row lengths, like the burst
+        # path.  PARTIAL admissions additionally pad ragged extras to the
+        # slot table's fixed width (enc-dec cross K/V is preallocated at
+        # cfg.n_source_frames) so their cache rows scatter cleanly.
+        extra_recs = [dict(r) for r in recs]
+        fixed_w = {} if whole_table else self._fixed_extra_widths(
+            parsed[0][3]
+        )
+        if len(parsed) == 1 and not fixed_w:
+            extras = dict(parsed[0][3])  # solo: pass through untouched
         else:
-            def step_fn(params_, cache_, token_, pos_):
-                return model.decode_step(
-                    params_, cache_, {"token": token_, "pos": pos_},
-                    mode=mode,
+            extras = {}
+            for k in parsed[0][3]:
+                arrs = [np.asarray(p[3][k]) for p in parsed]
+                if k in RAGGED_INPUTS and arrs[0].ndim >= 2:
+                    kmax = max(max(a.shape[1] for a in arrs),
+                               fixed_w.get(k, 0))
+                    lk = RAGGED_INPUTS[k]
+                    if any(a.shape[1] != kmax for a in arrs):
+                        for rec, a in zip(extra_recs, arrs):
+                            rec[k] = a.shape[1]
+                        if lk not in parsed[0][3]:
+                            extras[lk] = np.concatenate([
+                                np.full(a.shape[0], a.shape[1], np.int32)
+                                for a in arrs
+                            ])
+                    arrs = [
+                        np.pad(a, ((0, 0), (0, kmax - a.shape[1]))
+                               + ((0, 0),) * (a.ndim - 2))
+                        for a in arrs
+                    ]
+                extras[k] = np.concatenate(arrs)
+
+        for _, _, _, _, N, _ in parsed:
+            need = target - 1 + N
+            if need > self.max_len:
+                raise ValueError(
+                    f"request needs {need} cache slots "
+                    f"(padded prompt {target} + {N} new tokens), table has "
+                    f"{self.max_len}"
                 )
 
-            out, cache = run_slice(
-                sl, step_fn, (params, cache, token, pos), schedule, mode
-            )
-        logits = out["logits"]
-        token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        new_tokens.append(token[:, 0])
+        all_slices = [slice_steps(g, N) for g, _, _, _, N, _ in parsed]
+        pre_slices = [sl.get(PREFILL_STEP) for sl in all_slices]
+        # Reject bad DECODE-step graphs at admission (a clean per-request
+        # error) instead of blowing up a later shared decode step with
+        # innocent co-tenants resident; prefill slices are validated below
+        # as part of the merged prefill graph.
+        for sl in all_slices:
+            self._validate_slices(sl)
 
-    return GenerationResult(
-        tokens=jnp.stack(new_tokens, axis=1),
-        logits=logits,
-        saves=saves,
-        logs=logs,
-    )
+        prompt = {"tokens": group_tokens[:, :-1], **extras}
+        if needs_lengths:
+            prompt["lengths"] = group_lengths - 1
+        sizes = [t.shape[0] for t in tok_arrs]
+
+        # Families whose prefill runs a Python layer loop must schedule
+        # instrumented prefill slices unrolled (same rule as run_generation).
+        pre_mode = self.mode
+        pre_schedule = self.schedule
+        if self.mode == "scan" and not getattr(self.model, "scan_prefill",
+                                               True):
+            pre_mode = "unrolled"
+            pre_schedule = _step_order(self.model.site_schedule("unrolled"))
+
+        if not any(sl is not None for sl in pre_slices):
+            if self._prefill_fn is not None:
+                _out, src = self._prefill_fn(self.params, prompt, self.max_len)
+            else:
+                _out, src = self.model.prefill(
+                    self.params, prompt, mode=self.mode, kind=self.cache_kind,
+                    max_len=self.max_len,
+                )
+            merged_saves = None
+            merged = None
+        else:
+            unpad = needs_lengths or any(
+                len(rec) > 1 for rec in extra_recs  # ragged extras padded
+            )
+            merged = merge_graphs(
+                [sl.graph if sl is not None else InterventionGraph()
+                 for sl in pre_slices],
+                sizes,
+                lengths=extra_recs if unpad else None,
+                site_length_key=getattr(self.model, "site_length_key", None),
+                length_pad_to={"tokens": target - 1} if unpad else None,
+            )
+            merged.graph.validate(pre_schedule.order)
+            bound = {}
+            for i, (sl, prefix) in enumerate(
+                zip(pre_slices, merged.save_prefixes)
+            ):
+                user = inputs[i] if inputs else None
+                if sl is None or not user:
+                    continue
+                for n in sl.graph.nodes:
+                    if n.op == "input" and not n.args[0].startswith("__env"):
+                        bound[f"{prefix}/{n.args[0]}"] = user[n.args[0]]
+
+            def pre_fn(params_, batch_):
+                return self.model.prefill(
+                    params_, batch_, mode=pre_mode, kind=self.cache_kind,
+                    max_len=self.max_len,
+                )
+
+            (_out, src), sl_saves, pre_logs = run_interleaved(
+                pre_fn, merged.graph, pre_schedule, (self.params, prompt), {},
+                mode=pre_mode, inputs=bound,
+            )
+            merged_saves = split_results(sl_saves, merged)
+
+        # ---- install each request into its slots -------------------------
+        out_srs = []
+        src_row0 = 0
+        for i, ((graph, tokens, lengths, _, N, req_id), (start, size)) in (
+            enumerate(zip(parsed, placed))
+        ):
+            row_lengths = len_arrs[i]
+            sr = SlotRequest(
+                request_id=req_id, start=start, size=size,
+                max_new_tokens=N, slices=all_slices[i],
+                inputs=(inputs[i] if inputs else None),
+                base_pos=row_lengths - 1,
+            )
+            if merged_saves is not None:
+                sl = pre_slices[i]
+                if sl is not None:
+                    _route_slice_saves(sr, sl, merged_saves[i])
+                    # logs attributed by merged-graph node-id segment so one
+                    # request never sees a co-tenant's logged values
+                    sr.logs.extend(
+                        entry for entry in pre_logs
+                        if merged.owner_of(entry[0]) == i
+                    )
+            src_rows = np.arange(src_row0, src_row0 + size)
+            token0 = jnp.take_along_axis(
+                tok_arrs[i], (row_lengths - 1)[:, None], axis=1
+            )
+            self._install(sr, src, src_rows if len(parsed) > 1 else None,
+                          token0)
+            out_srs.append(sr)
+            src_row0 += size
+        return out_srs
+
+    def _install(self, sr: SlotRequest, src_cache, src_rows, token0) -> None:
+        if sr.size == self.num_slots and src_rows is None:
+            # whole-table admission (e.g. run_generation running solo
+            # through the stepper): adopt the prefilled cache directly
+            # instead of scattering every row onto itself
+            self.cache = src_cache
+        else:
+            if self.cache is None:
+                self.cache = self.model.init_cache(
+                    self.num_slots, self.max_len, kind=self.cache_kind
+                )
+            rows = jnp.asarray(sr.rows)
+            self.cache = self._write_rows_fn(self.cache, rows, src_cache,
+                                             src_rows)
+        self.token = self.token.at[sr.start:sr.start + sr.size].set(token0)
+        self._free.difference_update(int(r) for r in sr.rows)
+        self.resident.append(sr)
+        if self.stats is not None:
+            self.stats.record_admission(sr.size)
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[SlotRequest]:
+        """Decode ONE token for every resident request; returns the requests
+        that retired this step (their slots are free again on return)."""
+        if not self.resident:
+            return []
+        from repro.core.batching import merge_graphs, split_results
+
+        pos_np = np.full((self.num_slots,), _FREE_POS, np.int32)
+        for sr in self.resident:
+            pos_np[sr.start:sr.start + sr.size] = (
+                np.asarray(sr.base_pos) + sr.t
+            )
+        pos = jnp.asarray(pos_np)
+
+        need = [
+            (sr, sr.slices[sr.t]) for sr in self.resident
+            if sr.t in sr.slices and not sr.slices[sr.t].is_empty()
+        ]
+        if not need:
+            if self._decode_fn is not None:
+                out, self.cache = self._decode_fn(
+                    self.params, self.cache, self.token, pos
+                )
+            else:
+                out, self.cache = self.model.decode_step(
+                    self.params, self.cache,
+                    {"token": self.token, "pos": pos}, mode=self.mode,
+                )
+        else:
+            # Slot-scoped merge: each request's slice is rewritten against
+            # its OWN slot rows; step coordinates are normalized so
+            # co-tenants at different local steps share one getter/setter
+            # chain per site.  Membership changes -> a new merged graph.
+            # (Slices differ per local step, so the merge re-runs each
+            # instrumented step; its Python cost is dwarfed by the eager
+            # interleaved model execution it precedes.  Reusing one fused
+            # program for structurally-uniform step graphs is the ROADMAP
+            # "fused decode" item.)
+            merged = merge_graphs(
+                [sl.graph for _, sl in need],
+                [sr.size for sr, _ in need],
+                starts=[sr.start for sr, _ in need],
+                normalize_steps=True,
+            )
+            merged.graph.validate(self.schedule.order)
+            bound = {}
+            for (sr, sl), prefix in zip(need, merged.save_prefixes):
+                for name, nid in sl.imports.items():
+                    bound[f"{prefix}/{name}"] = sr.env[nid]
+                if sr.inputs:
+                    for n in sl.graph.nodes:
+                        if (n.op == "input"
+                                and not n.args[0].startswith("__env")):
+                            bound[f"{prefix}/{n.args[0]}"] = (
+                                sr.inputs[n.args[0]]
+                            )
+
+            def step_fn(params_, cache_, token_, pos_):
+                return self.model.decode_step(
+                    params_, cache_, {"token": token_, "pos": pos_},
+                    mode=self.mode,
+                )
+
+            try:
+                (out, self.cache), sl_saves, sl_logs = run_interleaved(
+                    step_fn, merged.graph, self.schedule,
+                    (self.params, self.cache, self.token, pos), {},
+                    mode=self.mode, inputs=bound,
+                )
+            except Exception as e:
+                # A step-time failure of an intervention graph (admission
+                # validation can't catch e.g. a broadcast error in a user
+                # op) must not wedge the loop: identify the offending
+                # request(s) by trial-running each slice alone (pure calls —
+                # nothing is committed), evict only those, and retry the
+                # step — the cache was not updated, so innocent co-tenants
+                # lose nothing.
+                offenders = self._isolate_offenders(need, pos, e)
+                evicted = []
+                for sr, err in offenders:
+                    sr.error = err
+                    self._retire(sr)
+                    evicted.append(sr)
+                return evicted + self.step()
+            for i, ((sr, sl), saves_r) in enumerate(
+                zip(need, split_results(sl_saves, merged))
+            ):
+                _route_slice_saves(sr, sl, saves_r)
+                # logs attributed by merged-graph node-id segment: a
+                # request never sees a co-tenant's logged values
+                sr.logs.extend(entry for entry in sl_logs
+                               if merged.owner_of(entry[0]) == i)
+
+        logits = out["logits"]
+        self.token = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[
+            :, None
+        ]
+        retired = []
+        for sr in self.resident:
+            lo, hi = sr.start, sr.start + sr.size
+            sr.new_tokens.append(self.token[lo:hi, 0])
+            sr.last_logits = logits[lo:hi]
+            sr.t += 1
+            if sr.done():
+                retired.append(sr)
+        self.steps_run += 1
+        if self.stats is not None:
+            busy = self.num_slots - len(self._free)
+            self.stats.record_slot_step(busy, self.num_slots)
+        for sr in retired:
+            self._retire(sr)
+        return retired
+
+    def _isolate_offenders(self, need, pos, exc) -> list[tuple]:
+        """Which of the instrumented co-tenants made the merged step fail?
+
+        Each candidate's slice is trial-run ALONE against the current cache
+        (run_interleaved is pure — results are discarded, nothing commits).
+        Requests whose solo trial raises are the offenders; if every trial
+        passes (the failure only manifests merged), all of ``need`` is
+        evicted — never silently retried."""
+        from repro.core.batching import merge_graphs
+
+        if len(need) == 1:
+            sr, _ = need[0]
+            return [(sr, f"{type(exc).__name__}: {exc}")]
+
+        def step_fn(params_, cache_, token_, pos_):
+            return self.model.decode_step(
+                params_, cache_, {"token": token_, "pos": pos_},
+                mode=self.mode,
+            )
+
+        offenders = []
+        for sr, sl in need:
+            single = merge_graphs(
+                [sl.graph], [sr.size], starts=[sr.start],
+                normalize_steps=True,
+            )
+            bound = {}
+            prefix = single.save_prefixes[0]
+            for name, nid in sl.imports.items():
+                bound[f"{prefix}/{name}"] = sr.env[nid]
+            if sr.inputs:
+                for n in sl.graph.nodes:
+                    if n.op == "input" and not n.args[0].startswith("__env"):
+                        bound[f"{prefix}/{n.args[0]}"] = sr.inputs[n.args[0]]
+            try:
+                run_interleaved(
+                    step_fn, single.graph, self.schedule,
+                    (self.params, self.cache, self.token,
+                     jnp.asarray(pos)), {},
+                    mode=self.mode, inputs=bound,
+                )
+            except Exception as e2:
+                offenders.append((sr, f"{type(e2).__name__}: {e2}"))
+        if not offenders:
+            offenders = [
+                (sr, f"{type(exc).__name__}: {exc}") for sr, _ in need
+            ]
+        return offenders
+
+    def _retire(self, sr: SlotRequest) -> None:
+        self.cache = self._clear_rows_fn(self.cache, jnp.asarray(sr.rows))
+        self._free.update(int(r) for r in sr.rows)
+        self.resident.remove(sr)
+        if self.stats is not None:
+            # sr.t, not max_new_tokens: an evicted request decoded fewer
+            self.stats.record_retire(sr.size, sr.t)
+
+    def run_to_completion(self) -> list[SlotRequest]:
+        """Step until every resident request has retired."""
+        done: list[SlotRequest] = []
+        while self.resident:
+            done.extend(self.step())
+        return done
+
+
+def _route_slice_saves(
+    sr: SlotRequest, sl: StepSlice, saves_r: dict[str, Any]
+) -> None:
+    """Split a slice's saves into cross-step env exports and user saves."""
+    for name, val in saves_r.items():
+        if name in sl.exports:
+            sr.env[sl.exports[name]] = val
+        else:
+            sr.saves[name] = val
 
 
 def stack_step_saves(

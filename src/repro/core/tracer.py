@@ -292,8 +292,11 @@ class GenerateTracer(Tracer):
         *,
         mode: str | None = None,
         extras: dict | None = None,
+        remote: bool = False,
+        backend: Any | None = None,
     ) -> None:
-        super().__init__(model, (tokens,), dict(extras or {}), mode=mode)
+        super().__init__(model, (tokens,), dict(extras or {}), mode=mode,
+                         remote=remote, backend=backend)
         self.tokens = tokens
         self.max_new_tokens = int(max_new_tokens)
         self._step: int = 0
@@ -375,13 +378,10 @@ class GenerateTracer(Tracer):
         )
 
     def execute(self) -> dict[str, Any]:
-        from repro.core.generation import run_generation, stack_step_saves
+        from repro.core.generation import run_generation
 
         if self.remote:
-            raise NotImplementedError(
-                "remote generation traces are not wired up yet; run "
-                "locally or use the engine's generate path"
-            )
+            return self._execute_remote()
         zoo = self.model.zoo_model
         if zoo is None:
             raise RuntimeError(
@@ -404,10 +404,40 @@ class GenerateTracer(Tracer):
         self.output_tokens = np.asarray(res.tokens)
         self.output_logits = res.logits
         self.logs = res.logs
+        return self._assemble_results(res.saves)
+
+    def _execute_remote(self) -> dict[str, Any]:
+        """Ship the step-annotated graph over the wire (paper §3.3): the
+        server's ``kind="generate"`` path runs the decode loop with the
+        graph interleaved and only saves + generated tokens return."""
+        backend = self.backend or self.model.backend
+        if backend is None:
+            raise RuntimeError(
+                "remote=True requires a backend (NDIF client); pass "
+                "backend= or attach one to the model"
+            )
+        extras = {k: np.asarray(v) for k, v in self.model_kwargs.items()}
+        lengths = extras.pop("lengths", None)
+        wire = backend.generate(
+            np.asarray(self.tokens),
+            self.max_new_tokens,
+            graph=self.graph,
+            lengths=lengths,
+            **extras,
+        )
+        saves = dict(wire)
+        # reserved keys: the generated ids and last-step logits
+        self.output_tokens = np.asarray(saves.pop("tokens"))
+        self.output_logits = saves.pop("logits")
+        return self._assemble_results(saves)
+
+    def _assemble_results(self, saves: dict[str, Any]) -> dict[str, Any]:
+        """Stack per-step wire saves (``name@stepK``) back to user names."""
+        from repro.core.generation import stack_step_saves
+
         results: dict[str, Any] = {}
         for base, by_step in self._step_save_names.items():
-            vals = {s: res.saves[w] for s, w in by_step.items()
-                    if w in res.saves}
+            vals = {s: saves[w] for s, w in by_step.items() if w in saves}
             if not vals:
                 continue
             if len(vals) == 1:
@@ -415,7 +445,7 @@ class GenerateTracer(Tracer):
             else:
                 results[base] = stack_step_saves(vals)
         # saves made outside the tracer API (hand-built graphs)
-        for name, val in res.saves.items():
+        for name, val in saves.items():
             if "@step" not in name:
                 results.setdefault(name, val)
         self._results = results
@@ -512,16 +542,21 @@ class TracedModel:
         max_new_tokens: int = 8,
         *,
         mode: str | None = None,
+        remote: bool = False,
+        backend: Any | None = None,
         **extras: Any,
     ) -> "GenerateTracer":
         """Trace a multi-token greedy decode loop (see GenerateTracer).
 
-        Requires a zoo-model binding (:func:`repro.models.traced.traced_lm`)
-        because generation needs ``prefill``/``decode_step``, not just the
-        wrapped single forward.
+        Locally this requires a zoo-model binding
+        (:func:`repro.models.traced.traced_lm`) because generation needs
+        ``prefill``/``decode_step``.  With ``remote=True`` the step graph
+        ships to the NDIF server instead (``kind="generate"`` + ``graph``)
+        and only saves + generated tokens come back.
         """
         return GenerateTracer(
-            self, tokens, max_new_tokens, mode=mode, extras=extras
+            self, tokens, max_new_tokens, mode=mode, extras=extras,
+            remote=remote, backend=backend,
         )
 
     def session(self, *, remote: bool = False, backend: Any | None = None):

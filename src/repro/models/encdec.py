@@ -355,6 +355,19 @@ class EncDecModel:
             src_lengths, batch_size, Tsrc)
         return cache
 
+    def cache_write_rows(self, table, rows, src, src_rows=None):
+        """Scatter prefilled rows into the slot table (continuous batching).
+        ``cross_pos`` carries batch at axis 0; everything else at axis 1."""
+        from repro.models.transformer import scatter_kv_rows
+
+        return scatter_kv_rows(table, rows, src, src_rows,
+                               axis0_keys=("cross_pos",))
+
+    def cache_clear_rows(self, table, rows):
+        from repro.models.transformer import clear_kv_rows
+
+        return clear_kv_rows(table, rows, axis0_keys=("cross_pos",))
+
     def decode_step(self, params, cache, batch, *, mode: str = "scan"):
         cfg = self.cfg
         token, pos = batch["token"], batch["pos"]

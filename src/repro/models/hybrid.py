@@ -302,6 +302,18 @@ class Zamba2Model:
     def empty_cache(self, params, batch, batch_size, max_len, kind="full"):
         return self.init_cache(batch_size, max_len, kind=kind)
 
+    def cache_write_rows(self, table, rows, src, src_rows=None):
+        """Scatter prefilled rows (ssm state + conv tail + shared-block KV)
+        into the slot table (continuous batching); all entries are (L|G, B, …)."""
+        from repro.models.transformer import scatter_kv_rows
+
+        return scatter_kv_rows(table, rows, src, src_rows)
+
+    def cache_clear_rows(self, table, rows):
+        from repro.models.transformer import clear_kv_rows
+
+        return clear_kv_rows(table, rows)
+
     def decode_step(self, params, cache, batch, *, mode: str = "scan"):
         cfg = self.cfg
         token, pos = batch["token"], batch["pos"]

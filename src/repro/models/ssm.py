@@ -127,6 +127,20 @@ class Mamba2Model:
     def empty_cache(self, params, batch, batch_size, max_len, kind="full"):
         return self.init_cache(batch_size, max_len, kind=kind)
 
+    def cache_write_rows(self, table, rows, src, src_rows=None):
+        """Scatter a prefilled request's recurrent state rows into the
+        slot-table cache (continuous batching).  Both leaves carry batch at
+        axis 1 (``(L, B, ...)``)."""
+        rows = jnp.asarray(rows)
+        take = (lambda a: a) if src_rows is None else (
+            lambda a: jnp.take(a, jnp.asarray(src_rows), axis=1))
+        return {k: table[k].at[:, rows].set(take(src[k])) for k in table}
+
+    def cache_clear_rows(self, table, rows):
+        """Zero retired slot rows (a fresh Mamba2 state IS the zero state)."""
+        rows = jnp.asarray(rows)
+        return {k: v.at[:, rows].set(0) for k, v in table.items()}
+
     def prefill(self, params, batch, *, mode: str = "scan", kind="full",
                 max_len=None):
         """Forward + per-layer final states (O(1)-size cache).

@@ -697,6 +697,16 @@ class TransformerModel:
                    else jnp.asarray(lengths, jnp.int32))
         return KVCache(cache.kind, data, kept, written)
 
+    def cache_write_rows(self, table: KVCache, rows, src: KVCache,
+                         src_rows=None) -> KVCache:
+        """Scatter a freshly prefilled request's cache rows into the
+        slot-table cache (continuous batching; see ``scatter_kv_rows``)."""
+        return scatter_kv_rows(table, rows, src, src_rows)
+
+    def cache_clear_rows(self, table: KVCache, rows) -> KVCache:
+        """Reset retired slot rows so they can be reused with no recompile."""
+        return clear_kv_rows(table, rows)
+
     def empty_cache(
         self, params: dict, batch: dict, batch_size: int, max_len: int,
         kind: str = "full",
@@ -744,3 +754,63 @@ def _write_rows(arr: jax.Array, slot: jax.Array, new: jax.Array) -> jax.Array:
     B = arr.shape[0]
     idx = (jnp.arange(B), slot)
     return arr.at[idx].set(new[:, 0] if new.ndim == arr.ndim else new)
+
+
+# --------------------------------------------------- slot-table row helpers
+# Continuous batching keeps ONE fixed-shape cache of `num_slots` batch rows
+# alive across requests: a newly prefilled request's rows are scattered in
+# (`cache_write_rows`), and a finished request's rows are reset
+# (`cache_clear_rows`) so the slot can be reused without any shape change —
+# and therefore without recompiling the decode step.
+
+_SENTINEL_POS = jnp.iinfo(jnp.int32).max // 2
+
+
+def _take_rows(a, rows, axis):
+    return a if rows is None else jnp.take(a, jnp.asarray(rows), axis=axis)
+
+
+def scatter_kv_rows(
+    table: KVCache, rows, src: KVCache, src_rows=None,
+    axis0_keys: tuple[str, ...] = (),
+) -> KVCache:
+    """Write ``src``'s batch rows (``src_rows``, default all) into ``table``
+    at batch rows ``rows``.  Per-layer data leaves carry batch at axis 1;
+    ``axis0_keys`` names data entries whose batch axis is 0 (e.g. the
+    enc-dec ``cross_pos``).  Shapes outside the batch axis must match —
+    the engine prefills admissions at the slot table's ``max_len``."""
+    rows = jnp.asarray(rows)
+    data = {}
+    for k, v in table.data.items():
+        if k in axis0_keys:
+            data[k] = v.at[rows].set(_take_rows(src.data[k], src_rows, 0))
+        else:
+            data[k] = v.at[:, rows].set(_take_rows(src.data[k], src_rows, 1))
+    return KVCache(
+        table.kind,
+        data,
+        table.positions.at[rows].set(_take_rows(src.positions, src_rows, 0)),
+        table.length.at[rows].set(_take_rows(src.length, src_rows, 0)),
+    )
+
+
+def clear_kv_rows(
+    table: KVCache, rows, axis0_keys: tuple[str, ...] = ()
+) -> KVCache:
+    """Reset batch rows to the empty-slot state: zero data, sentinel
+    positions (masked for every query), zero written length."""
+    rows = jnp.asarray(rows)
+    data = {}
+    for k, v in table.data.items():
+        if k in axis0_keys:
+            data[k] = v.at[rows].set(
+                _SENTINEL_POS if v.dtype == jnp.int32 else 0
+            )
+        else:
+            data[k] = v.at[:, rows].set(0)
+    return KVCache(
+        table.kind,
+        data,
+        table.positions.at[rows].set(_SENTINEL_POS),
+        table.length.at[rows].set(0),
+    )

@@ -51,6 +51,17 @@ class EngineStats:
         self.group_sizes: list[int] = []  # recent merged-group sizes
         self.padded_tokens = 0   # padding cells added by ragged merging
         self.real_tokens = 0     # real cells in merged ragged inputs
+        # length-aware group sizing: groups split because admitting one more
+        # request would exceed the row cap / the rows x padded-length cap
+        self.cap_splits_rows = 0
+        self.cap_splits_cells = 0
+        # continuous batching (slot-table decode loop)
+        self.admissions = 0      # requests admitted into a running loop
+        self.admitted_rows = 0   # slot rows those admissions occupied
+        self.retires = 0         # requests retired from the loop
+        self.slot_steps = 0      # decode steps run by the loop
+        self.slot_busy = 0       # sum of occupied rows over steps
+        self.slot_capacity = 0   # sum of total rows over steps
 
     def record_group(self, n_requests: int, padded: int, real: int) -> None:
         """Scheduler hook: one parallel co-tenancy group was executed."""
@@ -60,6 +71,27 @@ class EngineStats:
         del self.group_sizes[:-self.GROUP_HISTORY]
         self.padded_tokens += int(padded)
         self.real_tokens += int(real)
+
+    def record_cap_split(self, kind: str) -> None:
+        """A group/admission was split by a batch cap (kind: rows|cells)."""
+        if kind == "rows":
+            self.cap_splits_rows += 1
+        else:
+            self.cap_splits_cells += 1
+
+    def record_admission(self, rows: int) -> None:
+        self.admissions += 1
+        self.admitted_rows += int(rows)
+
+    def record_retire(self, rows: int, n_tokens: int) -> None:
+        self.retires += 1
+        self.generations += 1
+        self.gen_tokens += int(rows) * int(n_tokens)
+
+    def record_slot_step(self, busy_rows: int, total_rows: int) -> None:
+        self.slot_steps += 1
+        self.slot_busy += int(busy_rows)
+        self.slot_capacity += int(total_rows)
 
     def snapshot(self) -> dict:
         """JSON-ready view for the server's ``stats`` endpoint."""
@@ -81,6 +113,16 @@ class EngineStats:
             "padded_tokens": self.padded_tokens,
             "real_tokens": self.real_tokens,
             "padding_waste": self.padded_tokens / cells if cells else 0.0,
+            "cap_splits_rows": self.cap_splits_rows,
+            "cap_splits_cells": self.cap_splits_cells,
+            "admissions": self.admissions,
+            "admitted_rows": self.admitted_rows,
+            "retires": self.retires,
+            "slot_steps": self.slot_steps,
+            "slot_occupancy": (
+                self.slot_busy / self.slot_capacity
+                if self.slot_capacity else 0.0
+            ),
         }
 
 
@@ -112,6 +154,11 @@ class InferenceEngine:
             self._empty_cache_counted,
             static_argnames=("batch_size", "max_len", "kind"),
         )
+        # Slot-table row scatter/clear for continuous batching: traced once
+        # per (row-count, cache-shape) signature, then reused across every
+        # admission/retirement — slot reuse never recompiles.
+        self._write_rows_jit = jax.jit(self._write_rows_counted)
+        self._clear_rows_jit = jax.jit(self._clear_rows_counted)
 
     def _full_schedule(self) -> SiteSchedule:
         sched = self.model.site_schedule(self.mode)
@@ -142,6 +189,14 @@ class InferenceEngine:
         return self.model.empty_cache(
             params, batch, batch_size, max_len, kind=kind
         )
+
+    def _write_rows_counted(self, table, rows, src, src_rows):
+        self.stats.compiles += 1  # fires at trace time only
+        return self.model.cache_write_rows(table, rows, src, src_rows)
+
+    def _clear_rows_counted(self, table, rows):
+        self.stats.compiles += 1  # fires at trace time only
+        return self.model.cache_clear_rows(table, rows)
 
     # ------------------------------------------------------------- execute
     def execute(
@@ -239,6 +294,36 @@ class InferenceEngine:
         self.stats.generations += 1
         self.stats.gen_tokens += int(res.tokens.shape[0] * res.tokens.shape[1])
         return res
+
+    # ------------------------------------------------------ continuous loop
+    def start_decode_loop(
+        self, num_slots: int, max_len: int, *, cache_kind: str = "full"
+    ):
+        """A persistent slot-table decode loop (continuous batching).
+
+        ONE jitted decode step specialized on ``num_slots`` serves every
+        resident request; admissions prefill through the cached prefill jit
+        and scatter their cache rows in, retirements clear rows for reuse —
+        zero decode-step retraces across the loop's lifetime.
+        """
+        from repro.core.generation import DecodeLoop
+
+        return DecodeLoop(
+            self.model,
+            self.params,
+            num_slots,
+            max_len,
+            mode=self.mode,
+            cache_kind=cache_kind,
+            prefill_fn=lambda p, b, ml: self._prefill_jit(p, b, max_len=ml),
+            decode_fn=self._decode_jit,
+            empty_cache_fn=lambda p, b, bs, ml, kind: self._empty_cache_jit(
+                p, b, batch_size=bs, max_len=ml, kind=kind
+            ),
+            write_rows_fn=self._write_rows_jit,
+            clear_rows_fn=self._clear_rows_jit,
+            stats=self.stats,
+        )
 
     def hidden_states(self, tokens: jax.Array, **extras) -> np.ndarray:
         """Petals-style API: run the stack, return FINAL hidden states.

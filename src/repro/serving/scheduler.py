@@ -23,6 +23,23 @@ additionally require an equal step count, their graphs merge with the step
 coordinate preserved, and ONE prefill + decode loop serves the whole group —
 ragged prompts included (each row's last real token decodes as step 0 at its
 own position; per-request rows split back out of tokens and saves).
+
+Continuous batching (``policy="continuous"``): generation requests are no
+longer grouped per drain burst — the engine owns a persistent slot-table
+decode loop (:class:`repro.core.generation.DecodeLoop`) and the scheduler
+ADMITS requests into free slots at decode-step boundaries.  A request
+arriving one step after another started decoding waits one step, not one
+whole decode loop; rows retire independently (per-request
+``max_new_tokens`` may differ) and their slots are immediately reusable.
+Admission keeps the ``pad_slack`` bucketing for prefill merging — arrivals
+in one length bucket share one prefill, padded to the bucket CEILING so
+repeated admissions reuse one compiled prefill shape — and queueing is FIFO
+within a bucket.  Single-forward traces still burst-merge between steps.
+
+Group sizing is length-aware: both the burst grouper and continuous prefill
+admission bound ``rows x padded_length`` by ``max_batch_cells`` (on top of
+the ``max_batch_rows`` row cap); cap-split decisions are recorded in
+``EngineStats``.
 """
 from __future__ import annotations
 
@@ -33,17 +50,13 @@ from typing import Any
 
 import numpy as np
 
-from repro.core.batching import merge_graphs, split_results
+from repro.core.batching import RAGGED_INPUTS, merge_graphs, split_results
+from repro.core.generation import SlotAllocationError
 from repro.core.graph import ALL_STEPS, InterventionGraph
 
 __all__ = ["Request", "Ticket", "CoTenantScheduler", "RAGGED_INPUTS"]
 
 _ids = itertools.count()
-
-# Model inputs whose axis 1 may differ across merged requests, and the
-# batch key carrying per-row valid lengths for each.  Other 2D+ inputs
-# (e.g. fixed-size image embeddings) still require an exact match.
-RAGGED_INPUTS = {"tokens": "lengths", "src_embeds": "src_lengths"}
 
 
 @dataclasses.dataclass
@@ -58,6 +71,17 @@ class Request:
 
 @dataclasses.dataclass
 class Ticket:
+    """Per-request lifecycle record.
+
+    ``response_time`` is THIS request's submit -> finish span: under batched
+    execution every ticket keeps its own ``submit_time`` (queue wait counts
+    toward the request that waited) and gets its own ``finish_time`` — in
+    continuous mode that is the moment ITS rows retire from the decode loop,
+    not when the whole drain returns, so a short request co-resident with a
+    long one reports the shorter latency.  ``start_time`` is when execution
+    (or slot admission) actually began.
+    """
+
     request_id: int
     submit_time: float
     start_time: float | None = None
@@ -68,6 +92,11 @@ class Ticket:
     @property
     def response_time(self) -> float:
         return (self.finish_time or time.perf_counter()) - self.submit_time
+
+    @property
+    def queue_wait(self) -> float:
+        """Time spent queued before execution/admission began."""
+        return (self.start_time or self.submit_time) - self.submit_time
 
 
 def _merge_key(req: Request, pad_slack: int = 0) -> tuple | None:
@@ -99,6 +128,55 @@ def _merge_key(req: Request, pad_slack: int = 0) -> tuple | None:
     return (req.max_new_tokens, tuple(items))
 
 
+def _bucket_ceiling(width: int, pad_slack: int) -> int:
+    """Top width of the length bucket containing ``width`` — admissions pad
+    to this so every request in a bucket shares one compiled prefill."""
+    return (width // (pad_slack + 1) + 1) * (pad_slack + 1) - 1
+
+
+def _admit_key(req: Request, pad_slack: int = 0) -> tuple | None:
+    """Continuous-admission compatibility key: requests with equal keys may
+    share ONE prefill when admitted at the same step boundary.  Unlike
+    ``_merge_key``, ``max_new_tokens`` is NOT part of the key (rows retire
+    independently) and ``all_steps()`` setters are fine (per-execution
+    slices are merged, so the broadcast has already been expanded).
+    ``None`` means: admit alone (S == 1 empty-cache init) or fall back to a
+    solo run (grads, scalar inputs)."""
+    for n in req.graph.nodes:
+        if n.op == "grad_get":
+            return None  # .grad cannot ride a generation trace — solo error
+    t = req.batch.get("tokens")
+    if t is None or np.asarray(t).ndim < 2 or np.asarray(t).shape[1] == 1:
+        return None
+    items = []
+    for k in sorted(req.batch):
+        v = np.asarray(req.batch[k])
+        if v.ndim == 0:
+            return None
+        if k in RAGGED_INPUTS and v.ndim >= 2:
+            bucket = v.shape[1] // (pad_slack + 1)
+            items.append((k, ("bucket", bucket) + v.shape[2:], str(v.dtype)))
+        else:
+            items.append((k, v.shape[1:], str(v.dtype)))
+    return tuple(items)
+
+
+def _req_rows(req: Request) -> int:
+    if not req.batch:
+        raise ValueError("request batch has no model inputs")
+    return int(np.asarray(next(iter(req.batch.values()))).shape[0])
+
+
+def _req_width(req: Request) -> int:
+    """Max ragged-input width (the padded-length term of the cost model)."""
+    w = 1
+    for k in RAGGED_INPUTS:
+        v = req.batch.get(k)
+        if v is not None and np.asarray(v).ndim >= 2:
+            w = max(w, int(np.asarray(v).shape[1]))
+    return w
+
+
 class CoTenantScheduler:
     def __init__(
         self,
@@ -107,18 +185,39 @@ class CoTenantScheduler:
         policy: str = "parallel",
         max_batch_rows: int = 64,
         pad_slack: int = 16,
+        max_batch_cells: int = 8192,
+        num_slots: int = 8,
+        slot_max_len: int = 160,
     ) -> None:
         """``pad_slack`` bounds the wasted padding compute per merged row:
         requests whose ragged-input lengths fall in one bucket of width
-        ``pad_slack + 1`` merge (0 = exact-length match only)."""
-        assert policy in ("sequential", "parallel")
+        ``pad_slack + 1`` merge (0 = exact-length match only).
+        ``max_batch_cells`` bounds ``rows x padded_length`` per merged group
+        (length-aware sizing; ``max_batch_rows`` alone would let many long
+        rows form an oversized forward).  ``num_slots``/``slot_max_len``
+        size the continuous-batching slot table (policy="continuous")."""
+        assert policy in ("sequential", "parallel", "continuous")
         assert pad_slack >= 0
         self.engine = engine
         self.policy = policy
         self.max_batch_rows = max_batch_rows
         self.pad_slack = pad_slack
+        self.max_batch_cells = max_batch_cells
+        self.num_slots = num_slots
+        self.slot_max_len = slot_max_len
         self.queue: list[tuple[Request, Ticket]] = []
         self.completed: list[Ticket] = []
+        self._loop = None  # lazily-started persistent DecodeLoop
+        self._slot_tickets: dict[Any, Ticket] = {}
+
+    @property
+    def loop(self):
+        """The persistent slot-table decode loop (continuous policy)."""
+        if self._loop is None:
+            self._loop = self.engine.start_decode_loop(
+                self.num_slots, self.slot_max_len
+            )
+        return self._loop
 
     def submit(self, req: Request) -> Ticket:
         ticket = Ticket(req.request_id, submit_time=time.perf_counter())
@@ -129,6 +228,10 @@ class CoTenantScheduler:
     def drain(self) -> list[Ticket]:
         """Process the whole queue; returns finished tickets in order."""
         done: list[Ticket] = []
+        if self.policy == "continuous":
+            done = self._drain_continuous()
+            self.completed.extend(done)
+            return done
         while self.queue:
             if self.policy == "sequential":
                 done.append(self._run_one(*self.queue.pop(0)))
@@ -166,16 +269,28 @@ class CoTenantScheduler:
             return [self.queue.pop(0)]
         group = []
         rows = 0
+        width = 0  # group's padded length (the cost-model term)
         remaining = []
         for item in self.queue:
             req, _t = item
-            b = int(np.asarray(next(iter(req.batch.values()))).shape[0])
-            if (_merge_key(req, self.pad_slack) == key
-                    and rows + b <= self.max_batch_rows):
-                group.append(item)
-                rows += b
-            else:
+            if _merge_key(req, self.pad_slack) != key:
                 remaining.append(item)
+                continue
+            b = _req_rows(req)
+            w = max(width, _req_width(req))
+            if group and rows + b > self.max_batch_rows:
+                self.engine.stats.record_cap_split("rows")
+                remaining.append(item)
+                continue
+            if group and (rows + b) * w > self.max_batch_cells:
+                # length-aware sizing: admitting this request would pad the
+                # whole group past the compute budget — split instead
+                self.engine.stats.record_cap_split("cells")
+                remaining.append(item)
+                continue
+            group.append(item)
+            rows += b
+            width = w
         self.queue = remaining
         return group
 
@@ -278,15 +393,207 @@ class CoTenantScheduler:
                         "tokens": toks[start:start + size],
                         "logits": logits[start:start + size],
                     }
+                    t.finish_time = time.perf_counter()
             else:
                 saves, _ = self.engine.execute(merged.graph, batch)
                 per_req = split_results(saves, merged)
                 for t, res in zip(tickets, per_req):
                     t.result = res
+                    t.finish_time = time.perf_counter()
         except Exception as e:
             for t in tickets:
                 t.error = f"{type(e).__name__}: {e}"
-        t1 = time.perf_counter()
         for t in tickets:
-            t.finish_time = t1
+            if t.finish_time is None:
+                t.finish_time = time.perf_counter()
         return tickets
+
+    # ------------------------------------------------- continuous batching
+    def _drain_continuous(self) -> list[Ticket]:
+        """Drive the persistent decode loop until queue and slots are empty.
+
+        Each iteration is one decode-step boundary: single-forward traces
+        burst-merge (they have no loop to join), queued generation requests
+        are admitted into free slots (FIFO within a length bucket, arrivals
+        in one bucket sharing one prefill), then the loop advances ONE step
+        and retired requests get their tickets finalized immediately.
+        """
+        loop = self.loop
+        done: list[Ticket] = []
+        while self.queue or loop.resident:
+            self._serve_single_forwards(done)
+            self._admit_arrivals(loop, done)
+            if loop.resident:
+                for sr in loop.step():
+                    done.append(self._finish_slot(sr))
+        return done
+
+    def _serve_single_forwards(self, done: list[Ticket]) -> None:
+        """Single-forward traces have no decode loop to join: burst-merge
+        them between decode steps, exactly as in parallel policy."""
+        nongen = [it for it in self.queue if it[0].max_new_tokens is None]
+        if not nongen:
+            return
+        saved = [it for it in self.queue if it[0].max_new_tokens is not None]
+        self.queue = nongen
+        while self.queue:
+            done.extend(self._run_group(self._take_group()))
+        self.queue = saved
+
+    def pump(self) -> list[Ticket]:
+        """One decode-step boundary (benchmark/driver hook): admit whatever
+        fits, advance the loop one step, finalize retirements.  Unlike
+        :meth:`drain` this returns after a single step so a driver can
+        interleave arrivals with the running loop."""
+        assert self.policy == "continuous"
+        loop = self.loop
+        done: list[Ticket] = []
+        self._serve_single_forwards(done)
+        self._admit_arrivals(loop, done)
+        if loop.resident:
+            for sr in loop.step():
+                done.append(self._finish_slot(sr))
+        self.completed.extend(done)
+        return done
+
+    def _finish_slot(self, sr) -> Ticket:
+        ticket = self._slot_tickets.pop(sr.request_id)
+        if sr.error is not None:
+            # evicted by a step-time failure of its own graph — surface
+            # per-request, co-tenants keep decoding
+            ticket.error = sr.error
+        else:
+            res = sr.result()
+            ticket.result = {
+                **res.saves,
+                "tokens": np.asarray(res.tokens),
+                "logits": np.asarray(res.logits),
+            }
+        # per-request accounting: THIS request's rows retired now, even if
+        # co-tenants keep decoding
+        ticket.finish_time = time.perf_counter()
+        return ticket
+
+    def _admit_arrivals(self, loop, done: list[Ticket]) -> None:
+        """Admit queued generation requests into free slots, FIFO within
+        each length bucket; same-boundary arrivals of one bucket share a
+        single prefill padded to the bucket ceiling."""
+        queue, self.queue = self.queue, []
+        # rest carries (original queue index, item) so requeues — including
+        # a whole plan bounced by slot fragmentation — restore SUBMIT order
+        # within each bucket, not admission-attempt order
+        rest: list[tuple[int, tuple[Request, Ticket]]] = []
+        free = loop.free_rows()
+        # admit-key -> [(idx, (req, ticket)), ...] planned for this boundary
+        plans: dict[tuple, list[tuple[int, tuple[Request, Ticket]]]] = {}
+        plan_rows: dict[tuple, int] = {}
+        plan_pad: dict[tuple, int] = {}   # tokens bucket ceiling (pad target)
+        plan_cost: dict[tuple, int] = {}  # widest ragged input (cells model)
+        blocked: set[tuple] = set()
+        order: list[tuple] = []
+
+        for idx, item in enumerate(queue):
+            req, ticket = item
+            if req.max_new_tokens is None:
+                rest.append((idx, item))  # single-forward: caller handles
+                continue
+            try:
+                rows = _req_rows(req)
+                key = _admit_key(req, self.pad_slack)
+            except Exception as e:  # malformed batch: fail THIS ticket only
+                ticket.finish_time = time.perf_counter()
+                ticket.error = f"{type(e).__name__}: {e}"
+                done.append(ticket)
+                continue
+            t = np.asarray(req.batch.get("tokens", np.zeros((1, 1))))
+            tw = int(t.shape[1]) if t.ndim >= 2 else 1
+            # the bucket ceiling the PROMPT pads to (cache-length term);
+            # the cells cost below still counts every ragged input's width
+            ceil = _bucket_ceiling(tw, self.pad_slack)
+            if rows > loop.num_slots or (
+                (ceil - 1 if tw > 1 else 0) + req.max_new_tokens
+                > loop.max_len
+            ):
+                # cannot ever fit the slot table — classic solo fallback
+                done.append(self._run_one(req, ticket))
+                continue
+            if key is None:
+                # S == 1 / unbucketable: admit alone (empty-cache init) as
+                # its OWN plan so slot allocation happens strictly in plan
+                # order — a later solo arrival can't claim rows promised to
+                # an earlier bucketed plan
+                if rows > free:
+                    rest.append((idx, item))
+                    continue
+                solo_key = ("__solo__", idx)
+                plans[solo_key] = [(idx, item)]
+                plan_rows[solo_key] = rows
+                plan_pad[solo_key] = None
+                plan_cost[solo_key] = rows
+                order.append(solo_key)
+                free -= rows
+                continue
+            if key in blocked:
+                rest.append((idx, item))  # FIFO in bucket: don't overtake
+                continue
+            if rows > free:
+                blocked.add(key)
+                rest.append((idx, item))
+                continue
+            cur = plans.get(key)
+            cost_w = max(ceil, _req_width(req))
+            if cur is not None:
+                new_rows = plan_rows[key] + rows
+                new_cost = max(plan_cost[key], cost_w)
+                if new_rows * new_cost > self.max_batch_cells:
+                    self.engine.stats.record_cap_split("cells")
+                    blocked.add(key)
+                    rest.append((idx, item))
+                    continue
+                cur.append((idx, item))
+                plan_rows[key] = new_rows
+                plan_cost[key] = new_cost
+            else:
+                plans[key] = [(idx, item)]
+                plan_rows[key] = rows
+                plan_pad[key] = ceil
+                plan_cost[key] = cost_w
+                order.append(key)
+            free -= rows
+
+        for key in order:
+            self._admit_plan(loop, plans[key], plan_pad[key], rest, done)
+        # restore submit order for everything that did not admit
+        rest.sort(key=lambda pair: pair[0])
+        self.queue = [item for _, item in rest] + self.queue
+
+    def _admit_plan(self, loop, plan, pad_to, rest, done) -> bool:
+        """Admit one prefill group (``plan`` is [(queue_idx, (req,
+        ticket)), ...]); on fragmentation put it back at its submit order,
+        on a per-request validation error fail that ticket only."""
+        t0 = time.perf_counter()
+        try:
+            srs = loop.admit_group(
+                [(req.graph, req.batch, req.max_new_tokens, req.request_id)
+                 for _, (req, _t) in plan],
+                pad_to=pad_to,
+            )
+        except SlotAllocationError:
+            rest.extend(plan)  # no contiguous run — retry next boundary
+            return False
+        except Exception as e:
+            if len(plan) == 1:
+                _idx, (req, ticket) = plan[0]  # surface per-request
+                ticket.start_time = t0
+                ticket.finish_time = time.perf_counter()
+                ticket.error = f"{type(e).__name__}: {e}"
+                done.append(ticket)
+                return False
+            # isolate the failing request; valid ones still admit
+            for entry in plan:
+                self._admit_plan(loop, [entry], pad_to, rest, done)
+            return True
+        for (_idx, (req, ticket)), sr in zip(plan, srs):
+            ticket.start_time = t0
+            self._slot_tickets[sr.request_id] = ticket
+        return True

@@ -62,13 +62,21 @@ class NDIFServer:
         policy: str = "sequential",
         max_batch_rows: int = 64,
         pad_slack: int = 16,
+        max_batch_cells: int = 8192,
+        num_slots: int = 8,
+        slot_max_len: int = 160,
     ) -> None:
-        """Preload a model (the expensive step users never pay for)."""
+        """Preload a model (the expensive step users never pay for).
+
+        ``policy="continuous"`` serves generation through a persistent
+        slot-table decode loop (``num_slots`` rows, ``slot_max_len`` cache
+        positions) with in-flight admission; see repro.serving.scheduler."""
         engine = InferenceEngine(model, params, mode=mode, name=name)
         self.engines[name] = engine
         self.schedulers[name] = CoTenantScheduler(
             engine, policy=policy, max_batch_rows=max_batch_rows,
-            pad_slack=pad_slack,
+            pad_slack=pad_slack, max_batch_cells=max_batch_cells,
+            num_slots=num_slots, slot_max_len=slot_max_len,
         )
 
     def hosted(self) -> list[str]:

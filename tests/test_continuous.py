@@ -1,0 +1,647 @@
+"""Continuous batching: slot-table decode loop with in-flight admission.
+
+Layers under test:
+  * DecodeLoop — admit/step/retire lifecycle, slot reuse, bit-exact
+    per-request isolation under interleaved admission schedules (a request's
+    saves/tokens must not depend on what was admitted or retired around it);
+  * model level — ``cache_write_rows`` / ``cache_clear_rows`` round-trips for
+    all four families (exercised through the loop);
+  * scheduler level — ``policy="continuous"`` admission (FIFO within bucket,
+    all-slots-busy queueing, S == 1 empty-cache admission, solo fallbacks),
+    length-aware ``max_batch_cells`` sizing, per-request response times;
+  * serving level — ``GenerateTracer(remote=True)`` roundtrip, slot stats.
+
+Parity bars: interleaved-vs-solo THROUGH THE LOOP is bit-exact for causal
+families (identical shapes at every stage: prefill batch = the request's own
+rows, decode batch = num_slots either way) and 1e-5 for encdec (non-causal
+encoder softmax).  Tokens vs the plain solo engine are exact (greedy argmax
+is robust to batch-size GEMM tiling noise, baselined in test_ragged).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.generation import DecodeLoop
+from repro.core.graph import (
+    GraphValidationError,
+    InterventionGraph,
+    PREFILL_STEP,
+    Ref,
+)
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving import LoopbackTransport, NDIFClient, NDIFServer
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import (
+    CoTenantScheduler,
+    Request,
+    _admit_key,
+    _bucket_ceiling,
+)
+
+FAMILIES = {
+    "paper-gpt-small": "transformer",
+    "mamba2-1.3b": "ssm",
+    "zamba2-2.7b": "hybrid",
+    "seamless-m4t-large-v2": "encdec",
+}
+
+
+@pytest.fixture(scope="module", params=sorted(FAMILIES))
+def family(request):
+    arch = request.param
+    cfg = R.get_config(arch, reduced=True)
+    model = R.build_model(arch, cfg)
+    params = model.init(jax.random.key(0))
+    return arch, cfg, model, params
+
+
+def _batch(cfg, rows, seq, seed):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": rng.integers(1, cfg.vocab_size, (rows, seq)).astype(np.int32)}
+    if cfg.arch_type == "audio":
+        batch["src_embeds"] = rng.standard_normal(
+            (rows, cfg.n_source_frames, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+def _assert_result_match(arch, got, want, *, exact=None):
+    """Compare two GenerationResults (tokens exact, saves per family)."""
+    exact = FAMILIES[arch] != "encdec" if exact is None else exact
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+    assert sorted(got.saves) == sorted(want.saves)
+    for k in want.saves:
+        if exact:
+            np.testing.assert_array_equal(np.asarray(got.saves[k]),
+                                          np.asarray(want.saves[k]))
+        else:
+            np.testing.assert_allclose(np.asarray(got.saves[k]),
+                                       np.asarray(want.saves[k]),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def _solo_through_loop(model, params, graph, batch, n_new, *, num_slots=4,
+                       max_len=32, pad_to=None):
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(num_slots, max_len)
+    sr = loop.admit(graph, dict(batch), n_new, pad_to=pad_to)
+    loop.run_to_completion()
+    return sr.result()
+
+
+# --------------------------------------------------------------- loop parity
+def test_interleaved_admission_matches_solo(family):
+    """Admissions and retirements around a request must not change its
+    results: run an interleaved schedule, compare each request against
+    admitting it ALONE into an identical loop (bit-exact for causal
+    families) and against the plain solo engine (exact greedy tokens)."""
+    arch, cfg, model, params = family
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32)
+    specs = [  # (seq, rows, max_new_tokens)
+        ("a", 7, 1, 4),
+        ("b", 5, 1, 2),
+        ("c", 6, 2, 3),
+        ("d", 9, 1, 2),
+    ]
+    reqs = {
+        name: (InterventionGraph(), _batch(cfg, rows, seq, seed), n)
+        for seed, (name, seq, rows, n) in enumerate(specs)
+    }
+    srs = {}
+    g, b, n = reqs["a"]
+    srs["a"] = loop.admit(g, dict(b), n, request_id="a", pad_to=10)
+    loop.step()
+    g, b, n = reqs["b"]
+    srs["b"] = loop.admit(g, dict(b), n, request_id="b", pad_to=10)
+    loop.step()
+    g, b, n = reqs["c"]
+    srs["c"] = loop.admit(g, dict(b), n, request_id="c", pad_to=10)
+    loop.step()  # b retires here (its 2 steps are done)
+    assert "b" not in {sr.request_id for sr in loop.resident}
+    g, b, n = reqs["d"]  # reuses b's freed slot while a/c still decode
+    srs["d"] = loop.admit(g, dict(b), n, request_id="d", pad_to=10)
+    loop.run_to_completion()
+
+    for name, (graph, batch, n_new) in reqs.items():
+        got = srs[name].result()
+        want = _solo_through_loop(model, params, InterventionGraph(),
+                                  batch, n_new, pad_to=10)
+        _assert_result_match(arch, got, want)
+        solo = InferenceEngine(model, params, mode="unrolled")
+        res = solo.generate_interleaved(InterventionGraph(), dict(batch),
+                                        n_new)
+        np.testing.assert_array_equal(np.asarray(got.tokens),
+                                      np.asarray(res.tokens))
+
+
+def test_step_graphs_ride_the_loop_and_stay_isolated():
+    """Co-tenant intervention graphs at DIFFERENT local steps share one
+    interleaved decode execution; a writer's setter stays confined to its
+    slot rows and every request matches its solo-through-loop run."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+
+    steer_tok = 7
+
+    def writer_graph():
+        # bias the step-0 logits hard toward one token: greedy sampling reads
+        # POST-intervention logits, so the decode trajectory must change
+        g = InterventionGraph()
+        t = g.add("tap_get", site="logits", step=0)
+        bias = np.zeros((cfg.vocab_size,), np.float32)
+        bias[steer_tok] = 1e4
+        c = g.add("constant", bias)
+        v = g.add("add", Ref(t.id), Ref(c.id))
+        g.add("tap_set", Ref(v.id), site="logits", step=0)
+        o = g.add("tap_get", site="logits", step=1)
+        g.mark_saved("lg1", g.add("save", Ref(o.id)))
+        return g
+
+    def reader_graph():
+        g = InterventionGraph()
+        for s in range(3):
+            t = g.add("tap_get", site="layers.output", layer=1, step=s)
+            g.mark_saved(f"acts{s}", g.add("save", Ref(t.id)))
+        p = g.add("tap_get", site="embed", step=PREFILL_STEP)
+        g.mark_saved("emb", g.add("save", Ref(p.id)))
+        return g
+
+    batch_w = _batch(cfg, 1, 6, 0)
+    batch_r = _batch(cfg, 1, 8, 1)
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32)
+    sr_r = loop.admit(reader_graph(), dict(batch_r), 3, request_id="r",
+                      pad_to=9)
+    loop.step()  # reader is at local step 1 when the writer joins at step 0
+    sr_w = loop.admit(writer_graph(), dict(batch_w), 2, request_id="w",
+                      pad_to=9)
+    loop.run_to_completion()
+
+    want_r = _solo_through_loop(model, params, reader_graph(), batch_r, 3,
+                                pad_to=9)
+    want_w = _solo_through_loop(model, params, writer_graph(), batch_w, 2,
+                                pad_to=9)
+    _assert_result_match("paper-gpt-small", sr_r.result(), want_r)
+    _assert_result_match("paper-gpt-small", sr_w.result(), want_w)
+    # prefill saves come back at the request's TRUE width despite pad_to
+    assert np.asarray(sr_r.saves["emb"]).shape[1] == 7  # 8 - 1
+    # the writer's steering really did apply — step-0 token is forced —
+    # while the co-tenant reader decoded unsteered
+    assert np.asarray(sr_w.result().tokens)[0, 0] == steer_tok
+    assert np.asarray(sr_r.result().tokens)[0, 0] != steer_tok
+
+
+def test_merged_prefill_admission_parity():
+    """Same-boundary arrivals in one bucket share ONE prefill; results and
+    save shapes still match solo admissions."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+
+    def probe(seq, seed):
+        g = InterventionGraph()
+        p = g.add("tap_get", site="embed", step=PREFILL_STEP)
+        g.mark_saved("emb", g.add("save", Ref(p.id)))
+        t = g.add("tap_get", site="logits", step=0)
+        g.mark_saved("lg0", g.add("save", Ref(t.id)))
+        return g, _batch(cfg, 1, seq, seed)
+
+    g1, b1 = probe(6, 0)
+    g2, b2 = probe(9, 1)
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32)
+    sr1, sr2 = loop.admit_group(
+        [(g1, b1, 3, "p1"), (g2, b2, 2, "p2")], pad_to=10
+    )
+    loop.run_to_completion()
+    assert np.asarray(sr1.saves["emb"]).shape[1] == 5  # unpadded to 6 - 1
+    assert np.asarray(sr2.saves["emb"]).shape[1] == 8
+    for sr, (g, b, n) in ((sr1, (probe(6, 0)[0], b1, 3)),
+                          (sr2, (probe(9, 1)[0], b2, 2))):
+        want = _solo_through_loop(model, params, g, b, n, pad_to=10)
+        _assert_result_match("paper-gpt-small", sr.result(), want,
+                             exact=False)
+
+
+# ------------------------------------------------------- admission edge cases
+def test_retire_and_admit_same_boundary_reuses_slots():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(3, 32)
+    a = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 1,
+                   request_id="a")
+    b = loop.admit(InterventionGraph(), _batch(cfg, 2, 6, 1), 3,
+                   request_id="b")
+    assert loop.free_rows() == 0
+    retired = loop.step()  # a (max_new_tokens=1) retires on the same step
+    assert [sr.request_id for sr in retired] == ["a"]
+    assert loop.free_rows() == 1
+    c = loop.admit(InterventionGraph(), _batch(cfg, 1, 7, 2), 2,
+                   request_id="c")
+    assert c.start == a.start  # the freed slot is reused immediately
+    loop.run_to_completion()
+    want = _solo_through_loop(model, params, InterventionGraph(),
+                              _batch(cfg, 1, 7, 2), 2, num_slots=3)
+    np.testing.assert_array_equal(np.asarray(c.result().tokens),
+                                  np.asarray(want.tokens))
+
+
+def test_all_slots_busy_fifo_within_bucket():
+    """With every slot busy, queued same-bucket requests are admitted in
+    submit order as rows free up."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=2, slot_max_len=32)
+    reqs = [Request(graph=InterventionGraph(), batch=_batch(cfg, 1, 6 + i, i),
+                    max_new_tokens=2 + i) for i in range(4)]
+    tickets = [sched.submit(r) for r in reqs]
+    done = sched.drain()
+    assert len(done) == 4 and all(t.error is None for t in done)
+    starts = [t.start_time for t in tickets]
+    assert starts == sorted(starts), "admission must be FIFO within bucket"
+    assert starts[2] > starts[0], "later arrivals wait for a free slot"
+    for r, t in zip(reqs, tickets):
+        solo = InferenceEngine(model, params, mode="unrolled")
+        res = solo.generate_interleaved(InterventionGraph(), dict(r.batch),
+                                        r.max_new_tokens)
+        np.testing.assert_array_equal(t.result["tokens"],
+                                      np.asarray(res.tokens))
+
+
+def test_single_token_prompt_admitted_mid_loop(family):
+    """An S == 1 request joins a RUNNING loop via empty-cache rows."""
+    arch, cfg, model, params = family
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(3, 16)
+    long = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 4,
+                      request_id="long")
+    loop.step()
+    one = loop.admit(InterventionGraph(), _batch(cfg, 1, 1, 1), 3,
+                     request_id="one")
+    loop.run_to_completion()
+    lm = traced_lm(model, params)
+    b1 = _batch(cfg, 1, 1, 1)
+    toks = jnp.asarray(b1.pop("tokens"))
+    with lm.generate(toks, max_new_tokens=3, **{
+        k: jnp.asarray(v) for k, v in b1.items()
+    }) as tr:
+        pass
+    np.testing.assert_array_equal(np.asarray(one.result().tokens),
+                                  tr.output_tokens)
+
+
+def test_single_token_prompt_rejects_prefill_taps_in_loop():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(2, 16)
+    g = InterventionGraph()
+    t = g.add("tap_get", site="embed", step=PREFILL_STEP)
+    g.mark_saved("emb", g.add("save", Ref(t.id)))
+    with pytest.raises(GraphValidationError, match="prefill"):
+        loop.admit(g, _batch(cfg, 1, 1, 0), 2)
+    assert loop.free_rows() == 2  # failed admission must not leak slots
+
+
+def test_zero_recompiles_across_ten_admission_schedule():
+    """After warmup, a 10-admission staggered schedule with varied lengths
+    inside ONE bucket performs zero new compiles: the decode step is
+    specialized on num_slots, prefills pad to the bucket ceiling, and slot
+    scatter/clear reuse their traces."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+
+    def run_schedule(loop):
+        lens = [9, 12, 15, 10, 14, 11, 13, 9, 15, 12]  # one bucket (8..15)
+        ceil = _bucket_ceiling(9, 7)
+        assert all(_bucket_ceiling(L, 7) == ceil for L in lens)
+        srs = []
+        for i, L in enumerate(lens):
+            while loop.free_rows() == 0:
+                loop.step()
+            srs.append(loop.admit(InterventionGraph(), _batch(cfg, 1, L, i),
+                                  2 + i % 3, request_id=i, pad_to=ceil))
+            loop.step()
+        loop.run_to_completion()
+        return srs
+
+    run_schedule(engine.start_decode_loop(4, 32))  # warmup: compiles happen
+    c0 = engine.stats.compiles
+    srs = run_schedule(engine.start_decode_loop(4, 32))
+    assert engine.stats.compiles == c0, "steady-state must not retrace"
+    # and the results are still right
+    solo = InferenceEngine(model, params, mode="unrolled")
+    res = solo.generate_interleaved(InterventionGraph(),
+                                    _batch(cfg, 1, 15, 2), 4)
+    np.testing.assert_array_equal(np.asarray(srs[2].result().tokens),
+                                  np.asarray(res.tokens))
+
+
+# --------------------------------------------------------- scheduler behavior
+def test_response_time_reflects_own_span():
+    """A short request co-resident with a long one finishes (and reports)
+    earlier — per-request latency is its own submit -> retire span, not the
+    group/drain span."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=4, slot_max_len=48)
+    short = Request(graph=InterventionGraph(), batch=_batch(cfg, 1, 6, 0),
+                    max_new_tokens=2)
+    long = Request(graph=InterventionGraph(), batch=_batch(cfg, 1, 7, 1),
+                   max_new_tokens=12)
+    t_long = sched.submit(long)
+    t_short = sched.submit(short)
+    sched.drain()
+    assert t_short.error is None and t_long.error is None
+    assert t_short.finish_time < t_long.finish_time
+    assert t_short.response_time < t_long.response_time
+    for t in (t_short, t_long):
+        assert t.submit_time <= t.start_time <= t.finish_time
+        assert t.response_time >= (t.finish_time - t.start_time)
+        assert t.queue_wait >= 0
+
+
+def test_max_batch_cells_splits_groups_and_records():
+    """Length-aware sizing: rows x padded-length above the cells cap splits
+    a burst group (row cap alone would have merged it) and the decision is
+    recorded in EngineStats."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params)
+    sched = CoTenantScheduler(engine, policy="parallel", pad_slack=16,
+                              max_batch_rows=64, max_batch_cells=40)
+
+    def probe(seq, seed):
+        g = InterventionGraph()
+        t = g.add("tap_get", site="logits")
+        g.mark_saved("out", g.add("save", Ref(t.id)))
+        return Request(graph=g, batch=_batch(cfg, 1, seq, seed))
+
+    reqs = [probe(14, s) for s in range(4)]  # 4 rows x 14 = 56 > 40
+    tickets = [sched.submit(r) for r in reqs]
+    sched.drain()
+    assert all(t.error is None for t in tickets)
+    assert engine.stats.cap_splits_cells > 0
+    assert engine.stats.merged_groups >= 2  # split into >= 2 groups
+    for r, t in zip(reqs, tickets):
+        solo, _ = InferenceEngine(model, params).execute(r.graph, r.batch)
+        np.testing.assert_allclose(np.asarray(t.result["out"]),
+                                   np.asarray(solo["out"]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_continuous_mixes_gen_and_single_forward():
+    """Single-forward traces still burst-merge between decode steps."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=4, slot_max_len=32)
+    g = InterventionGraph()
+    t = g.add("tap_get", site="logits")
+    g.mark_saved("out", g.add("save", Ref(t.id)))
+    gen = Request(graph=InterventionGraph(), batch=_batch(cfg, 1, 6, 0),
+                  max_new_tokens=3)
+    fwd = Request(graph=g, batch=_batch(cfg, 1, 9, 1))
+    t_gen = sched.submit(gen)
+    t_fwd = sched.submit(fwd)
+    done = sched.drain()
+    assert len(done) == 2 and all(t.error is None for t in done)
+    assert t_fwd.result["out"].shape == (1, 9, cfg.vocab_size)
+    assert t_gen.result["tokens"].shape == (1, 3)
+
+
+def test_oversized_requests_fall_back_solo():
+    """Requests that can never fit the slot table (too many rows, or prompt
+    + N beyond the table's max_len) are served by the classic solo path."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=0,
+                              num_slots=2, slot_max_len=12)
+    wide = Request(graph=InterventionGraph(), batch=_batch(cfg, 3, 6, 0),
+                   max_new_tokens=2)   # 3 rows > 2 slots
+    deep = Request(graph=InterventionGraph(), batch=_batch(cfg, 1, 10, 1),
+                   max_new_tokens=8)   # 9 + 8 > 12 cache positions
+    t_w = sched.submit(wide)
+    t_d = sched.submit(deep)
+    sched.drain()
+    assert t_w.error is None and t_w.result["tokens"].shape == (3, 2)
+    assert t_d.error is None and t_d.result["tokens"].shape == (1, 8)
+    assert engine.stats.admissions == 0  # neither rode the loop
+
+
+def test_bad_step_graph_rejected_at_admission_not_step_time():
+    """A decode-step slice tapping an unknown site must fail ITS ticket at
+    admission; co-tenants keep decoding and later drains still work (a
+    step-time crash would wedge the shared loop for everyone)."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=4, slot_max_len=32)
+    bad = InterventionGraph()
+    bad.add("tap_get", site="never-a-site", step=1)
+    t_ok1 = sched.submit(Request(graph=InterventionGraph(),
+                                 batch=_batch(cfg, 1, 6, 0),
+                                 max_new_tokens=3))
+    t_bad = sched.submit(Request(graph=bad, batch=_batch(cfg, 1, 7, 1),
+                                 max_new_tokens=3))
+    done = sched.drain()
+    assert t_bad.error is not None and "never-a-site" in t_bad.error
+    assert t_ok1.error is None and t_ok1.result["tokens"].shape == (1, 3)
+    # the loop is NOT wedged: a later drain serves normally
+    t_ok2 = sched.submit(Request(graph=InterventionGraph(),
+                                 batch=_batch(cfg, 1, 6, 2),
+                                 max_new_tokens=2))
+    sched.drain()
+    assert t_ok2.error is None and t_ok2.result["tokens"].shape == (1, 2)
+    assert len(done) == 2
+
+
+def test_step_time_failure_evicts_only_offender():
+    """Failures that admission validation cannot catch (a shape-mismatched
+    setter value) evict the offending request mid-loop; the co-tenant's
+    results are unaffected and bit-exact vs running alone."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    bad = InterventionGraph()
+    t = bad.add("tap_get", site="logits", step=1)
+    c = bad.add("constant", np.zeros((7, 3), np.float32))
+    v = bad.add("add", Ref(t.id), Ref(c.id))  # broadcast error at step 1
+    bad.mark_saved("boom", bad.add("save", Ref(v.id)))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32)
+    good_batch = _batch(cfg, 1, 6, 0)
+    sr_good = loop.admit(InterventionGraph(), dict(good_batch), 4,
+                         request_id="good", pad_to=8)
+    sr_bad = loop.admit(bad, _batch(cfg, 1, 7, 1), 3, request_id="bad",
+                        pad_to=8)
+    done = loop.run_to_completion()
+    assert sr_bad in done and sr_bad.error is not None
+    with pytest.raises(RuntimeError, match="evicted"):
+        sr_bad.result()
+    assert sr_good.error is None
+    want = _solo_through_loop(model, params, InterventionGraph(),
+                              good_batch, 4, pad_to=8)
+    _assert_result_match("paper-gpt-small", sr_good.result(), want)
+
+
+def test_log_isolation_between_co_tenants():
+    """A request's logs contain only ITS OWN logged values (request-local
+    shapes), never a co-tenant's."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+
+    def logging_graph(step):
+        g = InterventionGraph()
+        t = g.add("tap_get", site="logits", step=step)
+        g.add("log", Ref(t.id))
+        return g
+
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32)
+    a = loop.admit(logging_graph(0), _batch(cfg, 1, 6, 0), 2,
+                   request_id="a", pad_to=8)
+    b = loop.admit(logging_graph(0), _batch(cfg, 2, 7, 1), 2,
+                   request_id="b", pad_to=8)
+    loop.run_to_completion()
+    assert len(a.logs) == 1 and len(b.logs) == 1
+    assert np.asarray(a.logs[0][1]).shape == (1, 1, cfg.vocab_size)
+    assert np.asarray(b.logs[0][1]).shape == (2, 1, cfg.vocab_size)
+
+
+def test_grad_generation_request_errors_cleanly():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", num_slots=2,
+                              slot_max_len=16)
+    g = InterventionGraph()
+    g.add("grad_get", site="logits", step=0)
+    bad = Request(graph=g, batch=_batch(cfg, 1, 5, 0), max_new_tokens=2)
+    ok = Request(graph=InterventionGraph(), batch=_batch(cfg, 1, 5, 1),
+                 max_new_tokens=2)
+    t_bad = sched.submit(bad)
+    t_ok = sched.submit(ok)
+    sched.drain()
+    assert t_bad.error is not None
+    assert t_ok.error is None and t_ok.result["tokens"].shape == (1, 2)
+
+
+# ------------------------------------------------------------ remote tracing
+def test_remote_generate_tracer_roundtrip():
+    """GenerateTracer(remote=True): the step graph ships over the wire,
+    steering applies server-side, stacked saves come back — identical to
+    the local trace."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host(cfg.name, model, params, policy="continuous")
+    transport = LoopbackTransport(server.handle)
+    client = NDIFClient(transport, cfg.name)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(1, cfg.vocab_size, (2, 7)).astype(np.int32)
+
+    def run(lm, remote):
+        with lm.generate(toks, max_new_tokens=4, remote=remote) as tr:
+            with tr.prefill():
+                lm.embed.save("emb")
+            for _ in tr.steps():
+                lm.layers[1].output += np.float32(0.5)
+                lm.logits.save("lg")
+        return tr
+
+    sent0 = transport.stats.bytes_sent
+    tr_r = run(traced_lm(model, None, backend=client), True)
+    assert transport.stats.bytes_sent > sent0  # actually went over the wire
+    tr_l = run(traced_lm(model, params), False)
+    np.testing.assert_array_equal(tr_r.output_tokens, tr_l.output_tokens)
+    assert np.asarray(tr_r.result("lg")).shape == (2, 4, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(tr_r.result("lg")),
+                               np.asarray(tr_l.result("lg")),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tr_r.result("emb")),
+                               np.asarray(tr_l.result("emb")),
+                               rtol=1e-5, atol=1e-5)
+    stats = client.stats()
+    assert stats["admissions"] >= 1 and stats["retires"] >= 1
+    assert 0.0 < stats["slot_occupancy"] <= 1.0
+
+
+def test_remote_generate_requires_backend():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    lm = traced_lm(model, params)
+    with pytest.raises(RuntimeError, match="backend"):
+        with lm.generate(np.ones((1, 4), np.int32), 2, remote=True) as tr:
+            pass
+
+
+# ------------------------------------------------------------------ unit bits
+def test_admit_key_buckets_and_exclusions():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+
+    def req(seq, n=2, rows=1):
+        return Request(graph=InterventionGraph(),
+                       batch=_batch(cfg, rows, seq, 0), max_new_tokens=n)
+
+    # max_new_tokens is NOT part of the admission key (independent retire)
+    assert _admit_key(req(9, n=2), 7) == _admit_key(req(12, n=30), 7)
+    assert _admit_key(req(9), 7) != _admit_key(req(17), 7)  # other bucket
+    assert _admit_key(req(1), 7) is None  # S == 1 admits alone
+    g = InterventionGraph()
+    g.add("grad_get", site="logits", step=0)
+    assert _admit_key(Request(graph=g, batch=_batch(cfg, 1, 5, 0),
+                              max_new_tokens=2), 7) is None
+
+
+def test_uniform_solo_generation_stays_lengths_free():
+    """A uniform, unpadded solo generation must not synthesize per-row
+    lengths: paths gated on ragged masking (sliding-window prefill beyond
+    the window, the pallas guard) worked before the DecodeLoop refactor and
+    must keep working."""
+    from repro.core.generation import run_generation
+
+    cfg = R.get_config("paper-gpt-small", reduced=True, sliding_window=8)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    toks = np.random.default_rng(0).integers(
+        1, cfg.vocab_size, (1, 12)).astype(np.int32)
+    # padded prompt exceeds the window: the ragged+window guard would raise
+    # if admission injected a lengths array for this uniform prompt
+    res = run_generation(model, params, InterventionGraph(),
+                         jnp.asarray(toks), 2, mode="unrolled",
+                         cache_kind="window")
+    assert np.asarray(res.tokens).shape == (1, 2)
+
+
+def test_bucket_ceiling():
+    assert _bucket_ceiling(9, 7) == 15
+    assert _bucket_ceiling(15, 7) == 15
+    assert _bucket_ceiling(16, 7) == 23
+    assert _bucket_ceiling(6, 0) == 6  # slack 0: exact widths
