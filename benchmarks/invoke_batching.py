@@ -1,0 +1,91 @@
+"""Invoke batching: N separate traces vs ONE N-invoke trace.
+
+The paper's Fig. 3 multi-invoke API exists for throughput as much as for
+ergonomics: declaring N prompts inside one ``lm.trace()`` lowers them into
+ONE merged padded forward, so a user iterating over a prompt set pays one
+model execution per *trace*, not one per *prompt*.  This benchmark times
+
+  solo_traces     — N single-invoke traces, one forward each,
+  one_trace       — one N-invoke trace, ONE merged forward (this PR),
+
+over ragged prompts (lengths 12..28, the cotenancy_ragged workload) and
+reports the per-prompt speedup plus the padding waste the merge paid —
+``Tracer.pad_stats`` records real vs padded cells after lowering.
+
+`derived` carries forwards-per-batch and the padding-waste fraction; the
+same numbers land in BENCH_invoke_batching.json via ``Row.extra``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, build, timeit
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+
+
+def rows() -> list[Row]:
+    cfg = R.get_config("paper-gpt-small")
+    model, params = build(cfg)
+    lm = traced_lm(model, params)
+    out: list[Row] = []
+    n_prompts = 12
+    rng = np.random.default_rng(7)
+    prompts = [
+        rng.integers(0, cfg.vocab_size,
+                     (1, int(rng.integers(12, 29)))).astype(np.int32)
+        for _ in range(n_prompts)
+    ]
+    layers = [int(rng.integers(0, cfg.n_layers)) for _ in range(n_prompts)]
+
+    def solo_traces():
+        acts = []
+        for toks, layer in zip(prompts, layers):
+            with lm.trace(toks):
+                a = lm.layers[layer].output.save("acts")
+            acts.append(np.asarray(a.value))
+        return acts
+
+    def one_trace():
+        saves = []
+        with lm.trace() as tr:
+            for toks, layer in zip(prompts, layers):
+                with tr.invoke(toks):
+                    saves.append(lm.layers[layer].output.save("acts"))
+        return [np.asarray(s.value) for s in saves], tr
+
+    # correctness gate: merged-vs-solo at the usual 1e-5 (a 12-row batch
+    # retiles GEMM reductions; see tests/test_ragged.py's noise baseline)
+    ref = solo_traces()
+    got, tr = one_trace()
+    for r, g in zip(ref, got):
+        np.testing.assert_allclose(r, g, rtol=1e-5, atol=1e-5)
+    waste = tr.pad_stats["padded_cells"] / max(
+        tr.pad_stats["padded_cells"] + tr.pad_stats["real_cells"], 1
+    )
+
+    solo_s, _ = timeit(solo_traces, n=5, warmup=1)
+    one_s, _ = timeit(lambda: one_trace()[0], n=5, warmup=1)
+    out.append(Row(
+        f"invoke_batching/solo_traces/prompts_{n_prompts}",
+        solo_s * 1e6 / n_prompts,
+        f"forwards={n_prompts}",
+        extra={"forwards_per_batch": n_prompts,
+               "total_ms": round(solo_s * 1e3, 3)},
+    ))
+    out.append(Row(
+        f"invoke_batching/one_trace/prompts_{n_prompts}",
+        one_s * 1e6 / n_prompts,
+        f"forwards=1;padding_waste={waste:.3f};"
+        f"speedup={solo_s / one_s:.2f}x",
+        extra={"forwards_per_batch": 1,
+               "padding_waste": round(waste, 4),
+               "speedup_vs_solo": round(solo_s / one_s, 3),
+               "total_ms": round(one_s * 1e3, 3)},
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    for row in rows():
+        print(row.csv())

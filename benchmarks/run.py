@@ -10,6 +10,8 @@ One module per paper table/figure:
                                 padding-aware parallel co-tenancy
   cotenancy_continuous       -> staggered arrivals: sequential vs burst-drain
                                 vs continuous (slot-table) batching
+  invoke_batching            -> paper Fig. 3 multi-invoke API: N solo traces
+                                vs one N-invoke trace (one merged forward)
   kernel_bench               -> kernels/fallbacks microbench
 
 Besides the CSV on stdout, every module's rows are written to
@@ -30,6 +32,7 @@ MODULES = [
     "benchmarks.fig9_concurrent_users",
     "benchmarks.cotenancy_ragged",
     "benchmarks.cotenancy_continuous",
+    "benchmarks.invoke_batching",
     "benchmarks.gen_decode",
     "benchmarks.kernel_bench",
 ]

@@ -8,7 +8,13 @@ Public surface:
   dumps/loads, graph_to_json            — wire format (serialize.py)
   merge_graphs / split_results          — parallel co-tenancy (batching.py)
 """
-from repro.core.batching import MergedBatch, merge_graphs, split_results
+from repro.core.batching import (
+    MergedBatch,
+    merge_graphs,
+    merge_invoke_batches,
+    split_invokes,
+    split_results,
+)
 from repro.core.graph import (
     GraphValidationError,
     InterventionGraph,
@@ -28,7 +34,7 @@ from repro.core.serialize import (
     graph_to_json,
     loads,
 )
-from repro.core.tracer import Envoy, Session, TracedModel, Tracer
+from repro.core.tracer import Envoy, Invoke, Session, TracedModel, Tracer
 
 __all__ = [
     "GraphValidationError",
@@ -39,6 +45,7 @@ __all__ = [
     "Tracer",
     "Session",
     "Envoy",
+    "Invoke",
     "SiteSchedule",
     "Interleaver",
     "InterleaveState",
@@ -53,4 +60,6 @@ __all__ = [
     "MergedBatch",
     "merge_graphs",
     "split_results",
+    "split_invokes",
+    "merge_invoke_batches",
 ]

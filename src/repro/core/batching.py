@@ -10,6 +10,15 @@ rows, and the model weights are untouched (pure function).  This is the
 "extracts appropriate slices while preserving gradient propagation" design
 the paper sketches, realized with JAX functional updates.
 
+Multi-invoke traces reuse this machinery from the *client* side: the tracer
+stamps each prompt's nodes with ``Node.invoke``, :func:`split_invokes`
+partitions the shared graph back into per-invoke graphs, and the same
+``merge_graphs`` lowers them into ONE merged forward — several prompts from
+one user are structurally identical to several co-tenant users
+(:mod:`repro.core.tracer`).  :func:`merge_invoke_batches` is the batch-side
+counterpart (right-padding + synthesized length arrays), shared with the
+scheduler's burst grouper.
+
 Ragged lengths (pad-and-mask merging)
 -------------------------------------
 Requests do NOT need equal sequence lengths: the scheduler right-pads each
@@ -41,6 +50,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import numpy as np
+
 from repro.core.graph import (
     ALL_STEPS,
     PREFILL_STEP,
@@ -50,7 +61,14 @@ from repro.core.graph import (
     map_refs,
 )
 
-__all__ = ["MergedBatch", "merge_graphs", "split_results", "RAGGED_INPUTS"]
+__all__ = [
+    "MergedBatch",
+    "merge_graphs",
+    "split_results",
+    "split_invokes",
+    "merge_invoke_batches",
+    "RAGGED_INPUTS",
+]
 
 BATCH_AXIS = 0
 SEQ_AXIS = 1
@@ -293,3 +311,201 @@ def split_results(
         idx = batch.save_prefixes.index(prefix)
         out[idx][rest] = value
     return out
+
+
+# --------------------------------------------------------------------------
+# Multi-invoke traces: one invoke-stamped graph -> per-invoke graphs.
+# --------------------------------------------------------------------------
+
+def split_invokes(graph: InterventionGraph, n_invokes: int
+                  ) -> list[InterventionGraph]:
+    """Partition an invoke-stamped graph into one graph per invoke.
+
+    The tracer stamps every node built inside ``tr.invoke(k)`` with
+    ``Node.invoke == k``; nodes built outside any invoke (shared constants,
+    cross-trace inputs used by exactly one invoke, and pure functions of
+    those) carry ``invoke is None`` and are *replicated* into each invoke
+    that references them.  Tap nodes must carry an invoke; value flow
+    between two different invokes is rejected — invokes are independent
+    row-groups of one batched execution, exactly like co-tenant requests
+    (:func:`merge_graphs` then lowers the per-invoke graphs).
+
+    Save names qualified as ``i{k}/name`` (the tracer's collision guard for
+    the shared save table) are dequalified back to ``name`` in invoke ``k``'s
+    graph.  Saves of invoke-free nodes (pure constants) land on invoke 0.
+    """
+    if n_invokes < 1:
+        raise ValueError("n_invokes must be >= 1")
+    # Effective invoke per node: own stamp, else inherited from deps.
+    eff: dict[int, int | None] = {}
+    for n in graph.nodes:
+        dep_invs = {eff[r.node_id] for r in n.refs()} - {None}
+        if len(dep_invs) > 1:
+            raise ValueError(
+                f"node %{n.id} ({n.op}) mixes values from invokes "
+                f"{sorted(dep_invs)}; cross-invoke value flow is not "
+                "allowed — invokes are independent rows of one batch"
+            )
+        dep_inv = next(iter(dep_invs)) if dep_invs else None
+        if n.op in ("tap_get", "tap_set", "grad_get") and n.invoke is None:
+            raise ValueError(
+                f"node %{n.id} taps ({n.site!r}, layer={n.layer}) outside "
+                "any invoke; taps in a multi-invoke trace must be made "
+                "inside a `with tr.invoke(...)` context"
+            )
+        if n.invoke is not None:
+            if dep_inv is not None and dep_inv != n.invoke:
+                raise ValueError(
+                    f"node %{n.id} in invoke {n.invoke} consumes a value "
+                    f"from invoke {dep_inv}; cross-invoke value flow is "
+                    "not allowed"
+                )
+            if not 0 <= n.invoke < n_invokes:
+                raise ValueError(
+                    f"node %{n.id} targets invoke {n.invoke}, outside "
+                    f"[0, {n_invokes})"
+                )
+            eff[n.id] = n.invoke
+        else:
+            eff[n.id] = dep_inv
+
+    # Which invoke-free nodes each invoke needs (transitive deps).
+    shared_needed: dict[int, set[int]] = {k: set() for k in range(n_invokes)}
+
+    def pull_shared(k: int, nid: int) -> None:
+        if eff[nid] is not None or nid in shared_needed[k]:
+            return
+        shared_needed[k].add(nid)
+        for r in graph.node(nid).refs():
+            pull_shared(k, r.node_id)
+
+    for n in graph.nodes:
+        if eff[n.id] is None:
+            continue
+        for r in n.refs():
+            pull_shared(eff[n.id], r.node_id)
+    # Invoke-free SAVES (pure constants the user saved) execute on invoke 0.
+    for name, nid in graph.saves.items():
+        if eff[nid] is None:
+            pull_shared(0, nid)
+            for r in graph.node(nid).refs():
+                pull_shared(0, r.node_id)
+
+    subs: list[InterventionGraph] = []
+    for k in range(n_invokes):
+        sub = InterventionGraph()
+        idmap: dict[int, int] = {}
+        for n in graph.nodes:  # id order == topological order
+            if eff[n.id] != k and n.id not in shared_needed[k]:
+                continue
+            new = sub.add(
+                n.op,
+                *map_refs(n.args, lambda ref: Ref(idmap[ref.node_id])),
+                site=n.site,
+                layer=n.layer,
+                step=n.step,
+                meta=dict(n.meta),
+                **map_refs(n.kwargs, lambda ref: Ref(idmap[ref.node_id])),
+            )
+            idmap[n.id] = new.id
+        qual = f"i{k}/"
+        for name, nid in graph.saves.items():
+            owner = eff[nid] if eff[nid] is not None else 0
+            if owner == k and nid in idmap:
+                plain = name[len(qual):] if name.startswith(qual) else name
+                if plain in sub.saves:
+                    # an invoke-free save (plain name) and an invoke save
+                    # (``i{k}/name``) dequalify to one key — refusing beats
+                    # silently dropping one of the results
+                    raise ValueError(
+                        f"save name {plain!r} is ambiguous in invoke {k}: "
+                        "an invoke-free save collides with an invoke save "
+                        "of the same name; use distinct names"
+                    )
+                sub.saves[plain] = idmap[nid]
+        sub.backward_loss = (
+            idmap.get(graph.backward_loss)
+            if graph.backward_loss is not None else None
+        )
+        subs.append(sub)
+    return subs
+
+
+def merge_invoke_batches(
+    batches: list[dict], *, generation: bool = False
+) -> tuple[dict, list[dict[str, int]] | None, list[int], int, int]:
+    """Right-pad per-invoke model inputs to the group max and stack rows.
+
+    The batch-side counterpart of :func:`merge_graphs`, shared by the
+    multi-invoke tracer and the scheduler's burst grouper.  Declared ragged
+    inputs (:data:`RAGGED_INPUTS`) may differ along axis 1; shorter entries
+    are right-padded and per-row valid-length arrays (``lengths`` /
+    ``src_lengths``) are synthesized unless already present.  Every other
+    key must be shape-uniform.
+
+    Returns ``(batch, tap_lengths, sizes, real_cells, padded_cells)``:
+    ``tap_lengths`` is the per-invoke true-length record driving save
+    unpadding in :func:`merge_graphs` (``None`` when nothing was padded —
+    the merged batch is then bit-identical to plain concatenation), and the
+    cell counts feed padding-waste stats.  ``generation=True`` records
+    prompt tap lengths as ``L - 1``: generation prefill taps see the prompt
+    minus the step-0 token.
+    """
+    if not batches:
+        raise ValueError("at least one invoke batch required")
+    keys = set(batches[0])
+    for b in batches[1:]:
+        if set(b) != keys:
+            raise ValueError(
+                f"invoke batches carry different input keys: "
+                f"{sorted(keys)} vs {sorted(b)}"
+            )
+    sizes = [int(np.asarray(next(iter(b.values()))).shape[0])
+             for b in batches]
+    ragged_keys = [
+        k for k in batches[0]
+        if k in RAGGED_INPUTS and np.asarray(batches[0][k]).ndim >= 2
+    ]
+    maxes = {
+        k: max(int(np.asarray(b[k]).shape[1]) for b in batches)
+        for k in ragged_keys
+    }
+    ragged = any(
+        int(np.asarray(b[k]).shape[1]) != maxes[k]
+        for b in batches for k in ragged_keys
+    )
+    batch: dict = {}
+    for k in batches[0]:
+        arrs = [np.asarray(b[k]) for b in batches]
+        if any(a.shape[0] != s for a, s in zip(arrs, sizes)):
+            raise ValueError(f"input {k!r} disagrees on batch rows")
+        if k in maxes:
+            arrs = [
+                np.pad(a, ((0, 0), (0, maxes[k] - a.shape[1]))
+                       + ((0, 0),) * (a.ndim - 2))
+                for a in arrs
+            ]
+        batch[k] = np.concatenate(arrs)
+    real = padded = 0
+    for b, rows in zip(batches, sizes):
+        for k in ragged_keys:
+            L = int(np.asarray(b[k]).shape[1])
+            real += rows * L
+            padded += rows * (maxes[k] - L)
+    tap_lengths = None
+    if ragged:
+        tap_lengths = []
+        for b in batches:
+            rec = {}
+            for k in ragged_keys:
+                L = int(np.asarray(b[k]).shape[1])
+                rec[k] = L - 1 if (generation and k == "tokens") else L
+            tap_lengths.append(rec)
+        for k in ragged_keys:
+            lk = RAGGED_INPUTS[k]
+            if lk not in batch:
+                batch[lk] = np.concatenate([
+                    np.full(rows, np.asarray(b[k]).shape[1], np.int32)
+                    for b, rows in zip(batches, sizes)
+                ])
+    return batch, tap_lengths, sizes, real, padded

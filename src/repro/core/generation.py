@@ -60,6 +60,7 @@ __all__ = [
     "StepSlice",
     "slice_steps",
     "run_generation",
+    "run_generation_invokes",
     "GenerationResult",
     "DecodeLoop",
     "SlotRequest",
@@ -273,6 +274,85 @@ def run_generation(
     sr = loop.admit(graph, batch, N, inputs=inputs)
     loop.run_to_completion()
     return sr.result()
+
+
+def run_generation_invokes(
+    model: Any,
+    params: Any,
+    items: list[tuple],
+    *,
+    mode: str = "unrolled",
+    cache_kind: str = "full",
+    prefill_fn: Callable | None = None,
+    decode_fn: Callable | None = None,
+    empty_cache_fn: Callable | None = None,
+    write_rows_fn: Callable | None = None,
+    clear_rows_fn: Callable | None = None,
+    stats: Any = None,
+) -> list[GenerationResult]:
+    """Run several generation invokes through ONE slot-table decode loop.
+
+    ``items`` is ``[(graph, batch, max_new_tokens), ...]`` — the lowered
+    form of a multi-invoke ``lm.generate()`` trace (each graph is one
+    invoke's step-annotated slice, batches may be ragged).  Every invoke is
+    admitted as a row-group of one :class:`DecodeLoop` sized to the union
+    of rows: multi-token prompts share one merged prefill (ragged widths
+    right-padded, saves unpadded to true shapes), single-token prompts are
+    admitted alone with an empty cache, and every invoke retires
+    independently at its own ``max_new_tokens`` while sharing each decode
+    step with the invokes still resident.
+
+    Returns one :class:`GenerationResult` per item, in order, each at its
+    solo shapes — parity with running the invokes through separate
+    ``run_generation`` calls is bit-exact for causal families.
+    """
+    if not items:
+        return []
+    parsed = []
+    for graph, batch, n_new in items:
+        batch = dict(batch)
+        tokens = jnp.asarray(batch["tokens"])
+        parsed.append((graph, tokens, batch, int(n_new)))
+    widths = [t.shape[1] for _, t, _, _ in parsed]
+    num_slots = sum(t.shape[0] for _, t, _, _ in parsed)
+    multi_target = max((w for w in widths if w > 1), default=0)
+    max_len = max(
+        (multi_target - 1 + N) if S > 1 else N
+        for (_, _, _, N), S in zip(parsed, widths)
+    )
+    loop = DecodeLoop(
+        model,
+        params,
+        num_slots=num_slots,
+        max_len=max_len,
+        mode=mode,
+        cache_kind=cache_kind,
+        prefill_fn=prefill_fn,
+        decode_fn=decode_fn,
+        empty_cache_fn=empty_cache_fn,
+        write_rows_fn=write_rows_fn,
+        clear_rows_fn=clear_rows_fn,
+        stats=stats,
+    )
+    # multi-token prompts share one (merged, padded) prefill; single-token
+    # prompts have no prefill execution and must be admitted alone
+    group = [
+        (g, b, N, idx)
+        for idx, ((g, _, b, N), w) in enumerate(zip(parsed, widths))
+        if w > 1
+    ]
+    srs: dict[int, SlotRequest] = {}
+    if group:
+        for sr, (_, _, _, idx) in zip(
+            loop.admit_group([(g, b, N, idx) for g, b, N, idx in group]),
+            group,
+        ):
+            srs[idx] = sr
+    for idx, ((g, _, b, N), w) in enumerate(zip(parsed, widths)):
+        if w == 1:
+            srs[idx] = loop.admit(g, b, N, request_id=idx)
+    loop.run_to_completion()
+    return [srs[i].result() for i in range(len(items))]
 
 
 # --------------------------------------------------------------------------

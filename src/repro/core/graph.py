@@ -20,6 +20,15 @@ on one execution of a multi-token decode loop (prefill + N decode steps,
 NNsight's ``.next()``/iteration semantics).  :func:`assign_steps` is the
 step-level analogue of :meth:`InterventionGraph.schedule`; per-step site
 scheduling is then inherited unchanged (see :mod:`repro.core.generation`).
+
+Multi-invoke traces (the paper's §3.2 / Fig. 3 headline API) add a third
+coordinate: ``Node.invoke`` stamps a node with the prompt it belongs to.
+Several prompts declared inside one ``with model.trace()`` block each carry
+their own interventions; :func:`repro.core.batching.split_invokes` partitions
+an invoke-stamped graph back into per-invoke graphs (cross-invoke value flow
+is rejected), which the tracer lowers through ``merge_graphs`` into ONE
+batched execution.  The coordinate crosses the wire (see
+:mod:`repro.core.serialize`).
 """
 from __future__ import annotations
 
@@ -91,6 +100,10 @@ class Node:
     # the decode step they fire at (0..N-1), PREFILL_STEP for the prompt
     # forward, or ALL_STEPS for broadcast setters.
     step: int | None = None
+    # Multi-invoke coordinate: which tracer invoke (prompt) this node belongs
+    # to.  None in single-invoke traces and for nodes built outside any
+    # invoke context (constants shared by every invoke).
+    invoke: int | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
     def refs(self) -> Iterator[Ref]:
@@ -131,6 +144,10 @@ class InterventionGraph:
         self.saves: dict[str, int] = {}
         # node id of the scalar loss for the backward pass (GradProtocol).
         self.backward_loss: int | None = None
+        # Default invoke coordinate stamped onto new nodes; the tracer sets
+        # this while a ``tr.invoke(...)`` context is open so every node built
+        # inside it (taps, ops, constants) lands on that invoke.
+        self.invoke_default: int | None = None
 
     # ------------------------------------------------------------------ build
     def add(
@@ -140,6 +157,7 @@ class InterventionGraph:
         site: str | None = None,
         layer: int | None = None,
         step: int | None = None,
+        invoke: int | None = None,
         meta: dict | None = None,
         **kwargs: Any,
     ) -> Node:
@@ -155,6 +173,7 @@ class InterventionGraph:
             site=site,
             layer=layer,
             step=step,
+            invoke=invoke if invoke is not None else self.invoke_default,
             meta=meta or {},
         )
         self.nodes.append(node)
@@ -250,6 +269,8 @@ class InterventionGraph:
                 tag += f"[layer={n.layer}]"
             if n.step is not None:
                 tag += f"[step={n.step}]"
+            if n.invoke is not None:
+                tag += f"[invoke={n.invoke}]"
             lines.append(f"  %{n.id} = {n.op}{tag} {n.args!r}")
         if self.saves:
             lines.append(f"  saves: {self.saves}")

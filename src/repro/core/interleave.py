@@ -41,7 +41,21 @@ from repro.core.graph import (
 )
 from repro.core.op_registry import resolve_op
 
-__all__ = ["SiteSchedule", "Interleaver", "InterleaveState", "run_interleaved"]
+__all__ = [
+    "SiteSchedule",
+    "Interleaver",
+    "InterleaveState",
+    "run_interleaved",
+    "EarlyStop",
+    "last_referenced_site",
+]
+
+
+class EarlyStop(Exception):
+    """Raised by the state to abandon model execution after the last site an
+    intervention graph references (``tracer.stop()``).  Caught by
+    :func:`run_interleaved`; saves are assembled from the partial execution.
+    """
 
 
 @dataclasses.dataclass
@@ -211,6 +225,32 @@ class Interleaver:
 _POST_SCAN = POST_SITE - 1  # pseudo-index: runs right after scan delivery
 
 
+def last_referenced_site(
+    graph: InterventionGraph, schedule: SiteSchedule
+) -> int:
+    """Index into ``schedule.order`` of the LAST site any tap node touches.
+
+    The truncation point for ``tracer.stop()``: model execution past this
+    site cannot affect any getter, setter, or save, so the interleaver may
+    abandon the forward there.  Graphs using ``.grad`` cannot be truncated
+    (gradients need the full forward plus the backward pass).
+    """
+    for n in graph.nodes:
+        if n.op == "grad_get":
+            raise GraphValidationError(
+                "tracer.stop() cannot truncate a trace that uses .grad "
+                "(gradients need the full forward and backward pass)"
+            )
+    site_index = schedule.index()
+    idx = [
+        site_index[(n.site, n.layer)]
+        for n in graph.nodes
+        if n.op in ("tap_get", "tap_set")
+        and (n.site, n.layer) in site_index
+    ]
+    return max(idx, default=PRE_SITE)
+
+
 class InterleaveState:
     """Per-execution runtime: env of node values, fired sites, logs."""
 
@@ -220,11 +260,17 @@ class InterleaveState:
         inputs: dict[str, Any] | None = None,
         perts: dict[Any, Any] | None = None,
         const_env: dict[int, Any] | None = None,
+        stop_after: int | None = None,
     ) -> None:
         self.plan = plan
         self.env: dict[int, Any] = {}
         self.logs: list[tuple[int, Any]] = []
         self.perts = perts or {}
+        # Early termination (tracer.stop()): after processing the site at
+        # this schedule index, abandon the model forward via EarlyStop.
+        # Scan-mode sites cannot interrupt a running lax.scan, so the stop
+        # fires at the first NON-scan site at/past the index instead.
+        self.stop_after = stop_after
         self._scan_record: dict[str, Any] = {}
         self._executed: set[int] = set()
         inputs = inputs or {}
@@ -284,6 +330,10 @@ class InterleaveState:
             self._executed.add(s.id)
             value = self._resolve(s.args)[0]
             self.env[s.id] = value
+        if self.stop_after is not None and idx >= self.stop_after:
+            # everything the graph references has fired — abandon the rest
+            # of the model forward (run_interleaved catches this)
+            raise EarlyStop(key)
         return value
 
     def _on_scan_site(self, name: str, value: Any, layer: Any) -> Any:
@@ -467,20 +517,35 @@ def run_interleaved(
     mode: str = "unrolled",
     inputs: dict[str, Any] | None = None,
     const_env: dict[int, Any] | None = None,
+    stop_after_site: int | None = None,
 ) -> tuple[Any, dict[str, Any], list[tuple[int, Any]]]:
     """Run ``model_fn(*args, **kwargs)`` with ``graph`` interleaved.
 
     Pure function of its inputs — safe to wrap in ``jax.jit`` (the serving
     engine does).  Returns ``(model_output, saves, logs)``.
+
+    ``stop_after_site`` (``tracer.stop()``) abandons the model forward right
+    after the schedule index fires — typically
+    :func:`last_referenced_site` — returning ``None`` as the model output;
+    saves are assembled from the partial execution.  Eager execution only
+    (an exception at jit-trace time would abort the whole trace), and
+    incompatible with ``.grad``.
     """
     kwargs = kwargs or {}
     plan = Interleaver(graph, schedule, mode=mode)
+    if stop_after_site is not None and plan.grad_nodes:
+        raise GraphValidationError(
+            "stop_after_site cannot be combined with .grad"
+        )
 
     if not plan.grad_nodes:
-        state = InterleaveState(plan, inputs=inputs, const_env=const_env)
+        state = InterleaveState(plan, inputs=inputs, const_env=const_env,
+                                stop_after=stop_after_site)
         taps.push_state(state)
         try:
             out = model_fn(*args, **kwargs)
+        except EarlyStop:
+            out = None  # truncated: sites past the last referenced one
         finally:
             taps.pop_state()
         state.finalize(include_grad_dependents=True)

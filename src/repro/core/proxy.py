@@ -65,9 +65,14 @@ class Proxy:
         return self._tracer.graph
 
     def _emit(self, op: str, *args: Any, **kwargs: Any) -> "Proxy":
-        a, k = wrap_args(args, kwargs)
-        node = self.graph.add(op, *a, **k)
-        return Proxy(self._tracer, node)
+        # Nodes append to the ACTIVE tracer: inside a later trace of the
+        # same session, a proxy from an earlier trace is bridged in as a
+        # cross-trace input (session value flow) instead of corrupting its
+        # home graph.
+        tracer = self._tracer._target()
+        a, k = wrap_args(tracer._adopt(args), tracer._adopt(kwargs))
+        node = tracer.graph.add(op, *a, **k)
+        return Proxy(tracer, node)
 
     # ------------------------------------------------------------ protocols
     def save(self, name: str | None = None) -> "Proxy":
@@ -77,8 +82,8 @@ class Proxy:
         name = name or f"save_{node.id}"
         self.graph.mark_saved(name, node)
         saved = Proxy(self._tracer, node)
-        saved._save_name = name  # type: ignore[attr-defined]
-        self._tracer._register_save(name, saved)
+        # the tracer may qualify the name (per-invoke save tables)
+        saved._save_name = self._tracer._register_save(name, saved)  # type: ignore[attr-defined]
         return saved
 
     @property
@@ -110,7 +115,8 @@ class Proxy:
     # -------------------------------------------------------------- getitem
     def __getitem__(self, key: Any) -> "Proxy":
         out = self._emit("getitem", self, key)
-        if self._root_site is not None:
+        if self._root_site is not None and out._tracer is self._tracer:
+            # write-back provenance only holds within the owning trace
             out._root_site = self._root_site
             out._root_layer = self._root_layer
             out._path = self._path + (key,)
@@ -182,7 +188,7 @@ def make_op_caller(tracer: "Tracer", op_name: str) -> Callable[..., Proxy]:
     """An ``nnsight.apply``-style helper: call a registry op on proxies."""
 
     def _call(*args: Any, **kwargs: Any) -> Proxy:
-        a, k = wrap_args(args, kwargs)
+        a, k = wrap_args(tracer._adopt(args), tracer._adopt(kwargs))
         return Proxy(tracer, tracer.graph.add(op_name, *a, **k))
 
     return _call

@@ -15,6 +15,9 @@ Encoding rules (chosen to be round-trip exact):
   dtype          {"__dtype__": "float32"}
   None/bool/int/float/str/list/dict   native JSON
 
+Scheduling coordinates (``step`` for generation traces, ``invoke`` for
+multi-invoke traces) are plain node fields and round-trip unchanged.
+
 Ragged-length requests need no special encoding: per-row valid lengths
 travel as ordinary ``(B,)`` int arrays under the reserved batch keys
 ``lengths`` / ``src_lengths`` (see repro.serving.server), and the merger's
@@ -116,6 +119,7 @@ def graph_to_json(graph: InterventionGraph) -> dict:
                 "site": n.site,
                 "layer": n.layer,
                 "step": n.step,
+                "invoke": n.invoke,
                 "meta": encode_value(n.meta),
             }
             for n in graph.nodes
@@ -141,6 +145,7 @@ def graph_from_json(payload: dict) -> InterventionGraph:
             site=spec.get("site"),
             layer=spec.get("layer"),
             step=spec.get("step"),
+            invoke=spec.get("invoke"),
             meta=decode_value(spec.get("meta", {})),
         )
         if node.id != len(graph.nodes):

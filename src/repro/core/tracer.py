@@ -1,6 +1,8 @@
-"""The NNsight-style user API: tracing contexts and the Envoy tree (§3.2).
+"""The NNsight-style user API: invoke-based tracing contexts, sessions, and
+the Envoy tree (paper §3.2).
 
-Usage mirrors the paper's Figure 3b::
+Single-invoke tracing mirrors the paper's Figure 3b — one prompt, one
+intervention graph, executed on context exit::
 
     lm = TracedModel(model_fn, params, schedule, ...)
     with lm.trace(tokens) as tracer:
@@ -8,14 +10,41 @@ Usage mirrors the paper's Figure 3b::
         out = lm.output.save()
     print(out.value)
 
-Exiting the context finalizes the intervention graph and executes it —
-locally, or remotely when ``remote=True`` (serialized and shipped to the NDIF
-server, paper §3.3).  ``scan=True`` validates shapes via ``jax.eval_shape``
-without running the model (the paper's FakeTensor scanning).
+Multi-invoke tracing is the paper's headline form (§3.2, Fig. 3a): several
+prompts — each with its OWN interventions, and possibly ragged lengths —
+declared inside one trace and lowered into ONE merged batched forward on
+exit (shorter prompts are right-padded; getters are sliced back to each
+invoke's rows and true lengths, setters are row-confined, exactly the
+co-tenancy merge of :mod:`repro.core.batching`)::
 
-Generation tracing (the paper's multi-invoke / ``.next()`` semantics, §3.2)
-interleaves interventions with a multi-token greedy decode loop; models
-bound via :func:`repro.models.traced.traced_lm` support::
+    with lm.trace() as tr:
+        with tr.invoke(tokens_a):                 # invoke 0
+            lm.layers[3].mlp.output[:, -1] = 0.0
+            a = lm.output.save("out")
+        with tr.invoke(tokens_b):                 # invoke 1 (other length)
+            b = lm.output.save("out")
+    a.value, b.value                              # each at its solo shape
+
+``tracer.stop()`` truncates execution after the last site the graph
+references (nothing downstream can observe the difference, so the model
+forward is abandoned there).  ``trace(tokens)`` is sugar for a one-invoke
+trace and behaves exactly as before.
+
+Sessions batch several traces into one request and allow FORWARD value
+flow: a ``.save()``d proxy from trace *k* may be consumed inside trace
+*k+1* (it is bound as a constant input when *k+1* executes — locally, or
+server-side when the session ships as one remote request)::
+
+    with lm.session() as sess:
+        with sess.trace(tokens) as t1:
+            acts = lm.layers[2].output.save("acts")
+        with sess.trace(tokens) as t2:
+            lm.layers[2].output = acts * 0.5      # value from t1
+            out = lm.output.save("out")
+
+Generation tracing interleaves interventions with a multi-token greedy
+decode loop; models bound via :func:`repro.models.traced.traced_lm`
+support both the single- and the multi-invoke form::
 
     with lm.generate(tokens, max_new_tokens=8) as tr:
         for s in tr.steps():                      # decode steps 0..7
@@ -24,15 +53,30 @@ bound via :func:`repro.models.traced.traced_lm` support::
     tr.result("logits")                           # stacked (B, 8, V)
     tr.output_tokens                              # (B, 8) generated ids
 
-``tr.step(k)`` targets one chosen step, ``tr.all_steps()`` broadcasts a
-setter over every decode step, and ``tr.prefill()`` taps the prompt
-forward.  Values saved under one name at several steps come back stacked
-along the token axis.  See :mod:`repro.core.generation` for the execution
+    with lm.generate() as tr:                     # multi-invoke form
+        with tr.invoke(tokens_a, max_new_tokens=4) as ia:
+            for s in tr.steps():
+                lm.logits.save("logits")
+        with tr.invoke(tokens_b, max_new_tokens=9) as ib:
+            ...
+    ia.output_tokens                              # (B_a, 4)
+
+Multi-invoke generation admits each invoke as a row-group of one
+continuous slot-table decode loop (:class:`repro.core.generation
+.DecodeLoop`): invokes share every decode step while co-resident and
+retire independently at their own ``max_new_tokens``.  ``tr.step(k)``
+targets one chosen step, ``tr.all_steps()`` broadcasts a setter over every
+decode step, and ``tr.prefill()`` taps the prompt forward; ``scan=True``
+shape-checks prefill-step taps via ``jax.eval_shape`` without running the
+model.  With ``remote=True`` any of these ship to the NDIF server as ONE
+request (multi-invoke traces ship pre-merged; the server never re-merges
+them with co-tenants).  See :mod:`repro.core.generation` for the execution
 model.
 """
 from __future__ import annotations
 
 import contextlib
+from collections import Counter
 from typing import Any, Callable, Iterator
 
 import jax
@@ -45,17 +89,29 @@ from repro.core.graph import (
     InterventionGraph,
     Node,
 )
-from repro.core.interleave import SiteSchedule, run_interleaved
+from repro.core.interleave import (
+    SiteSchedule,
+    last_referenced_site,
+    run_interleaved,
+)
 from repro.core.proxy import Proxy, make_op_caller, unwrap
 
-__all__ = ["Tracer", "GenerateTracer", "Envoy", "TracedModel", "Session"]
+__all__ = [
+    "Tracer",
+    "GenerateTracer",
+    "Invoke",
+    "Envoy",
+    "TracedModel",
+    "Session",
+]
 
 
 class Envoy:
     """Attribute-path access to tap sites, mirroring the module tree.
 
     Built from the model's declared site names: ``layers.mlp.output`` with
-    per-layer flag yields ``lm.layers[5].mlp.output``.
+    per-layer flag yields ``lm.layers[5].mlp.output``.  ``dir()`` on an
+    envoy lists the reachable child paths and sites.
     """
 
     def __init__(
@@ -91,8 +147,17 @@ class Envoy:
             )
         raise AttributeError(
             f"no tap site or module path {path!r}; "
-            f"available: {sorted(self._site_names)}"
+            f"available here: {self.__dir__()}"
         )
+
+    def __dir__(self) -> list[str]:
+        """Reachable children: next path segments of every site below us."""
+        prefix = self._prefix + "." if self._prefix else ""
+        out = set()
+        for s in self._site_names:
+            if s.startswith(prefix) and s != self._prefix:
+                out.add(s[len(prefix):].split(".")[0])
+        return sorted(out)
 
     def __getitem__(self, layer: int) -> "Envoy":
         if self._prefix not in self._per_layer_prefixes:
@@ -118,8 +183,88 @@ class Envoy:
         return f"<Envoy {self._prefix!r} layer={self._layer}>"
 
 
+class Invoke:
+    """One prompt (plus its interventions) inside a multi-invoke trace.
+
+    Context manager: nodes built while it is open are stamped with this
+    invoke's id.  After the trace executes, per-invoke results are read
+    back through :meth:`result` / :attr:`results` (and, for generation
+    invokes, :attr:`output_tokens` / :attr:`output_logits`).
+    """
+
+    def __init__(
+        self,
+        tracer: "Tracer",
+        index: int,
+        args: tuple,
+        kwargs: dict,
+        max_new_tokens: int | None = None,
+    ) -> None:
+        self.tracer = tracer
+        self.index = index
+        self.args = args
+        self.kwargs = kwargs
+        self.max_new_tokens = max_new_tokens  # generation invokes only
+        self._results: dict[str, Any] | None = None
+        self.output_tokens: np.ndarray | None = None
+        self.output_logits: Any | None = None
+        self.logs: list = []
+
+    @property
+    def batch(self) -> dict:
+        """This invoke's model inputs as a batch dict (first positional
+        input under the conventional ``tokens`` key)."""
+        return {
+            "tokens": np.asarray(self.args[0]),
+            **{k: np.asarray(v) for k, v in self.kwargs.items()},
+        }
+
+    # ------------------------------------------------------------- context
+    def __enter__(self) -> "Invoke":
+        t = self.tracer
+        if t._invoke is not None:
+            raise RuntimeError("invoke contexts cannot be nested")
+        t._invoke = self.index
+        t.graph.invoke_default = self.index
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        t = self.tracer
+        t._invoke = None
+        t.graph.invoke_default = None
+
+    # ------------------------------------------------------------- results
+    def result(self, name: str) -> Any:
+        if self._results is None:
+            raise RuntimeError(
+                "results are only available after the trace context exits"
+            )
+        try:
+            return self._results[name]
+        except KeyError:
+            raise KeyError(
+                f"invoke {self.index} has no save named {name!r}; "
+                f"available: {sorted(self._results)}"
+            ) from None
+
+    @property
+    def results(self) -> dict[str, Any]:
+        if self._results is None:
+            raise RuntimeError("trace has not executed yet")
+        return dict(self._results)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"<Invoke {self.index}>"
+
+
 class Tracer:
-    """Builds one intervention graph inside a ``with`` block."""
+    """Builds one intervention graph inside a ``with`` block.
+
+    Constructed with inputs (``lm.trace(tokens)``) it is a one-invoke
+    trace; constructed bare (``lm.trace()``) prompts are declared through
+    :meth:`invoke` sub-contexts and lowered into one merged forward on
+    exit.
+    """
 
     def __init__(
         self,
@@ -146,13 +291,29 @@ class Tracer:
         # Generation-step pointer: None for single-forward traces; the
         # GenerateTracer subclass moves it so taps are stamped per step.
         self._step: int | None = None
-        self._current: dict[tuple[str, int | None, int | None], Node] = {}
+        # Multi-invoke state: the open invoke's index (None outside invoke
+        # contexts) and the declared invokes in order.
+        self._invoke: int | None = None
+        self.invokes: list[Invoke] = []
+        self._inputs_fixed = len(model_args) > 1  # trace(tokens) form
+        self._current: dict[tuple, Node] = {}
         self._deferred = False  # True when owned by a Session
+        self._session: "Session | None" = None
+        self._stop = False
+        # Cross-trace inputs (session value flow): input name ->
+        # (source tracer, save name); values bound at execution time.
+        self._cross_inputs: dict[str, tuple["Tracer", str]] = {}
+        self._cross_nodes: dict[str, Node] = {}
+        self._input_values: dict[str, Any] = {}
+        # Lowered (merged) form of a multi-invoke trace, built on exit.
+        self._merged = None  # MergedBatch
+        self._merged_input_map: dict[str, str] = {}
+        self._scan_pending = False  # scan=True deferred past input binding
         self.logs: list[tuple[int, Any]] = []
 
     # ------------------------------------------------------------- plumbing
     def _tap_proxy(self, site: str, layer: int | None) -> Proxy:
-        key = (site, layer, self._step)
+        key = (site, layer, self._step, self._invoke)
         if key not in self._current:
             node = self.graph.add(
                 "tap_get", site=site, layer=layer, step=self._step
@@ -164,7 +325,8 @@ class Tracer:
     def _write_back(
         self, site: str, layer: int | None, path: tuple, value: Any
     ) -> None:
-        key = (site, layer, self._step)
+        value = self._adopt(value)
+        key = (site, layer, self._step, self._invoke)
         if path:
             current = self._current.get(key)
             if current is None:
@@ -182,8 +344,75 @@ class Tracer:
         )
         self._current[key] = new
 
-    def _register_save(self, name: str, proxy: Proxy) -> None:
+    def _register_save(self, name: str, proxy: Proxy) -> str:
+        if self._invoke is not None:
+            # qualify: every invoke may reuse the same user-facing name
+            nid = self.graph.saves.pop(name)
+            name = f"i{self._invoke}/{name}"
+            self.graph.saves[name] = nid
         self._saved_proxies[name] = proxy
+        return name
+
+    # ----------------------------------------------------- session bridging
+    def _target(self) -> "Tracer":
+        """The tracer new nodes should append to.
+
+        Normally ``self``; when a proxy from an EARLIER session trace is
+        used while a LATER trace of the same session is active, nodes go to
+        the active trace (cross-trace value flow)."""
+        active = self.model._tracers[-1] if self.model._tracers else None
+        if (
+            active is not None
+            and active is not self
+            and self._session is not None
+            and active._session is self._session
+        ):
+            return active
+        return self
+
+    def _adopt(self, obj: Any) -> Any:
+        """Map proxies owned by other tracers into this graph (bridged as
+        cross-trace inputs); containers handled structurally."""
+        if isinstance(obj, Proxy):
+            if obj._tracer is self:
+                return obj
+            return self._bridge(obj)
+        if isinstance(obj, tuple):
+            return tuple(self._adopt(o) for o in obj)
+        if isinstance(obj, list):
+            return [self._adopt(o) for o in obj]
+        if isinstance(obj, dict):
+            return {k: self._adopt(v) for k, v in obj.items()}
+        return obj
+
+    def _bridge(self, proxy: Proxy) -> Proxy:
+        src = proxy._tracer
+        if self._session is None or src._session is not self._session:
+            raise GraphValidationError(
+                "a proxy may only be used inside the trace that created it, "
+                "or inside a LATER trace of the same session"
+            )
+        name = getattr(proxy, "_save_name", None)
+        if name is None:
+            raise GraphValidationError(
+                "only .save()d values may flow across session traces; call "
+                ".save(name) in the producing trace first"
+            )
+        src_idx = self._session.tracers.index(src)
+        my_idx = self._session.tracers.index(self)
+        if src_idx >= my_idx:
+            raise GraphValidationError(
+                "cross-trace values only flow FORWARD: trace "
+                f"{src_idx} cannot feed trace {my_idx}"
+            )
+        key = f"__xtrace{src_idx}/{name}"
+        if key not in self._cross_nodes:
+            node = self.graph.add("input", key)
+            # invoke-free: replicated into whichever invoke(s) consume it
+            node.invoke = None
+            self._cross_nodes[key] = node
+            self._cross_inputs[key] = (src, name)
+        return Proxy(self, self._cross_nodes[key])
 
     # ------------------------------------------------------------ protocols
     def apply(self, op_name: str) -> Callable[..., Proxy]:
@@ -203,8 +432,40 @@ class Tracer:
         self.graph.backward_loss = loss.node.id
 
     def log(self, value: Any) -> None:
-        node = _as_node(self, value)
+        node = _as_node(self, self._adopt(value))
         self.graph.add("log", _ref(node))
+
+    # --------------------------------------------------------------- invoke
+    def invoke(self, *args: Any, **kwargs: Any) -> Invoke:
+        """Declare one prompt of a multi-invoke trace (paper Fig. 3a).
+
+        ``args`` is the prompt input (tokens); ``kwargs`` are extra model
+        inputs.  Prompts may have different lengths — shorter ones are
+        right-padded into the merged forward and results are returned at
+        each invoke's true solo shape.
+        """
+        if self._inputs_fixed:
+            raise RuntimeError(
+                "this trace was given inputs directly; use "
+                "`with model.trace() as tr:` (no inputs) for the "
+                "multi-invoke form"
+            )
+        if len(args) != 1:
+            raise TypeError(
+                "invoke() takes exactly one positional input (the tokens); "
+                "extra model inputs go as keywords"
+            )
+        inv = Invoke(self, len(self.invokes), args, kwargs)
+        self.invokes.append(inv)
+        return inv
+
+    def stop(self) -> None:
+        """Truncate execution after the LAST site this graph references.
+
+        Model computation past that site cannot affect any getter, setter,
+        or save, so the forward is abandoned there (the paper's early-stop:
+        pay only for the layers you use).  Incompatible with ``.grad``."""
+        self._stop = True
 
     # -------------------------------------------------------------- results
     def result(self, name: str) -> Any:
@@ -212,7 +473,12 @@ class Tracer:
             raise RuntimeError(
                 "results are only available after the trace context exits"
             )
-        return self._results[name]
+        try:
+            return self._results[name]
+        except KeyError:
+            raise KeyError(
+                f"no save named {name!r}; available: {sorted(self._results)}"
+            ) from None
 
     @property
     def results(self) -> dict[str, Any]:
@@ -229,28 +495,126 @@ class Tracer:
         self.model._pop_tracer()
         if exc_type is not None:
             return
+        if not self._inputs_fixed and not self.invokes:
+            raise GraphValidationError(
+                "trace() without inputs expects invoke() sub-contexts: "
+                "declare prompts with `with tr.invoke(tokens):`"
+            )
         if self.scan:
-            self.validate_shapes()
+            if self._deferred and self._cross_inputs:
+                # cross-trace inputs have no values (their producers have
+                # not run); the session validates right before execution
+                self._scan_pending = True
+            else:
+                self.validate_shapes()
         if self._deferred:
             return
         self.execute()
 
+    # ------------------------------------------------------------- lowering
+    def _lower(self) -> None:
+        """Lower a multi-invoke trace: split the invoke-stamped graph into
+        per-invoke graphs and merge them (plus the right-padded inputs)
+        into ONE batched execution.  Idempotent."""
+        from repro.core.batching import (
+            merge_graphs,
+            merge_invoke_batches,
+            split_invokes,
+        )
+
+        if self._merged is not None:
+            return
+        graphs = split_invokes(self.graph, len(self.invokes))
+        batch, tap_lengths, sizes, real, padded = merge_invoke_batches(
+            [inv.batch for inv in self.invokes]
+        )
+        zoo = self.model.zoo_model
+        self._merged = merge_graphs(
+            graphs,
+            sizes,
+            lengths=tap_lengths,
+            site_length_key=getattr(zoo, "site_length_key", None),
+        )
+        self.pad_stats = {"real_cells": real, "padded_cells": padded}
+        tokens = batch.pop("tokens")
+        # after lowering the tracer looks like an ordinary padded batched
+        # trace: (params, tokens) + extras (incl. synthesized lengths)
+        self.model_args = (self.model.params, jax.numpy.asarray(tokens))
+        self.model_kwargs = batch
+        self._merged_input_map = {}
+        for g, prefix in zip(graphs, self._merged.save_prefixes):
+            for n in g.nodes:
+                if n.op == "input":
+                    self._merged_input_map[f"{prefix}/{n.args[0]}"] = (
+                        n.args[0]
+                    )
+
+    def execution_graph(self) -> InterventionGraph:
+        """The graph actually executed/shipped: the lowered merged graph
+        for multi-invoke traces, the user graph otherwise."""
+        if self.invokes:
+            self._lower()
+            return self._merged.graph
+        return self.graph
+
+    def _bind_cross_inputs(self) -> None:
+        """Pull cross-trace values from source traces (session exit)."""
+        for key, (src, name) in self._cross_inputs.items():
+            self._input_values[key] = src.result(name)
+
+    def _execution_inputs(self) -> dict[str, Any] | None:
+        if self.invokes:
+            out = {
+                merged: self._input_values[orig]
+                for merged, orig in self._merged_input_map.items()
+                if orig in self._input_values
+            }
+            return out or None
+        return self._input_values or None
+
+    def _finish_invoke_results(self, per: list[dict[str, Any]]) -> dict:
+        flat: dict[str, Any] = {}
+        counts: Counter = Counter()
+        for inv, res in zip(self.invokes, per):
+            inv._results = dict(res)
+            for name, val in res.items():
+                flat[f"i{inv.index}/{name}"] = val
+                counts[name] += 1
+        # unqualified aliases where the name is unique across invokes
+        for inv in self.invokes:
+            for name, val in inv._results.items():
+                if counts[name] == 1:
+                    flat.setdefault(name, val)
+        self._results = flat
+        return flat
+
+    # ------------------------------------------------------------ execution
     def validate_shapes(self) -> None:
         """The paper's FakeTensor scan: eval_shape the interleaved program."""
+        graph = self.execution_graph()
         jax.eval_shape(
-            lambda a, k: run_interleaved(
+            lambda a, k, i: run_interleaved(
                 self.model.wrapped_fn,
-                self.graph,
+                graph,
                 self.model.schedule,
                 a,
                 k,
                 mode=self.mode,
+                inputs=i,
             ),
             self.model_args,
             self.model_kwargs,
+            self._execution_inputs(),
         )
 
+    def _stop_site(self, graph: InterventionGraph) -> int | None:
+        if not self._stop:
+            return None
+        return last_referenced_site(graph, self.model.schedule)
+
     def execute(self) -> dict[str, Any]:
+        from repro.core.batching import split_results
+
         if self.remote:
             backend = self.backend or self.model.backend
             if backend is None:
@@ -258,19 +622,35 @@ class Tracer:
                     "remote=True requires a backend (NDIF client); pass "
                     "backend= or attach one to the model"
                 )
+            if self.invokes:
+                self._lower()
+                raw = backend.execute(self)
+                return self._finish_invoke_results(
+                    split_results(raw, self._merged)
+                )
             self._results = backend.execute(self)
             return self._results
-        self.graph.validate(self.model.schedule.order)
+        if self._scan_pending:
+            self._scan_pending = False
+            self.validate_shapes()  # cross-trace inputs are bound now
+        graph = self.execution_graph()
+        graph.validate(self.model.schedule.order)
         out, saves, logs = run_interleaved(
             self.model.wrapped_fn,
-            self.graph,
+            graph,
             self.model.schedule,
             self.model_args,
             self.model_kwargs,
             mode=self.mode,
+            inputs=self._execution_inputs(),
+            stop_after_site=self._stop_site(graph),
         )
-        self._results = saves
         self.logs = logs
+        if self.invokes:
+            return self._finish_invoke_results(
+                split_results(saves, self._merged)
+            )
+        self._results = saves
         return saves
 
 
@@ -282,6 +662,12 @@ class GenerateTracer(Tracer):
     (one chosen step), :meth:`all_steps` (broadcast setters), or
     :meth:`prefill` (the prompt forward).  ``.save(name)`` at several steps
     under one name yields per-step values stacked along the token axis.
+
+    The multi-invoke form (``lm.generate()`` with no tokens) declares
+    prompts via ``tr.invoke(tokens, max_new_tokens=N)``; every invoke is
+    admitted as a row-group of ONE continuous slot-table decode loop
+    (:class:`repro.core.generation.DecodeLoop`) and retires independently
+    at its own ``max_new_tokens``.
     """
 
     def __init__(
@@ -293,22 +679,54 @@ class GenerateTracer(Tracer):
         mode: str | None = None,
         extras: dict | None = None,
         remote: bool = False,
+        scan: bool = False,
         backend: Any | None = None,
     ) -> None:
-        super().__init__(model, (tokens,), dict(extras or {}), mode=mode,
-                         remote=remote, backend=backend)
+        args = (tokens,) if tokens is not None else ()
+        super().__init__(model, args, dict(extras or {}), mode=mode,
+                         remote=remote, scan=scan, backend=backend)
         self.tokens = tokens
         self.max_new_tokens = int(max_new_tokens)
+        self._inputs_fixed = tokens is not None
         self._step: int = 0
-        # base save name -> {step -> wire save name}
+        # base save name -> {step -> wire save name}; base names carry the
+        # ``i{k}/`` invoke qualifier in multi-invoke traces
         self._step_save_names: dict[str, dict[int, str]] = {}
         self.output_tokens: np.ndarray | None = None
         self.output_logits: Any | None = None
 
+    # ----------------------------------------------------------------- form
+    def invoke(self, *args: Any, max_new_tokens: int | None = None,
+               **kwargs: Any) -> Invoke:
+        """Declare one prompt of a multi-invoke generation trace.
+
+        ``max_new_tokens`` may differ per invoke — every invoke is a
+        row-group of one shared decode loop and retires independently."""
+        inv = super().invoke(*args, **kwargs)
+        inv.max_new_tokens = int(
+            max_new_tokens if max_new_tokens is not None
+            else self.max_new_tokens
+        )
+        return inv
+
+    def stop(self) -> None:  # pragma: no cover - guard
+        raise NotImplementedError(
+            "stop() is not supported inside generation traces; bound the "
+            "decode loop with max_new_tokens instead"
+        )
+
+    def _active_n(self) -> int:
+        if self._invoke is not None:
+            return self.invokes[self._invoke].max_new_tokens
+        return self.max_new_tokens
+
     # ------------------------------------------------------- step pointer
     def steps(self, start: int = 0, stop: int | None = None) -> Iterator[int]:
-        """Iterate decode steps, moving the tap pointer to each in turn."""
-        stop = self.max_new_tokens if stop is None else stop
+        """Iterate decode steps, moving the tap pointer to each in turn.
+
+        Inside an invoke context the default ``stop`` is that invoke's own
+        ``max_new_tokens``."""
+        stop = self._active_n() if stop is None else stop
         prev = self._step
         try:
             for s in range(start, stop):
@@ -352,8 +770,9 @@ class GenerateTracer(Tracer):
             self._step = prev
 
     # ------------------------------------------------------ stacked saves
-    def _register_save(self, name: str, proxy: Proxy) -> None:
-        by_step = self._step_save_names.setdefault(name, {})
+    def _register_save(self, name: str, proxy: Proxy) -> str:
+        base = f"i{self._invoke}/{name}" if self._invoke is not None else name
+        by_step = self._step_save_names.setdefault(base, {})
         mixed = (self._step == PREFILL_STEP and any(
             s != PREFILL_STEP for s in by_step
         )) or (self._step != PREFILL_STEP and PREFILL_STEP in by_step)
@@ -365,23 +784,82 @@ class GenerateTracer(Tracer):
                 "save"
             )
         nid = self.graph.saves.pop(name)
-        wire = f"{name}@step{self._step}"
+        wire = f"{base}@step{self._step}"
         self.graph.saves[wire] = nid
         by_step[self._step] = wire
-        self._saved_proxies[name] = proxy
+        self._saved_proxies[base] = proxy
+        return base
+
+    # ---------------------------------------------------------- validation
+    def validate_shapes(self) -> None:
+        """``scan=True``: shape-check prefill-step taps via ``jax.eval_shape``
+        (the paper's FakeTensor scanning), without running the model.
+
+        Decode-step slices are additionally validated against the
+        per-execution site schedule; their shapes are fixed ``(B, 1, ...)``
+        singletons, so the prefill forward is where shape errors hide.
+        """
+        from repro.core.batching import split_invokes
+        from repro.core.generation import _step_order, slice_steps
+
+        zoo = self.model.zoo_model
+        if zoo is None:
+            raise RuntimeError(
+                "scan=True generation validation requires a model bound "
+                "via traced_lm (needs prefill)"
+            )
+        if self.invokes:
+            items = [
+                (g, inv.batch, inv.max_new_tokens)
+                for g, inv in zip(
+                    split_invokes(self.graph, len(self.invokes)),
+                    self.invokes,
+                )
+            ]
+        else:
+            batch = {"tokens": np.asarray(self.tokens),
+                     **{k: np.asarray(v)
+                        for k, v in self.model_kwargs.items()}}
+            items = [(self.graph, batch, self.max_new_tokens)]
+        step_sched = _step_order(zoo.site_schedule(self.mode))
+        for graph, batch, n_new in items:
+            slices = slice_steps(graph, n_new)  # step-rule validation
+            for step, sl in slices.items():
+                if step != PREFILL_STEP and not sl.is_empty():
+                    sl.graph.validate(step_sched.order)
+            pre = slices.get(PREFILL_STEP)
+            if pre is None or pre.is_empty():
+                continue
+            tokens = jax.numpy.asarray(batch.pop("tokens"))
+            if tokens.shape[1] < 2:
+                raise GraphValidationError(
+                    "prefill() taps require a prompt of >= 2 tokens; a "
+                    "single-token prompt has no prefill execution"
+                )
+            pre_mode = self.mode
+            pre_sched = step_sched
+            if pre_mode == "scan" and not getattr(zoo, "scan_prefill", True):
+                pre_mode = "unrolled"
+                pre_sched = _step_order(zoo.site_schedule("unrolled"))
+            batch.pop("lengths", None)
+            prompt = {"tokens": tokens[:, :-1], **batch}
+            max_len = int(tokens.shape[1]) - 1 + n_new
+
+            def pre_fn(params_, batch_):
+                return zoo.prefill(
+                    params_, batch_, mode=pre_mode, max_len=max_len
+                )
+
+            jax.eval_shape(
+                lambda p, b: run_interleaved(
+                    pre_fn, pre.graph, pre_sched, (p, b), {}, mode=pre_mode,
+                ),
+                self.model.params,
+                prompt,
+            )
 
     # ---------------------------------------------------------- execution
-    def validate_shapes(self) -> None:  # pragma: no cover - guard
-        raise NotImplementedError(
-            "scan=True shape validation is not supported for generation "
-            "traces yet"
-        )
-
-    def execute(self) -> dict[str, Any]:
-        from repro.core.generation import run_generation
-
-        if self.remote:
-            return self._execute_remote()
+    def _require_zoo(self):
         zoo = self.model.zoo_model
         if zoo is None:
             raise RuntimeError(
@@ -389,6 +867,16 @@ class GenerateTracer(Tracer):
                 "prefill/decode_step); plain TracedModel wraps only a "
                 "single forward"
             )
+        return zoo
+
+    def execute(self) -> dict[str, Any]:
+        from repro.core.generation import run_generation
+
+        if self.remote:
+            return self._execute_remote()
+        if self.invokes:
+            return self._execute_invokes()
+        zoo = self._require_zoo()
         extras = dict(self.model_kwargs)
         lengths = extras.pop("lengths", None)
         res = run_generation(
@@ -404,18 +892,68 @@ class GenerateTracer(Tracer):
         self.output_tokens = np.asarray(res.tokens)
         self.output_logits = res.logits
         self.logs = res.logs
-        return self._assemble_results(res.saves)
+        self._results = self._assemble_results(res.saves)
+        return self._results
+
+    def _execute_invokes(self) -> dict[str, Any]:
+        """Multi-invoke generation: every invoke becomes a row-group of ONE
+        slot-table decode loop; invokes share each decode step while
+        co-resident and retire independently (per-invoke max_new_tokens)."""
+        from repro.core.batching import split_invokes
+        from repro.core.generation import run_generation_invokes
+
+        zoo = self._require_zoo()
+        graphs = split_invokes(self.graph, len(self.invokes))
+        items = [
+            (g, inv.batch, inv.max_new_tokens)
+            for g, inv in zip(graphs, self.invokes)
+        ]
+        results = run_generation_invokes(
+            zoo, self.model.params, items, mode=self.mode
+        )
+        return self._finish_generation_invokes(results)
+
+    def _finish_generation_invokes(self, results: list) -> dict[str, Any]:
+        per = []
+        for inv, res in zip(self.invokes, results):
+            inv.output_tokens = np.asarray(res.tokens)
+            inv.output_logits = res.logits
+            inv.logs = res.logs
+            per.append(self._assemble_results(res.saves, invoke=inv.index))
+        return self._finish_invoke_results(per)
 
     def _execute_remote(self) -> dict[str, Any]:
         """Ship the step-annotated graph over the wire (paper §3.3): the
         server's ``kind="generate"`` path runs the decode loop with the
-        graph interleaved and only saves + generated tokens return."""
+        graph interleaved and only saves + generated tokens return.  A
+        multi-invoke trace ships all invokes in ONE request; the server
+        admits each as a row-group of its decode loop."""
         backend = self.backend or self.model.backend
         if backend is None:
             raise RuntimeError(
                 "remote=True requires a backend (NDIF client); pass "
                 "backend= or attach one to the model"
             )
+        if self.invokes:
+            from repro.core.batching import split_invokes
+            from repro.core.generation import GenerationResult
+
+            graphs = split_invokes(self.graph, len(self.invokes))
+            wires = backend.generate_invokes([
+                {"graph": g, "batch": inv.batch,
+                 "max_new_tokens": inv.max_new_tokens}
+                for g, inv in zip(graphs, self.invokes)
+            ])
+            results = []
+            for wire in wires:
+                saves = dict(wire)
+                results.append(GenerationResult(
+                    tokens=np.asarray(saves.pop("tokens")),
+                    logits=saves.pop("logits"),
+                    saves=saves,
+                    logs=[],
+                ))
+            return self._finish_generation_invokes(results)
         extras = {k: np.asarray(v) for k, v in self.model_kwargs.items()}
         lengths = extras.pop("lengths", None)
         wire = backend.generate(
@@ -429,26 +967,44 @@ class GenerateTracer(Tracer):
         # reserved keys: the generated ids and last-step logits
         self.output_tokens = np.asarray(saves.pop("tokens"))
         self.output_logits = saves.pop("logits")
-        return self._assemble_results(saves)
+        self._results = self._assemble_results(saves)
+        return self._results
 
-    def _assemble_results(self, saves: dict[str, Any]) -> dict[str, Any]:
-        """Stack per-step wire saves (``name@stepK``) back to user names."""
+    def _assemble_results(
+        self, saves: dict[str, Any], invoke: int | None = None
+    ) -> dict[str, Any]:
+        """Stack per-step wire saves (``name@stepK``) back to user names.
+
+        ``invoke`` scopes assembly to one invoke of a multi-invoke trace:
+        its per-invoke graph carries DEqualified wire names, so the
+        ``i{k}/`` prefix is stripped from the registered bases before
+        lookup."""
         from repro.core.generation import stack_step_saves
 
+        prefix = f"i{invoke}/" if invoke is not None else ""
         results: dict[str, Any] = {}
         for base, by_step in self._step_save_names.items():
-            vals = {s: saves[w] for s, w in by_step.items() if w in saves}
+            if prefix:
+                if not base.startswith(prefix):
+                    continue
+                local = {s: w[len(prefix):] for s, w in by_step.items()}
+                out_name = base[len(prefix):]
+            else:
+                local = by_step
+                out_name = base
+            vals = {s: saves[w] for s, w in local.items() if w in saves}
             if not vals:
                 continue
             if len(vals) == 1:
-                results[base] = next(iter(vals.values()))
+                results[out_name] = next(iter(vals.values()))
             else:
-                results[base] = stack_step_saves(vals)
+                results[out_name] = stack_step_saves(vals)
         # saves made outside the tracer API (hand-built graphs)
         for name, val in saves.items():
             if "@step" not in name:
                 results.setdefault(name, val)
-        self._results = results
+        if invoke is None:
+            self._results = results
         return results
 
 
@@ -463,10 +1019,6 @@ def _as_node(tracer: Tracer, value: Any) -> Node:
         return value.node
     value = np.asarray(value) if not np.isscalar(value) else value
     return tracer.graph.add("constant", value)
-
-
-def _encode_path(path: tuple) -> tuple:
-    return path
 
 
 class TracedModel:
@@ -495,6 +1047,7 @@ class TracedModel:
         # required for lm.generate
         self.zoo_model: Any | None = None
         self._tracers: list[Tracer] = []
+        self._session_active = False
         order = list(schedule.order)
         if ("output", None) not in order:
             order = order + [("output", None)]
@@ -522,6 +1075,11 @@ class TracedModel:
 
     # ------------------------------------------------------------- tracing
     def trace(self, *args: Any, **kwargs: Any) -> Tracer:
+        """Open a tracing context.
+
+        ``trace(tokens, ...)`` is a one-invoke trace; bare ``trace()``
+        expects prompts declared via ``tr.invoke(tokens)`` sub-contexts,
+        lowered into ONE merged forward on exit."""
         remote = kwargs.pop("remote", False)
         scan = kwargs.pop("scan", False)
         mode = kwargs.pop("mode", None)
@@ -538,25 +1096,32 @@ class TracedModel:
 
     def generate(
         self,
-        tokens: Any,
+        tokens: Any = None,
         max_new_tokens: int = 8,
         *,
         mode: str | None = None,
         remote: bool = False,
+        scan: bool = False,
         backend: Any | None = None,
         **extras: Any,
     ) -> "GenerateTracer":
         """Trace a multi-token greedy decode loop (see GenerateTracer).
 
+        With ``tokens=None`` this is the multi-invoke form: declare prompts
+        via ``tr.invoke(tokens, max_new_tokens=N)``; every invoke rides ONE
+        continuous decode loop and retires at its own ``max_new_tokens``
+        (which defaults to this call's value).
+
         Locally this requires a zoo-model binding
         (:func:`repro.models.traced.traced_lm`) because generation needs
         ``prefill``/``decode_step``.  With ``remote=True`` the step graph
         ships to the NDIF server instead (``kind="generate"`` + ``graph``)
-        and only saves + generated tokens come back.
+        and only saves + generated tokens come back.  ``scan=True``
+        shape-checks prefill-step taps via ``jax.eval_shape``.
         """
         return GenerateTracer(
             self, tokens, max_new_tokens, mode=mode, extras=extras,
-            remote=remote, backend=backend,
+            remote=remote, scan=scan, backend=backend,
         )
 
     def session(self, *, remote: bool = False, backend: Any | None = None):
@@ -585,6 +1150,21 @@ class TracedModel:
         )
         return getattr(root, name)
 
+    def __setattr__(self, name: str, value: Any) -> None:
+        # Top-level site assignment (``lm.logits += bias``) is a setter on
+        # that site, exactly like the Envoy paths — never a plain attribute
+        # (which would silently shadow the site for the rest of the
+        # process).  Outside a trace context this raises.
+        sites = self.__dict__.get("site_names")
+        if sites is not None and name in sites:
+            self._active._write_back(name, None, (), value)
+            return
+        object.__setattr__(self, name, value)
+
+    def __dir__(self) -> list[str]:
+        roots = {s.split(".")[0] for s in self.site_names}
+        return sorted(set(super().__dir__()) | roots)
+
 
 def _layer_prefixes(per_layer_sites: set[str]) -> set[str]:
     """Module-path prefixes that accept a [layer] index."""
@@ -598,13 +1178,17 @@ def _layer_prefixes(per_layer_sites: set[str]) -> set[str]:
 
 
 class Session:
-    """The paper's Session context: several traces, one remote request.
+    """The paper's Session context: several traces, one request, value flow.
 
     Traces created inside a session are deferred; on session exit they
-    execute sequentially (locally) or ship as one request (remotely),
-    ``saves`` from earlier traces usable by later ones is out of scope —
-    each trace is self-contained, matching the paper's performance benefit
-    (one request, N traces).
+    execute in declaration order (locally) or ship as ONE request
+    (remotely).  Saves from an earlier trace are legal inside a later one —
+    the tracer bridges them as cross-trace inputs, bound as constants when
+    the consuming trace executes (server-side for remote sessions, so the
+    intermediate values never cross the wire).
+
+    Sessions do not nest, and a remote session without a backend fails at
+    construction — before any trace body runs.
     """
 
     def __init__(
@@ -613,6 +1197,11 @@ class Session:
         self.model = model
         self.remote = remote
         self.backend = backend or model.backend
+        if remote and self.backend is None:
+            raise RuntimeError(
+                "remote session requires a backend (NDIF client); pass "
+                "backend= or attach one to the model"
+            )
         self.tracers: list[Tracer] = []
         self._active = False
 
@@ -621,24 +1210,37 @@ class Session:
             raise RuntimeError("session is not active")
         tracer = self.model.trace(*args, **kwargs)
         tracer._deferred = True
+        tracer._session = self
         self.tracers.append(tracer)
         return tracer
 
     def __enter__(self) -> "Session":
+        if self.model._session_active:
+            raise RuntimeError("sessions cannot be nested")
+        self.model._session_active = True
         self._active = True
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self._active = False
+        self.model._session_active = False
         if exc_type is not None:
             return
+        from repro.core.batching import split_results
+
         if self.remote:
-            if self.backend is None:
-                raise RuntimeError("remote session requires a backend")
             results = self.backend.execute_session(self)
             for tracer, res in zip(self.tracers, results):
-                tracer._results = res
+                if tracer.invokes:
+                    tracer._finish_invoke_results(
+                        split_results(res, tracer._merged)
+                    )
+                else:
+                    tracer._results = res
         else:
+            # declaration order; an exception in trace k propagates and
+            # skips every later trace (their results stay unavailable)
             for tracer in self.tracers:
                 tracer._deferred = False
+                tracer._bind_cross_inputs()
                 tracer.execute()

@@ -7,15 +7,33 @@
         lm.layers[16].mlp.output[:, -1, neurons] = 10.0
         out = lm.output.save()
 
+The multi-invoke form (paper Fig. 3a) declares several prompts — ragged
+lengths welcome — inside one trace; they lower into ONE merged, padded
+forward and each invoke's saves come back at its solo shape::
+
+    with lm.trace() as tr:
+        with tr.invoke(tokens_a):
+            a = lm.layers[4].output.save("acts")
+        with tr.invoke(tokens_b):          # different prompt length is fine
+            b = lm.output.save("out")
+
 Because the zoo model carries ``prefill``/``decode_step``, the binding also
 enables generation tracing (multi-token decode with per-step
-interventions)::
+interventions); the multi-invoke form rides one continuous slot-table
+decode loop with per-invoke ``max_new_tokens``::
 
     with lm.generate(tokens, max_new_tokens=8) as tr:
         for s in tr.steps():
             lm.layers[4].mlp.output += steer   # write at this decode step
             lm.logits.save("logits")           # stacked to (B, 8, V)
     tr.output_tokens                           # (B, 8) greedy ids
+
+    with lm.generate() as tr:                  # multi-invoke generation
+        with tr.invoke(toks_a, max_new_tokens=4) as ia:
+            for s in tr.steps():
+                lm.logits.save("logits")
+        with tr.invoke(toks_b, max_new_tokens=9) as ib:
+            ...
 
 See :class:`repro.core.tracer.GenerateTracer` and
 :mod:`repro.core.generation` for semantics and the execution model.

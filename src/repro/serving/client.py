@@ -24,30 +24,78 @@ class NDIFClient:
 
     # Tracer-facing API ------------------------------------------------
     def execute(self, tracer) -> dict[str, Any]:
-        batch = self._tracer_batch(tracer)
+        """Ship one trace.  Multi-invoke traces are lowered client-side
+        (``tracer.execution_graph()`` is the merged row-sliced graph) and
+        flagged ``premerged`` so the server runs them as-is; ``stop``
+        carries tracer.stop() truncation to the server."""
         msg = {
             "kind": "trace",
             "model": self.model_name,
-            "graph": graph_to_json(tracer.graph),
-            "batch": batch,
+            "graph": graph_to_json(tracer.execution_graph()),
+            "batch": self._tracer_batch(tracer),
         }
+        if tracer.invokes:
+            msg["premerged"] = True
+        if tracer._stop:
+            msg["stop"] = True
         reply = self._roundtrip(msg)
         return reply["results"]
 
     def execute_session(self, session) -> list[dict[str, Any]]:
-        msg = {
+        """Ship a whole session as ONE request.
+
+        Cross-trace value flow travels as ``cross`` refs — (input name,
+        producing trace index, save name) triples — and is bound
+        server-side; the intermediate values never cross the wire."""
+        traces = []
+        for t in session.tracers:
+            entry = {
+                "graph": graph_to_json(t.execution_graph()),
+                "batch": self._tracer_batch(t),
+            }
+            if t.invokes:
+                entry["premerged"] = True
+            if t._stop:
+                entry["stop"] = True
+            cross = self._cross_refs(session, t)
+            if cross:
+                entry["cross"] = cross
+            traces.append(entry)
+        reply = self._roundtrip({
             "kind": "session",
             "model": self.model_name,
-            "traces": [
-                {
-                    "graph": graph_to_json(t.graph),
-                    "batch": self._tracer_batch(t),
-                }
-                for t in session.tracers
-            ],
-        }
-        reply = self._roundtrip(msg)
+            "traces": traces,
+        })
         return reply["results"]
+
+    @staticmethod
+    def _cross_refs(session, tracer) -> list[dict]:
+        """Wire refs for this trace's cross-trace inputs.
+
+        Names are translated to the forms the SERVER sees: a consuming
+        multi-invoke trace exposes its bridged input replicated per invoke
+        under the merge prefix (``r{k}/__xtrace...``); a producing
+        multi-invoke trace's qualified save ``i{k}/name`` appears in its
+        wire results as ``r{k}/name``."""
+        refs = []
+        for key, (src, save) in tracer._cross_inputs.items():
+            src_idx = session.tracers.index(src)
+            if src.invokes:
+                k, sep, rest = save.partition("/")
+                if sep and k.startswith("i") and k[1:].isdigit():
+                    save = f"r{k[1:]}/{rest}"
+                else:
+                    # invoke-free saves execute on (and demux from) invoke 0
+                    save = f"r0/{save}"
+            if tracer.invokes:
+                names = [m for m, o in tracer._merged_input_map.items()
+                         if o == key]
+            else:
+                names = [key]
+            refs.extend(
+                {"input": n, "trace": src_idx, "save": save} for n in names
+            )
+        return refs
 
     # Remote module training (paper Code Example 5) ----------------------
     def train_module(self, graph, batch, *, trainable, loss="loss",
@@ -90,6 +138,33 @@ class NDIFClient:
         }
         if graph is not None:
             msg["graph"] = graph_to_json(graph)
+        return self._roundtrip(msg)["results"]
+
+    def generate_invokes(self, invokes: list[dict]) -> list[dict]:
+        """Ship a multi-invoke generation trace as ONE request.
+
+        ``invokes`` is ``[{"graph": InterventionGraph | None, "batch":
+        dict, "max_new_tokens": int}, ...]``; the server admits every
+        invoke as a row-group of one decode loop (its persistent
+        continuous-batching loop when hosted with ``policy="continuous"``,
+        a private engine loop otherwise) and returns one result dict —
+        saves plus reserved ``tokens``/``logits`` — per invoke, in order.
+        """
+        wire = []
+        for inv in invokes:
+            entry = {
+                "batch": {k: np.asarray(v)
+                          for k, v in inv["batch"].items()},
+                "max_new_tokens": int(inv.get("max_new_tokens", 16)),
+            }
+            if inv.get("graph") is not None and inv["graph"].nodes:
+                entry["graph"] = graph_to_json(inv["graph"])
+            wire.append(entry)
+        msg = {
+            "kind": "generate",
+            "model": self.model_name,
+            "invokes": wire,
+        }
         return self._roundtrip(msg)["results"]
 
     def stats(self) -> dict:

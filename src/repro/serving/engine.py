@@ -200,10 +200,34 @@ class InferenceEngine:
 
     # ------------------------------------------------------------- execute
     def execute(
-        self, graph: InterventionGraph, batch: dict
+        self, graph: InterventionGraph, batch: dict, *, stop: bool = False
     ) -> tuple[dict[str, Any], Any]:
-        """Run ``graph`` interleaved with one forward. Returns (saves, out)."""
+        """Run ``graph`` interleaved with one forward. Returns (saves, out).
+
+        ``stop=True`` (``tracer.stop()`` shipped over the wire) truncates
+        the forward after the last site the graph references.  Truncated
+        executions run EAGERLY — an exception at jit-trace time would abort
+        the whole trace — and skip the compile cache: the saving is model
+        compute, not compile reuse.
+        """
         graph.validate(self.schedule.order)
+        if stop:
+            from repro.core.interleave import last_referenced_site
+
+            t0 = time.perf_counter()
+            _out, saves, _logs = run_interleaved(
+                self._model_fn,
+                graph,
+                self.schedule,
+                (self.params, batch),
+                {},
+                mode=self.mode,
+                stop_after_site=last_referenced_site(graph, self.schedule),
+            )
+            saves = jax.tree.map(lambda x: jax.device_get(x), saves)
+            self.stats.exec_seconds += time.perf_counter() - t0
+            self.stats.executions += 1
+            return saves, None
         const_env = {
             n.id: n.args[0] for n in graph.nodes if n.op == "constant"
         }
@@ -294,6 +318,39 @@ class InferenceEngine:
         self.stats.generations += 1
         self.stats.gen_tokens += int(res.tokens.shape[0] * res.tokens.shape[1])
         return res
+
+    def generate_invokes(self, items: list[tuple]) -> list[GenerationResult]:
+        """Serve a multi-invoke generation request as ONE decode loop.
+
+        ``items`` is ``[(graph, batch, max_new_tokens), ...]`` — the wire
+        form of a multi-invoke ``lm.generate()`` trace.  Every invoke is a
+        row-group of one slot-table loop (shared prefill for multi-token
+        prompts, independent retirement) built on the engine's cached
+        compiled step functions, so repeated identically-shaped requests
+        perform zero new compiles.
+        """
+        from repro.core.generation import run_generation_invokes
+
+        t0 = time.perf_counter()
+        results = run_generation_invokes(
+            self.model,
+            self.params,
+            items,
+            mode=self.mode,
+            prefill_fn=lambda p, b, ml: self._prefill_jit(p, b, max_len=ml),
+            decode_fn=self._decode_jit,
+            empty_cache_fn=lambda p, b, bs, ml, kind: self._empty_cache_jit(
+                p, b, batch_size=bs, max_len=ml, kind=kind
+            ),
+            write_rows_fn=self._write_rows_jit,
+            clear_rows_fn=self._clear_rows_jit,
+            stats=self.stats,
+        )
+        for res in results:
+            res.saves = jax.tree.map(lambda x: jax.device_get(x), res.saves)
+        self.stats.exec_seconds += time.perf_counter() - t0
+        self.stats.executions += 1
+        return results
 
     # ------------------------------------------------------ continuous loop
     def start_decode_loop(

@@ -50,7 +50,12 @@ from typing import Any
 
 import numpy as np
 
-from repro.core.batching import RAGGED_INPUTS, merge_graphs, split_results
+from repro.core.batching import (
+    RAGGED_INPUTS,
+    merge_graphs,
+    merge_invoke_batches,
+    split_results,
+)
 from repro.core.generation import SlotAllocationError
 from repro.core.graph import ALL_STEPS, InterventionGraph
 
@@ -66,6 +71,13 @@ class Request:
     # None => single interleaved forward; an int => generation request
     # (prefill + that many decode steps, graph nodes carry step coords).
     max_new_tokens: int | None = None
+    # A multi-invoke trace lowered client-side: the graph already contains
+    # per-invoke row slices, so it executes as-is — never re-merged with
+    # co-tenant requests (a double merge would re-slice its slices).
+    premerged: bool = False
+    # tracer.stop(): truncate the forward after the last referenced site.
+    # Runs solo (schedule truncation is per-request) and eagerly.
+    stop: bool = False
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
 
@@ -100,6 +112,10 @@ class Ticket:
 
 
 def _merge_key(req: Request, pad_slack: int = 0) -> tuple | None:
+    if req.premerged or req.stop:
+        # premerged graphs already encode their row structure; stopped
+        # traces truncate the site schedule per-request — both run solo
+        return None
     for n in req.graph.nodes:
         if n.op == "grad_get":
             return None  # grads never merge — sequential fallback
@@ -255,7 +271,9 @@ class CoTenantScheduler:
                     "logits": np.asarray(res.logits),
                 }
             else:
-                saves, _ = self.engine.execute(req.graph, req.batch)
+                saves, _ = self.engine.execute(
+                    req.graph, req.batch, stop=req.stop
+                )
                 ticket.result = saves
         except Exception as e:  # surface per-request, keep serving
             ticket.error = f"{type(e).__name__}: {e}"
@@ -295,64 +313,22 @@ class CoTenantScheduler:
         return group
 
     def _merge_batch(
-        self, reqs: list[Request], sizes: list[int]
+        self, reqs: list[Request]
     ) -> tuple[dict, list[dict[str, int]] | None, int, int]:
         """Right-pad ragged inputs to the group max and concatenate rows.
 
+        Thin wrapper over :func:`repro.core.batching.merge_invoke_batches`
+        (the same lowering the multi-invoke tracer uses client-side).
         Returns ``(batch, tap_lengths, real_cells, padded_cells)`` where
         ``tap_lengths`` is the per-request record driving save unpadding
         (None when the group is shape-uniform).  Per-row valid-length arrays
         (``lengths`` / ``src_lengths``) are synthesized for the model unless
         the requests already carry them.
         """
-        ragged_keys = [
-            k for k in reqs[0].batch
-            if k in RAGGED_INPUTS and np.asarray(reqs[0].batch[k]).ndim >= 2
-        ]
-        maxes = {
-            k: max(int(np.asarray(r.batch[k]).shape[1]) for r in reqs)
-            for k in ragged_keys
-        }
-        ragged = any(
-            int(np.asarray(r.batch[k]).shape[1]) != maxes[k]
-            for r in reqs for k in ragged_keys
+        batch, tap_lengths, _sizes, real, padded = merge_invoke_batches(
+            [r.batch for r in reqs],
+            generation=reqs[0].max_new_tokens is not None,
         )
-        batch = {}
-        for k in reqs[0].batch:
-            arrs = [np.asarray(r.batch[k]) for r in reqs]
-            if k in maxes:
-                arrs = [
-                    np.pad(a, ((0, 0), (0, maxes[k] - a.shape[1]))
-                           + ((0, 0),) * (a.ndim - 2))
-                    for a in arrs
-                ]
-            batch[k] = np.concatenate(arrs)
-        real = padded = 0
-        for r, rows in zip(reqs, sizes):
-            for k in ragged_keys:
-                L = int(np.asarray(r.batch[k]).shape[1])
-                real += rows * L
-                padded += rows * (maxes[k] - L)
-        tap_lengths = None
-        if ragged:
-            is_gen = reqs[0].max_new_tokens is not None
-            tap_lengths = []
-            for r in reqs:
-                rec = {}
-                for k in ragged_keys:
-                    L = int(np.asarray(r.batch[k]).shape[1])
-                    # generation prefill taps see the prompt MINUS the
-                    # step-0 token, so prefill saves unpad to L - 1
-                    rec[k] = L - 1 if (is_gen and k == "tokens") else L
-                tap_lengths.append(rec)
-            for k in ragged_keys:
-                lk = RAGGED_INPUTS[k]
-                if lk not in batch:
-                    batch[lk] = np.concatenate([
-                        np.full(rows, np.asarray(r.batch[k]).shape[1],
-                                np.int32)
-                        for r, rows in zip(reqs, sizes)
-                    ])
         return batch, tap_lengths, real, padded
 
     def _run_group(self, group: list[tuple[Request, Ticket]]) -> list[Ticket]:
@@ -368,7 +344,7 @@ class CoTenantScheduler:
                 int(np.asarray(next(iter(r.batch.values()))).shape[0])
                 for r in reqs
             ]
-            batch, tap_lengths, real, padded = self._merge_batch(reqs, sizes)
+            batch, tap_lengths, real, padded = self._merge_batch(reqs)
             merged = merge_graphs(
                 [r.graph for r in reqs], sizes,
                 lengths=tap_lengths,

@@ -12,11 +12,30 @@ Paper §3.3 / Figure 4.  Responsibilities implemented here:
   * **scheduling** — sequential or parallel co-tenancy per model.
 
 The wire protocol is a dict (JSON-encodable via repro.core.serialize):
-  {"kind": "trace",   "model": str, "graph": {...}, "batch": {...}}
-  {"kind": "session", "model": str, "traces": [{graph, batch}, ...]}
+  {"kind": "trace",   "model": str, "graph": {...}, "batch": {...},
+   "premerged": bool, "stop": bool}
+  {"kind": "session", "model": str,
+   "traces": [{graph, batch, premerged?, stop?, cross?}, ...]}
   {"kind": "generate","model": str, "batch": {...}, "max_new_tokens": int}
+  {"kind": "generate","model": str,
+   "invokes": [{graph?, batch, max_new_tokens}, ...]}
   {"kind": "stats",   "model": str}
 Reply: {"ok": bool, "results": ... | "error": str}
+
+Multi-invoke traces arrive PRE-merged (the tracer lowered its invokes into
+one row-sliced graph client-side): ``premerged=True`` makes the scheduler
+run them as-is — re-merging with co-tenant requests would re-slice their
+slices.  ``stop=True`` (tracer.stop()) truncates the forward after the last
+referenced site; it runs solo and eagerly.  A multi-invoke GENERATION
+request ships its invokes as a list: under ``policy="continuous"`` each
+invoke is admitted as a row-group of the persistent decode loop (retiring
+at its own ``max_new_tokens``, co-tenants welcome); other policies serve
+the list through one private engine-level slot loop.
+
+Session traces may carry ``cross`` refs — ``[{input, trace, save}, ...]``
+— binding an EARLIER trace's saved value as a constant input of this one
+(the session value-flow DAG).  Traces with refs execute in order,
+server-side; the intermediate values never cross the wire.
 
 Ragged lengths cross the wire as ordinary batch arrays: a right-padded
 ``batch`` may carry ``lengths`` (B,) — per-row valid token counts — and,
@@ -103,6 +122,123 @@ class NDIFServer:
         by the generation driver (repro.core.generation.slice_steps)."""
         self._check_registry(graph)
 
+    # ----------------------------------------------------- session handling
+    def _handle_session(self, sched, engine, msg: dict) -> dict:
+        """Execute a session's traces as one request.
+
+        Traces without ``cross`` refs submit together (they may co-tenant
+        merge); a trace WITH refs needs its producers' results first, so
+        sessions carrying refs execute strictly in declaration order and
+        the referenced saves are patched in as constants before validation
+        — the session value-flow DAG, evaluated server-side.
+        """
+        traces = msg["traces"]
+        any_cross = any(tr.get("cross") for tr in traces)
+        results: list = []
+        if not any_cross:
+            tickets = []
+            for tr in traces:
+                graph = graph_from_json(tr["graph"])
+                self._validate_graph(engine, graph)
+                batch = {k: np.asarray(v) for k, v in tr["batch"].items()}
+                tickets.append(sched.submit(Request(
+                    graph=graph, batch=batch,
+                    premerged=bool(tr.get("premerged")),
+                    stop=bool(tr.get("stop")),
+                )))
+            sched.drain()
+            for t in tickets:
+                if t.error:
+                    return {"ok": False, "error": t.error}
+                results.append(t.result)
+            return {"ok": True, "results": results}
+        for i, tr in enumerate(traces):
+            graph = graph_from_json(tr["graph"])
+            for ref in tr.get("cross") or []:
+                src = int(ref["trace"])
+                if not 0 <= src < i:
+                    return {"ok": False, "error":
+                            f"trace {i} references trace {src}; cross-"
+                            "trace values only flow forward"}
+                try:
+                    value = results[src][ref["save"]]
+                except KeyError:
+                    return {"ok": False, "error":
+                            f"trace {src} has no save {ref['save']!r} "
+                            f"(trace {i} references it)"}
+                self._patch_cross_input(graph, ref["input"], value)
+            self._validate_graph(engine, graph)
+            batch = {k: np.asarray(v) for k, v in tr["batch"].items()}
+            ticket = sched.submit(Request(
+                graph=graph, batch=batch,
+                premerged=bool(tr.get("premerged")),
+                stop=bool(tr.get("stop")),
+            ))
+            sched.drain()
+            if ticket.error:
+                return {"ok": False, "error": ticket.error}
+            results.append(ticket.result)
+        return {"ok": True, "results": results}
+
+    @staticmethod
+    def _patch_cross_input(graph, name: str, value) -> None:
+        """Rewrite ``input`` nodes named ``name`` into constants carrying an
+        earlier trace's saved value (in place: ids/edges are untouched, and
+        the engine's structural key abstracts constant VALUES, so patched
+        graphs still share compiled executables)."""
+        hit = False
+        for n in graph.nodes:
+            if n.op == "input" and n.args[0] == name:
+                n.op = "constant"
+                n.args = (np.asarray(value),)
+                hit = True
+        if not hit:
+            raise GraphValidationError(
+                f"cross ref targets unknown input {name!r}"
+            )
+
+    def _handle_generate_invokes(self, sched, engine, msg: dict) -> dict:
+        """One multi-invoke generation request -> one merged decode loop.
+
+        Under ``policy="continuous"`` every invoke is submitted as its own
+        scheduler request: all of them admit into the persistent slot-table
+        loop at the same boundary (sharing a prefill when bucket-compatible)
+        and retire independently — co-tenant requests ride along.  Other
+        policies serve the invokes through one private engine-level loop
+        (:meth:`InferenceEngine.generate_invokes`).
+        """
+        items = []
+        for inv in msg["invokes"]:
+            graph = (
+                graph_from_json(inv["graph"]) if inv.get("graph")
+                else InterventionGraph()
+            )
+            if graph.nodes:
+                self._validate_generation_graph(engine, graph)
+            batch = {k: np.asarray(v) for k, v in inv["batch"].items()}
+            items.append((graph, batch,
+                          int(inv.get("max_new_tokens", 16))))
+        if sched.policy == "continuous":
+            tickets = [
+                sched.submit(Request(graph=g, batch=b, max_new_tokens=n))
+                for g, b, n in items
+            ]
+            sched.drain()
+            results = []
+            for t in tickets:
+                if t.error:
+                    return {"ok": False, "error": t.error}
+                results.append(t.result)
+            return {"ok": True, "results": results}
+        results = []
+        for res in engine.generate_invokes(items):
+            results.append({
+                **res.saves,
+                "tokens": np.asarray(res.tokens),
+                "logits": np.asarray(res.logits),
+            })
+        return {"ok": True, "results": results}
+
     # ------------------------------------------------------------ handling
     def handle(self, payload: bytes) -> bytes:
         try:
@@ -127,7 +263,11 @@ class NDIFServer:
             graph = graph_from_json(msg["graph"])
             self._validate_graph(engine, graph)
             batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
-            ticket = sched.submit(Request(graph=graph, batch=batch))
+            ticket = sched.submit(Request(
+                graph=graph, batch=batch,
+                premerged=bool(msg.get("premerged")),
+                stop=bool(msg.get("stop")),
+            ))
             sched.drain()
             if ticket.error:
                 return {"ok": False, "error": ticket.error}
@@ -135,19 +275,7 @@ class NDIFServer:
             return {"ok": True, "results": self.object_store.pop(
                 ticket.request_id), "request_id": ticket.request_id}
         if kind == "session":
-            results = []
-            tickets = []
-            for tr in msg["traces"]:
-                graph = graph_from_json(tr["graph"])
-                self._validate_graph(engine, graph)
-                batch = {k: np.asarray(v) for k, v in tr["batch"].items()}
-                tickets.append(sched.submit(Request(graph=graph, batch=batch)))
-            sched.drain()
-            for t in tickets:
-                if t.error:
-                    return {"ok": False, "error": t.error}
-                results.append(t.result)
-            return {"ok": True, "results": results}
+            return self._handle_session(sched, engine, msg)
         if kind == "train_module":
             from repro.serving.remote_train import train_graph_inputs
 
@@ -167,6 +295,8 @@ class NDIFServer:
             return {"ok": True,
                     "results": {"params": trained, "losses": history}}
         if kind == "generate":
+            if msg.get("invokes") is not None:
+                return self._handle_generate_invokes(sched, engine, msg)
             # Routed through the scheduler so compatible generation
             # requests batch-merge exactly like single-forward traces.
             graph = (

@@ -1,0 +1,665 @@
+"""Invoke-based tracer API: multi-invoke traces, cross-trace sessions, and
+early-stop (paper §3.2, Fig. 3).
+
+Layers under test:
+  * tracer level — ``tr.invoke`` sub-contexts lower into ONE merged forward
+    (per-invoke getters sliced to rows/true lengths, setters row-confined);
+    parity vs solo traces across all four model families;
+  * generation — multi-invoke ``lm.generate()`` rides one slot-table decode
+    loop with per-invoke ``max_new_tokens``;
+  * sessions — forward value flow (a saved proxy from trace k consumed by
+    trace k+1), locally and over the wire as one request; edge-case guards;
+  * early stop — ``tr.stop()`` truncates execution after the last
+    referenced site, locally and server-side;
+  * serving — premerged wire form, zero recompiles on repeat requests;
+  * discoverability — ``Envoy.__dir__``, ``Tracer.result`` KeyError, and
+    ``scan=True`` prefill shape validation for generation traces.
+
+Parity conventions (see tests/test_ragged.py): causal families are held to
+bit-exact, encdec to 1e-5 (non-causal encoder softmax reduction order).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batching import merge_invoke_batches, split_invokes
+from repro.core.graph import GraphValidationError, InterventionGraph, Ref
+from repro.core.interleave import SiteSchedule
+from repro.core.serialize import dumps, loads
+from repro.core.tracer import TracedModel
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving import LoopbackTransport, NDIFClient, NDIFServer
+
+FAMILIES = {
+    "paper-gpt-small": "transformer",
+    "mamba2-1.3b": "ssm",
+    "zamba2-2.7b": "hybrid",
+    "seamless-m4t-large-v2": "encdec",
+}
+
+
+@pytest.fixture(scope="module", params=sorted(FAMILIES))
+def family(request):
+    arch = request.param
+    cfg = R.get_config(arch, reduced=True)
+    model = R.build_model(arch, cfg)
+    params = model.init(jax.random.key(0))
+    return arch, cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def gpt_lm():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, traced_lm(model, params)
+
+
+def _tokens(cfg, rows, seq, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (rows, seq)).astype(np.int32)
+
+
+def _extras(cfg, rows, seed):
+    if cfg.arch_type != "audio":
+        return {}
+    rng = np.random.default_rng(seed + 1000)
+    return {"src_embeds": rng.standard_normal(
+        (rows, cfg.n_source_frames, cfg.d_model)).astype(np.float32)}
+
+
+def _probe_site(cfg):
+    return "decoder.output" if cfg.arch_type == "audio" else "layers.output"
+
+
+def _counting_model(n_layers=3, d=4):
+    """Tiny model whose site fires are observable (stop/merge counting)."""
+    fired = []
+    from repro.core import taps
+
+    ws = jnp.stack(
+        [jnp.eye(d, dtype=jnp.float32) * (i + 1) for i in range(n_layers)]
+    )
+
+    def model_fn(params, x):
+        fired.append("embed")
+        h = taps.site("embed", x)
+        for i in range(n_layers):
+            h = taps.site("layers.input", h, layer=i)
+            fired.append(f"layer{i}")  # about to pay for layer i's matmul
+            h = h @ params["w"][i]
+            h = taps.site("layers.output", h, layer=i)
+        fired.append("logits")
+        return taps.site("logits", h)
+
+    order = [("embed", None)]
+    for i in range(n_layers):
+        order += [("layers.input", i), ("layers.output", i)]
+    order += [("logits", None)]
+    lm = TracedModel(model_fn, {"w": ws},
+                     SiteSchedule(order, (), n_layers), name="counting")
+    return lm, fired, ws
+
+
+# ------------------------------------------------------------ tracer level
+class TestInvokeTrace:
+    def test_two_invokes_one_forward_parity(self):
+        lm, fired, ws = _counting_model()
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        with lm.trace() as tr:
+            with tr.invoke(x) as i0:
+                a = lm.layers[0].output.save("acts")
+                o0 = lm.output.save("out")
+            with tr.invoke(3 * x) as i1:
+                o1 = lm.output.save("out")
+        assert fired.count("embed") == 1  # ONE merged forward
+        with lm.trace(x):
+            r0 = lm.output.save("o")
+        with lm.trace(3 * x):
+            r1 = lm.output.save("o")
+        np.testing.assert_array_equal(np.asarray(o0.value), np.asarray(r0.value))
+        np.testing.assert_array_equal(np.asarray(o1.value), np.asarray(r1.value))
+        np.testing.assert_array_equal(np.asarray(a.value), np.asarray(x @ ws[0]))
+        # per-invoke access mirrors the flat aliases
+        np.testing.assert_array_equal(
+            np.asarray(i0.result("out")), np.asarray(o0.value))
+        np.testing.assert_array_equal(
+            np.asarray(i1.result("out")), np.asarray(o1.value))
+
+    def test_setter_confined_to_its_invoke(self):
+        lm, _, _ = _counting_model()
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        with lm.trace() as tr:
+            with tr.invoke(x):
+                lm.layers[0].output = 0.0 * lm.layers[0].output
+                z = lm.output.save("out")
+            with tr.invoke(x):
+                nz = lm.output.save("out")
+        with lm.trace(x):
+            ref = lm.output.save("o")
+        assert np.all(np.asarray(z.value) == 0)
+        np.testing.assert_array_equal(np.asarray(nz.value), np.asarray(ref.value))
+
+    def test_duplicate_name_needs_invoke_scope(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with lm.trace() as tr:
+            with tr.invoke(x):
+                lm.output.save("out")
+            with tr.invoke(2 * x):
+                lm.output.save("out")
+        # qualified names always resolve; the bare duplicate does not
+        assert tr.result("i0/out") is not None
+        with pytest.raises(KeyError, match="i1/out"):
+            tr.result("out")
+
+    def test_result_keyerror_names_available(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with lm.trace(x) as tr:
+            lm.output.save("present")
+        with pytest.raises(KeyError, match="available: \\['present'\\]"):
+            tr.result("absent")
+
+    def test_invoke_api_guards(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with lm.trace(x) as tr:
+            tr._deferred = True
+            with pytest.raises(RuntimeError, match="multi-invoke"):
+                tr.invoke(x)
+        with pytest.raises(GraphValidationError, match="invoke"):
+            with lm.trace():
+                pass  # no invokes declared
+        with lm.trace() as tr:
+            tr._deferred = True
+            with tr.invoke(x):
+                with pytest.raises(RuntimeError, match="nested"):
+                    with tr.invoke(x):
+                        pass
+
+    def test_tap_outside_invoke_rejected(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with pytest.raises(ValueError, match="outside"):
+            with lm.trace() as tr:
+                tr.invoke(x)  # declared but tapped outside the context
+                lm.output.save("out")
+
+    def test_cross_invoke_flow_rejected(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with pytest.raises(ValueError, match="cross-invoke"):
+            with lm.trace() as tr:
+                with tr.invoke(x):
+                    h = lm.layers[0].output
+                with tr.invoke(x):
+                    lm.layers[1].output = h * 2.0
+
+    def test_shared_constant_replicated(self):
+        lm, _, ws = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with lm.trace() as tr:
+            scale = tr.constant(np.float32(2.0))  # outside any invoke
+            with tr.invoke(x):
+                lm.layers[0].output = lm.layers[0].output * scale
+                a = lm.output.save("out")
+            with tr.invoke(x):
+                lm.layers[0].output = lm.layers[0].output * scale
+                b = lm.output.save("out")
+        np.testing.assert_array_equal(np.asarray(a.value), np.asarray(b.value))
+
+    def test_invoke_free_save_collision_rejected(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with pytest.raises(ValueError, match="ambiguous"):
+            with lm.trace() as tr:
+                with tr.invoke(x):
+                    lm.output.save("x")
+                # invoke-free save of the SAME name lands on invoke 0 too
+                tr.constant(np.float32(3.0)).save("x")
+
+    def test_envoy_dir_lists_children(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with lm.trace(x) as tr:
+            tr._deferred = True
+            assert dir(lm.layers[0]) == ["input", "output"]
+            root = dir(lm)
+        for name in ("embed", "layers", "logits", "output"):
+            assert name in root
+
+
+def test_three_invoke_ragged_parity(family):
+    """The acceptance bar: a 3-invoke ragged trace executes as ONE merged
+    forward with per-invoke results bit-exact vs three solo traces (causal
+    families; encdec 1e-5)."""
+    arch, cfg, model, params = family
+    lm = traced_lm(model, params)
+    site = _probe_site(cfg)
+    lengths = (10, 14, 7)
+    toks = [_tokens(cfg, 1, s, i) for i, s in enumerate(lengths)]
+    extras = [_extras(cfg, 1, i) for i in range(3)]
+
+    calls = {"n": 0}
+    orig = model.forward
+
+    def counted(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    model.forward = counted
+    try:
+        with lm.trace() as tr:
+            invs = []
+            for t, ex in zip(toks, extras):
+                with tr.invoke(t, **ex) as inv:
+                    lm_site = lm
+                    for part in site.split(".")[:-1]:
+                        lm_site = getattr(lm_site, part)
+                    getattr(lm_site[1], site.split(".")[-1]).save("acts")
+                    lm.output.save("out")
+                    invs.append(inv)
+        assert calls["n"] == 1, "expected ONE merged forward"
+    finally:
+        model.forward = orig
+
+    for inv, t, ex in zip(invs, toks, extras):
+        with lm.trace(t, **ex):
+            lm_site = lm
+            for part in site.split(".")[:-1]:
+                lm_site = getattr(lm_site, part)
+            sa = getattr(lm_site[1], site.split(".")[-1]).save("acts")
+            so = lm.output.save("out")
+        got_a, got_o = np.asarray(inv.result("acts")), np.asarray(inv.result("out"))
+        want_a, want_o = np.asarray(sa.value), np.asarray(so.value)
+        assert got_a.shape == want_a.shape  # true solo shapes, not padded
+        assert got_o.shape == want_o.shape
+        if FAMILIES[arch] == "encdec":
+            np.testing.assert_allclose(got_a, want_a, rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(got_o, want_o, rtol=1e-5, atol=1e-5)
+        else:
+            np.testing.assert_array_equal(got_a, want_a)
+            np.testing.assert_array_equal(got_o, want_o)
+
+
+def test_merge_invoke_batches_ragged():
+    b0 = {"tokens": np.ones((2, 5), np.int32)}
+    b1 = {"tokens": np.ones((1, 8), np.int32)}
+    batch, tap_lengths, sizes, real, padded = merge_invoke_batches([b0, b1])
+    assert batch["tokens"].shape == (3, 8)
+    np.testing.assert_array_equal(batch["lengths"], [5, 5, 8])
+    assert tap_lengths == [{"tokens": 5}, {"tokens": 8}]
+    assert sizes == [2, 1] and real == 2 * 5 + 8 and padded == 2 * 3
+
+
+def test_split_invokes_wire_roundtrip():
+    g = InterventionGraph()
+    g.invoke_default = 0
+    t0 = g.add("tap_get", site="logits")
+    g.mark_saved("i0/out", g.add("save", Ref(t0.id)))
+    g.invoke_default = 1
+    t1 = g.add("tap_get", site="logits")
+    s1 = g.add("mul", Ref(t1.id), np.float32(2.0))
+    g.mark_saved("i1/out", g.add("save", Ref(s1.id)))
+    g.invoke_default = None
+    g2 = loads(dumps(g))  # invoke coordinate survives the wire
+    assert [n.invoke for n in g2.nodes] == [n.invoke for n in g.nodes]
+    subs = split_invokes(g2, 2)
+    assert len(subs) == 2
+    assert list(subs[0].saves) == ["out"] and list(subs[1].saves) == ["out"]
+    assert all(n.invoke is None for sub in subs for n in sub.nodes)
+
+
+# ------------------------------------------------------------- early stop
+class TestStop:
+    def test_stop_truncates_after_last_referenced_site(self):
+        lm, fired, ws = _counting_model()
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        with lm.trace(x) as tr:
+            h = lm.layers[0].output.save("h")
+            tr.stop()
+        # layer 0's matmul ran; layers 1, 2 and logits were never computed
+        assert "layer0" in fired and "layer1" not in fired
+        assert "logits" not in fired
+        np.testing.assert_array_equal(np.asarray(tr.result("h")),
+                                      np.asarray(x @ ws[0]))
+
+    def test_stop_with_setter_still_applies(self):
+        lm, fired, ws = _counting_model()
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        with lm.trace(x) as tr:
+            lm.layers[1].output = lm.layers[1].output * 0.0
+            h = lm.layers[1].output.save("h")
+            tr.stop()
+        assert np.all(np.asarray(tr.result("h")) == 0)
+        assert "layer2" not in fired
+
+    def test_stop_with_grad_rejected(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with pytest.raises(GraphValidationError, match="grad"):
+            with lm.trace(x) as tr:
+                g = lm.layers[0].output.grad.save("g")
+                loss = (lm.output * lm.output).mean().save("loss")
+                tr.backward(loss)
+                tr.stop()
+
+    def test_stop_in_multi_invoke_trace(self):
+        lm, fired, ws = _counting_model()
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        with lm.trace() as tr:
+            with tr.invoke(x):
+                a = lm.layers[0].output.save("h")
+            with tr.invoke(3 * x):
+                b = lm.layers[0].output.save("h")
+            tr.stop()
+        assert "layer1" not in fired
+        np.testing.assert_array_equal(np.asarray(a.value), np.asarray(x @ ws[0]))
+        np.testing.assert_array_equal(np.asarray(b.value),
+                                      np.asarray(3 * x @ ws[0]))
+
+
+# ---------------------------------------------------------------- sessions
+class TestSessionFlow:
+    def test_local_cross_trace_value(self):
+        lm, _, ws = _counting_model()
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        with lm.session() as sess:
+            with sess.trace(x):
+                acts = lm.layers[0].output.save("acts")
+            with sess.trace(x):
+                lm.layers[0].output = acts * 2.0
+                out = lm.output.save("out")
+        with lm.trace(x):
+            lm.layers[0].output = lm.layers[0].output * 2.0
+            ref = lm.output.save("out")
+        np.testing.assert_allclose(np.asarray(out.value),
+                                   np.asarray(ref.value), rtol=1e-6)
+
+    def test_cross_trace_requires_save(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with pytest.raises(GraphValidationError, match="save"):
+            with lm.session() as sess:
+                with sess.trace(x):
+                    acts = lm.layers[0].output  # NOT saved
+                with sess.trace(x):
+                    lm.layers[0].output = acts * 2.0
+
+    def test_foreign_proxy_outside_session_rejected(self):
+        lm, _, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with lm.trace(x):
+            saved = lm.output.save("o")
+        with pytest.raises(GraphValidationError, match="session"):
+            with lm.trace(x) as t2:
+                t2._deferred = True
+                lm.layers[0].output = saved * 2.0
+
+    def test_nested_sessions_rejected(self):
+        lm, _, _ = _counting_model()
+        with lm.session():
+            with pytest.raises(RuntimeError, match="nested"):
+                with lm.session():
+                    pass
+
+    def test_remote_session_without_backend_fails_early(self):
+        lm, _, _ = _counting_model()
+        with pytest.raises(RuntimeError, match="backend"):
+            lm.session(remote=True)
+
+    def test_exception_in_deferred_trace_skips_later_traces(self):
+        lm, fired, _ = _counting_model()
+        x = jnp.ones((1, 4), jnp.float32)
+        with pytest.raises(ValueError, match="boom"):
+            with lm.session() as sess:
+                with sess.trace(x) as t1:
+                    t1_out = lm.output.save("out")
+                with sess.trace(x):
+                    lm.output.save("out")
+                    raise ValueError("boom")
+        assert fired == []  # nothing executed — including the VALID trace
+        with pytest.raises(RuntimeError):
+            t1.result("out")
+
+
+# ----------------------------------------------------- remote / wire level
+@pytest.fixture(scope="module")
+def served(gpt_lm):
+    cfg, model, _ = gpt_lm
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host("gpt", model, params, policy="sequential")
+    client = NDIFClient(LoopbackTransport(server.handle), "gpt")
+    lm = traced_lm(model, params, backend=client)
+    return cfg, model, params, server, client, lm
+
+
+class TestRemote:
+    def test_premerged_trace_roundtrip_and_zero_recompile(self, served):
+        cfg, model, params, server, client, lm = served
+        engine = server.engines["gpt"]
+        ta, tb = _tokens(cfg, 1, 6, 0), _tokens(cfg, 1, 9, 1)
+
+        def run():
+            with lm.trace(remote=True) as tr:
+                with tr.invoke(ta):
+                    a = lm.layers[1].output.save("acts")
+                with tr.invoke(tb):
+                    b = lm.output.save("out")
+            return np.asarray(a.value), np.asarray(b.value)
+
+        a1, b1 = run()
+        assert a1.shape[1] == 6 and b1.shape[1] == 9  # true solo shapes
+        c0 = engine.stats.compiles
+        a2, b2 = run()
+        assert engine.stats.compiles == c0, "2nd identical multi-invoke " \
+            "trace must not compile"
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(b1, b2)
+
+    def test_remote_stop_matches_local(self, served):
+        cfg, model, params, server, client, lm = served
+        t = _tokens(cfg, 1, 8, 2)
+        with lm.trace(t, remote=True) as tr:
+            lm.layers[0].output.save("h")
+            tr.stop()
+        lm_local = traced_lm(model, params)
+        with lm_local.trace(t):
+            ref = lm_local.layers[0].output.save("h")
+        np.testing.assert_allclose(
+            np.asarray(tr.result("h")), np.asarray(ref.value),
+            rtol=1e-5, atol=1e-5)
+
+    def test_remote_session_cross_trace(self, served):
+        cfg, model, params, server, client, lm = served
+        t = _tokens(cfg, 1, 8, 3)
+        with lm.session(remote=True) as sess:
+            with sess.trace(t):
+                acts = lm.layers[1].output.save("acts")
+            with sess.trace(t):
+                lm.layers[1].output = acts * 0.5
+                out = lm.output.save("out")
+        with lm.trace(t, remote=True) as ref:
+            lm.layers[1].output = lm.layers[1].output * 0.5
+            ref_out = lm.output.save("out")
+        np.testing.assert_allclose(np.asarray(out.value),
+                                   np.asarray(ref_out.value),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_remote_session_multi_invoke_producer(self, served):
+        """Cross refs from a multi-invoke producer: both the qualified
+        (``i{k}/name`` -> ``r{k}/name``) and the invoke-free (-> ``r0/``)
+        save forms must resolve server-side."""
+        cfg, model, params, server, client, lm = served
+        ta, tb = _tokens(cfg, 1, 8, 11), _tokens(cfg, 1, 8, 12)
+        with lm.session(remote=True) as sess:
+            with sess.trace() as t1:
+                with t1.invoke(ta):
+                    acts = lm.layers[1].output.save("acts")
+                free = t1.constant(np.float32(0.5)).save("scale")
+            with sess.trace(tb):
+                lm.layers[1].output = lm.layers[1].output * free
+                lm.layers[1].output[:, -1] = acts[:, -1]
+                out = lm.output.save("out")
+        with lm.trace(ta, remote=True):
+            ref_acts = lm.layers[1].output.save("acts")
+        with lm.trace(tb, remote=True) as ref:
+            lm.layers[1].output = lm.layers[1].output * 0.5
+            lm.layers[1].output[:, -1] = ref.constant(
+                np.asarray(ref_acts.value)[:, -1])
+            ref_out = lm.output.save("out")
+        np.testing.assert_allclose(np.asarray(out.value),
+                                   np.asarray(ref_out.value),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_scan_session_trace_with_cross_input(self, served):
+        """scan=True on a deferred trace consuming an earlier save:
+        validation waits until the session binds the value (finding from
+        review: it used to KeyError at trace exit)."""
+        cfg, model, params, server, client, lm = served
+        lm_local = traced_lm(model, params)
+        t = _tokens(cfg, 1, 8, 13)
+        with lm_local.session() as sess:
+            with sess.trace(t, scan=True):
+                acts = lm_local.layers[1].output.save("acts")
+            with sess.trace(t, scan=True):
+                lm_local.layers[1].output = acts * 0.5
+                out = lm_local.output.save("out")
+        with lm_local.trace(t):
+            lm_local.layers[1].output = lm_local.layers[1].output * 0.5
+            ref = lm_local.output.save("out")
+        np.testing.assert_allclose(np.asarray(out.value),
+                                   np.asarray(ref.value), rtol=1e-6)
+
+
+# --------------------------------------------------------------- generation
+class TestGenerateInvokes:
+    def test_multi_invoke_generate_parity(self, gpt_lm):
+        cfg, model, lm = gpt_lm
+        ta, tb = _tokens(cfg, 1, 6, 0), _tokens(cfg, 2, 9, 1)
+        with lm.generate() as tr:
+            with tr.invoke(ta, max_new_tokens=3) as ia:
+                for _ in tr.steps():
+                    lm.logits.save("logits")
+            with tr.invoke(tb, max_new_tokens=6) as ib:
+                lm.layers[1].mlp.output.save("acts")  # step 0 tap
+        assert ia.output_tokens.shape == (1, 3)
+        assert ib.output_tokens.shape == (2, 6)  # retires at ITS OWN N
+        with lm.generate(ta, max_new_tokens=3) as ga:
+            for _ in ga.steps():
+                lm.logits.save("logits")
+        with lm.generate(tb, max_new_tokens=6) as gb:
+            lm.layers[1].mlp.output.save("acts")
+        np.testing.assert_array_equal(ia.output_tokens, ga.output_tokens)
+        np.testing.assert_array_equal(ib.output_tokens, gb.output_tokens)
+        np.testing.assert_array_equal(
+            np.asarray(ia.result("logits")), np.asarray(ga.result("logits")))
+        np.testing.assert_array_equal(
+            np.asarray(ib.result("acts")), np.asarray(gb.result("acts")))
+
+    def test_multi_invoke_generate_steering(self, gpt_lm):
+        cfg, model, lm = gpt_lm
+        ta, tb = _tokens(cfg, 1, 6, 2), _tokens(cfg, 1, 6, 3)
+        bias = np.zeros((1, 1, cfg.vocab_size), np.float32)
+        bias[..., 7] = 1e9  # steer the logits site directly (argmax-safe)
+        with lm.generate() as tr:
+            with tr.invoke(ta, max_new_tokens=4) as ia:
+                with tr.all_steps():
+                    lm.logits += bias
+            with tr.invoke(tb, max_new_tokens=4) as ib:
+                pass
+        assert np.all(ia.output_tokens == 7)  # steered invoke
+        with lm.generate(tb, max_new_tokens=4) as gb:
+            pass
+        np.testing.assert_array_equal(  # co-resident invoke untouched
+            ib.output_tokens, gb.output_tokens)
+
+    def test_remote_generate_invokes(self, served):
+        cfg, model, params, server, client, lm = served
+        engine = server.engines["gpt"]
+        ta, tb = _tokens(cfg, 1, 6, 4), _tokens(cfg, 1, 9, 5)
+
+        def run():
+            with lm.generate(remote=True) as tr:
+                with tr.invoke(ta, max_new_tokens=3) as ia:
+                    for _ in tr.steps():
+                        lm.logits.save("logits")
+                with tr.invoke(tb, max_new_tokens=5) as ib:
+                    pass
+            return ia, ib
+
+        ia, ib = run()
+        lm_local = traced_lm(model, params)
+        with lm_local.generate(ta, max_new_tokens=3) as ga:
+            for _ in ga.steps():
+                lm_local.logits.save("logits")
+        with lm_local.generate(tb, max_new_tokens=5) as gb:
+            pass
+        np.testing.assert_array_equal(ia.output_tokens, ga.output_tokens)
+        np.testing.assert_array_equal(ib.output_tokens, gb.output_tokens)
+        assert np.asarray(ia.result("logits")).shape == (1, 3, cfg.vocab_size)
+        c0 = engine.stats.compiles
+        run()
+        assert engine.stats.compiles == c0, "2nd identical multi-invoke " \
+            "generate must not compile"
+
+    def test_remote_generate_invokes_continuous_policy(self, gpt_lm):
+        cfg, model, _ = gpt_lm
+        params = model.init(jax.random.key(0))
+        server = NDIFServer()
+        server.host("gpt", model, params, policy="continuous",
+                    num_slots=4, slot_max_len=48)
+        client = NDIFClient(LoopbackTransport(server.handle), "gpt")
+        lm = traced_lm(model, params, backend=client)
+        ta, tb = _tokens(cfg, 1, 6, 6), _tokens(cfg, 1, 7, 7)
+        with lm.generate(remote=True) as tr:
+            with tr.invoke(ta, max_new_tokens=3) as ia:
+                pass
+            with tr.invoke(tb, max_new_tokens=5) as ib:
+                pass
+        stats = server.engines["gpt"].stats
+        assert stats.admissions == 2  # both invokes rode the slot loop
+        lm_local = traced_lm(model, params)
+        with lm_local.generate(ta, max_new_tokens=3) as ga:
+            pass
+        with lm_local.generate(tb, max_new_tokens=5) as gb:
+            pass
+        np.testing.assert_array_equal(ia.output_tokens, ga.output_tokens)
+        np.testing.assert_array_equal(ib.output_tokens, gb.output_tokens)
+
+    def test_generate_scan_validation(self, gpt_lm):
+        cfg, model, lm = gpt_lm
+        t = _tokens(cfg, 1, 8, 8)
+
+        # good graph: prefill tap validates and the trace then executes
+        with lm.generate(t, max_new_tokens=2, scan=True) as tr:
+            with tr.prefill():
+                lm.layers[1].output.save("pre")
+            lm.logits.save("logits")
+        assert np.asarray(tr.result("pre")).shape == (1, 7, cfg.d_model)
+
+        # bad graph: shape error in a prefill-step op is caught by
+        # eval_shape (abstract values only — no FLOPs) and the trace never
+        # executes
+        with pytest.raises(TypeError):
+            with lm.generate(t, max_new_tokens=2, scan=True) as tr:
+                with tr.prefill():
+                    bad = lm.layers[1].output.reshape(7)
+                    bad.save("bad")
+        assert tr.output_tokens is None and tr._results is None
+
+    def test_generate_scan_multi_invoke(self, gpt_lm):
+        cfg, model, lm = gpt_lm
+        ta, tb = _tokens(cfg, 1, 6, 9), _tokens(cfg, 1, 9, 10)
+        with lm.generate(scan=True) as tr:
+            with tr.invoke(ta, max_new_tokens=2) as ia:
+                with tr.prefill():
+                    lm.layers[1].output.save("pre")
+            with tr.invoke(tb, max_new_tokens=3) as ib:
+                lm.logits.save("logits")
+        assert np.asarray(ia.result("pre")).shape == (1, 5, cfg.d_model)
+        assert np.asarray(ib.result("logits")).shape[1] == 1
