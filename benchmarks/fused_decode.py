@@ -1,0 +1,158 @@
+"""Fused decode: the whole decode loop as ONE lax.scan dispatch vs eager.
+
+Before this PR every decode step was a separate host dispatch (and, when
+instrumented, a Python re-merge + the eager interleaver), so per-token host
+overhead — not the model — bounded generation throughput (the overhead the
+paper's Table 1 benchmarks against bare execution).  Step-uniform graphs
+now compile prefill + N decode steps into one scan program
+(repro.core.generation.make_fused_step); this module measures what that
+buys at N=64.
+
+Like the paper's Table 1, the gated rows isolate FRAMEWORK overhead: they
+run a micro config (2 layers, d=64) where per-step compute is small, so the
+per-token cost is the dispatch/merge machinery being removed.  At sizes
+where single-core model compute dominates the step (the `2m` ladder entry
+on this container, ~4ms/step), fusion still wins — the `*_2m` reference
+rows report that ratio — but the win is bounded by compute, so those rows
+carry no gate.
+
+Rows (per-token wall-clock):
+  fused_plain_decode     uninstrumented, one fused dispatch      [gated]
+  eager_plain_decode     uninstrumented, N cached-jit dispatches
+  fused_steered_decode   all_steps() steering + per-step logit saves, fused
+  eager_steered_decode   same graph through the eager per-step interleaver
+  fused_plain_2m         uninstrumented at the 2m ladder size    [no gate]
+  eager_plain_2m
+
+Asserted (the PR's acceptance gate): fused is >= 3x faster per token than
+eager for the uninstrumented micro case, with token-exact results (saves
+match at the repo's 1e-5 cross-strategy tolerance — the eager instrumented
+baseline runs unjitted).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, build, opt_suite, timeit
+from repro.core.graph import ALL_STEPS, InterventionGraph, Ref
+from repro.models.config import ModelConfig
+from repro.models.transformer import TransformerModel
+from repro.serving.engine import InferenceEngine
+
+N_NEW = 64
+SPEEDUP_GATE = 3.0
+
+
+def _micro() -> ModelConfig:
+    """Table-1-style framework-overhead config: compute per decode step is
+    negligible, so per-token time IS the host machinery."""
+    return ModelConfig(
+        name="opt-micro", arch_type="dense", vocab_size=512,
+        n_layers=2, d_model=64, n_heads=4, d_ff=256, n_kv_heads=4,
+        dtype=jnp.float32, rope_theta=10000.0,
+    )
+
+
+def _steer_graph(cfg) -> InterventionGraph:
+    """all_steps() steering + per-step stacked logit saves — step-uniform."""
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.mlp.output", layer=1, step=ALL_STEPS)
+    c = g.add("constant", np.float32(5.0))
+    u = g.add("add", Ref(t.id), Ref(c.id))
+    g.add("tap_set", Ref(u.id), site="layers.mlp.output", layer=1,
+          step=ALL_STEPS)
+    for s in range(N_NEW):
+        tt = g.add("tap_get", site="logits", step=s)
+        g.mark_saved(f"lg@step{s}", g.add("save", Ref(tt.id)))
+    return g
+
+
+def _measure(engine, toks, graph_fn, fused):
+    def call():
+        return engine.generate_interleaved(
+            graph_fn(), {"tokens": toks}, N_NEW, fused=fused)
+
+    mean, _std = timeit(call, n=5, warmup=1)
+    return mean
+
+
+def rows() -> list[Row]:
+    cfg = _micro()
+    model = TransformerModel(cfg)
+    params = model.init(jax.random.key(0))
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (1, 16)).astype(np.int32)
+    engine = InferenceEngine(model, params)
+    out = []
+
+    plain = lambda: InterventionGraph()
+    steered = lambda: _steer_graph(cfg)
+
+    def run(graph_fn, fused):
+        return engine.generate_interleaved(
+            graph_fn(), {"tokens": toks}, N_NEW, fused=fused)
+
+    # ---- parity gate (also warms every executable) ----------------------
+    rf, re_ = run(plain, True), run(plain, False)
+    np.testing.assert_array_equal(np.asarray(rf.tokens),
+                                  np.asarray(re_.tokens))
+    np.testing.assert_array_equal(np.asarray(rf.logits),
+                                  np.asarray(re_.logits))
+    sf, se = run(steered, True), run(steered, False)
+    np.testing.assert_array_equal(np.asarray(sf.tokens),
+                                  np.asarray(se.tokens))
+    assert sorted(sf.saves) == sorted(se.saves)
+    for k in se.saves:
+        np.testing.assert_allclose(np.asarray(sf.saves[k]),
+                                   np.asarray(se.saves[k]),
+                                   rtol=1e-5, atol=1e-5)
+
+    timings = {
+        name: _measure(engine, toks, graph_fn, fused)
+        for name, graph_fn, fused in (
+            ("fused_plain_decode", plain, True),
+            ("eager_plain_decode", plain, False),
+            ("fused_steered_decode", steered, True),
+            ("eager_steered_decode", steered, False),
+        )
+    }
+
+    # ---- compute-bound reference: the 2m ladder size (no gate) ----------
+    cfg2 = opt_suite(("2m",))["2m"]
+    model2, params2 = build(cfg2)
+    toks2 = np.random.default_rng(0).integers(
+        0, cfg2.vocab_size, (2, 16)).astype(np.int32)
+    engine2 = InferenceEngine(model2, params2)
+    for fused in (True, False):  # warm + parity
+        engine2.generate_interleaved(InterventionGraph(), {"tokens": toks2},
+                                     N_NEW, fused=fused)
+    timings["fused_plain_2m"] = _measure(
+        engine2, toks2, lambda: InterventionGraph(), True)
+    timings["eager_plain_2m"] = _measure(
+        engine2, toks2, lambda: InterventionGraph(), False)
+
+    for pair in ("plain", "steered", "plain_2m"):
+        suffix = pair if pair.endswith("2m") else f"{pair}_decode"
+        fname, ename = f"fused_{suffix}", f"eager_{suffix}"
+        speedup = timings[ename] / timings[fname]
+        for name in (fname, ename):
+            per_tok = timings[name] / N_NEW * 1e6
+            derived = (f"speedup={speedup:.1f}x" if name == fname
+                       else f"n_new={N_NEW}")
+            out.append(Row(name, per_tok, derived, extra={
+                "per_token_us": round(per_tok, 2),
+                "total_ms": round(timings[name] * 1e3, 2),
+                "speedup_vs_eager": round(speedup, 2),
+                "n_new": N_NEW,
+            }))
+
+    plain_speedup = timings["eager_plain_decode"] / timings[
+        "fused_plain_decode"]
+    assert plain_speedup >= SPEEDUP_GATE, (
+        f"fused decode must be >= {SPEEDUP_GATE}x faster per token than "
+        f"eager for uninstrumented N={N_NEW} generation, got "
+        f"{plain_speedup:.2f}x"
+    )
+    return out

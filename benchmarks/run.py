@@ -12,6 +12,8 @@ One module per paper table/figure:
                                 vs continuous (slot-table) batching
   invoke_batching            -> paper Fig. 3 multi-invoke API: N solo traces
                                 vs one N-invoke trace (one merged forward)
+  fused_decode               -> whole decode loop as ONE lax.scan dispatch
+                                vs eager per-step (plain + steered)
   kernel_bench               -> kernels/fallbacks microbench
 
 Besides the CSV on stdout, every module's rows are written to
@@ -34,6 +36,7 @@ MODULES = [
     "benchmarks.cotenancy_continuous",
     "benchmarks.invoke_batching",
     "benchmarks.gen_decode",
+    "benchmarks.fused_decode",
     "benchmarks.kernel_bench",
 ]
 

@@ -33,6 +33,11 @@ c0 = engine.stats.compiles
 engine.generate(tokens, max_new_tokens=N)
 print(f"decode is cached: {engine.stats.compiles - c0} new compiles "
       "on the second generate()")
+# An uninstrumented generation is step-uniform, so the WHOLE decode loop
+# ran as one compiled lax.scan dispatch instead of N per-step dispatches:
+snap = engine.stats.snapshot()
+print(f"fused decode:     {snap['fused_segments']} scan dispatch(es) served "
+      f"{snap['fused_steps']} steps ({snap['eager_steps']} eager)")
 
 # ------------------------------------------------- steer + collect per step
 with lm.generate(tokens, max_new_tokens=N) as tr:
@@ -46,6 +51,10 @@ with lm.generate(tokens, max_new_tokens=N) as tr:
 
 print("steered tokens: ", tr.output_tokens[0])
 print("stacked logits: ", np.asarray(tr.result("logits")).shape)  # (B, N, V)
+# Steering only steps 3..5 makes the schedule non-uniform overall — the
+# loop still fuses the three uniform stretches (0..2 / 3..5 / 6..7) and
+# the tracer marks the overall schedule:
+print("step-uniform?   ", tr.steps_uniform)  # False (per-step structure varies)
 
 # per-token logit lens: entropy of each decode step's distribution
 lg = np.asarray(tr.result("logits"))
@@ -61,3 +70,23 @@ with lm.generate(tokens, max_new_tokens=4) as tr2:
         lm.layers[2].mlp.output += 25.0           # steer every decode step
 print("prompt acts:    ", np.asarray(tr2.result("prompt_acts")).shape)
 print("broadcast steer:", tr2.output_tokens[0])
+print("step-uniform?   ", tr2.steps_uniform)  # True: all_steps() fuses whole
+
+# ------------------------------------------- fused path through the engine
+# The same broadcast-steer graph served by the engine compiles ONCE into a
+# single lax.scan program; a repeat request reuses the executable.
+from repro.core.graph import ALL_STEPS, InterventionGraph, Ref
+
+g = InterventionGraph()
+t = g.add("tap_get", site="layers.mlp.output", layer=2, step=ALL_STEPS)
+c = g.add("constant", np.float32(25.0))
+u = g.add("add", Ref(t.id), Ref(c.id))
+g.add("tap_set", Ref(u.id), site="layers.mlp.output", layer=2, step=ALL_STEPS)
+res = engine.generate_interleaved(g, {"tokens": tokens}, N)
+c0 = engine.stats.compiles
+engine.generate_interleaved(g, {"tokens": tokens}, N)
+snap = engine.stats.snapshot()
+print("engine steered: ", np.asarray(res.tokens)[0])
+print(f"fused counters:  segments={snap['fused_segments']} "
+      f"fused_steps={snap['fused_steps']} eager_steps={snap['eager_steps']} "
+      f"(+{engine.stats.compiles - c0} compiles on repeat)")

@@ -1,0 +1,163 @@
+"""Benchmark regression gate: diff fresh BENCH_*.json against a baseline.
+
+The benchmark harness (``python -m benchmarks.run``) writes machine-readable
+``benchmarks/out/BENCH_<name>.json`` per module.  This script compares a
+fresh run against the committed baseline (``benchmarks/baseline/``) and
+fails when any row regresses past the tolerance — the perf counterpart of
+the parity tests, so a PR cannot silently give back the wins earlier PRs
+measured.
+
+Comparison rules, per (benchmark, row name):
+  * ``us_per_call`` must satisfy fresh <= baseline * (1 + tol);
+  * any numeric ``extra`` key containing ``p95`` (the tail-latency stats the
+    co-tenancy benchmarks attach) is held to the same tolerance;
+  * rows/benchmarks present only in one side are reported but never fail
+    (new benchmarks land without a baseline; a partial --only run skips
+    modules).
+
+The default tolerance is deliberately loose (50%): these benchmarks run on
+shared CPU containers where wall-clock noise is real (see the repo notes —
+never gate on numbers taken while a test job is running).  The gate exists
+to catch order-of-magnitude regressions (a lost cache, an accidental
+retrace per call), not 10% drift.
+
+Usage:
+  python scripts/bench_check.py                       # compare out/ vs baseline/
+  python scripts/bench_check.py --tol 0.25            # tighter gate
+  python scripts/bench_check.py --only fused_decode   # one benchmark
+  python scripts/bench_check.py --update              # bless fresh as baseline
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+DEFAULT_FRESH = "benchmarks/out"
+DEFAULT_BASELINE = "benchmarks/baseline"
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {row["name"]: row for row in payload.get("rows", [])}
+
+
+def p95_keys(row: dict) -> dict[str, float]:
+    """Numeric extra entries that look like tail-latency stats."""
+    out = {}
+    for k, v in (row.get("extra") or {}).items():
+        if "p95" in k and isinstance(v, (int, float)):
+            out[k] = float(v)
+    return out
+
+
+def compare_file(
+    name: str, fresh: dict[str, dict], base: dict[str, dict], tol: float
+) -> tuple[list[str], list[str]]:
+    """Returns (regressions, notes) for one benchmark module."""
+    regressions, notes = [], []
+    for row_name, b in base.items():
+        f = fresh.get(row_name)
+        if f is None:
+            notes.append(f"{name}:{row_name}: missing from fresh run")
+            continue
+        fv, bv = float(f["us_per_call"]), float(b["us_per_call"])
+        if bv > 0 and fv > bv * (1.0 + tol):
+            regressions.append(
+                f"{name}:{row_name}: us_per_call {fv:.1f} vs baseline "
+                f"{bv:.1f} (+{(fv / bv - 1) * 100:.0f}%, tol "
+                f"{tol * 100:.0f}%)"
+            )
+        fp95, bp95 = p95_keys(f), p95_keys(b)
+        for k, bval in bp95.items():
+            fval = fp95.get(k)
+            if fval is None or bval <= 0:
+                continue
+            if fval > bval * (1.0 + tol):
+                regressions.append(
+                    f"{name}:{row_name}: {k} {fval:.1f} vs baseline "
+                    f"{bval:.1f} (+{(fval / bval - 1) * 100:.0f}%)"
+                )
+    for row_name in fresh:
+        if row_name not in base:
+            notes.append(f"{name}:{row_name}: new row (no baseline)")
+    return regressions, notes
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description="fail when fresh benchmark JSON regresses past baseline"
+    )
+    ap.add_argument("--fresh", default=DEFAULT_FRESH,
+                    help=f"fresh BENCH_*.json dir (default {DEFAULT_FRESH})")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline dir (default {DEFAULT_BASELINE})")
+    ap.add_argument("--tol", type=float, default=0.5,
+                    help="allowed fractional regression (default 0.5 = 50%%)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark names")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh JSONs over the baseline and exit")
+    args = ap.parse_args()
+
+    fresh_files = {
+        os.path.basename(p): p
+        for p in sorted(glob.glob(os.path.join(args.fresh, "BENCH_*.json")))
+    }
+    if args.only:
+        fresh_files = {n: p for n, p in fresh_files.items()
+                       if args.only in n}
+    if args.update:
+        os.makedirs(args.baseline, exist_ok=True)
+        for name, path in fresh_files.items():
+            shutil.copy2(path, os.path.join(args.baseline, name))
+            print(f"blessed {name}")
+        return 0
+
+    base_files = {
+        os.path.basename(p): p
+        for p in sorted(glob.glob(os.path.join(args.baseline,
+                                               "BENCH_*.json")))
+    }
+    if args.only:
+        base_files = {n: p for n, p in base_files.items() if args.only in n}
+    if not base_files:
+        print(f"no baseline JSONs under {args.baseline}; run the "
+              "benchmarks and bless them with --update", file=sys.stderr)
+        return 2
+
+    all_regressions, all_notes = [], []
+    for name, bpath in base_files.items():
+        fpath = fresh_files.get(name)
+        if fpath is None:
+            all_notes.append(f"{name}: not present in fresh run — skipped")
+            continue
+        regs, notes = compare_file(
+            name.removeprefix("BENCH_").removesuffix(".json"),
+            load_rows(fpath), load_rows(bpath), args.tol,
+        )
+        all_regressions.extend(regs)
+        all_notes.extend(notes)
+    for name in fresh_files:
+        if name not in base_files:
+            all_notes.append(f"{name}: new benchmark (no baseline)")
+
+    for note in all_notes:
+        print(f"note: {note}")
+    if all_regressions:
+        print(f"\n{len(all_regressions)} regression(s) past "
+              f"{args.tol * 100:.0f}% tolerance:", file=sys.stderr)
+        for reg in all_regressions:
+            print(f"  REGRESSION {reg}", file=sys.stderr)
+        return 1
+    print(f"OK: {len(base_files)} benchmark file(s) within "
+          f"{args.tol * 100:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,23 @@ compiled prefill/decode functions, so uninstrumented steps never retrace).
 
 Greedy sampling reads the *post-intervention* logits: a setter on the
 ``logits`` site (or anything upstream) steers which token is fed back.
+
+Fused decode
+------------
+When a generation graph is *step-uniform* — no step-dependent slice
+structure: uninstrumented, ``all_steps()``-only, or identical site/op sets
+at every step (:func:`steps_uniform`) — the decode loop lowers into ONE
+``lax.scan`` program (:func:`make_fused_step`): the scan body is the
+interleaved decode step, per-step saves come back pre-stacked as scan ys,
+and the greedy token feedback plus cache thread through the carry.  N host
+dispatches + N Python re-merges become one dispatch; the serving engine
+caches the compiled program by structural graph signature.  The slot-table
+loop fuses every step-uniform stretch between admission/retirement
+boundaries (:meth:`DecodeLoop.step_fused`); non-uniform remainders run as
+length-1 windows of the SAME compiled machinery — window splits are
+bit-identical, so co-tenancy changes windowing but never a request's
+numerics.  Only ``log`` nodes, failed fused compiles, and ``fused=False``
+take the unjitted eager per-step path.
 """
 from __future__ import annotations
 
@@ -53,12 +70,19 @@ from repro.core.graph import (
     Ref,
     assign_steps,
     map_refs,
+    node_fingerprint,
 )
-from repro.core.interleave import SiteSchedule, run_interleaved
+from repro.core.interleave import (
+    SiteSchedule,
+    make_step_callable,
+    run_interleaved,
+)
 
 __all__ = [
     "StepSlice",
     "slice_steps",
+    "steps_uniform",
+    "make_fused_step",
     "run_generation",
     "run_generation_invokes",
     "GenerationResult",
@@ -191,6 +215,149 @@ def slice_steps(
     return slices
 
 
+# --------------------------------------------------------------------------
+# Fused decode: detect step-uniform schedules and compile the decode loop
+# into ONE lax.scan program (the ROADMAP "fused decode" item).
+# --------------------------------------------------------------------------
+
+# Fingerprint of a step with no intervention work (slice absent or empty).
+_EMPTY_FP = ("__empty__",)
+
+
+def _slice_fingerprint(sl: StepSlice | None) -> Any | None:
+    """Structural identity of one decode-step slice, step stamps excluded.
+
+    Two slices with equal fingerprints execute the same program — one
+    compiled step body can serve both, with constant values threaded in as
+    runtime arguments (equal-valued raw array args are folded into the
+    fingerprint, so a mismatch there forces separate steps).  Returns
+    ``None`` for slices the fused body cannot host at all (``log`` records
+    traced values host-side; ``.grad`` needs the perturbation driver).
+    """
+    if sl is None or sl.is_empty():
+        return _EMPTY_FP
+    nodes = []
+    for n in sl.graph.nodes:
+        if n.op in ("log", "grad_get"):
+            return None
+        nodes.append(node_fingerprint(n, abstract_constants=True))
+    return (
+        tuple(nodes),
+        tuple(sorted(sl.imports)),
+        tuple(sorted(sl.exports)),
+        tuple(sorted(sl.graph.saves.values())),
+    )
+
+
+def steps_uniform(graph: InterventionGraph, n_steps: int) -> bool:
+    """Is this generation graph *step-uniform* — same slice structure at
+    every decode step?
+
+    True for uninstrumented graphs, ``all_steps()``-only graphs, and
+    identical per-step site/op sets (e.g. ``for s in tr.steps(): ...`` with
+    the same body each iteration); prefill-only instrumentation is uniform
+    too (the prefill is not part of the decode loop).  A uniform graph's
+    whole decode loop lowers into ONE ``lax.scan`` program — N dispatches
+    plus N Python re-merges collapse to one dispatch (see
+    :meth:`DecodeLoop.step_fused`).  Differing per-step constant VALUES do
+    not break uniformity: they thread through the scan as stacked inputs.
+    """
+    slices = slice_steps(graph, n_steps)
+    fps = [_slice_fingerprint(slices.get(s)) for s in range(n_steps)]
+    if any(fp is None for fp in fps):
+        return False
+    if not fps:
+        return True
+    if any(fp != fps[0] for fp in fps[1:]):
+        return False
+    # cross-step env flow needs per-step export/import routing — eager only
+    return not any(
+        sl is not None and sl.exports
+        for sl in (slices.get(s) for s in range(n_steps))
+    )
+
+
+def make_fused_step(
+    model: Any,
+    graph: InterventionGraph,
+    schedule: SiteSchedule,
+    n_steps: int,
+    *,
+    mode: str = "unrolled",
+) -> Callable:
+    """Build the fused decode program: ``n_steps`` interleaved decode steps
+    as ONE ``lax.scan``.
+
+    ``graph`` is the (merged, step-normalized) intervention graph of ONE
+    decode step — empty for uninstrumented generation.  The scan body is
+    the jit-able interleaved step (:func:`repro.core.interleave
+    .make_step_callable`): tap getters/setters apply inside the traced
+    body, per-step saves return as scan ys (pre-stacked ``(n_steps, ...)``),
+    and the greedy-argmax token feedback plus the cache thread through the
+    scan carry — so the whole decode loop is one XLA dispatch instead of
+    ``n_steps`` dispatches + ``n_steps`` Python re-merges.
+
+    Returns ``fused(params, cache, token, base_pos, consts, step_consts,
+    inputs) -> ((cache, token), ys)`` where ``consts`` maps constant node
+    ids to values shared by every step, ``step_consts`` maps constant node
+    ids to ``(n_steps, ...)`` stacks of per-step values, and ``ys`` carries
+    ``token`` ``(n_steps, B, 1)``, ``logits`` ``(n_steps, B, 1, V)`` and
+    ``saves`` (each ``(n_steps, ...)``).  Pure — wrap in ``jax.jit`` and
+    cache by the graph's structural key (the serving engine does).
+    """
+
+    def step_fn(params_, cache_, token_, pos_):
+        return model.decode_step(
+            params_, cache_, {"token": token_, "pos": pos_}, mode=mode
+        )
+
+    run_step = make_step_callable(step_fn, graph, schedule, mode=mode)
+
+    def fused(params, cache, token, base_pos, consts, step_consts, inputs):
+        def body(carry, xs):
+            cache_, token_, t = carry
+            pos = base_pos + t
+            const_env = dict(consts)
+            if xs:
+                const_env.update(xs)
+            (out, new_cache), saves = run_step(
+                (params, cache_, token_, pos), {},
+                inputs=inputs, const_env=const_env,
+            )
+            logits = out["logits"]
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[
+                :, None
+            ]
+            return (new_cache, tok, t + 1), {
+                "token": tok, "logits": logits, "saves": saves,
+            }
+
+        (cache, token, _), ys = jax.lax.scan(
+            body,
+            (cache, token, jnp.zeros((), jnp.int32)),
+            step_consts,
+            length=n_steps,
+        )
+        return (cache, token), ys
+
+    return fused
+
+
+@dataclasses.dataclass
+class _FusedPlan:
+    """One fused decode segment, ready to dispatch."""
+
+    key: Any                    # structural graph identity (failure memo)
+    graph: InterventionGraph    # merged step-normalized template
+    k: int                      # scan length
+    # instrumented residents: (request, per-step slices, {slice save node
+    # id -> merged wire save name})
+    need: list[tuple]
+    consts: dict[int, Any]      # constant node id -> shared value
+    step_consts: dict[int, Any]  # constant node id -> (k, ...) stack
+    inputs: dict[str, Any]
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: Any  # (B, N) generated token ids
@@ -220,6 +387,9 @@ def run_generation(
     empty_cache_fn: Callable | None = None,
     cache_kind: str = "full",
     lengths: Any | None = None,
+    fused: bool = True,
+    fused_fn: Callable | None = None,
+    stats: Any = None,
 ) -> GenerationResult:
     """Greedy-decode ``max_new_tokens`` with ``graph`` interleaved.
 
@@ -240,6 +410,13 @@ def run_generation(
     initialized empty (``model.empty_cache``) and the whole prompt is
     decoded as step 0.  Graphs tapping ``prefill()`` therefore require
     prompts of >= 2 tokens.
+
+    ``fused=True`` (default) compiles step-uniform stretches of the decode
+    loop into ONE ``lax.scan`` dispatch (:meth:`DecodeLoop.step_fused`);
+    non-uniform graphs fall back to the eager per-step path unchanged.
+    ``fused_fn(graph, n_steps)`` lets a caller supply the compiled-program
+    cache (the serving engine keys executables by structural graph
+    signature, so a second identically-shaped request compiles nothing).
 
     Since the continuous-batching refactor this is a thin wrapper: the
     request is admitted into a :class:`DecodeLoop` whose slot table is
@@ -267,6 +444,9 @@ def run_generation(
         prefill_fn=prefill_fn,
         decode_fn=decode_fn,
         empty_cache_fn=empty_cache_fn,
+        fuse=fused,
+        fused_fn=fused_fn,
+        stats=stats,
     )
     batch = {"tokens": tokens, **(extras or {})}
     if lengths is not None:
@@ -289,6 +469,8 @@ def run_generation_invokes(
     write_rows_fn: Callable | None = None,
     clear_rows_fn: Callable | None = None,
     stats: Any = None,
+    fused: bool = True,
+    fused_fn: Callable | None = None,
 ) -> list[GenerationResult]:
     """Run several generation invokes through ONE slot-table decode loop.
 
@@ -333,6 +515,8 @@ def run_generation_invokes(
         write_rows_fn=write_rows_fn,
         clear_rows_fn=clear_rows_fn,
         stats=stats,
+        fuse=fused,
+        fused_fn=fused_fn,
     )
     # multi-token prompts share one (merged, padded) prefill; single-token
     # prompts have no prefill execution and must be admitted alone
@@ -462,6 +646,8 @@ class DecodeLoop:
         write_rows_fn: Callable | None = None,
         clear_rows_fn: Callable | None = None,
         stats: Any = None,
+        fuse: bool = True,
+        fused_fn: Callable | None = None,
     ) -> None:
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
@@ -478,6 +664,17 @@ class DecodeLoop:
         self._clear_rows_fn = clear_rows_fn or model.cache_clear_rows
         self.stats = stats
         self.schedule = _step_order(model.site_schedule(mode))
+        # Fused decode: step-uniform stretches of the loop run as ONE
+        # lax.scan dispatch.  `fused_fn(graph, n_steps)` supplies the
+        # compiled executable (the engine passes its structural-key cache);
+        # without one, executables are cached per loop.
+        self.fuse = bool(fuse)
+        self._fused_fn = fused_fn
+        self._fused_cache: dict[Any, Callable] = {}
+        self._fused_bad: set[Any] = set()  # keys whose compile/run failed
+        self.fused_segments = 0
+        self.fused_steps = 0
+        self.eager_steps = 0
         # The slot table is allocated lazily: a whole-table admission (the
         # run_generation solo path) adopts the prefilled cache directly and
         # never pays for a throwaway zero table.
@@ -839,7 +1036,20 @@ class DecodeLoop:
     # ----------------------------------------------------------------- step
     def step(self) -> list[SlotRequest]:
         """Decode ONE token for every resident request; returns the requests
-        that retired this step (their slots are free again on return)."""
+        that retired this step (their slots are free again on return).
+
+        With fusion enabled this is a length-1 fused window: single steps
+        run the SAME compiled scan body as multi-step windows, so a
+        request's numerics never depend on how co-tenancy happened to split
+        the loop into windows (fused windows of any length are
+        bit-identical; only the unjitted eager path — logs, cross-step
+        exports with co-tenants, failures, ``fuse=False`` — differs at the
+        float-rounding level)."""
+        return self.step_fused(1)
+
+    def _step_eager(self) -> list[SlotRequest]:
+        """The uncompiled per-step path: one cached-jit decode dispatch for
+        uninstrumented steps, the eager interleaver otherwise."""
         if not self.resident:
             return []
         from repro.core.batching import merge_graphs, split_results
@@ -870,11 +1080,9 @@ class DecodeLoop:
             # its OWN slot rows; step coordinates are normalized so
             # co-tenants at different local steps share one getter/setter
             # chain per site.  Membership changes -> a new merged graph.
-            # (Slices differ per local step, so the merge re-runs each
-            # instrumented step; its Python cost is dwarfed by the eager
-            # interleaved model execution it precedes.  Reusing one fused
-            # program for structurally-uniform step graphs is the ROADMAP
-            # "fused decode" item.)
+            # (This eager path re-merges and re-interleaves every step; it
+            # now serves only the NON-uniform remainder — step-uniform
+            # stretches run through step_fused as one compiled lax.scan.)
             merged = merge_graphs(
                 [sl.graph for _, sl in need],
                 [sr.size for sr, _ in need],
@@ -884,15 +1092,7 @@ class DecodeLoop:
             merged.graph.validate(self.schedule.order)
             bound = {}
             for (sr, sl), prefix in zip(need, merged.save_prefixes):
-                for name, nid in sl.imports.items():
-                    bound[f"{prefix}/{name}"] = sr.env[nid]
-                if sr.inputs:
-                    for n in sl.graph.nodes:
-                        if (n.op == "input"
-                                and not n.args[0].startswith("__env")):
-                            bound[f"{prefix}/{n.args[0]}"] = (
-                                sr.inputs[n.args[0]]
-                            )
+                _bind_slice_inputs(sr, sl, prefix, bound)
 
             def step_fn(params_, cache_, token_, pos_):
                 return self.model.decode_step(
@@ -943,9 +1143,12 @@ class DecodeLoop:
             if sr.done():
                 retired.append(sr)
         self.steps_run += 1
+        self.eager_steps += 1
         if self.stats is not None:
             busy = self.num_slots - len(self._free)
             self.stats.record_slot_step(busy, self.num_slots)
+            if hasattr(self.stats, "record_eager_step"):
+                self.stats.record_eager_step()
         for sr in retired:
             self._retire(sr)
         return retired
@@ -977,13 +1180,7 @@ class DecodeLoop:
                 normalize_steps=True,
             )
             bound = {}
-            prefix = single.save_prefixes[0]
-            for name, nid in sl.imports.items():
-                bound[f"{prefix}/{name}"] = sr.env[nid]
-            if sr.inputs:
-                for n in sl.graph.nodes:
-                    if n.op == "input" and not n.args[0].startswith("__env"):
-                        bound[f"{prefix}/{n.args[0]}"] = sr.inputs[n.args[0]]
+            _bind_slice_inputs(sr, sl, single.save_prefixes[0], bound)
             try:
                 run_interleaved(
                     step_fn, single.graph, self.schedule,
@@ -999,6 +1196,208 @@ class DecodeLoop:
             ]
         return offenders
 
+    # ---------------------------------------------------------- fused step
+    def fusable_steps(self) -> int:
+        """Decode steps until the next retirement boundary — the longest
+        window over which slot membership is guaranteed constant."""
+        if not self.resident:
+            return 0
+        return min(sr.max_new_tokens - sr.t for sr in self.resident)
+
+    def _uniform_run(self, sr: SlotRequest, k: int) -> int:
+        """Longest run of structurally-identical step slices for ``sr``
+        starting at its current local step (0 = unfusable at all)."""
+        fp0 = _slice_fingerprint(sr.slices.get(sr.t))
+        if fp0 is None:
+            return 0
+        run = 1
+        for j in range(1, k):
+            if _slice_fingerprint(sr.slices.get(sr.t + j)) != fp0:
+                break
+            run += 1
+        return run
+
+    def _plan_fused(self, k: int) -> _FusedPlan | None:
+        """Build the fused segment for the next ``k`` steps, or None when
+        the eager per-step path must serve them (non-uniform slices,
+        cross-step env flow, log nodes, or a previously failed compile)."""
+        from repro.core.batching import merge_graphs
+        from repro.core.serialize import structural_key
+
+        need_raw: list[tuple[SlotRequest, list[StepSlice]]] = []
+        for sr in self.resident:
+            sls = [sr.slices.get(sr.t + j) for j in range(k)]
+            fps = [_slice_fingerprint(sl) for sl in sls]
+            if any(fp is None for fp in fps):
+                return None
+            if any(fp != fps[0] for fp in fps[1:]):
+                return None
+            if fps[0] == _EMPTY_FP:
+                continue  # uninstrumented rider
+            if len(sls) > 1 and any(sl.exports for sl in sls):
+                # defensive: cross-step env exports carry per-step names, so
+                # fingerprint equality already keeps them out of multi-step
+                # windows; a length-1 window routes them through the env
+                return None
+            need_raw.append((sr, sls))
+
+        if need_raw:
+            merged = merge_graphs(
+                [sls[0].graph for _, sls in need_raw],
+                [sr.size for sr, _ in need_raw],
+                starts=[sr.start for sr, _ in need_raw],
+                normalize_steps=True,
+            )
+            graph = merged.graph
+        else:
+            merged = None
+            graph = InterventionGraph()
+        # bad keys are graph-structural only (no window length): a program
+        # that failed to compile at one k would re-fail at every shrinking
+        # k of the same structure, each retry paying a full XLA trace
+        key = structural_key(graph)
+        if key in self._fused_bad:
+            return None
+        if merged is not None:
+            graph.validate(self.schedule.order)
+
+        inputs: dict[str, Any] = {}
+        consts: dict[int, Any] = {}
+        step_consts: dict[int, Any] = {}
+        need: list[tuple] = []
+        for i, (sr, sls) in enumerate(need_raw):
+            prefix = merged.save_prefixes[i]
+            tmpl = sls[0]
+            _bind_slice_inputs(sr, tmpl, prefix, inputs)
+            # Align this request's merged-graph constant nodes with each
+            # step slice's constants: merge_graphs copies a slice's nodes
+            # in order into the request's segment, so constants correspond
+            # by position.  Values equal at every step fold into the shared
+            # const env; differing values ride the scan as stacked inputs.
+            lo, hi = merged.node_ranges[i]
+            merged_cids = [
+                n.id for n in graph.nodes[lo:hi] if n.op == "constant"
+            ]
+            per_step = [
+                [n.args[0] for n in sl.graph.nodes if n.op == "constant"]
+                for sl in sls
+            ]
+            for ci, mid in enumerate(merged_cids):
+                vals = [step_vals[ci] for step_vals in per_step]
+                if all(np.array_equal(vals[0], v) for v in vals[1:]):
+                    consts[mid] = vals[0]
+                else:
+                    step_consts[mid] = jnp.stack(
+                        [jnp.asarray(v) for v in vals]
+                    )
+            need.append((
+                sr,
+                sls,
+                {nid: f"{prefix}/{name}"
+                 for name, nid in tmpl.graph.saves.items()},
+            ))
+        return _FusedPlan(
+            key=key, graph=graph, k=k, need=need,
+            consts=consts, step_consts=step_consts, inputs=inputs,
+        )
+
+    def _fused_executable(self, graph: InterventionGraph, k: int) -> Callable:
+        if self._fused_fn is not None:
+            return self._fused_fn(graph, k)
+        from repro.core.serialize import structural_key
+
+        key = (structural_key(graph), k)
+        fn = self._fused_cache.get(key)
+        if fn is None:
+            fn = jax.jit(make_fused_step(
+                self.model, graph, self.schedule, k, mode=self.mode
+            ))
+            self._fused_cache[key] = fn
+        return fn
+
+    def step_fused(self, k: int) -> list[SlotRequest]:
+        """Decode up to ``k`` tokens for every resident request in ONE
+        compiled ``lax.scan`` dispatch; returns the requests that retired.
+
+        The window is clipped to the next retirement boundary (slot
+        membership must be constant inside the scan) and to the longest
+        structurally-uniform run of every resident's step slices — so e.g.
+        steps 3..5 of an otherwise-plain trace carrying a setter fuse as
+        their own segment, and a single non-uniform step runs as a
+        length-1 window of the same compiled machinery (keeping numerics
+        independent of how co-tenancy split the loop).  Graphs the scan
+        body cannot host — ``log`` nodes, a failed compile — fall back to
+        ONE eager per-step execution, after which fusion is retried.
+        """
+        if not self.resident:
+            return []
+        if not self.fuse:
+            return self._step_eager()
+        k = max(1, min(int(k), self.fusable_steps()))
+        if k >= 2:
+            k = min([k] + [
+                self._uniform_run(sr, k) for sr in self.resident
+            ])
+        if k < 1:
+            return self._step_eager()
+        plan = self._plan_fused(k)
+        if plan is None:
+            return self._step_eager()
+
+        pos_np = np.full((self.num_slots,), _FREE_POS, np.int32)
+        for sr in self.resident:
+            pos_np[sr.start:sr.start + sr.size] = (
+                np.asarray(sr.base_pos) + sr.t
+            )
+        try:
+            fn = self._fused_executable(plan.graph, plan.k)
+            (self_cache, self_token), ys = fn(
+                self.params, self.cache, self.token, jnp.asarray(pos_np),
+                plan.consts, plan.step_consts, plan.inputs,
+            )
+        except Exception:
+            # A fused compile/run failure must not wedge the loop: remember
+            # the offending program and let the eager path (with its
+            # per-request offender isolation) serve this window.
+            self._fused_bad.add(plan.key)
+            return self._step_eager()
+        self.cache, self.token = self_cache, self_token
+
+        # one host transfer for the whole token stack (k device slices per
+        # request would rebuild the per-step dispatch cost being removed)
+        tok_np = np.asarray(ys["token"])  # (k, num_slots, 1)
+        for sr in self.resident:
+            lo, hi = sr.start, sr.start + sr.size
+            for j in range(plan.k):
+                sr.new_tokens.append(tok_np[j, lo:hi, 0])
+            sr.last_logits = ys["logits"][plan.k - 1, lo:hi]
+            sr.t += plan.k
+        for sr, sls, wire_by_nid in plan.need:
+            # saves follow the NODE across steps: slice-local save node ids
+            # are identical in every uniform slice, so step j's value is the
+            # template channel of that id, named by step j's own slice
+            # (cross-step env exports — length-1 windows only — route back
+            # into the request's env exactly like the eager path)
+            for j in range(plan.k):
+                _route_slice_saves(sr, sls[j], {
+                    name: ys["saves"][wire_by_nid[nid]][j]
+                    for name, nid in sls[j].graph.saves.items()
+                })
+
+        self.steps_run += plan.k
+        self.fused_segments += 1
+        self.fused_steps += plan.k
+        if self.stats is not None:
+            busy = self.num_slots - len(self._free)
+            for _ in range(plan.k):
+                self.stats.record_slot_step(busy, self.num_slots)
+            if hasattr(self.stats, "record_fused_segment"):
+                self.stats.record_fused_segment(plan.k)
+        retired = [sr for sr in self.resident if sr.done()]
+        for sr in retired:
+            self._retire(sr)
+        return retired
+
     def _retire(self, sr: SlotRequest) -> None:
         self.cache = self._clear_rows_fn(self.cache, jnp.asarray(sr.rows))
         self._free.update(int(r) for r in sr.rows)
@@ -1008,10 +1407,11 @@ class DecodeLoop:
             self.stats.record_retire(sr.size, sr.t)
 
     def run_to_completion(self) -> list[SlotRequest]:
-        """Step until every resident request has retired."""
+        """Step until every resident request has retired (fused segments
+        between retirement boundaries when the loop allows fusion)."""
         done: list[SlotRequest] = []
         while self.resident:
-            done.extend(self.step())
+            done.extend(self.step_fused(self.fusable_steps()))
         return done
 
 
@@ -1024,6 +1424,20 @@ def _route_slice_saves(
             sr.env[sl.exports[name]] = val
         else:
             sr.saves[name] = val
+
+
+def _bind_slice_inputs(
+    sr: SlotRequest, sl: StepSlice, prefix: str, bound: dict[str, Any]
+) -> None:
+    """Bind one request's cross-step env imports and user experiment inputs
+    under its merged-graph prefix — the one routing convention shared by
+    the eager step, offender isolation, and the fused planner."""
+    for name, nid in sl.imports.items():
+        bound[f"{prefix}/{name}"] = sr.env[nid]
+    if sr.inputs:
+        for n in sl.graph.nodes:
+            if n.op == "input" and not n.args[0].startswith("__env"):
+                bound[f"{prefix}/{n.args[0]}"] = sr.inputs[n.args[0]]
 
 
 def stack_step_saves(

@@ -46,6 +46,7 @@ __all__ = [
     "ALL_STEPS",
     "PRE_STEP",
     "assign_steps",
+    "node_fingerprint",
 ]
 
 # Pseudo-site indices used by the scheduler.
@@ -275,6 +276,63 @@ class InterventionGraph:
         if self.saves:
             lines.append(f"  saves: {self.saves}")
         return "\n".join(lines)
+
+
+def _freeze_value(obj: Any) -> Any:
+    """Hashable, ==-comparable form of a node arg/kwarg value.
+
+    Arrays compare by CONTENT (dtype, shape, bytes): two nodes whose raw
+    array args hold equal values fingerprint equal, differing values do not
+    — the fused decode planner relies on this to decide whether one
+    compiled step can serve several decode steps.
+    """
+    if isinstance(obj, Ref):
+        return ("__ref__", obj.node_id)
+    if obj is Ellipsis:
+        return "__ellipsis__"
+    if isinstance(obj, slice):
+        return ("__slice__", obj.start, obj.stop, obj.step)
+    if isinstance(obj, (tuple, list)):
+        return ("__seq__",) + tuple(_freeze_value(o) for o in obj)
+    if isinstance(obj, dict):
+        return ("__map__",) + tuple(
+            sorted((str(k), _freeze_value(v)) for k, v in obj.items())
+        )
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    import numpy as _np
+
+    arr = _np.asarray(obj)
+    return ("__array__", arr.dtype.name, arr.shape,
+            _np.ascontiguousarray(arr).tobytes())
+
+
+def node_fingerprint(node: Node, *, abstract_constants: bool = False) -> Any:
+    """Structural identity of one node, EXCLUDING its step coordinate.
+
+    Used by the fused-decode planner (:mod:`repro.core.generation`) to test
+    whether per-step slice graphs are structurally identical — the step
+    stamp is scheduling metadata, not structure.  With
+    ``abstract_constants`` a ``constant`` node's value collapses to its
+    (dtype, shape): the planner threads differing per-step constant values
+    through the scan as stacked inputs, so they need not match.
+    """
+    if node.op == "constant" and abstract_constants:
+        import numpy as _np
+
+        arr = _np.asarray(node.args[0])
+        args: Any = (("__const_spec__", arr.dtype.name, arr.shape),)
+    else:
+        args = _freeze_value(node.args)
+    return (
+        node.op,
+        node.site,
+        node.layer,
+        node.invoke,
+        args,
+        _freeze_value(node.kwargs),
+        _freeze_value(node.meta),
+    )
 
 
 def assign_steps(graph: InterventionGraph, n_steps: int) -> dict[int, int]:

@@ -46,6 +46,7 @@ __all__ = [
     "Interleaver",
     "InterleaveState",
     "run_interleaved",
+    "make_step_callable",
     "EarlyStop",
     "last_referenced_site",
 ]
@@ -504,6 +505,59 @@ def capture_site_shapes(
     if missing:
         raise GraphValidationError(f"grad sites never fired: {missing}")
     return cap.shapes
+
+
+# ------------------------------------------------------------------ fused
+def make_step_callable(
+    model_fn: Callable[..., Any],
+    graph: InterventionGraph,
+    schedule: SiteSchedule,
+    *,
+    mode: str = "unrolled",
+) -> Callable[..., tuple[Any, dict[str, Any]]]:
+    """Emit a jit-able interleaved step function with the plan built ONCE.
+
+    The returned ``step(args, kwargs, inputs=None, const_env=None)`` runs
+    ``model_fn`` with ``graph``'s getters/setters applied inside the traced
+    body and returns ``(model_output, saves)`` — a pure function of array
+    inputs, safe to trace inside ``jax.lax.scan`` (the fused decode loop of
+    :mod:`repro.core.generation` uses it as the scan body, so per-step saves
+    come back as stacked scan ys).
+
+    Features that cannot live inside a compiled body are rejected up front:
+    ``.grad`` (needs the perturbation driver), ``log`` (appends traced
+    values to a Python list at trace time), and early stop (raises through
+    the trace).
+    """
+    plan = Interleaver(graph, schedule, mode=mode)
+    if plan.grad_nodes:
+        raise GraphValidationError(
+            ".grad cannot be compiled into a fused step; use the eager "
+            "per-step path"
+        )
+    for n in graph.nodes:
+        if n.op == "log":
+            raise GraphValidationError(
+                "log nodes cannot be compiled into a fused step (logs are "
+                "recorded host-side); use the eager per-step path"
+            )
+
+    def step(
+        args: tuple,
+        kwargs: dict | None = None,
+        inputs: dict[str, Any] | None = None,
+        const_env: dict[int, Any] | None = None,
+    ) -> tuple[Any, dict[str, Any]]:
+        state = InterleaveState(plan, inputs=inputs, const_env=const_env)
+        taps.push_state(state)
+        try:
+            out = model_fn(*args, **(kwargs or {}))
+        finally:
+            taps.pop_state()
+        state.finalize(include_grad_dependents=True)
+        return out, state.saves()
+
+    return step
 
 
 # ------------------------------------------------------------------ driver

@@ -694,6 +694,12 @@ class GenerateTracer(Tracer):
         self._step_save_names: dict[str, dict[int, str]] = {}
         self.output_tokens: np.ndarray | None = None
         self.output_logits: Any | None = None
+        # Step-uniformity mark, stamped when the trace context exits (before
+        # execution): True when the whole decode loop can run as ONE fused
+        # lax.scan program (a list, one flag per invoke, for multi-invoke
+        # traces; None if the graph failed step validation — the execution
+        # path raises the real error).
+        self.steps_uniform: bool | list[bool] | None = None
 
     # ----------------------------------------------------------------- form
     def invoke(self, *args: Any, max_new_tokens: int | None = None,
@@ -869,9 +875,33 @@ class GenerateTracer(Tracer):
             )
         return zoo
 
+    def _mark_uniform(self) -> None:
+        """Stamp :attr:`steps_uniform` — whether the decode loop will run
+        fused.  Best-effort: a graph that fails step validation is marked
+        ``None`` and the execution path raises the real error."""
+        from repro.core.batching import split_invokes
+        from repro.core.generation import steps_uniform
+
+        try:
+            if self.invokes:
+                self.steps_uniform = [
+                    steps_uniform(g, inv.max_new_tokens)
+                    for g, inv in zip(
+                        split_invokes(self.graph, len(self.invokes)),
+                        self.invokes,
+                    )
+                ]
+            else:
+                self.steps_uniform = steps_uniform(
+                    self.graph, self.max_new_tokens
+                )
+        except Exception:
+            self.steps_uniform = None
+
     def execute(self) -> dict[str, Any]:
         from repro.core.generation import run_generation
 
+        self._mark_uniform()
         if self.remote:
             return self._execute_remote()
         if self.invokes:

@@ -18,6 +18,15 @@ TPU-native design (HARDWARE ADAPTATION note — this is *not* a CUDA port):
     (q_block, kv_block) pairs that are fully masked under causality are
     skipped via ``@pl.when`` on the compute (loads are pipelined by the
     grid either way).
+  * Ragged masking: with explicit per-row ``q_pos``/``k_pos`` arrays the
+    mask is computed from the DELIVERED positions instead of rebuilt iota —
+    keys at sentinel positions (>= ``PAD_LIMIT``: right-padded rows,
+    unwritten cache slots) are masked for every query, exactly like the
+    XLA paths' ``_mask_bias``.  This is what lets
+    ``set_attention_impl("pallas")`` serve padded co-tenant batches
+    (``batch["lengths"]``).  Positions are arbitrary per row, so the
+    static causal block skip is disabled on this variant (a per-row length
+    hint could re-enable it — TPU perf follow-up).
 
 Validated against ``ref.reference_attention`` in interpret mode over shape/
 dtype sweeps (tests/test_kernels.py).
@@ -34,6 +43,9 @@ from jax.experimental import pallas as pl
 __all__ = ["flash_attention_kernel_call"]
 
 NEG_INF = -1e30
+# Keep in sync with repro.models.common.PAD_LIMIT: any key whose position
+# is >= this is a padding/unwritten sentinel and must never be attended.
+PAD_LIMIT = (2**31 - 1) // 4
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
@@ -93,6 +105,59 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _kernel_pos(q_ref, k_ref, v_ref, qp_ref, kp_ref, o_ref,
+                m_ref, l_ref, acc_ref, *,
+                scale: float, causal: bool, window: int | None,
+                bq: int, bk: int, n_kv: int):
+    """Position-aware variant: masks from delivered q/k positions.
+
+    Keys at sentinel positions (>= PAD_LIMIT) are masked for EVERY query —
+    causal or not — so right-padded batch rows are provably inert, matching
+    the XLA paths' ``_mask_bias``.  No static causal block skip: positions
+    are arbitrary per row."""
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    qp = qp_ref[0]  # (bq,) int32
+    kp = kp_ref[0]  # (bk,) int32
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale  # (bq, bk)
+
+    d = qp[:, None] - kp[None, :]
+    ok = jnp.broadcast_to((kp < PAD_LIMIT)[None, :], (bq, bk))
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        ok &= d < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
@@ -101,6 +166,8 @@ def flash_attention_kernel_call(
     q: jax.Array,  # (B, H, S, hd)
     k: jax.Array,  # (B, K, T, hd)
     v: jax.Array,  # (B, K, T, hd)
+    q_pos: jax.Array | None = None,  # (B, S) int32 — enables ragged masking
+    k_pos: jax.Array | None = None,  # (B, T) int32
     *,
     causal: bool = True,
     window: int | None = None,
@@ -108,6 +175,15 @@ def flash_attention_kernel_call(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jax.Array:
+    """Flash attention.  Without positions the mask is rebuilt from block
+    iota (static causal block skip intact — direct kernel callers only);
+    with ``q_pos``/``k_pos`` the mask honours delivered positions,
+    including the PAD sentinels of right-padded ragged batches.  Model
+    paths always deliver positions (their position arrays may carry
+    sentinels), so they take the positional variant — re-enabling the
+    causal skip there needs a per-row length hint (ROADMAP note)."""
+    if (q_pos is None) != (k_pos is None):
+        raise ValueError("q_pos and k_pos must be provided together")
     B, H, S, hd = q.shape
     K, T = k.shape[1], k.shape[2]
     G = H // K
@@ -125,6 +201,48 @@ def flash_attention_kernel_call(
     n_q = Sp // bq
     n_kv = Tp // bk
 
+    q_spec = pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, bk, hd), lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)
+    )
+    out_spec = pl.BlockSpec(
+        (1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)
+    )
+    scratch = [
+        _vmem((bq,), jnp.float32),
+        _vmem((bq,), jnp.float32),
+        _vmem((bq, hd), jnp.float32),
+    ]
+
+    if q_pos is not None:
+        # pad positions with the sentinel so block-padding tails mask out
+        qp = jnp.asarray(q_pos, jnp.int32)
+        kp = jnp.asarray(k_pos, jnp.int32)
+        if Sp != S:
+            qp = jnp.pad(qp, ((0, 0), (0, Sp - S)),
+                         constant_values=PAD_LIMIT)
+        if Tp != T:
+            kp = jnp.pad(kp, ((0, 0), (0, Tp - T)),
+                         constant_values=PAD_LIMIT)
+        kernel = functools.partial(
+            _kernel_pos, scale=scale, causal=causal, window=window,
+            bq=bq, bk=bk, n_kv=n_kv,
+        )
+        out = pl.pallas_call(
+            kernel,
+            grid=(B, H, n_q, n_kv),
+            in_specs=[
+                q_spec, kv_spec, kv_spec,
+                pl.BlockSpec((1, bq), lambda b, h, iq, ik: (b, iq)),
+                pl.BlockSpec((1, bk), lambda b, h, iq, ik: (b, ik)),
+            ],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(q, k, v, qp, kp)
+        return out[:, :, :S, :]
+
     kernel = functools.partial(
         _kernel, scale=scale, causal=causal, window=window,
         bq=bq, bk=bk, n_kv=n_kv, seq_kv=T,
@@ -132,24 +250,10 @@ def flash_attention_kernel_call(
     out = pl.pallas_call(
         kernel,
         grid=(B, H, n_q, n_kv),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)),
-            pl.BlockSpec(
-                (1, 1, bk, hd), lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)
-            ),
-            pl.BlockSpec(
-                (1, 1, bk, hd), lambda b, h, iq, ik, G=G: (b, h // G, ik, 0)
-            ),
-        ],
-        out_specs=pl.BlockSpec(
-            (1, 1, bq, hd), lambda b, h, iq, ik: (b, h, iq, 0)
-        ),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
-        scratch_shapes=[
-            _vmem((bq,), jnp.float32),
-            _vmem((bq,), jnp.float32),
-            _vmem((bq, hd), jnp.float32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(q, k, v)
     return out[:, :, :S, :]

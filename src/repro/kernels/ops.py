@@ -35,13 +35,29 @@ def flash_attention(
     causal: bool = True,
     window: int | None = None,
 ) -> jax.Array:
-    """Returns (B, S, K, G, hd) to match the chunked/dense paths."""
+    """Returns (B, S, K, G, hd) to match the chunked/dense paths.
+
+    ``q_pos``/``k_pos`` (broadcastable to (B, S)/(B, T) int32) switch the
+    kernel to position-delivered masking: PAD-sentinel keys (right-padded
+    ragged rows, unwritten cache slots) are masked for every query, so
+    ``set_attention_impl("pallas")`` serves ``batch["lengths"]`` traffic
+    with the same semantics as the XLA ``_mask_bias`` paths."""
     B, S, K, G, hd = qg.shape
+    T = k.shape[1]
     q = qg.transpose(0, 2, 3, 1, 4).reshape(B, K * G, S, hd)  # (B, H, S, hd)
     kt = k.transpose(0, 2, 1, 3)  # (B, K, T, hd)
     vt = v.transpose(0, 2, 1, 3)
+    qp = kp = None
+    if q_pos is not None or k_pos is not None:
+        qp = jnp.broadcast_to(
+            jnp.asarray(q_pos if q_pos is not None else jnp.arange(S),
+                        jnp.int32), (B, S))
+        kp = jnp.broadcast_to(
+            jnp.asarray(k_pos if k_pos is not None else jnp.arange(T),
+                        jnp.int32), (B, T))
     out = flash_attention_kernel_call(
-        q, kt, vt, causal=causal, window=window, interpret=interpret_mode()
+        q, kt, vt, qp, kp, causal=causal, window=window,
+        interpret=interpret_mode(),
     )
     return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4)
 

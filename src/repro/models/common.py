@@ -83,20 +83,15 @@ def valid_positions(lengths: jax.Array | None, batch: int, seq_len: int):
     """(B, S) positions with padded slots set to the PAD sentinel.
 
     With ``lengths=None`` this is the plain broadcast ``arange`` every model
-    used before ragged co-tenancy existed — bit-identical fast path.
+    used before ragged co-tenancy existed — bit-identical fast path.  Every
+    attention impl honours the sentinels, including the pallas flash kernel
+    (per-row positions thread into its mask — see
+    ``repro.kernels.flash_attention``).
     """
     pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
                            (batch, seq_len))
     if lengths is None:
         return pos
-    if get_attention_impl() == "pallas":
-        # The flash kernel rebuilds iota positions internally and would
-        # silently attend to padded keys — fail loudly instead of leaking.
-        raise NotImplementedError(
-            "ragged-length masking is not supported with the pallas "
-            "attention kernel yet; use set_attention_impl('auto'/'dense'/"
-            "'chunked') for padded batches"
-        )
     return jnp.where(length_mask(lengths, seq_len), pos, PAD_POS)
 
 

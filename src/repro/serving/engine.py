@@ -13,7 +13,11 @@ The NDIF compute core (paper §3.3 / B.2).  One engine per hosted model:
     identical call reports zero new compiles);
   * serves *intervention-aware* generation: a step-annotated graph
     (:mod:`repro.core.generation`) rides the same decode loop, with
-    uninstrumented steps taking the cached compiled fast path.
+    uninstrumented steps taking the cached compiled fast path;
+  * fuses step-uniform decode stretches into ONE ``lax.scan`` dispatch
+    (``EngineStats.fused_segments``/``fused_steps``), caching the compiled
+    program by structural graph signature — a second identically-shaped
+    generation request compiles nothing and dispatches once per segment.
 """
 from __future__ import annotations
 
@@ -26,7 +30,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import taps
-from repro.core.generation import GenerationResult, run_generation
+from repro.core.generation import (
+    GenerationResult,
+    _step_order,
+    make_fused_step,
+    run_generation,
+)
 from repro.core.graph import InterventionGraph
 from repro.core.interleave import SiteSchedule, run_interleaved
 from repro.core.serialize import structural_key
@@ -62,6 +71,10 @@ class EngineStats:
         self.slot_steps = 0      # decode steps run by the loop
         self.slot_busy = 0       # sum of occupied rows over steps
         self.slot_capacity = 0   # sum of total rows over steps
+        # fused decode (one lax.scan dispatch per step-uniform stretch)
+        self.fused_segments = 0  # fused scan dispatches
+        self.fused_steps = 0     # decode steps served by those dispatches
+        self.eager_steps = 0     # decode steps served per-step (non-uniform)
 
     def record_group(self, n_requests: int, padded: int, real: int) -> None:
         """Scheduler hook: one parallel co-tenancy group was executed."""
@@ -93,6 +106,15 @@ class EngineStats:
         self.slot_busy += int(busy_rows)
         self.slot_capacity += int(total_rows)
 
+    def record_fused_segment(self, n_steps: int) -> None:
+        """One fused lax.scan dispatch served ``n_steps`` decode steps."""
+        self.fused_segments += 1
+        self.fused_steps += int(n_steps)
+
+    def record_eager_step(self) -> None:
+        """One decode step ran the eager per-step path."""
+        self.eager_steps += 1
+
     def snapshot(self) -> dict:
         """JSON-ready view for the server's ``stats`` endpoint."""
         cells = self.padded_tokens + self.real_tokens
@@ -123,7 +145,38 @@ class EngineStats:
                 self.slot_busy / self.slot_capacity
                 if self.slot_capacity else 0.0
             ),
+            "fused_segments": self.fused_segments,
+            "fused_steps": self.fused_steps,
+            "eager_steps": self.eager_steps,
         }
+
+
+class _FusedCountersOnly:
+    """Stats adapter for the engine's INTERNAL solo decode loops.
+
+    ``run_generation`` executes through a private DecodeLoop; its fused /
+    eager step counters should flow to :class:`EngineStats`, but admission
+    / retirement / slot-occupancy accounting stays reserved for the SHARED
+    continuous loop (``admissions == 0`` still means "nothing rode the
+    slot table")."""
+
+    def __init__(self, stats: EngineStats) -> None:
+        self._stats = stats
+
+    def record_admission(self, rows: int) -> None:
+        pass
+
+    def record_retire(self, rows: int, n_tokens: int) -> None:
+        pass
+
+    def record_slot_step(self, busy_rows: int, total_rows: int) -> None:
+        pass
+
+    def record_fused_segment(self, n_steps: int) -> None:
+        self._stats.record_fused_segment(n_steps)
+
+    def record_eager_step(self) -> None:
+        self._stats.record_eager_step()
 
 
 class InferenceEngine:
@@ -159,6 +212,12 @@ class InferenceEngine:
         # admission/retirement — slot reuse never recompiles.
         self._write_rows_jit = jax.jit(self._write_rows_counted)
         self._clear_rows_jit = jax.jit(self._clear_rows_counted)
+        # Fused decode executables, keyed by the merged step graph's
+        # structural signature + scan length: a second identically-shaped
+        # request reuses the compiled lax.scan program — zero compiles,
+        # exactly like the prefill/decode caches above.
+        self._fused_exec: dict[Any, Callable] = {}
+        self._step_schedule = _step_order(model.site_schedule(mode))
 
     def _full_schedule(self) -> SiteSchedule:
         sched = self.model.site_schedule(self.mode)
@@ -197,6 +256,29 @@ class InferenceEngine:
     def _clear_rows_counted(self, table, rows):
         self.stats.compiles += 1  # fires at trace time only
         return self.model.cache_clear_rows(table, rows)
+
+    def _fused_factory(self, graph: InterventionGraph, n_steps: int):
+        """Compiled fused-decode program for one step-uniform segment.
+
+        Passed to :class:`~repro.core.generation.DecodeLoop` as
+        ``fused_fn``; cached by (structural graph key, scan length) so a
+        second identically-shaped request performs zero new compiles."""
+        key = (structural_key(graph), int(n_steps))
+        fn = self._fused_exec.get(key)
+        if fn is None:
+            runner = make_fused_step(
+                self.model, graph, self._step_schedule, int(n_steps),
+                mode=self.mode,
+            )
+
+            def counted(params, cache, token, base_pos, consts, xs, inputs):
+                self.stats.compiles += 1  # fires at trace time only
+                return runner(params, cache, token, base_pos, consts, xs,
+                              inputs)
+
+            fn = jax.jit(counted)
+            self._fused_exec[key] = fn
+        return fn
 
     # ------------------------------------------------------------- execute
     def execute(
@@ -287,11 +369,16 @@ class InferenceEngine:
         graph: InterventionGraph,
         batch: dict,
         max_new_tokens: int = 16,
+        *,
+        fused: bool = True,
     ) -> GenerationResult:
         """Generation with a step-annotated intervention graph interleaved.
 
-        Uninstrumented steps run the cached compiled prefill/decode;
-        instrumented steps run interleaved (see repro.core.generation).
+        Step-uniform decode stretches run as ONE compiled ``lax.scan``
+        dispatch (``fused=False`` forces the eager per-step path — the
+        benchmark baseline); uninstrumented eager steps run the cached
+        compiled prefill/decode; non-uniform instrumented steps run the
+        eager interleaver (see repro.core.generation).
         """
         batch = dict(batch)
         tokens = jnp.asarray(batch.pop("tokens"))
@@ -311,6 +398,9 @@ class InferenceEngine:
                 p, b, batch_size=bs, max_len=ml, kind=kind
             ),
             lengths=lengths,
+            fused=fused,
+            fused_fn=self._fused_factory,
+            stats=_FusedCountersOnly(self.stats),
         )
         res.saves = jax.tree.map(lambda x: jax.device_get(x), res.saves)
         self.stats.exec_seconds += time.perf_counter() - t0
@@ -345,6 +435,7 @@ class InferenceEngine:
             write_rows_fn=self._write_rows_jit,
             clear_rows_fn=self._clear_rows_jit,
             stats=self.stats,
+            fused_fn=self._fused_factory,
         )
         for res in results:
             res.saves = jax.tree.map(lambda x: jax.device_get(x), res.saves)
@@ -380,6 +471,7 @@ class InferenceEngine:
             write_rows_fn=self._write_rows_jit,
             clear_rows_fn=self._clear_rows_jit,
             stats=self.stats,
+            fused_fn=self._fused_factory,
         )
 
     def hidden_states(self, tokens: jax.Array, **extras) -> np.ndarray:

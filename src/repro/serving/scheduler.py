@@ -388,11 +388,15 @@ class CoTenantScheduler:
     def _drain_continuous(self) -> list[Ticket]:
         """Drive the persistent decode loop until queue and slots are empty.
 
-        Each iteration is one decode-step boundary: single-forward traces
-        burst-merge (they have no loop to join), queued generation requests
-        are admitted into free slots (FIFO within a length bucket, arrivals
-        in one bucket sharing one prefill), then the loop advances ONE step
-        and retired requests get their tickets finalized immediately.
+        Each iteration is one admission/retirement boundary: single-forward
+        traces burst-merge (they have no loop to join), queued generation
+        requests are admitted into free slots (FIFO within a length bucket,
+        arrivals in one bucket sharing one prefill), then the loop advances
+        to the next retirement — ONE fused ``lax.scan`` dispatch for
+        step-uniform graphs, per-step eager execution otherwise — and
+        retired requests get their tickets finalized immediately.
+        (:meth:`pump` stays single-step: a live driver interleaves arrivals
+        with the loop, so its boundary is every step.)
         """
         loop = self.loop
         done: list[Ticket] = []
@@ -400,7 +404,11 @@ class CoTenantScheduler:
             self._serve_single_forwards(done)
             self._admit_arrivals(loop, done)
             if loop.resident:
-                for sr in loop.step():
+                # After admission, anything still queued is waiting for
+                # slots — the next boundary is the next RETIREMENT, so the
+                # whole stretch until then fuses into one scan dispatch
+                # (step-uniform graphs; eager fallback otherwise).
+                for sr in loop.step_fused(loop.fusable_steps()):
                     done.append(self._finish_slot(sr))
         return done
 

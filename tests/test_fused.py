@@ -1,0 +1,562 @@
+"""Fused decode: the whole decode loop compiled into ONE lax.scan program.
+
+Layers under test:
+  * ``steps_uniform`` — which generation graphs are step-uniform (the
+    fused-eligible class: uninstrumented, ``all_steps()``-only, identical
+    per-step site/op sets; per-step constant VALUES may differ);
+  * fused == eager parity for solo generate, multi-invoke generate, and a
+    continuous-loop schedule with admissions between fused segments, across
+    all four model families;
+  * segment splitting — a trace instrumented at SOME steps fuses the
+    uniform stretches; single non-uniform steps run as length-1 windows of
+    the same compiled machinery (window splits are bit-identical);
+  * engine caching — a repeat fused request performs zero new compiles;
+  * EngineStats ``fused_segments`` / ``fused_steps`` / ``eager_steps``,
+    through the stats endpoint and ``client.stats()``.
+
+Parity bars (repo conventions): greedy tokens are compared EXACTLY for all
+four families.  Saves are bit-exact when both sides run compiled (the
+uninstrumented path); instrumented comparisons pit the compiled scan
+against the UNJITTED eager interleaver, which rounds at the ~2e-6 level on
+CPU, so those use the repo's standard 1e-5 cross-strategy tolerance
+(encdec always 1e-5).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.generation import (
+    DecodeLoop,
+    make_fused_step,
+    run_generation,
+    run_generation_invokes,
+    steps_uniform,
+)
+from repro.core.graph import (
+    ALL_STEPS,
+    PREFILL_STEP,
+    GraphValidationError,
+    InterventionGraph,
+    Ref,
+)
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import CoTenantScheduler, Request
+
+FAMILIES = {
+    "paper-gpt-small": "transformer",
+    "mamba2-1.3b": "ssm",
+    "zamba2-2.7b": "hybrid",
+    "seamless-m4t-large-v2": "encdec",
+}
+
+
+@pytest.fixture(scope="module", params=sorted(FAMILIES))
+def family(request):
+    arch = request.param
+    cfg = R.get_config(arch, reduced=True)
+    model = R.build_model(arch, cfg)
+    params = model.init(jax.random.key(0))
+    return arch, cfg, model, params
+
+
+def _batch(cfg, rows, seq, seed):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": rng.integers(1, cfg.vocab_size, (rows, seq)).astype(np.int32)}
+    if cfg.arch_type == "audio":
+        batch["src_embeds"] = rng.standard_normal(
+            (rows, cfg.n_source_frames, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+def _site(arch):
+    return {
+        "ssm": "layers.mixer.output",
+        "hybrid": "layers.mixer.output",
+        "encdec": "decoder.mlp.output",
+    }.get(FAMILIES[arch], "layers.mlp.output")
+
+
+def _steer_graph(cfg, arch, n_steps, *, save=True):
+    """all_steps() setter + per-step logits saves — step-uniform."""
+    g = InterventionGraph()
+    t = g.add("tap_get", site=_site(arch), layer=0, step=ALL_STEPS)
+    c = g.add("constant", np.float32(5.0))
+    u = g.add("add", Ref(t.id), Ref(c.id))
+    g.add("tap_set", Ref(u.id), site=_site(arch), layer=0, step=ALL_STEPS)
+    if save:
+        for s in range(n_steps):
+            tt = g.add("tap_get", site="logits", step=s)
+            g.mark_saved(f"lg@step{s}", g.add("save", Ref(tt.id)))
+    return g
+
+
+def _assert_match(arch, got, want, *, exact):
+    exact = exact and FAMILIES[arch] != "encdec"
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+    assert sorted(got.saves) == sorted(want.saves)
+    for k in want.saves:
+        if exact:
+            np.testing.assert_array_equal(np.asarray(got.saves[k]),
+                                          np.asarray(want.saves[k]))
+        else:
+            np.testing.assert_allclose(np.asarray(got.saves[k]),
+                                       np.asarray(want.saves[k]),
+                                       rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- steps_uniform
+def test_steps_uniform_classes():
+    assert steps_uniform(InterventionGraph(), 4)  # uninstrumented
+
+    g = InterventionGraph()  # all_steps-only
+    t = g.add("tap_get", site="logits", step=ALL_STEPS)
+    g.add("tap_set", Ref(t.id), site="logits", step=ALL_STEPS)
+    assert steps_uniform(g, 4)
+
+    g = InterventionGraph()  # identical per-step saves
+    for s in range(3):
+        t = g.add("tap_get", site="logits", step=s)
+        g.mark_saved(f"lg@step{s}", g.add("save", Ref(t.id)))
+    assert steps_uniform(g, 3)
+
+    g = InterventionGraph()  # prefill-only instrumentation is uniform
+    t = g.add("tap_get", site="embed", step=PREFILL_STEP)
+    g.mark_saved("emb", g.add("save", Ref(t.id)))
+    assert steps_uniform(g, 3)
+
+    g = InterventionGraph()  # one instrumented step out of N
+    t = g.add("tap_get", site="logits", step=1)
+    g.mark_saved("lg", g.add("save", Ref(t.id)))
+    assert not steps_uniform(g, 3)
+
+    g = InterventionGraph()  # differing sites per step
+    t0 = g.add("tap_get", site="logits", step=0)
+    g.mark_saved("a", g.add("save", Ref(t0.id)))
+    t1 = g.add("tap_get", site="embed", step=1)
+    g.mark_saved("b", g.add("save", Ref(t1.id)))
+    assert not steps_uniform(g, 2)
+
+    g = InterventionGraph()  # cross-step env flow
+    t = g.add("tap_get", site="logits", step=0)
+    g.add("tap_set", Ref(t.id), site="logits", step=1)
+    assert not steps_uniform(g, 2)
+
+    g = InterventionGraph()  # log records host-side — never fusable
+    for s in range(2):
+        t = g.add("tap_get", site="logits", step=s)
+        g.add("log", Ref(t.id))
+    assert not steps_uniform(g, 2)
+
+
+def test_steps_uniform_allows_varying_constants():
+    """Identical structure with different per-step constant VALUES is still
+    uniform: values thread through the scan as stacked inputs."""
+    g = InterventionGraph()
+    for s in range(3):
+        t = g.add("tap_get", site="logits", step=s)
+        c = g.add("constant", np.float32(s + 1))
+        u = g.add("add", Ref(t.id), Ref(c.id))
+        g.add("tap_set", Ref(u.id), site="logits", step=s)
+    assert steps_uniform(g, 3)
+
+
+# ------------------------------------------------------------- solo parity
+def test_solo_generate_fused_matches_eager(family):
+    """Uninstrumented: fused scan vs compiled eager stepping, BIT-exact
+    tokens and logits for every family."""
+    arch, cfg, model, params = family
+    engine = InferenceEngine(model, params, mode="unrolled")
+    batch = _batch(cfg, 2, 6, 0)
+    got = engine.generate_interleaved(InterventionGraph(), dict(batch), 5,
+                                      fused=True)
+    want = engine.generate_interleaved(InterventionGraph(), dict(batch), 5,
+                                       fused=False)
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+    np.testing.assert_array_equal(np.asarray(got.logits),
+                                  np.asarray(want.logits))
+    assert engine.stats.fused_segments >= 1
+    assert engine.stats.fused_steps == 5
+    assert engine.stats.eager_steps == 5
+
+
+def test_solo_generate_steered_fused_matches_eager(family):
+    """all_steps() steering + per-step stacked saves: tokens exact, saves
+    at the cross-strategy tolerance (the eager side runs unjitted)."""
+    arch, cfg, model, params = family
+    N = 4
+    batch = _batch(cfg, 2, 6, 1)
+    tokens = jnp.asarray(batch.pop("tokens"))
+    g = _steer_graph(cfg, arch, N)
+    got = run_generation(model, params, g, tokens, N, mode="unrolled",
+                         extras=batch, fused=True)
+    want = run_generation(model, params, g, tokens, N, mode="unrolled",
+                          extras=batch, fused=False)
+    _assert_match(arch, got, want, exact=False)
+    assert sorted(got.saves) == [f"lg@step{s}" for s in range(N)]
+
+
+def test_solo_generate_prefill_tap_rides_fused(family):
+    """Prefill instrumentation does not break decode fusion: the prompt
+    forward runs interleaved, the decode loop still fuses."""
+    arch, cfg, model, params = family
+    g = InterventionGraph()
+    t = g.add("tap_get", site="embed", step=PREFILL_STEP)
+    g.mark_saved("emb", g.add("save", Ref(t.id)))
+    batch = _batch(cfg, 1, 6, 2)
+    tokens = jnp.asarray(batch.pop("tokens"))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    got = run_generation(model, params, g, tokens, 4, mode="unrolled",
+                         extras=dict(batch), fused=True,
+                         fused_fn=engine._fused_factory, stats=engine.stats)
+    want = run_generation(model, params, g, tokens, 4, mode="unrolled",
+                          extras=dict(batch), fused=False)
+    _assert_match(arch, got, want, exact=False)
+    assert engine.stats.fused_steps == 4
+
+
+def test_scan_mode_fused_matches_eager():
+    """mode="scan" nests the model's layer scan inside the fused step scan."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg, 2, 6, 3)
+    tokens = jnp.asarray(batch.pop("tokens"))
+    g = _steer_graph(cfg, "paper-gpt-small", 4)
+    got = run_generation(model, params, g, tokens, 4, mode="scan",
+                         fused=True)
+    want = run_generation(model, params, g, tokens, 4, mode="scan",
+                          fused=False)
+    _assert_match("paper-gpt-small", got, want, exact=False)
+
+
+def test_partial_instrumentation_fuses_uniform_segments():
+    """Steering only steps 2..3 of 6: the plain stretches and the steered
+    stretch each fuse as their own segment; results match eager exactly on
+    tokens."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(_batch(cfg, 2, 6, 4)["tokens"])
+
+    def mk():
+        g = InterventionGraph()
+        for s in (2, 3):
+            t = g.add("tap_get", site="layers.mlp.output", layer=1, step=s)
+            c = g.add("constant", np.float32(25.0))
+            u = g.add("add", Ref(t.id), Ref(c.id))
+            g.add("tap_set", Ref(u.id), site="layers.mlp.output", layer=1,
+                  step=s)
+        return g
+
+    assert not steps_uniform(mk(), 6)
+    engine = InferenceEngine(model, params, mode="unrolled")
+    got = engine.generate_interleaved(mk(), {"tokens": toks}, 6, fused=True)
+    want = engine.generate_interleaved(mk(), {"tokens": toks}, 6,
+                                       fused=False)
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+    # 0..1 fused, 2..3 fused (instrumented), 4..5 fused
+    assert engine.stats.fused_segments == 3
+    assert engine.stats.fused_steps == 6
+
+
+def test_varying_per_step_constants_fuse_and_match():
+    """Same structure, different constant values per step: one scan with
+    the values stacked as xs, numerically matching the eager loop."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    toks = jnp.asarray(_batch(cfg, 1, 6, 5)["tokens"])
+    N = 4
+
+    forced = [int(i) for i in
+              np.random.default_rng(9).integers(0, cfg.vocab_size, N)]
+
+    def mk():
+        g = InterventionGraph()
+        for s in range(N):
+            t = g.add("tap_get", site="logits", step=s)
+            bias = np.zeros((cfg.vocab_size,), np.float32)
+            bias[forced[s]] = 1e9
+            c = g.add("constant", bias)
+            u = g.add("add", Ref(t.id), Ref(c.id))
+            g.add("tap_set", Ref(u.id), site="logits", step=s)
+            tt = g.add("tap_get", site="logits", step=s)
+            g.mark_saved(f"lg@step{s}", g.add("save", Ref(tt.id)))
+        return g
+
+    assert steps_uniform(mk(), N)
+    engine = InferenceEngine(model, params, mode="unrolled")
+    got = engine.generate_interleaved(mk(), {"tokens": toks}, N, fused=True)
+    want = engine.generate_interleaved(mk(), {"tokens": toks}, N,
+                                       fused=False)
+    assert engine.stats.fused_segments == 1
+    _assert_match("paper-gpt-small", got, want, exact=False)
+    # the per-step steering really applied: each step decoded ITS forced id
+    np.testing.assert_array_equal(np.asarray(got.tokens)[0], forced)
+
+
+# ----------------------------------------------------------- invoke parity
+def test_multi_invoke_generate_fused_matches_eager(family):
+    """Multi-invoke generation (ragged prompts, per-invoke N) through one
+    slot loop: fused vs eager, per-invoke results compared."""
+    arch, cfg, model, params = family
+    items = [
+        (_steer_graph(cfg, arch, 3), _batch(cfg, 1, 6, 10), 3),
+        (InterventionGraph(), _batch(cfg, 1, 8, 11), 5),
+    ]
+
+    def run(fused):
+        return run_generation_invokes(
+            model, params,
+            [(g, dict(b), n) for g, b, n in items],
+            mode="unrolled", fused=fused,
+        )
+
+    got, want = run(True), run(False)
+    for g_res, w_res in zip(got, want):
+        _assert_match(arch, g_res, w_res, exact=False)
+
+
+def test_multi_invoke_tracer_marks_uniform_and_matches_solo():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    lm = traced_lm(model, params)
+    ta = _batch(cfg, 1, 6, 12)["tokens"]
+    tb = _batch(cfg, 1, 9, 13)["tokens"]
+    with lm.generate() as tr:
+        with tr.invoke(ta, max_new_tokens=4):
+            for _ in tr.steps():
+                lm.logits.save("lg")
+        with tr.invoke(tb, max_new_tokens=2) as ib:
+            with tr.step(0):
+                lm.layers[1].mlp.output += 25.0
+    assert tr.steps_uniform == [True, False]
+    # per-invoke parity vs solo eager generates
+    with lm.generate(ta, max_new_tokens=4) as solo_a:
+        for _ in solo_a.steps():
+            lm.logits.save("lg")
+    np.testing.assert_array_equal(tr.invokes[0].output_tokens,
+                                  solo_a.output_tokens)
+    with lm.generate(tb, max_new_tokens=2) as solo_b:
+        with solo_b.step(0):
+            lm.layers[1].mlp.output += 25.0
+    np.testing.assert_array_equal(ib.output_tokens, solo_b.output_tokens)
+
+
+def test_solo_tracer_marks_uniform():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    lm = traced_lm(model, params)
+    toks = _batch(cfg, 1, 6, 14)["tokens"]
+    with lm.generate(toks, max_new_tokens=3) as tr:
+        with tr.all_steps():
+            lm.layers[1].mlp.output += 10.0
+    assert tr.steps_uniform is True
+    with lm.generate(toks, max_new_tokens=3) as tr2:
+        with tr2.step(1):
+            lm.layers[1].mlp.output += 10.0
+    assert tr2.steps_uniform is False
+
+
+# ------------------------------------------------------- continuous parity
+def test_continuous_loop_admissions_between_fused_segments(family):
+    """Admissions land between fused segments; every request still matches
+    its solo run exactly (tokens) / bit-exact saves for causal families."""
+    arch, cfg, model, params = family
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32)
+    ga = _steer_graph(cfg, arch, 6, save=True)
+    sa = loop.admit(ga, _batch(cfg, 1, 7, 20), 6, request_id="a", pad_to=10)
+    loop.step_fused(2)          # fused segment of 2, then an admission
+    sb = loop.admit(InterventionGraph(), _batch(cfg, 2, 5, 21), 4,
+                    request_id="b", pad_to=10)
+    loop.run_to_completion()
+    assert loop.fused_steps >= 4
+    assert loop.fused_segments >= 2
+
+    def solo(graph, batch, n):
+        l2 = engine.start_decode_loop(4, 32)
+        sr = l2.admit(graph, dict(batch), n, pad_to=10)
+        l2.run_to_completion()
+        return sr.result()
+
+    _assert_match(arch, sa.result(),
+                  solo(_steer_graph(cfg, arch, 6), _batch(cfg, 1, 7, 20), 6),
+                  exact=True)
+    _assert_match(arch, sb.result(),
+                  solo(InterventionGraph(), _batch(cfg, 2, 5, 21), 4),
+                  exact=True)
+
+
+def test_continuous_scheduler_drain_uses_fused_segments():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=4, slot_max_len=32)
+    tickets = [
+        sched.submit(Request(graph=InterventionGraph(),
+                             batch=_batch(cfg, 1, 6 + i, 30 + i),
+                             max_new_tokens=3 + i))
+        for i in range(5)
+    ]
+    sched.drain()
+    assert all(t.error is None for t in tickets), [t.error for t in tickets]
+    assert engine.stats.fused_steps > 0
+    # parity vs a sequential engine
+    solo = InferenceEngine(model, params, mode="unrolled")
+    for i, t in enumerate(tickets):
+        res = solo.generate_interleaved(
+            InterventionGraph(), _batch(cfg, 1, 6 + i, 30 + i), 3 + i)
+        np.testing.assert_array_equal(t.result["tokens"],
+                                      np.asarray(res.tokens))
+
+
+# ----------------------------------------------------------- engine caching
+def test_repeat_fused_request_zero_new_compiles():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    g = _steer_graph(cfg, "paper-gpt-small", 4)
+    batch = _batch(cfg, 2, 6, 40)
+    engine.generate_interleaved(g, dict(batch), 4)
+    c0 = engine.stats.compiles
+    assert c0 > 0
+    res = engine.generate_interleaved(
+        _steer_graph(cfg, "paper-gpt-small", 4), dict(batch), 4)
+    assert engine.stats.compiles == c0, \
+        "2nd identically-shaped fused request must not retrace"
+    assert res.tokens.shape == (2, 4)
+    # multi-invoke repeat: same property through generate_invokes
+    items = [
+        (_steer_graph(cfg, "paper-gpt-small", 3), _batch(cfg, 1, 6, 41), 3),
+        (InterventionGraph(), _batch(cfg, 1, 8, 42), 3),
+    ]
+    engine.generate_invokes([(g, dict(b), n) for g, b, n in items])
+    c1 = engine.stats.compiles
+    engine.generate_invokes([
+        (_steer_graph(cfg, "paper-gpt-small", 3), dict(items[0][1]), 3),
+        (InterventionGraph(), dict(items[1][1]), 3),
+    ])
+    assert engine.stats.compiles == c1
+
+
+def test_fused_stats_reach_the_wire():
+    from repro.serving import LoopbackTransport, NDIFClient, NDIFServer
+
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host("gpt", model, params)
+    client = NDIFClient(LoopbackTransport(server.handle), "gpt")
+    toks = _batch(cfg, 1, 6, 50)["tokens"]
+    client.generate(toks, max_new_tokens=4)
+    stats = client.stats()
+    assert stats["fused_segments"] >= 1
+    assert stats["fused_steps"] >= 4
+    assert "eager_steps" in stats
+
+
+# --------------------------------------------------------------- edge cases
+def test_single_step_generation_fuses_length_one():
+    """N == 1 runs as a length-1 window of the SAME compiled scan body —
+    single steps and multi-step windows share one execution strategy, so a
+    request's numerics never depend on how the loop was windowed."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    res = engine.generate_interleaved(
+        InterventionGraph(), _batch(cfg, 2, 6, 60), 1)
+    assert res.tokens.shape == (2, 1)
+    assert engine.stats.fused_segments == 1
+    assert engine.stats.fused_steps == 1
+    assert engine.stats.eager_steps == 0
+
+
+def test_window_splits_are_bit_identical():
+    """One window of 4 == two windows of 2 == four single steps, BIT-exact:
+    the invariant that keeps slot-loop results independent of co-tenancy
+    (admissions change windowing, not numerics)."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+
+    def mk():
+        g = InterventionGraph()
+        for s in range(4):
+            t = g.add("tap_get", site="layers.output", layer=1, step=s)
+            g.mark_saved(f"h@step{s}", g.add("save", Ref(t.id)))
+        return g
+
+    def run(splits):
+        loop = engine.start_decode_loop(1, 16)
+        sr = loop.admit(mk(), _batch(cfg, 1, 6, 70), 4)
+        for k in splits:
+            loop.step_fused(k)
+        assert not loop.resident
+        return sr
+
+    a, b, c = run([4]), run([2, 2]), run([1, 1, 1, 1])
+    for other in (b, c):
+        np.testing.assert_array_equal(np.asarray(a.result().tokens),
+                                      np.asarray(other.result().tokens))
+        for key in a.saves:
+            np.testing.assert_array_equal(np.asarray(a.saves[key]),
+                                          np.asarray(other.saves[key]))
+
+
+def test_single_token_prompt_fuses():
+    """S == 1 (empty-cache init) decodes entirely inside one fused scan."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    batch = _batch(cfg, 2, 1, 61)
+    got = engine.generate_interleaved(InterventionGraph(), dict(batch), 4,
+                                      fused=True)
+    want = engine.generate_interleaved(InterventionGraph(), dict(batch), 4,
+                                       fused=False)
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+    assert engine.stats.fused_segments == 1
+
+
+def test_fused_failure_falls_back_to_eager_isolation():
+    """A graph whose user op only fails at run time must not wedge the
+    loop: the fused attempt fails, the eager path isolates and evicts the
+    offender, co-tenants finish."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32)
+
+    bad = InterventionGraph()
+    t = bad.add("tap_get", site="logits", step=ALL_STEPS)
+    c = bad.add("constant", np.ones((3, 7, 11), np.float32))  # bad broadcast
+    u = bad.add("add", Ref(t.id), Ref(c.id))
+    bad.add("tap_set", Ref(u.id), site="logits", step=ALL_STEPS)
+
+    sr_ok = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 62), 3,
+                       request_id="ok")
+    sr_bad = loop.admit(bad, _batch(cfg, 1, 6, 63), 3, request_id="bad")
+    loop.run_to_completion()
+    assert sr_bad.error is not None
+    assert sr_ok.error is None
+    want = engine.generate_interleaved(
+        InterventionGraph(), _batch(cfg, 1, 6, 62), 3, fused=False)
+    np.testing.assert_array_equal(np.asarray(sr_ok.result().tokens),
+                                  np.asarray(want.tokens))
