@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.analysis import PreflightError
 from repro.models import registry as R
 from repro.models.traced import traced_lm
 
@@ -50,6 +51,23 @@ def main() -> None:
         tr.backward(loss)
     print(f"d(loss)/d(layer-2): shape {np.asarray(tr.result('grad')).shape}, "
           f"|g| {np.abs(np.asarray(tr.result('grad'))).mean():.2e}")
+
+    # ------- preflight: broken ops fail BEFORE anything executes ---------
+    # The static analyzer (repro.core.analysis) infers every node's shape
+    # abstractly at trace exit; a deliberately wrong-sized steering vector
+    # is rejected with the offending node and YOUR source line — zero
+    # model forwards spent.
+    bad_vec = np.zeros((cfg.d_model + 1,), np.float32)   # off by one!
+    try:
+        with lm.generate(tokens, max_new_tokens=4) as tr:
+            for s in tr.steps(1, 2):
+                lm.layers[4].mlp.output += bad_vec
+            for s in tr.steps():
+                lm.logits.save("logits")
+    except PreflightError as e:
+        print("preflight rejected the trace before running it:")
+        for d in e.diagnostics:
+            print("  ", d.format())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,250 @@
+#!/usr/bin/env python
+"""Lint intervention graphs statically — zero model forwards.
+
+    PYTHONPATH=src python scripts/lint_graph.py trace.json [more.json ...]
+    PYTHONPATH=src python scripts/lint_graph.py --steps 8 decode_trace.json
+    PYTHONPATH=src python scripts/lint_graph.py --model paper-gpt-small t.json
+    PYTHONPATH=src python scripts/lint_graph.py --all-examples
+
+Positional arguments are serialized wire graphs (the ``graph_to_json``
+payload an NDIF client ships).  Without ``--model`` the lint is purely
+structural — op registry, step flow, dead nodes; with ``--model NAME``
+the named architecture is built ABSTRACTLY (``jax.eval_shape`` init, no
+weights materialized) so shape/dtype inference runs too.
+
+``--all-examples`` lints the graph each ``examples/`` script builds,
+with full shape facts, and exits nonzero if any is broken.  The graphs
+are reconstructed here rather than imported (several examples execute
+full-size models at import time); each builder mirrors its example's
+trace body node-for-node.
+
+Exit status: 0 all graphs clean, 1 any error diagnostic, 2 bad input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+
+from repro.core import analysis
+from repro.core.graph import ALL_STEPS, InterventionGraph, Ref
+from repro.core.serialize import graph_from_json
+
+
+# --------------------------------------------------------------------------
+# example graphs — each mirrors the trace body of one examples/ script
+# --------------------------------------------------------------------------
+
+def _quickstart_graph() -> InterventionGraph:
+    # examples/quickstart.py: boost three MLP neurons at layer 4, read the
+    # (post-intervention) logits and a mid-stack residual stream.
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.mlp.output", layer=4)
+    path = ((slice(None), slice(None), slice(0, 3)),)
+    cur = g.add("apply_path", Ref(t.id), path)
+    up = g.add("add", Ref(cur.id), 10.0)
+    boosted = g.add("update_path", Ref(t.id), path, Ref(up.id))
+    g.add("tap_set", Ref(boosted.id), site="layers.mlp.output", layer=4)
+    h = g.add("tap_get", site="layers.output", layer=4)
+    g.mark_saved("hidden", g.add("save", Ref(h.id)))
+    o = g.add("tap_get", site="logits")
+    g.mark_saved("logits", g.add("save", Ref(o.id)))
+    return g
+
+
+def _activation_patching_graph(layer: int = 4) -> InterventionGraph:
+    # examples/activation_patching.py: copy the edit prompt's residual
+    # stream (row 0) into the base prompt (row 1) at one layer, read the
+    # answer logit-diff of the patched base row.
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.output", layer=layer)
+    src = g.add("getitem", Ref(t.id), (0, slice(None), slice(None)))
+    upd = g.add(
+        "update_path", Ref(t.id), ((1, slice(None), slice(None)),),
+        Ref(src.id),
+    )
+    g.add("tap_set", Ref(upd.id), site="layers.output", layer=layer)
+    o = g.add("tap_get", site="logits")
+    a = g.add("getitem", Ref(o.id), (1, -1, 7))
+    b = g.add("getitem", Ref(o.id), (1, -1, 11))
+    d = g.add("sub", Ref(a.id), Ref(b.id))
+    g.mark_saved("d", g.add("save", Ref(d.id)))
+    return g
+
+
+def _multi_invoke_graph() -> InterventionGraph:
+    # examples/multi_invoke.py (early-stop trace): read layer 2 and stop —
+    # the analyzer should infer a stop site so layers 3.. never execute.
+    g = InterventionGraph()
+    h = g.add("tap_get", site="layers.output", layer=2)
+    g.mark_saved("h", g.add("save", Ref(h.id)))
+    return g
+
+
+def _steered_generation_graph(n_steps: int = 8) -> InterventionGraph:
+    # examples/steered_generation.py: steer layer-2 MLP output at decode
+    # steps 3..5 only, save every step's logits under one stacked name.
+    g = InterventionGraph()
+    for s in range(3, 6):
+        t = g.add("tap_get", site="layers.mlp.output", layer=2, step=s)
+        up = g.add("add", Ref(t.id), 25.0, step=s)
+        g.add("tap_set", Ref(up.id), site="layers.mlp.output", layer=2,
+              step=s)
+    for s in range(n_steps):
+        o = g.add("tap_get", site="logits", step=s)
+        g.mark_saved("logits", g.add("save", Ref(o.id), step=s))
+    return g
+
+
+def _attention_steering_graph() -> InterventionGraph:
+    # attention-pattern readout + uniform steering vector on one head's
+    # value stream (the remote-training examples' probe readout shape).
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.attn.output", layer=3)
+    vec = g.add("constant", 0.05)
+    up = g.add("add", Ref(t.id), Ref(vec.id))
+    g.add("tap_set", Ref(up.id), site="layers.attn.output", layer=3)
+    o = g.add("tap_get", site="logits")
+    g.mark_saved("out", g.add("save", Ref(o.id)))
+    return g
+
+
+def _broadcast_steering_graph() -> InterventionGraph:
+    # steering applied at EVERY decode step (ALL_STEPS broadcast setter)
+    # with a final-step logits read — the serving co-tenancy examples'
+    # per-request shape.
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.output", layer=1, step=ALL_STEPS)
+    up = g.add("mul", Ref(t.id), 1.01, step=ALL_STEPS)
+    g.add("tap_set", Ref(up.id), site="layers.output", layer=1,
+          step=ALL_STEPS)
+    o = g.add("tap_get", site="logits", step=0)
+    g.mark_saved("first", g.add("save", Ref(o.id), step=0))
+    return g
+
+
+# name -> (builder, n_steps or None); n_steps marks generation graphs
+EXAMPLE_GRAPHS: dict[str, tuple] = {
+    "quickstart": (_quickstart_graph, None),
+    "activation_patching": (_activation_patching_graph, None),
+    "multi_invoke": (_multi_invoke_graph, None),
+    "steered_generation": (_steered_generation_graph, 8),
+    "attention_steering": (_attention_steering_graph, None),
+    "broadcast_steering": (_broadcast_steering_graph, 8),
+}
+
+
+# --------------------------------------------------------------------------
+# model facts — abstract build, no weights
+# --------------------------------------------------------------------------
+
+class ModelFacts:
+    """Site schedules + avals of one architecture, captured abstractly."""
+
+    def __init__(self, name: str, *, batch=(2, 12), n_steps: int = 8):
+        from repro.core.generation import _step_order
+        from repro.models import registry as R
+
+        cfg = R.get_config(name)
+        self.model = R.build_model(name, cfg)
+        # abstract params: shapes/dtypes only, nothing materialized
+        self.params = jax.eval_shape(self.model.init, jax.random.key(0))
+        B, S = batch
+        tokens = jax.ShapeDtypeStruct((B, S), "int32")
+        self.schedule = self.model.site_schedule("unrolled")
+        self.site_avals = analysis.capture_forward_avals(
+            lambda p, b: self.model.forward(p, b, mode="unrolled"),
+            (self.params, {"tokens": tokens}),
+        )
+        self.step_schedule = _step_order(self.model.site_schedule("scan"))
+        pre, dec = analysis.capture_generation_avals(
+            self.model, self.params, {"tokens": tokens},
+            max_len=S + n_steps, mode="scan",
+        )
+        self.gen_prefill_avals, self.decode_avals = pre, dec
+
+
+# --------------------------------------------------------------------------
+# lint driver
+# --------------------------------------------------------------------------
+
+def lint_graph(graph: InterventionGraph, label: str, *,
+               facts: ModelFacts | None = None,
+               n_steps: int | None = None) -> analysis.AnalysisReport:
+    kwargs: dict = {"n_steps": n_steps}
+    if facts is not None:
+        if n_steps is None:
+            kwargs.update(
+                site_order=list(facts.schedule.order),
+                site_avals=facts.site_avals,
+            )
+        else:
+            kwargs.update(
+                site_order=list(facts.step_schedule.order),
+                decode_order=list(facts.step_schedule.order),
+                site_avals=facts.gen_prefill_avals,
+                decode_avals=facts.decode_avals,
+                schedule=facts.step_schedule,
+            )
+    report = analysis.analyze(graph, **kwargs)
+    verdict = "clean" if report.ok() else "FAILED"
+    n = len(graph.nodes)
+    print(f"{label}: {n} node{'s' if n != 1 else ''} — {verdict}")
+    for d in report.diagnostics:
+        print(f"  {d.format()}")
+    if n_steps is not None and report.fusion:
+        fused = sum(1 for v in report.fusion if v.fusable)
+        print(f"  fusion: {fused}/{len(report.fusion)} steps fusable")
+    return report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="statically lint serialized intervention graphs",
+    )
+    ap.add_argument("paths", nargs="*", help="wire-graph JSON files")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="treat graphs as decode graphs with N steps")
+    ap.add_argument("--model", default=None,
+                    help="architecture name for shape-aware linting "
+                         "(built abstractly; no weights)")
+    ap.add_argument("--all-examples", action="store_true",
+                    help="lint the graph every examples/ script builds")
+    args = ap.parse_args(argv)
+
+    if not args.paths and not args.all_examples:
+        ap.print_usage()
+        return 2
+
+    failed = 0
+    facts = None
+    if args.all_examples or args.model:
+        facts = ModelFacts(args.model or "paper-gpt-small")
+
+    for path in args.paths:
+        try:
+            payload = json.loads(Path(path).read_text())
+            graph = graph_from_json(payload)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"{path}: unreadable wire graph ({e})")
+            return 2
+        if not lint_graph(graph, path, facts=facts if args.model else None,
+                          n_steps=args.steps).ok():
+            failed += 1
+
+    if args.all_examples:
+        for name, (build, n_steps) in EXAMPLE_GRAPHS.items():
+            if not lint_graph(build(), f"examples/{name}", facts=facts,
+                              n_steps=n_steps).ok():
+                failed += 1
+
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1060 @@
+"""Static analysis (preflight) for intervention graphs.
+
+The serving promise of the paper (§3.3/B.2) is that a user-authored
+intervention graph runs safely on shared infrastructure next to strangers'
+requests.  Before this module, every error class was discovered
+*dynamically*: a bad user op crashed a shared compiled decode step and was
+attributed after the fact by solo trial-runs, fused ineligibility was
+learned by paying a failed XLA trace, and merge conflicts threw
+mid-``drain()``.  This module is the front door instead — a static pass
+over the graph IR that runs **zero model forwards**:
+
+  * :func:`infer_shapes` — an abstract interpreter.  Tap-site shapes
+    (learned once per batch signature via ``jax.eval_shape`` of the model,
+    see :func:`capture_forward_avals` / :func:`capture_generation_avals`)
+    seed per-node ``ShapeDtypeStruct``s which propagate through every
+    registry op with ``jax.eval_shape`` — the exact abstraction JIT tracing
+    applies at runtime, so a broadcast/dtype/rank error in a user op is
+    caught *here*, with the offending node (and the user's source line)
+    named, instead of inside a shared step with innocent co-tenants
+    resident.
+  * :func:`check_merge_plan` — the co-tenant conflict detector: given the
+    row starts/sizes a merge would assign, proves the plan's row ranges
+    are disjoint and in-bounds, and reports cross-tenant read/write
+    relationships on the same ``(site, layer, step)`` — "merge and hope"
+    becomes a checked merge plan.
+  * :func:`lint_fusion` / :func:`scan_fusion_reason` — fusion-eligibility
+    lints with machine-readable reasons (``log``, ``grad``,
+    ``cross-step-flow``, ``non-uniform``, ``scan-cross-layer``), so the
+    fused planner consults verdicts instead of burning failed XLA traces
+    into failure keys.
+  * :func:`dead_nodes` / :func:`eliminate_dead` / :func:`infer_stop_site`
+    — dead-node elimination and stop inference as analysis facts.
+
+Every finding is a structured :class:`Diagnostic` (code, severity, node
+id, user source line captured at trace time — see ``repro.core.tracer``).
+Severity calibration is deliberate: ``error`` means "this graph WILL fail
+at runtime" (enforcing mode rejects it), anything the statics cannot prove
+is at most a ``warning`` — a clean verdict must never reject a graph that
+would have run (the zero-false-positive contract).  Unknown values
+propagate as unknown and disable downstream checks rather than guessing.
+
+Enforcement is controlled by ``REPRO_PREFLIGHT`` (``enforce`` [default] |
+``warn`` | ``off``) and wired into four layers: tracer exit,
+``serving.client`` (before a request ships), ``serving.scheduler`` /
+``serving.engine`` admission (before a graph touches the slot loop), and
+the fused planner in ``core.generation``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import (
+    ALL_STEPS,
+    PRE_SITE,
+    PRE_STEP,
+    PREFILL_STEP,
+    SOURCE_META_KEY,
+    GraphValidationError,
+    InterventionGraph,
+    Node,
+    Ref,
+    map_refs,
+)
+from repro.core.op_registry import resolve_op
+
+__all__ = [
+    "Diagnostic",
+    "AnalysisReport",
+    "FusionVerdict",
+    "PreflightError",
+    "ERROR",
+    "WARNING",
+    "NOTE",
+    "preflight_mode",
+    "infer_shapes",
+    "analyze",
+    "check_merge_plan",
+    "lint_fusion",
+    "scan_fusion_reason",
+    "dead_nodes",
+    "eliminate_dead",
+    "infer_stop_site",
+    "capture_forward_avals",
+    "capture_generation_avals",
+    "aval_signature",
+    "source_of",
+]
+
+ERROR = "error"
+WARNING = "warning"
+NOTE = "note"
+
+_PROTOCOL_OPS = frozenset(
+    ["tap_get", "tap_set", "grad_get", "save", "log", "constant", "input"]
+)
+
+
+# --------------------------------------------------------------- diagnostics
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding of the static pass.
+
+    ``code`` is machine-readable (stable across message rewording);
+    ``source`` is the user source line captured at trace time (or None for
+    graphs built directly / received over the wire).
+    """
+
+    code: str
+    severity: str
+    message: str
+    node: int | None = None
+    site: str | None = None
+    step: int | None = None
+    source: str | None = None
+
+    def format(self) -> str:
+        loc = f" %{self.node}" if self.node is not None else ""
+        at = f" @{self.site}" if self.site else ""
+        if self.step is not None and self.step >= 0:
+            at += f"[step {self.step}]"
+        src = f"  ({self.source})" if self.source else ""
+        return f"{self.severity}[{self.code}]{loc}{at}: {self.message}{src}"
+
+
+class PreflightError(GraphValidationError):
+    """Raised in enforcing mode when the analyzer finds definite errors."""
+
+    def __init__(self, diagnostics: list[Diagnostic]) -> None:
+        self.diagnostics = list(diagnostics)
+        errs = [d for d in self.diagnostics if d.severity == ERROR]
+        super().__init__(
+            "preflight failed: "
+            + "; ".join(d.format() for d in errs or self.diagnostics)
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionVerdict:
+    """Fusion eligibility of one decode step slice (machine-readable)."""
+
+    step: int
+    fusable: bool
+    reason: str  # ok|empty|log|grad|cross-step-flow|non-uniform|scan-cross-layer
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    diagnostics: list[Diagnostic] = dataclasses.field(default_factory=list)
+    # node id -> ShapeDtypeStruct pytree, or None when statically unknown
+    avals: dict[int, Any] = dataclasses.field(default_factory=dict)
+    dead: tuple[int, ...] = ()
+    stop_site: int | None = None
+    fusion: list[FusionVerdict] = dataclasses.field(default_factory=list)
+
+    def errors(self) -> list[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == ERROR]
+
+    def warnings(self) -> list[Diagnostic]:
+        return [d for d in self.diagnostics if d.severity == WARNING]
+
+    def ok(self) -> bool:
+        return not self.errors()
+
+    def format(self) -> str:
+        return "\n".join(d.format() for d in self.diagnostics) or "clean"
+
+    def enforce(self, mode: str | None = None) -> "AnalysisReport":
+        """Apply the preflight policy: raise on errors when enforcing."""
+        mode = mode or preflight_mode()
+        if mode == "enforce" and not self.ok():
+            raise PreflightError(self.diagnostics)
+        return self
+
+
+def preflight_mode() -> str:
+    """``REPRO_PREFLIGHT``: ``enforce`` (default) | ``warn`` | ``off``."""
+    mode = os.environ.get("REPRO_PREFLIGHT", "enforce").lower()
+    return mode if mode in ("off", "warn", "enforce") else "enforce"
+
+
+def source_of(node: Node) -> str | None:
+    """The user source line stamped at trace time (None if unavailable)."""
+    src = node.meta.get(SOURCE_META_KEY)
+    return src if isinstance(src, str) else None
+
+
+def _diag(
+    code: str, severity: str, message: str, node: Node | None = None
+) -> Diagnostic:
+    return Diagnostic(
+        code=code,
+        severity=severity,
+        message=message,
+        node=node.id if node is not None else None,
+        site=node.site if node is not None else None,
+        step=node.step if node is not None else None,
+        source=source_of(node) if node is not None else None,
+    )
+
+
+# ------------------------------------------------------- site-aval capture
+class _CaptureAllSites:
+    """taps-state shim: record EVERY site's aval under jax.eval_shape.
+
+    Unlike ``interleave.capture_site_shapes`` this captures everything that
+    fires (no required-keys contract) and tolerates traced layer indices
+    (scan mode) by falling back to a by-name record.
+    """
+
+    def __init__(self) -> None:
+        self.avals: dict[Any, Any] = {}
+
+    def on_site(self, name: str, value: Any, layer: Any = None) -> Any:
+        spec = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(jnp.shape(v), jnp.result_type(v)),
+            value,
+        )
+        try:
+            key = (name, int(layer) if layer is not None else None)
+        except Exception:  # traced layer index inside lax.scan
+            key = (name, None)
+            self.avals.setdefault(name, spec)
+        self.avals.setdefault(key, spec)
+        self.avals.setdefault(name, spec)
+        return value
+
+    def scan_collect_values(self) -> dict:
+        return {}
+
+    def deliver_scan(self, ys: dict) -> None:  # pragma: no cover - trivial
+        pass
+
+
+def _abstract_tree(tree: Any) -> Any:
+    return jax.tree.map(
+        lambda v: jax.ShapeDtypeStruct(jnp.shape(v), jnp.result_type(v)), tree
+    )
+
+
+def aval_signature(*trees: Any) -> tuple:
+    """A hashable (shape, dtype) signature of pytrees — the cache key for
+    captured site avals (same signature ⇒ same avals, no re-capture)."""
+    sig = []
+    for t in trees:
+        for leaf in jax.tree.leaves(t):
+            sig.append((tuple(jnp.shape(leaf)), str(jnp.result_type(leaf))))
+    return tuple(sig)
+
+
+def capture_forward_avals(
+    model_fn: Callable[..., Any], args: tuple, kwargs: dict | None = None
+) -> dict[Any, Any]:
+    """Avals of every tap site fired by ONE abstract model evaluation.
+
+    Zero FLOPs — ``jax.eval_shape`` only; params/batch may be concrete
+    arrays or ``ShapeDtypeStruct``s (a weightless client passes abstract
+    params from ``jax.eval_shape(model.init, ...)``).
+    """
+    from repro.core import taps
+
+    cap = _CaptureAllSites()
+
+    def run(a, k):
+        taps.push_state(cap)  # type: ignore[arg-type]
+        try:
+            return model_fn(*a, **k)
+        finally:
+            taps.pop_state()
+
+    jax.eval_shape(run, args, kwargs or {})
+    return cap.avals
+
+
+def capture_generation_avals(
+    model: Any,
+    params: Any,
+    batch: dict,
+    *,
+    max_len: int,
+    mode: str = "unrolled",
+    cache_kind: str = "full",
+) -> tuple[dict[Any, Any], dict[Any, Any]]:
+    """(prefill_avals, decode_avals) for a generation request — no FLOPs.
+
+    Prefill sites see ``(B, S, ...)`` activations, decode-step sites see
+    ``(B, 1, ...)``; an analyzed generation graph checks each node against
+    the avals of the execution it is scheduled on.  Single-token prompts
+    have no prefill execution (empty-cache init), so their prefill avals
+    are empty.
+    """
+    from repro.core import taps
+
+    batch = dict(batch)
+    tokens = batch.pop("tokens")
+    batch.pop("lengths", None)
+    tok_aval = _abstract_tree(tokens)
+    B, S = int(tok_aval.shape[0]), int(tok_aval.shape[1])
+    extras = {k: _abstract_tree(v) for k, v in batch.items()}
+    cap_pre = _CaptureAllSites()
+
+    def run_prefill(p, b):
+        taps.push_state(cap_pre)  # type: ignore[arg-type]
+        try:
+            _out, cache = model.prefill(
+                p, b, mode=mode, kind=cache_kind, max_len=max_len
+            )
+            return cache
+        finally:
+            taps.pop_state()
+
+    if S > 1:
+        cache_aval = jax.eval_shape(
+            run_prefill, params, {"tokens": tok_aval, **extras}
+        )
+    else:  # S == 1 decodes from an empty cache; no prefill sites fire
+        cache_aval = jax.eval_shape(
+            lambda p, b: model.empty_cache(p, b, B, max_len, kind=cache_kind),
+            params,
+            {"tokens": tok_aval, **extras},
+        )
+        cap_pre.avals.clear()
+
+    cap_dec = _CaptureAllSites()
+
+    def run_decode(p, cache, token, pos):
+        taps.push_state(cap_dec)  # type: ignore[arg-type]
+        try:
+            return model.decode_step(
+                p, cache, {"token": token, "pos": pos}, mode=mode
+            )
+        finally:
+            taps.pop_state()
+
+    jax.eval_shape(
+        run_decode,
+        params,
+        cache_aval,
+        jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        jax.ShapeDtypeStruct((B,), jnp.int32),
+    )
+    # decode logits are a site in spirit: the loop reads out["logits"]
+    return cap_pre.avals, cap_dec.avals
+
+
+# --------------------------------------------------------- shape inference
+class _Concrete:
+    """A value the abstract interpreter keeps CONCRETE (constants).
+
+    Closing constants over the ``eval_shape`` body reproduces runtime
+    semantics exactly — weak-typed Python scalars stay weak, ints used as
+    static indices stay static."""
+
+    __slots__ = ("value",)
+
+    def __init__(self, value: Any) -> None:
+        self.value = value
+
+
+class _Leaf:
+    __slots__ = ("i",)
+
+    def __init__(self, i: int) -> None:
+        self.i = i
+
+
+# eval_shape failures that mean "statically undecidable", not "broken":
+# the op needs concrete VALUES (boolean masks, traced python control flow)
+# that runtime has but the abstract interpreter does not.
+_UNDECIDABLE = (
+    jax.errors.ConcretizationTypeError,
+    jax.errors.NonConcreteBooleanIndexError,
+    jax.errors.TracerArrayConversionError,
+    jax.errors.TracerBoolConversionError,
+    jax.errors.TracerIntegerConversionError,
+)
+
+
+# eval_shape is pure in (op, arg avals, concrete closure values), so its
+# results memoize across nodes, graphs, and repeated traces — the repeated
+# identically-shaped request is the serving steady state, and per-node
+# tracing is the whole cost of an analyze pass.
+_EVAL_CACHE: dict[Any, Any] = {}
+_EVAL_CACHE_MAX = 4096
+
+
+def _eval_cache_key(op_fn: Callable, args: tuple, kwargs: dict,
+                    env: dict) -> Any:
+    from repro.core.graph import _freeze_value
+
+    def fz(o: Any) -> Any:
+        if isinstance(o, Ref):
+            v = env[o.node_id]
+            if isinstance(v, _Concrete):
+                return ("__c__", _freeze_value(np.asarray(v.value)))
+            return (
+                "__aval__",
+                str(jax.tree.structure(v)),
+                tuple((tuple(l.shape), str(l.dtype))
+                      for l in jax.tree.leaves(v)),
+            )
+        if isinstance(o, (tuple, list)):
+            return ("__seq__", type(o).__name__) + tuple(fz(x) for x in o)
+        if isinstance(o, dict):
+            return ("__map__",) + tuple(
+                sorted((str(k), fz(v)) for k, v in o.items())
+            )
+        if isinstance(o, slice):
+            return ("__slice__", fz(o.start), fz(o.stop), fz(o.step))
+        return _freeze_value(o)
+
+    return (op_fn, fz(args), fz(kwargs))
+
+
+def _eval_op_aval(op_fn: Callable, args: tuple, kwargs: dict, env: dict) -> Any:
+    """Abstractly evaluate one registry op: Refs become leaves fed to
+    ``jax.eval_shape``; concrete values (constants, static paths) close
+    over the body exactly as at runtime."""
+    try:
+        key = _eval_cache_key(op_fn, args, kwargs, env)
+        hash(key)
+    except Exception:
+        key = None  # unhashable closure value: evaluate uncached
+    if key is not None and key in _EVAL_CACHE:
+        return _EVAL_CACHE[key]
+    result = _eval_op_aval_uncached(op_fn, args, kwargs, env)
+    if key is not None:
+        if len(_EVAL_CACHE) >= _EVAL_CACHE_MAX:
+            _EVAL_CACHE.clear()
+        _EVAL_CACHE[key] = result
+    return result
+
+
+def _eval_op_aval_uncached(
+    op_fn: Callable, args: tuple, kwargs: dict, env: dict
+) -> Any:
+    leaves: list[Any] = []
+
+    def sub(o: Any) -> Any:
+        if isinstance(o, Ref):
+            v = env[o.node_id]
+            if isinstance(v, _Concrete):
+                return v.value
+            leaves.append(v)
+            return _Leaf(len(leaves) - 1)
+        if isinstance(o, tuple):
+            return tuple(sub(x) for x in o)
+        if isinstance(o, list):
+            return [sub(x) for x in o]
+        if isinstance(o, dict):
+            return {k: sub(v) for k, v in o.items()}
+        if isinstance(o, slice):
+            return slice(sub(o.start), sub(o.stop), sub(o.step))
+        return o
+
+    sargs = sub(args)
+    skwargs = sub(kwargs)
+
+    def fill(o: Any, vals: tuple) -> Any:
+        if isinstance(o, _Leaf):
+            return vals[o.i]
+        if isinstance(o, tuple):
+            return tuple(fill(x, vals) for x in o)
+        if isinstance(o, list):
+            return [fill(x, vals) for x in o]
+        if isinstance(o, dict):
+            return {k: fill(v, vals) for k, v in o.items()}
+        if isinstance(o, slice):
+            return slice(
+                fill(o.start, vals), fill(o.stop, vals), fill(o.step, vals)
+            )
+        return o
+
+    def runner(*vals):
+        return op_fn(*fill(sargs, vals), **fill(skwargs, vals))
+
+    return jax.eval_shape(runner, *leaves)
+
+
+def _shape_str(v: Any) -> str:
+    if isinstance(v, _Concrete):
+        arr = np.asarray(v.value)
+        return f"{arr.dtype}{list(arr.shape)}"
+    try:
+        return " ".join(
+            f"{l.dtype}{list(l.shape)}" for l in jax.tree.leaves(v)
+        ) or "?"
+    except Exception:  # pragma: no cover - defensive
+        return "?"
+
+
+def _same_spec(a: Any, b: Any) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(
+        tuple(x.shape) == tuple(y.shape) and x.dtype == y.dtype
+        for x, y in zip(la, lb)
+    )
+
+
+def infer_shapes(
+    graph: InterventionGraph,
+    *,
+    site_avals: dict[Any, Any] | None = None,
+    decode_avals: dict[Any, Any] | None = None,
+    input_avals: dict[str, Any] | None = None,
+    site_order: list[tuple[str, int | None]] | None = None,
+    node_steps: dict[int, int] | None = None,
+) -> tuple[dict[int, Any], list[Diagnostic]]:
+    """Abstract interpretation of ``graph``: node id -> aval (or None).
+
+    ``site_avals`` seeds tap values for the single-forward execution (or
+    the PREFILL of a generation trace); ``decode_avals`` (with
+    ``node_steps`` from :func:`repro.core.graph.assign_steps`) seeds
+    decode-step taps.  Emits ``op-shape`` ERRORs when a registry op is
+    certain to fail under jit tracing, ``setter-shape`` WARNINGs when a
+    setter's value cannot be proven site-shaped.  Setters that *change* a
+    site's spec poison every later site's aval (set to unknown) — the
+    clean-forward avals no longer describe the intervened run, and an
+    unknown never produces a diagnostic.
+    """
+    site_avals = site_avals or {}
+    decode_avals = decode_avals if decode_avals is not None else site_avals
+    input_avals = input_avals or {}
+    diags: list[Diagnostic] = []
+
+    site_index = (
+        {key: i for i, key in enumerate(site_order)} if site_order else {}
+    )
+
+    def tap_aval(n: Node) -> Any:
+        step = node_steps.get(n.id) if node_steps else None
+        pool = (
+            site_avals
+            if step in (None, PREFILL_STEP, PRE_STEP)
+            else decode_avals
+        )
+        v = pool.get((n.site, n.layer))
+        if v is None:
+            v = pool.get(n.site)
+        return v
+
+    def tap_idx(n: Node) -> int | None:
+        idx = site_index.get((n.site, n.layer))
+        if idx is None and n.layer is not None:
+            idx = site_index.get((n.site, None))
+        return idx
+
+    def run_pass(taint: dict[Any, int], emit: bool) -> dict[int, Any]:
+        env: dict[int, Any] = {}
+
+        def dep_avals_known(n: Node) -> bool:
+            return all(
+                env.get(r.node_id) is not None for r in n.refs()
+            )
+
+        def threshold(step: Any) -> int:
+            big = 1 << 40
+            if not taint:
+                return big
+            if node_steps is None or step in (None, PREFILL_STEP, PRE_STEP):
+                return taint.get("prefill", big)
+            return taint.get("decode", big)
+
+        for n in graph.nodes:
+            if n.op == "constant":
+                env[n.id] = _Concrete(n.args[0])
+            elif n.op == "input":
+                env[n.id] = input_avals.get(n.args[0])
+            elif n.op in ("tap_get", "grad_get"):
+                aval = tap_aval(n)
+                idx = tap_idx(n)
+                step = node_steps.get(n.id) if node_steps else None
+                if idx is not None and idx > threshold(step):
+                    aval = None  # downstream of a spec-changing setter
+                env[n.id] = aval
+            elif n.op == "tap_set":
+                v = (
+                    env.get(n.args[0].node_id)
+                    if n.args and isinstance(n.args[0], Ref)
+                    else None
+                )
+                site = tap_aval(n)
+                if isinstance(v, _Concrete):
+                    v = _abstract_tree(v.value)
+                if v is not None and site is not None and emit:
+                    if not _same_spec(v, site):
+                        diags.append(_diag(
+                            "setter-shape", WARNING,
+                            f"setter value {_shape_str(v)} does not match "
+                            f"site spec {_shape_str(site)}; downstream "
+                            "shape checking is disabled for later sites",
+                            n,
+                        ))
+                env[n.id] = v if v is not None else site
+            elif n.op in ("save", "log"):
+                v = (
+                    env.get(n.args[0].node_id)
+                    if n.args and isinstance(n.args[0], Ref)
+                    else None
+                )
+                env[n.id] = (
+                    _abstract_tree(v.value) if isinstance(v, _Concrete) else v
+                )
+            else:
+                try:
+                    op_fn = resolve_op(n.op)
+                except KeyError:
+                    if emit:
+                        diags.append(_diag(
+                            "unknown-op", ERROR,
+                            f"op {n.op!r} is not in the registry", n,
+                        ))
+                    env[n.id] = None
+                    continue
+                if not dep_avals_known(n):
+                    env[n.id] = None
+                    continue
+                try:
+                    env[n.id] = _eval_op_aval(op_fn, n.args, n.kwargs, env)
+                except _UNDECIDABLE:
+                    env[n.id] = None  # needs concrete values: undecidable
+                except Exception as e:
+                    if emit:
+                        ins = ", ".join(
+                            _shape_str(env[r.node_id]) for r in n.refs()
+                        )
+                        msg = str(e).split("\n")[0]
+                        diags.append(_diag(
+                            "op-shape", ERROR,
+                            f"{n.op} on ({ins}) fails under jit tracing: "
+                            f"{type(e).__name__}: {msg}",
+                            n,
+                        ))
+                    env[n.id] = None
+        return env
+
+    # Pass A: candidate avals, no diagnostics.  Pass B: taint thresholds
+    # from spec-changing setters.  Pass C: final avals + diagnostics with
+    # taps past a taint threshold demoted to unknown.
+    env_a = run_pass({}, emit=False)
+    taint: dict[Any, int] = {}
+    for n in graph.nodes:
+        if n.op != "tap_set":
+            continue
+        v = env_a.get(n.args[0].node_id) if n.args else None
+        if isinstance(v, _Concrete):
+            v = _abstract_tree(v.value)
+        site = tap_aval(n)
+        idx = tap_idx(n)
+        if idx is None:
+            continue
+        if v is None or site is None or not _same_spec(v, site):
+            step = node_steps.get(n.id) if node_steps else None
+            bucket = (
+                "prefill"
+                if node_steps is None or step in (PREFILL_STEP, PRE_STEP)
+                else "decode"
+            )
+            taint[bucket] = min(taint.get(bucket, 1 << 40), idx)
+    env = run_pass(taint, emit=True)
+    avals = {
+        nid: (_abstract_tree(v.value) if isinstance(v, _Concrete) else v)
+        for nid, v in env.items()
+    }
+    return avals, diags
+
+
+# ------------------------------------------------------------- structural
+def _structural_diags(
+    graph: InterventionGraph,
+    site_order: list[tuple[str, int | None]] | None,
+    decode_order: list[tuple[str, int | None]] | None = None,
+) -> list[Diagnostic]:
+    """Unknown ops / unknown sites, mirroring what runtime validation
+    raises (``graph.schedule`` at admission, slice validation for decode
+    steps) — but per-node, named, and without executing anything."""
+    diags: list[Diagnostic] = []
+    known = set(site_order or [])
+    known_names = {s for s, _ in known}
+    dec = set(decode_order if decode_order is not None else (site_order or []))
+    dec_names = {s for s, _ in dec}
+    for n in graph.nodes:
+        if n.op not in _PROTOCOL_OPS:
+            try:
+                resolve_op(n.op)
+            except KeyError:
+                diags.append(_diag(
+                    "unknown-op", ERROR,
+                    f"op {n.op!r} is not in the registry", n,
+                ))
+            continue
+        if n.op not in ("tap_get", "tap_set", "grad_get") or not site_order:
+            continue
+        key = (n.site, n.layer)
+        is_decode = n.step is not None and n.step != PREFILL_STEP
+        pool, names = (dec, dec_names) if is_decode else (known, known_names)
+        if key not in pool and n.site not in names:
+            verb = "targets" if n.op == "tap_set" else "taps"
+            where = "decode schedule" if is_decode else "site schedule"
+            diags.append(_diag(
+                "unknown-site", ERROR,
+                f"node %{n.id} {verb} unknown site {key!r} "
+                f"(not in the {where})",
+                n,
+            ))
+    return diags
+
+
+# ------------------------------------------------------------- dead nodes
+def dead_nodes(graph: InterventionGraph) -> tuple[int, ...]:
+    """Node ids unreachable from any save, setter, log, or backward loss.
+
+    Dead nodes execute for nothing — they cost compute inside the jitted
+    program and can even force the eager path (a dead ``log``)."""
+    roots = set(graph.saves.values())
+    for n in graph.nodes:
+        if n.op in ("tap_set", "save", "log"):
+            roots.add(n.id)
+    if graph.backward_loss is not None:
+        roots.add(graph.backward_loss)
+    live: set[int] = set()
+    stack = list(roots)
+    while stack:
+        nid = stack.pop()
+        if nid in live:
+            continue
+        live.add(nid)
+        stack.extend(r.node_id for r in graph.node(nid).refs())
+    return tuple(n.id for n in graph.nodes if n.id not in live)
+
+
+def eliminate_dead(
+    graph: InterventionGraph,
+) -> tuple[InterventionGraph, dict[int, int]]:
+    """A copy of ``graph`` with dead nodes pruned (ids renumbered dense).
+
+    Returns ``(pruned, old_id -> new_id)``.  Saves/backward_loss are
+    remapped; the pruned graph is observably equivalent (same saves, same
+    setters, same logs) with strictly less work."""
+    dead = set(dead_nodes(graph))
+    out = InterventionGraph()
+    idmap: dict[int, int] = {}
+    for n in graph.nodes:
+        if n.id in dead:
+            continue
+        new = out.add(
+            n.op,
+            *map_refs(n.args, lambda r: Ref(idmap[r.node_id])),
+            site=n.site,
+            layer=n.layer,
+            step=n.step,
+            invoke=n.invoke,
+            meta=dict(n.meta),
+            **map_refs(n.kwargs, lambda r: Ref(idmap[r.node_id])),
+        )
+        idmap[n.id] = new.id
+    out.saves = {
+        name: idmap[nid] for name, nid in graph.saves.items() if nid in idmap
+    }
+    if graph.backward_loss is not None and graph.backward_loss in idmap:
+        out.backward_loss = idmap[graph.backward_loss]
+    return out, idmap
+
+
+def infer_stop_site(graph: InterventionGraph, schedule: Any) -> int | None:
+    """``last_referenced_site`` as an analysis fact: index into the site
+    order past which the model forward cannot affect the graph, or None
+    when the trace cannot be truncated (``.grad`` needs the full forward
+    and backward)."""
+    from repro.core.interleave import last_referenced_site
+
+    try:
+        idx = last_referenced_site(graph, schedule)
+    except GraphValidationError:
+        return None
+    return None if idx == PRE_SITE else int(idx)
+
+
+# ------------------------------------------------------------ fusion lint
+def scan_fusion_reason(
+    graph: InterventionGraph, schedule: Any
+) -> str | None:
+    """Why a (merged) step graph cannot compile in scan mode, or None.
+
+    Mirrors the rejections ``make_step_callable`` / ``Interleaver`` raise
+    at trace time — consulted by the fused planner so an ineligible graph
+    never pays a failed XLA trace."""
+    for n in graph.nodes:
+        if n.op == "log":
+            return "log"
+        if n.op == "grad_get":
+            return "grad"
+    scan_set = set(getattr(schedule, "scan_sites", ()) or ())
+    if not scan_set:
+        return None
+    by_id = {n.id: n for n in graph.nodes}
+    getters = {
+        n.id: n
+        for n in graph.nodes
+        if n.op == "tap_get" and n.site in scan_set
+    }
+    for s in graph.nodes:
+        if s.op != "tap_set" or s.site not in scan_set:
+            continue
+        seen: set[int] = set()
+        stack = [r.node_id for r in s.refs()]
+        while stack:
+            nid = stack.pop()
+            if nid in seen:
+                continue
+            seen.add(nid)
+            g = getters.get(nid)
+            if g is not None and g.layer != s.layer:
+                return "scan-cross-layer"
+            stack.extend(r.node_id for r in by_id[nid].refs())
+    return None
+
+
+def lint_fusion(
+    graph: InterventionGraph,
+    n_steps: int,
+    schedule: Any = None,
+) -> list[FusionVerdict]:
+    """Classify every decode step of a generation graph as fusable/eager
+    with a machine-readable reason (no compile, no trace)."""
+    from repro.core.generation import _EMPTY_FP, _slice_fingerprint, slice_steps
+
+    slices = slice_steps(graph, n_steps)
+    verdicts: list[FusionVerdict] = []
+    fps: list[Any] = []
+    for s in range(n_steps):
+        sl = slices.get(s)
+        if sl is None or sl.is_empty():
+            verdicts.append(FusionVerdict(s, True, "empty"))
+            fps.append(_EMPTY_FP)
+            continue
+        ops = {n.op for n in sl.graph.nodes}
+        if "log" in ops:
+            ids = [n.id for n in sl.graph.nodes if n.op == "log"]
+            verdicts.append(FusionVerdict(
+                s, False, "log",
+                f"log nodes {ids} record host-side",
+            ))
+            fps.append(None)
+            continue
+        if "grad_get" in ops:
+            verdicts.append(FusionVerdict(
+                s, False, "grad", ".grad needs the perturbation driver",
+            ))
+            fps.append(None)
+            continue
+        if sl.exports:
+            verdicts.append(FusionVerdict(
+                s, False, "cross-step-flow",
+                f"exports {sorted(sl.exports)} feed later steps",
+            ))
+            fps.append(None)
+            continue
+        if schedule is not None:
+            reason = scan_fusion_reason(sl.graph, schedule)
+            if reason == "scan-cross-layer":
+                verdicts.append(FusionVerdict(
+                    s, False, reason,
+                    "cross-layer setter data flow cannot compile in "
+                    "scan mode",
+                ))
+                fps.append(None)
+                continue
+        verdicts.append(FusionVerdict(s, True, "ok"))
+        fps.append(_slice_fingerprint(sl))
+    # uniformity: steps whose structure differs from step 0 cannot share
+    # its compiled body — each run boundary is an eager re-merge
+    base = next((fp for fp in fps if fp is not None), None)
+    for s, (v, fp) in enumerate(zip(verdicts, fps)):
+        if v.fusable and fp is not None and base is not None and fp != base:
+            verdicts[s] = FusionVerdict(
+                s, True, "non-uniform",
+                "structurally distinct from step 0: fusable only within "
+                "its own uniform run",
+            )
+    return verdicts
+
+
+# ------------------------------------------------------------- merge plan
+def check_merge_plan(
+    graphs: list[InterventionGraph],
+    sizes: list[int],
+    starts: list[int] | None = None,
+    *,
+    num_rows: int | None = None,
+) -> list[Diagnostic]:
+    """Statically verify a co-tenant merge plan (the row starts/sizes a
+    merge would assign) BEFORE building the merged graph.
+
+    Proves: (1) every tenant's row range is in-bounds, (2) ranges are
+    pairwise disjoint — each request's setters are row-confined by
+    construction (``merge_graphs`` rewrites them through row-sliced
+    updates), so disjointness of the assigned ranges IS the write-write
+    safety proof; (3) reports (as notes) cross-tenant getter/setter
+    pairs on the same ``(site, layer, step)`` — safe because merged
+    getters read the PRISTINE shared value (getters fire before setters
+    at a site), but worth surfacing in a lint.
+    """
+    diags: list[Diagnostic] = []
+    if starts is None:
+        acc = 0
+        starts = []
+        for b in sizes:
+            starts.append(acc)
+            acc += b
+    if len(starts) != len(graphs) or len(sizes) != len(graphs):
+        diags.append(Diagnostic(
+            "merge-plan", ERROR,
+            f"plan arity mismatch: {len(graphs)} graphs, "
+            f"{len(sizes)} sizes, {len(starts)} starts",
+        ))
+        return diags
+    spans = list(zip(starts, sizes))
+    for i, (lo, b) in enumerate(spans):
+        if b < 1:
+            diags.append(Diagnostic(
+                "row-bounds", ERROR,
+                f"tenant {i} has {b} rows (must be >= 1)",
+            ))
+        if lo < 0 or (num_rows is not None and lo + b > num_rows):
+            diags.append(Diagnostic(
+                "row-bounds", ERROR,
+                f"tenant {i} rows [{lo}, {lo + b}) escape the table "
+                f"(0..{num_rows})",
+            ))
+    order = sorted(range(len(spans)), key=lambda i: spans[i][0])
+    for a, b in zip(order, order[1:]):
+        lo_a, n_a = spans[a]
+        lo_b, n_b = spans[b]
+        if lo_a + n_a > lo_b:
+            sites = sorted(
+                {
+                    (n.site, n.layer, n.step)
+                    for n in graphs[a].nodes
+                    if n.op == "tap_set"
+                }
+                & {
+                    (n.site, n.layer, n.step)
+                    for n in graphs[b].nodes
+                    if n.op == "tap_set"
+                }
+            )
+            extra = f"; both write {sites}" if sites else ""
+            diags.append(Diagnostic(
+                "row-overlap", ERROR,
+                f"tenants {a} and {b} overlap: rows [{lo_a}, {lo_a + n_a})"
+                f" vs [{lo_b}, {lo_b + n_b}){extra}",
+            ))
+    # cross-tenant read/write relationships (informational: isolation
+    # holds by construction — merged getters read the pristine value)
+    set_sites = [
+        {(n.site, n.layer, n.step) for n in g.nodes if n.op == "tap_set"}
+        for g in graphs
+    ]
+    get_sites = [
+        {(n.site, n.layer, n.step) for n in g.nodes if n.op == "tap_get"}
+        for g in graphs
+    ]
+    for i in range(len(graphs)):
+        for j in range(len(graphs)):
+            if i == j:
+                continue
+            shared = set_sites[i] & get_sites[j]
+            if shared:
+                key = sorted(shared)[0]
+                diags.append(Diagnostic(
+                    "cross-tenant-read", NOTE,
+                    f"tenant {j} reads {key} which tenant {i} writes; "
+                    "merged getters read the pristine (pre-setter) value, "
+                    "so tenant isolation holds",
+                ))
+    return diags
+
+
+# ---------------------------------------------------------------- analyze
+def analyze(
+    graph: InterventionGraph,
+    *,
+    site_order: list[tuple[str, int | None]] | None = None,
+    decode_order: list[tuple[str, int | None]] | None = None,
+    site_avals: dict[Any, Any] | None = None,
+    decode_avals: dict[Any, Any] | None = None,
+    input_avals: dict[str, Any] | None = None,
+    n_steps: int | None = None,
+    schedule: Any = None,
+) -> AnalysisReport:
+    """The full preflight pass over one intervention graph.
+
+    Single forward: pass ``site_order`` (and ``site_avals`` when known).
+    Generation: additionally pass ``n_steps`` (and ``decode_order`` /
+    ``decode_avals`` — decode-step activations have different shapes).
+    Everything is optional: with no model facts the pass still lints
+    structure (ops, sites, dead nodes, step flow).
+    """
+    report = AnalysisReport()
+    report.diagnostics.extend(
+        _structural_diags(graph, site_order, decode_order)
+    )
+
+    node_steps: dict[int, int] | None = None
+    if n_steps is not None:
+        from repro.core.graph import assign_steps
+
+        try:
+            node_steps = assign_steps(graph, n_steps)
+        except GraphValidationError as e:
+            report.diagnostics.append(Diagnostic(
+                "step-flow", ERROR, str(e),
+            ))
+            return report
+
+    # Shape inference only when the structural pass is clean — unknown
+    # sites have no avals, and emitting follow-on op errors for them
+    # would be noise.
+    if not any(d.severity == ERROR for d in report.diagnostics):
+        avals, diags = infer_shapes(
+            graph,
+            site_avals=site_avals,
+            decode_avals=decode_avals,
+            input_avals=input_avals,
+            site_order=site_order,
+            node_steps=node_steps,
+        )
+        report.avals = avals
+        report.diagnostics.extend(diags)
+
+    dead = dead_nodes(graph)
+    report.dead = dead
+    for nid in dead:
+        n = graph.node(nid)
+        if n.op in ("tap_get", "constant", "input"):
+            continue  # a bare tap/constant costs nothing worth flagging
+        report.diagnostics.append(_diag(
+            "dead-node", NOTE,
+            f"{n.op} node %{nid} is unreachable from every save/"
+            "setter/log; it executes for nothing",
+            n,
+        ))
+
+    if schedule is not None:
+        report.stop_site = infer_stop_site(graph, schedule)
+        if n_steps is not None:
+            try:
+                report.fusion = lint_fusion(graph, n_steps, schedule)
+            except GraphValidationError:
+                pass  # step-flow errors already reported above
+    return report

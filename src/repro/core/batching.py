@@ -55,6 +55,7 @@ import numpy as np
 from repro.core.graph import (
     ALL_STEPS,
     PREFILL_STEP,
+    GraphValidationError,
     InterventionGraph,
     Node,
     Ref,
@@ -63,6 +64,7 @@ from repro.core.graph import (
 
 __all__ = [
     "MergedBatch",
+    "CrossInvokeError",
     "merge_graphs",
     "split_results",
     "split_invokes",
@@ -163,6 +165,22 @@ def merge_graphs(
                     "graphs using all_steps() setters cannot be "
                     "batch-merged; schedule them sequentially"
                 )
+
+    if starts is not None:
+        # Explicit row placement (the slot-table form): statically prove
+        # the plan before building the merged graph — overlapping ranges
+        # would silently interleave two tenants' rows.
+        from repro.core.analysis import check_merge_plan
+
+        errs = [
+            d for d in check_merge_plan(graphs, batch_sizes, list(starts))
+            if d.severity == "error"
+        ]
+        if errs:
+            raise GraphValidationError(
+                "merge plan rejected: "
+                + "; ".join(d.format() for d in errs)
+            )
 
     length_key = site_length_key or (lambda site: "tokens")
     group_max: dict[str, int] = {}
@@ -317,6 +335,79 @@ def split_results(
 # Multi-invoke traces: one invoke-stamped graph -> per-invoke graphs.
 # --------------------------------------------------------------------------
 
+class CrossInvokeError(ValueError):
+    """Cross-invoke value flow, with structured diagnostics attached.
+
+    Stays a ``ValueError`` whose message contains "cross-invoke" (the
+    contract callers and tests match on); ``diagnostics`` carries the
+    machine-readable form (:class:`repro.core.analysis.Diagnostic`)."""
+
+    def __init__(self, message: str, diagnostics: list) -> None:
+        super().__init__(message)
+        self.diagnostics = list(diagnostics)
+
+
+def _saves_downstream(graph: InterventionGraph, nid: int) -> list[str]:
+    """Save names whose value transitively consumes node ``nid``."""
+    memo: dict[int, bool] = {}
+
+    def reaches(x: int) -> bool:
+        if x == nid:
+            return True
+        if x in memo:
+            return memo[x]
+        memo[x] = False
+        memo[x] = any(reaches(r.node_id) for r in graph.node(x).refs())
+        return memo[x]
+
+    return sorted(n for n, sid in graph.saves.items() if reaches(sid))
+
+
+def _cross_invoke_error(
+    graph: InterventionGraph,
+    node,
+    invokes: list[int],
+    producers: dict[int, int],
+    lead: str,
+) -> CrossInvokeError:
+    """Build the rich rejection: offending node ids, both invoke indices,
+    and the save names the flow would feed."""
+    from repro.core.analysis import ERROR, Diagnostic, source_of
+
+    saves = _saves_downstream(graph, node.id)
+    prod = ", ".join(
+        f"%{nid} (invoke {inv})" for nid, inv in sorted(producers.items())
+    )
+    msg = (
+        f"{lead}; cross-invoke value flow is not allowed — invokes are "
+        f"independent rows of one batch (consumes {prod}"
+        + (f"; feeds saves {saves}" if saves else "")
+        + ")"
+    )
+    diags = [Diagnostic(
+        code="cross-invoke",
+        severity=ERROR,
+        message=msg,
+        node=node.id,
+        site=node.site,
+        step=node.step,
+        source=source_of(node),
+    )]
+    for nid, inv in sorted(producers.items()):
+        p = graph.node(nid)
+        diags.append(Diagnostic(
+            code="cross-invoke",
+            severity=ERROR,
+            message=f"%{nid} ({p.op}) produced in invoke {inv}, consumed "
+                    f"by %{node.id} in invoke set {invokes}",
+            node=nid,
+            site=p.site,
+            step=p.step,
+            source=source_of(p),
+        ))
+    return CrossInvokeError(msg, diags)
+
+
 def split_invokes(graph: InterventionGraph, n_invokes: int
                   ) -> list[InterventionGraph]:
     """Partition an invoke-stamped graph into one graph per invoke.
@@ -341,10 +432,12 @@ def split_invokes(graph: InterventionGraph, n_invokes: int
     for n in graph.nodes:
         dep_invs = {eff[r.node_id] for r in n.refs()} - {None}
         if len(dep_invs) > 1:
-            raise ValueError(
+            raise _cross_invoke_error(
+                graph, n, sorted(dep_invs),
+                {r.node_id: eff[r.node_id] for r in n.refs()
+                 if eff[r.node_id] is not None},
                 f"node %{n.id} ({n.op}) mixes values from invokes "
-                f"{sorted(dep_invs)}; cross-invoke value flow is not "
-                "allowed — invokes are independent rows of one batch"
+                f"{sorted(dep_invs)}",
             )
         dep_inv = next(iter(dep_invs)) if dep_invs else None
         if n.op in ("tap_get", "tap_set", "grad_get") and n.invoke is None:
@@ -355,10 +448,12 @@ def split_invokes(graph: InterventionGraph, n_invokes: int
             )
         if n.invoke is not None:
             if dep_inv is not None and dep_inv != n.invoke:
-                raise ValueError(
+                raise _cross_invoke_error(
+                    graph, n, sorted({n.invoke, dep_inv}),
+                    {r.node_id: eff[r.node_id] for r in n.refs()
+                     if eff[r.node_id] not in (None, n.invoke)},
                     f"node %{n.id} in invoke {n.invoke} consumes a value "
-                    f"from invoke {dep_inv}; cross-invoke value flow is "
-                    "not allowed"
+                    f"from invoke {dep_inv}",
                 )
             if not 0 <= n.invoke < n_invokes:
                 raise ValueError(

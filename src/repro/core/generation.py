@@ -672,6 +672,10 @@ class DecodeLoop:
         self._fused_fn = fused_fn
         self._fused_cache: dict[Any, Callable] = {}
         self._fused_bad: set[Any] = set()  # keys whose compile/run failed
+        # Why the most recent _plan_fused declined (machine-readable: a
+        # repro.core.analysis fusion reason or "failed-compile"); None when
+        # the last plan fused.
+        self.last_fusion_reason: str | None = None
         self.fused_segments = 0
         self.fused_steps = 0
         self.eager_steps = 0
@@ -1191,9 +1195,28 @@ class DecodeLoop:
             except Exception as e2:
                 offenders.append((sr, f"{type(e2).__name__}: {e2}"))
         if not offenders:
-            offenders = [
-                (sr, f"{type(exc).__name__}: {exc}") for sr, _ in need
-            ]
+            # Every solo trial passed — the failure only manifests merged.
+            # Instead of a blanket blame, attach the static analyzer's
+            # per-request verdict alongside the original exception so each
+            # ticket says what (if anything) is wrong with ITS graph.
+            from repro.core import analysis
+
+            for sr, sl in need:
+                try:
+                    rep = analysis.analyze(
+                        sl.graph, site_order=list(self.schedule.order)
+                    )
+                    verdict = (
+                        "; ".join(d.format() for d in rep.errors())
+                        or "statically clean"
+                    )
+                except Exception:
+                    verdict = "static analysis unavailable"
+                offenders.append((
+                    sr,
+                    f"{type(exc).__name__}: {exc} (merged-step failure; "
+                    f"solo trial passed; preflight verdict: {verdict})",
+                ))
         return offenders
 
     # ---------------------------------------------------------- fused step
@@ -1257,9 +1280,23 @@ class DecodeLoop:
         # k of the same structure, each retry paying a full XLA trace
         key = structural_key(graph)
         if key in self._fused_bad:
+            self.last_fusion_reason = "failed-compile"
             return None
         if merged is not None:
+            if self.mode == "scan":
+                # static fusion lint (layer 4): a merged graph the scan
+                # body cannot host is rejected HERE with a named reason —
+                # the old path paid a failed XLA trace to learn this and
+                # recorded an anonymous failure key
+                from repro.core.analysis import scan_fusion_reason
+
+                reason = scan_fusion_reason(graph, self.schedule)
+                if reason is not None:
+                    self.last_fusion_reason = reason
+                    self._fused_bad.add(key)
+                    return None
             graph.validate(self.schedule.order)
+        self.last_fusion_reason = None
 
         inputs: dict[str, Any] = {}
         consts: dict[int, Any] = {}
@@ -1360,6 +1397,7 @@ class DecodeLoop:
             # the offending program and let the eager path (with its
             # per-request offender isolation) serve this window.
             self._fused_bad.add(plan.key)
+            self.last_fusion_reason = "failed-compile"
             return self._step_eager()
         self.cache, self.token = self_cache, self_token
 

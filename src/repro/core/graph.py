@@ -47,6 +47,7 @@ __all__ = [
     "PRE_STEP",
     "assign_steps",
     "node_fingerprint",
+    "SOURCE_META_KEY",
 ]
 
 # Pseudo-site indices used by the scheduler.
@@ -60,6 +61,14 @@ POST_SITE = 1 << 30  # only available after the forward completes
 PREFILL_STEP = -1
 ALL_STEPS = -2
 PRE_STEP = -3
+
+# Reserved ``Node.meta`` key holding the user source line captured at trace
+# time ("file.py:12: x = y + z") — surfaced by preflight diagnostics
+# (:mod:`repro.core.analysis`).  Excluded from :func:`node_fingerprint` and
+# from the serving engine's structural key: provenance is not structure, and
+# two users running the same experiment from different files must still
+# share one compiled executable.
+SOURCE_META_KEY = "src"
 
 
 class GraphValidationError(ValueError):
@@ -324,6 +333,9 @@ def node_fingerprint(node: Node, *, abstract_constants: bool = False) -> Any:
         args: Any = (("__const_spec__", arr.dtype.name, arr.shape),)
     else:
         args = _freeze_value(node.args)
+    meta = {
+        k: v for k, v in node.meta.items() if k != SOURCE_META_KEY
+    }
     return (
         node.op,
         node.site,
@@ -331,7 +343,7 @@ def node_fingerprint(node: Node, *, abstract_constants: bool = False) -> Any:
         node.invoke,
         args,
         _freeze_value(node.kwargs),
-        _freeze_value(node.meta),
+        _freeze_value(meta),
     )
 
 

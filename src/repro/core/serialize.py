@@ -168,8 +168,16 @@ def structural_key(graph: InterventionGraph) -> bytes:
     The serving engine keys its compile cache on this: two activation-patch
     requests differing only in the patched values share one XLA executable.
     """
+    from repro.core.graph import SOURCE_META_KEY
+
     payload = graph_to_json(graph)
     for spec, node in zip(payload["nodes"], graph.nodes):
+        # source provenance is not structure: two users running the same
+        # experiment from different files share one executable
+        if SOURCE_META_KEY in node.meta:
+            spec["meta"] = encode_value({
+                k: v for k, v in node.meta.items() if k != SOURCE_META_KEY
+            })
         if node.op == "constant":
             val = node.args[0]
             arr = np.asarray(val)

@@ -76,6 +76,9 @@ model.
 from __future__ import annotations
 
 import contextlib
+import linecache
+import os
+import sys
 from collections import Counter
 from typing import Any, Callable, Iterator
 
@@ -85,6 +88,7 @@ import numpy as np
 from repro.core.graph import (
     ALL_STEPS,
     PREFILL_STEP,
+    SOURCE_META_KEY,
     GraphValidationError,
     InterventionGraph,
     Node,
@@ -257,6 +261,40 @@ class Invoke:
         return f"<Invoke {self.index}>"
 
 
+# The repro package root: frames inside it are tracer/proxy plumbing, the
+# first frame OUTSIDE it is the user statement that created a node.
+_PKG_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _stamp_sources(graph: InterventionGraph) -> None:
+    """Wrap ``graph.add`` so every node records its user source line.
+
+    The line lands in ``Node.meta[SOURCE_META_KEY]`` ("file.py:12: <code>"),
+    survives slicing/merging/serialization (meta is copied everywhere), and
+    is surfaced by preflight diagnostics — but is EXCLUDED from node
+    fingerprints and structural keys (provenance is not structure)."""
+    orig_add = graph.add
+
+    def add(op: str, *args: Any, **kwargs: Any) -> Node:
+        node = orig_add(op, *args, **kwargs)
+        f = sys._getframe(1)
+        for _ in range(32):
+            if f is None:
+                break
+            fname = f.f_code.co_filename
+            if not fname.startswith(_PKG_ROOT):
+                line = linecache.getline(fname, f.f_lineno).strip()
+                loc = f"{os.path.basename(fname)}:{f.f_lineno}"
+                node.meta[SOURCE_META_KEY] = (
+                    f"{loc}: {line}" if line else loc
+                )
+                break
+            f = f.f_back
+        return node
+
+    graph.add = add  # type: ignore[method-assign]
+
+
 class Tracer:
     """Builds one intervention graph inside a ``with`` block.
 
@@ -286,6 +324,7 @@ class Tracer:
         self.mode = mode or model.default_mode
         self.backend = backend
         self.graph = graph if graph is not None else InterventionGraph()
+        _stamp_sources(self.graph)
         self._results: dict[str, Any] | None = None
         self._saved_proxies: dict[str, Proxy] = {}
         # Generation-step pointer: None for single-forward traces; the
@@ -310,6 +349,8 @@ class Tracer:
         self._merged_input_map: dict[str, str] = {}
         self._scan_pending = False  # scan=True deferred past input binding
         self.logs: list[tuple[int, Any]] = []
+        # Static preflight report (repro.core.analysis), set at trace exit.
+        self.preflight_report: Any | None = None
 
     # ------------------------------------------------------------- plumbing
     def _tap_proxy(self, site: str, layer: int | None) -> Proxy:
@@ -507,9 +548,71 @@ class Tracer:
                 self._scan_pending = True
             else:
                 self.validate_shapes()
+        self.preflight()
         if self._deferred:
             return
         self.execute()
+
+    # ------------------------------------------------------------ preflight
+    def preflight(self) -> Any:
+        """Static preflight (layer 1 of 4: trace exit) — zero model FLOPs.
+
+        Structural facts (ops, sites, dead nodes) always check; shape
+        facts check when abstract site avals can be captured via
+        ``jax.eval_shape`` of the model (cached per batch signature on the
+        model).  In enforcing mode (``REPRO_PREFLIGHT=enforce``, the
+        default) definite errors raise
+        :class:`repro.core.analysis.PreflightError` before anything
+        executes or ships."""
+        from repro.core import analysis
+
+        mode = analysis.preflight_mode()
+        if mode == "off":
+            return None
+        graph = self.execution_graph()
+        site_order = list(self.model.schedule.order)
+        site_avals = input_avals = None
+        # Shape facts need one abstract model evaluation, which replays any
+        # host-side effects in the model fn (counters, callbacks) — so the
+        # tracer layer captures them only for scan=True traces, where the
+        # user already opted into abstract evaluation.  Plain traces get
+        # the structural lint here and full shape checking at the serving
+        # layers (engine/scheduler admission), whose model fns are pure.
+        if self.scan:
+            try:
+                cache = self.model.__dict__.setdefault(
+                    "_preflight_avals", {}
+                )
+                key = analysis.aval_signature(
+                    self.model_args, self.model_kwargs
+                )
+                site_avals = cache.get(key)
+                if site_avals is None:
+                    site_avals = analysis.capture_forward_avals(
+                        self.model.wrapped_fn,
+                        self.model_args,
+                        self.model_kwargs,
+                    )
+                    cache[key] = site_avals
+                inputs = self._execution_inputs() or {}
+                input_avals = {
+                    k: jax.eval_shape(lambda x: x, v)
+                    for k, v in inputs.items()
+                    if v is not None
+                }
+            except Exception:
+                # model facts unavailable (abstract-params client, unbound
+                # cross-trace inputs): structural lint only
+                site_avals = input_avals = None
+        report = analysis.analyze(
+            graph,
+            site_order=site_order,
+            site_avals=site_avals,
+            input_avals=input_avals,
+        )
+        self.preflight_report = report
+        report.enforce(mode)
+        return report
 
     # ------------------------------------------------------------- lowering
     def _lower(self) -> None:
@@ -863,6 +966,80 @@ class GenerateTracer(Tracer):
                 self.model.params,
                 prompt,
             )
+
+    # ------------------------------------------------------------ preflight
+    def preflight(self) -> Any:
+        """Generation preflight: step-flow + per-execution shape facts.
+
+        Prefill taps check against ``(B, S-1, ...)`` prompt avals, decode
+        taps against ``(B, 1, ...)`` step avals — both captured with
+        ``jax.eval_shape`` of ``prefill``/``decode_step`` (zero FLOPs,
+        cached per batch signature).  Multi-invoke traces analyze each
+        per-invoke graph against its own batch and horizon."""
+        from repro.core import analysis
+        from repro.core.generation import _step_order
+
+        mode = analysis.preflight_mode()
+        if mode == "off":
+            return None
+        zoo = self.model.zoo_model
+        if zoo is None:
+            return None  # plain TracedModel: execute() raises its own error
+        sched = _step_order(zoo.site_schedule(self.mode))
+        step_order = list(sched.order)
+        if self.invokes:
+            from repro.core.batching import split_invokes
+
+            graphs = split_invokes(self.graph, len(self.invokes))
+            items = [
+                (g, inv.batch, inv.max_new_tokens)
+                for g, inv in zip(graphs, self.invokes)
+            ]
+        else:
+            batch = {
+                "tokens": np.asarray(self.tokens),
+                **{k: np.asarray(v) for k, v in self.model_kwargs.items()},
+            }
+            items = [(self.graph, batch, self.max_new_tokens)]
+        cache = self.model.__dict__.setdefault("_preflight_gen_avals", {})
+        report = None
+        for graph, batch, n_new in items:
+            pre_avals = dec_avals = None
+            try:
+                tokens = np.asarray(batch["tokens"])
+                # runtime prefills on the prompt minus its last token and
+                # decodes from there — mirror that split for the avals
+                cap = dict(batch)
+                if tokens.shape[1] > 1:
+                    cap["tokens"] = tokens[:, :-1]
+                max_len = int(cap["tokens"].shape[1]) + int(n_new)
+                key = (
+                    analysis.aval_signature(cap),
+                    int(n_new),
+                    self.mode,
+                )
+                if key in cache:
+                    pre_avals, dec_avals = cache[key]
+                else:
+                    pre_avals, dec_avals = analysis.capture_generation_avals(
+                        zoo, self.model.params, cap,
+                        max_len=max_len, mode=self.mode,
+                    )
+                    cache[key] = (pre_avals, dec_avals)
+            except Exception:
+                pre_avals = dec_avals = None  # structural lint only
+            report = analysis.analyze(
+                graph,
+                site_order=step_order,
+                decode_order=step_order,
+                site_avals=pre_avals,
+                decode_avals=dec_avals,
+                n_steps=int(n_new),
+                schedule=sched,
+            )
+            self.preflight_report = report
+            report.enforce(mode)
+        return report
 
     # ---------------------------------------------------------- execution
     def _require_zoo(self):

@@ -22,12 +22,30 @@ class NDIFClient:
         self.transport = transport
         self.model_name = model_name
 
+    # ---------------------------------------------------------- preflight
+    @staticmethod
+    def _preflight_wire(graph, n_steps: int | None = None) -> None:
+        """Layer-2 preflight: lint a graph BEFORE it ships.
+
+        The client knows no site schedule or activation shapes — those
+        facts live server-side — but op-registry membership, step-flow
+        rules, and dead nodes are wire-graph facts, so a structurally
+        broken request fails HERE (``PreflightError``) instead of costing
+        a network roundtrip and a server rejection."""
+        from repro.core import analysis
+
+        mode = analysis.preflight_mode()
+        if mode == "off" or graph is None or not graph.nodes:
+            return
+        analysis.analyze(graph, n_steps=n_steps).enforce(mode)
+
     # Tracer-facing API ------------------------------------------------
     def execute(self, tracer) -> dict[str, Any]:
         """Ship one trace.  Multi-invoke traces are lowered client-side
         (``tracer.execution_graph()`` is the merged row-sliced graph) and
         flagged ``premerged`` so the server runs them as-is; ``stop``
         carries tracer.stop() truncation to the server."""
+        self._preflight_wire(tracer.execution_graph())
         msg = {
             "kind": "trace",
             "model": self.model_name,
@@ -105,6 +123,7 @@ class NDIFClient:
         Only the trained parameters + loss curve cross the wire back."""
         from repro.core.serialize import graph_to_json
 
+        self._preflight_wire(graph)
         msg = {
             "kind": "train_module",
             "model": self.model_name,
@@ -130,6 +149,7 @@ class NDIFClient:
         batch = {"tokens": np.asarray(tokens), **extras}
         if lengths is not None:
             batch["lengths"] = np.asarray(lengths, np.int32)
+        self._preflight_wire(graph, n_steps=int(max_new_tokens))
         msg = {
             "kind": "generate",
             "model": self.model_name,
@@ -152,6 +172,10 @@ class NDIFClient:
         """
         wire = []
         for inv in invokes:
+            self._preflight_wire(
+                inv.get("graph"),
+                n_steps=int(inv.get("max_new_tokens", 16)),
+            )
             entry = {
                 "batch": {k: np.asarray(v)
                           for k, v in inv["batch"].items()},

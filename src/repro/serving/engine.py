@@ -218,6 +218,11 @@ class InferenceEngine:
         # exactly like the prefill/decode caches above.
         self._fused_exec: dict[Any, Callable] = {}
         self._step_schedule = _step_order(model.site_schedule(mode))
+        # Static preflight (repro.core.analysis): captured site avals per
+        # batch signature, and analysis reports per (graph, signature) —
+        # admission rejects bad graphs before they touch any executable.
+        self._aval_cache: dict[Any, Any] = {}
+        self._preflight_cache: dict[Any, Any] = {}
 
     def _full_schedule(self) -> SiteSchedule:
         sched = self.model.site_schedule(self.mode)
@@ -280,6 +285,92 @@ class InferenceEngine:
             self._fused_exec[key] = fn
         return fn
 
+    # ------------------------------------------------------------ preflight
+    def preflight(self, graph: InterventionGraph, batch: dict) -> Any:
+        """Static analysis of a single-forward request (admission layer).
+
+        Zero model FLOPs: site avals come from ONE ``jax.eval_shape`` of
+        the forward per batch signature (cached), reports are cached per
+        (structural graph key, batch signature).  Callers enforce via
+        ``report.enforce()``."""
+        from repro.core import analysis
+
+        sig = ("fwd", analysis.aval_signature(batch))
+        key = (structural_key(graph), sig)
+        report = self._preflight_cache.get(key)
+        if report is not None:
+            return report
+        if sig in self._aval_cache:
+            site_avals = self._aval_cache[sig]
+        else:
+            try:
+                site_avals = analysis.capture_forward_avals(
+                    self._model_fn, (self.params, dict(batch)), {}
+                )
+            except Exception:
+                site_avals = None  # structural lint only
+            self._aval_cache[sig] = site_avals
+        report = analysis.analyze(
+            graph,
+            site_order=list(self.schedule.order),
+            site_avals=site_avals,
+        )
+        self._preflight_cache[key] = report
+        return report
+
+    def preflight_generation(
+        self,
+        graph: InterventionGraph,
+        batch: dict,
+        max_new_tokens: int,
+        *,
+        max_len: int | None = None,
+    ) -> Any:
+        """Static analysis of a generation request before it touches the
+        decode loop: step-flow rules, per-execution shape facts (prefill
+        avals are prompt-shaped, decode avals are ``(B, 1, ...)``), fusion
+        verdicts.  Zero model FLOPs; cached like :meth:`preflight`."""
+        from repro.core import analysis
+
+        n_new = int(max_new_tokens)
+        batch = {k: v for k, v in batch.items() if k != "lengths"}
+        sig = ("gen", analysis.aval_signature(batch), n_new, max_len)
+        key = (structural_key(graph), sig)
+        report = self._preflight_cache.get(key)
+        if report is not None:
+            return report
+        if sig in self._aval_cache:
+            pre_avals, dec_avals = self._aval_cache[sig]
+        else:
+            try:
+                cap = dict(batch)
+                tokens = np.asarray(cap["tokens"])
+                # runtime prefills on the prompt minus its last token
+                if tokens.shape[1] > 1:
+                    cap["tokens"] = tokens[:, :-1]
+                ml = max_len
+                if ml is None:
+                    ml = int(np.shape(cap["tokens"])[1]) + n_new
+                pre_avals, dec_avals = analysis.capture_generation_avals(
+                    self.model, self.params, cap,
+                    max_len=int(ml), mode=self.mode,
+                )
+            except Exception:
+                pre_avals = dec_avals = None  # structural lint only
+            self._aval_cache[sig] = (pre_avals, dec_avals)
+        step_order = list(self._step_schedule.order)
+        report = analysis.analyze(
+            graph,
+            site_order=step_order,
+            decode_order=step_order,
+            site_avals=pre_avals,
+            decode_avals=dec_avals,
+            n_steps=n_new,
+            schedule=self._step_schedule,
+        )
+        self._preflight_cache[key] = report
+        return report
+
     # ------------------------------------------------------------- execute
     def execute(
         self, graph: InterventionGraph, batch: dict, *, stop: bool = False
@@ -292,6 +383,11 @@ class InferenceEngine:
         the whole trace — and skip the compile cache: the saving is model
         compute, not compile reuse.
         """
+        from repro.core import analysis
+
+        pmode = analysis.preflight_mode()
+        if pmode != "off" and graph.nodes:
+            self.preflight(graph, batch).enforce(pmode)
         graph.validate(self.schedule.order)
         if stop:
             from repro.core.interleave import last_referenced_site
@@ -380,6 +476,13 @@ class InferenceEngine:
         compiled prefill/decode; non-uniform instrumented steps run the
         eager interleaver (see repro.core.generation).
         """
+        from repro.core import analysis
+
+        pmode = analysis.preflight_mode()
+        if pmode != "off" and graph.nodes:
+            self.preflight_generation(
+                graph, batch, max_new_tokens
+            ).enforce(pmode)
         batch = dict(batch)
         tokens = jnp.asarray(batch.pop("tokens"))
         lengths = batch.pop("lengths", None)

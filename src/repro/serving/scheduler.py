@@ -489,6 +489,8 @@ class CoTenantScheduler:
                 ticket.error = f"{type(e).__name__}: {e}"
                 done.append(ticket)
                 continue
+            if not self._preflight_admit(loop, req, ticket, done):
+                continue  # rejected statically: ZERO model forwards spent
             t = np.asarray(req.batch.get("tokens", np.zeros((1, 1))))
             tw = int(t.shape[1]) if t.ndim >= 2 else 1
             # the bucket ceiling the PROMPT pads to (cache-length term);
@@ -550,6 +552,36 @@ class CoTenantScheduler:
         # restore submit order for everything that did not admit
         rest.sort(key=lambda pair: pair[0])
         self.queue = [item for _, item in rest] + self.queue
+
+    def _preflight_admit(self, loop, req, ticket, done) -> bool:
+        """Layer-3 admission preflight: a statically-broken graph fails its
+        ticket here, before any prefill/decode executes — the old path
+        discovered these at step time and evicted the offender mid-loop
+        (``_isolate_offenders``, now the fallback for what statics cannot
+        see)."""
+        from repro.core import analysis
+
+        if analysis.preflight_mode() != "enforce":
+            return True
+        if req.premerged or not req.graph.nodes:
+            return True  # premerged graphs were preflighted at lowering
+        try:
+            report = self.engine.preflight_generation(
+                req.graph,
+                req.batch,
+                req.max_new_tokens,
+                max_len=getattr(loop, "max_len", None),
+            )
+        except Exception:
+            return True  # analyzer trouble must never block admission
+        if report.ok():
+            return True
+        ticket.finish_time = time.perf_counter()
+        ticket.error = "preflight rejected: " + "; ".join(
+            d.format() for d in report.errors()
+        )
+        done.append(ticket)
+        return False
 
     def _admit_plan(self, loop, plan, pad_to, rest, done) -> bool:
         """Admit one prefill group (``plan`` is [(queue_idx, (req,

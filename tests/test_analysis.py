@@ -1,0 +1,294 @@
+"""Static preflight analyzer (repro.core.analysis).
+
+Covers the four wiring layers and the analysis facts themselves:
+  * abstract shape/dtype inference names the offending NODE (with the
+    user's source line, captured at trace time) before anything executes;
+  * scheduler admission rejects a broken step graph with ZERO model
+    forwards spent — the step-time failure classes of test_continuous
+    caught statically;
+  * merge-plan checking proves co-tenant row disjointness;
+  * fusion lint classifies decode steps with machine-readable reasons;
+  * dead-node elimination + stop-site inference;
+  * cross-invoke rejection carries structured diagnostics;
+  * the false-positive contract: graphs the runtime accepts analyze clean.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import analysis
+from repro.core.analysis import (
+    ERROR,
+    NOTE,
+    AnalysisReport,
+    PreflightError,
+    check_merge_plan,
+    dead_nodes,
+    eliminate_dead,
+    infer_stop_site,
+    lint_fusion,
+)
+from repro.core.batching import CrossInvokeError, merge_graphs, split_invokes
+from repro.core.generation import _step_order
+from repro.core.graph import (
+    ALL_STEPS,
+    GraphValidationError,
+    InterventionGraph,
+    Ref,
+)
+from repro.models import registry as R
+from repro.models.traced import traced_lm
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import CoTenantScheduler, Request
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _tokens(cfg, rows=2, seq=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, cfg.vocab_size, (rows, seq)).astype(np.int32)
+
+
+# ------------------------------------------------------------ layer 1: tracer
+def test_generation_shape_error_named_with_source_line(small):
+    """A wrong-shaped steering vector fails at TRACE EXIT with the node,
+    the step, and the user's own source line — not mid-decode."""
+    cfg, model, params = small
+    lm = traced_lm(model, params)
+    bad_vec = np.zeros((cfg.d_model + 1,), np.float32)
+    with pytest.raises(PreflightError) as ei:
+        with lm.generate(_tokens(cfg), max_new_tokens=4) as tr:
+            for s in tr.steps(1, 2):
+                lm.layers[1].mlp.output += bad_vec  # SHAPE BUG (this line)
+            for s in tr.steps():
+                lm.logits.save("logits")
+    errs = [d for d in ei.value.diagnostics if d.severity == ERROR]
+    assert errs, ei.value.diagnostics
+    assert any(d.code == "op-shape" for d in errs)
+    # the diagnostic points at THIS test file's steering line
+    assert any(d.source and "test_analysis.py" in d.source
+               and "SHAPE BUG" in d.source for d in errs)
+
+
+def test_clean_generation_trace_passes_preflight_and_runs(small):
+    """False-positive guard at the tracer layer: a correctly-shaped
+    steering trace analyzes clean and then actually executes."""
+    cfg, model, params = small
+    lm = traced_lm(model, params)
+    with lm.generate(_tokens(cfg), max_new_tokens=3) as tr:
+        for s in tr.steps(1, 2):
+            lm.layers[1].mlp.output += 2.0
+        for s in tr.steps():
+            lm.logits.save("logits")
+    assert tr.preflight_report is not None and tr.preflight_report.ok()
+    assert np.asarray(tr.result("logits")).shape == (2, 3, cfg.vocab_size)
+
+
+# -------------------------------------------------- layer 3: admission
+def test_admission_rejects_shape_error_with_zero_forwards(small):
+    """A statically-broken step graph never reaches the slot loop: the
+    ticket fails at admission and the engine runs NO model forwards."""
+    cfg, model, params = small
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=4, slot_max_len=32)
+    bad = InterventionGraph()
+    t = bad.add("tap_get", site="layers.mlp.output", layer=1, step=1)
+    c = bad.add("constant", np.zeros((cfg.d_model + 3,), np.float32))
+    u = bad.add("add", Ref(t.id), Ref(c.id), step=1)
+    bad.add("tap_set", Ref(u.id), site="layers.mlp.output", layer=1, step=1)
+    ticket = sched.submit(Request(graph=bad, batch={"tokens": _tokens(cfg)},
+                                  max_new_tokens=3))
+    sched.drain()
+    assert ticket.error is not None
+    assert "preflight rejected" in ticket.error
+    assert "op-shape" in ticket.error
+    assert engine.stats.compiles == 0      # zero model forwards spent
+    assert engine.stats.admissions == 0
+    assert engine.stats.generations == 0
+
+
+def test_admission_clean_step_graph_still_served(small):
+    """False-positive guard at admission: a legal steering graph passes
+    preflight and decodes normally through the shared loop."""
+    cfg, model, params = small
+    engine = InferenceEngine(model, params, mode="unrolled")
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=4, slot_max_len=32)
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.mlp.output", layer=1, step=ALL_STEPS)
+    u = g.add("add", Ref(t.id), 2.0, step=ALL_STEPS)
+    g.add("tap_set", Ref(u.id), site="layers.mlp.output", layer=1,
+          step=ALL_STEPS)
+    ticket = sched.submit(Request(graph=g, batch={"tokens": _tokens(cfg, 1)},
+                                  max_new_tokens=3))
+    sched.drain()
+    assert ticket.error is None
+    assert ticket.result["tokens"].shape == (1, 3)
+
+
+# ----------------------------------------------------------- merge plans
+def test_check_merge_plan_proves_disjointness():
+    g1, g2 = InterventionGraph(), InterventionGraph()
+    for g in (g1, g2):
+        t = g.add("tap_get", site="layers.output", layer=0)
+        u = g.add("mul", Ref(t.id), 2.0)
+        g.add("tap_set", Ref(u.id), site="layers.output", layer=0)
+    # clean: disjoint, in-bounds
+    assert not [d for d in check_merge_plan([g1, g2], [2, 3], [0, 2],
+                                            num_rows=8)
+                if d.severity == ERROR]
+    # overlap: tenant 1 starts inside tenant 0's rows
+    diags = check_merge_plan([g1, g2], [2, 3], [0, 1], num_rows=8)
+    overlap = [d for d in diags if d.code == "row-overlap"]
+    assert overlap and overlap[0].severity == ERROR
+    assert "layers.output" in overlap[0].message  # both write this site
+    # bounds: tenant escapes the slot table
+    diags = check_merge_plan([g1, g2], [2, 3], [0, 6], num_rows=8)
+    assert any(d.code == "row-bounds" and d.severity == ERROR for d in diags)
+    # cross-tenant read/write pairs surface as notes (isolation holds)
+    r = InterventionGraph()
+    t = r.add("tap_get", site="layers.output", layer=0)
+    r.mark_saved("h", r.add("save", Ref(t.id)))
+    notes = [d for d in check_merge_plan([g1, r], [2, 2], [0, 2], num_rows=8)
+             if d.code == "cross-tenant-read"]
+    assert notes and notes[0].severity == NOTE
+
+
+def test_merge_graphs_rejects_overlapping_starts():
+    """merge_graphs with an explicit (overlapping) row plan refuses to
+    build the merged graph — the checked-merge-plan contract."""
+    g1, g2 = InterventionGraph(), InterventionGraph()
+    for g in (g1, g2):
+        t = g.add("tap_get", site="logits")
+        g.mark_saved("out", g.add("save", Ref(t.id)))
+    with pytest.raises(GraphValidationError, match="merge plan rejected"):
+        merge_graphs([g1, g2], [2, 2], starts=[0, 1])
+    merged = merge_graphs([g1, g2], [2, 2], starts=[0, 2])  # disjoint: fine
+    assert merged.graph.nodes and merged.row_slices == [(0, 2), (2, 2)]
+
+
+# ------------------------------------------------------------ fusion lint
+def test_lint_fusion_reasons(small):
+    cfg, model, params = small
+    sched = _step_order(model.site_schedule("unrolled"))
+    g = InterventionGraph()
+    # steps 0..1: plain steering (fusable); step 2: a host-side log (eager)
+    t = g.add("tap_get", site="layers.mlp.output", layer=0, step=ALL_STEPS)
+    u = g.add("add", Ref(t.id), 1.0, step=ALL_STEPS)
+    g.add("tap_set", Ref(u.id), site="layers.mlp.output", layer=0,
+          step=ALL_STEPS)
+    o = g.add("tap_get", site="logits", step=2)
+    g.add("log", "peek", Ref(o.id), step=2)
+    verdicts = lint_fusion(g, 4, sched)
+    assert [v.fusable for v in verdicts] == [True, True, False, True]
+    assert verdicts[2].reason == "log"
+    assert verdicts[0].reason == "ok"
+
+
+def test_lint_fusion_cross_step_flow():
+    g = InterventionGraph()
+    a = g.add("tap_get", site="logits", step=0)
+    u = g.add("mul", Ref(a.id), 2.0, step=0)
+    t = g.add("tap_get", site="layers.output", layer=0, step=2)
+    m = g.add("add", Ref(t.id), Ref(u.id), step=2)
+    g.add("tap_set", Ref(m.id), site="layers.output", layer=0, step=2)
+    verdicts = lint_fusion(g, 3)
+    assert not verdicts[0].fusable and verdicts[0].reason == "cross-step-flow"
+
+
+# ----------------------------------------------------- dead nodes / stop
+def test_dead_nodes_and_elimination(small):
+    cfg, model, params = small
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.output", layer=1)
+    live = g.add("mul", Ref(t.id), 2.0)
+    g.mark_saved("x", g.add("save", Ref(live.id)))
+    d1 = g.add("add", Ref(t.id), 1.0)      # dead chain
+    g.add("abs", Ref(d1.id))               # dead
+    dead = dead_nodes(g)
+    assert set(dead) == {d1.id, d1.id + 1}
+    out, idmap = eliminate_dead(g)
+    assert len(out.nodes) == 3 and "x" in out.saves
+    # analyzer surfaces dead compute as notes, not errors
+    report = analysis.analyze(g)
+    assert report.ok()
+    assert {d.node for d in report.diagnostics if d.code == "dead-node"} == \
+        set(dead)
+
+
+def test_infer_stop_site(small):
+    cfg, model, params = small
+    schedule = model.site_schedule("unrolled")
+    g = InterventionGraph()
+    t = g.add("tap_get", site="layers.output", layer=1)
+    g.mark_saved("h", g.add("save", Ref(t.id)))
+    stop = infer_stop_site(g, schedule)
+    order = list(schedule.order)
+    assert stop is not None and order[stop] == ("layers.output", 1)
+    # a logits read needs the whole forward
+    g.mark_saved("o", g.add("save", Ref(g.add("tap_get", site="logits").id)))
+    assert infer_stop_site(g, schedule) == len(order) - 1
+
+
+# ---------------------------------------------------------- cross-invoke
+def test_cross_invoke_error_carries_diagnostics():
+    g = InterventionGraph()
+    a = g.add("tap_get", site="layers.output", layer=0, invoke=0)
+    b = g.add("tap_get", site="layers.output", layer=0, invoke=1)
+    m = g.add("add", Ref(a.id), Ref(b.id), invoke=1)
+    g.mark_saved("out", g.add("save", Ref(m.id), invoke=1))
+    with pytest.raises(ValueError, match="cross-invoke") as ei:
+        split_invokes(g, 2)
+    err = ei.value
+    assert isinstance(err, CrossInvokeError)
+    assert err.diagnostics and all(d.code == "cross-invoke"
+                                   for d in err.diagnostics)
+    msg = str(err)
+    assert "invoke 0" in msg and "invoke 1" in msg  # both indices named
+    assert "out" in msg                             # the fed save
+
+
+# ----------------------------------------------------------- env plumbing
+def test_preflight_mode_env(monkeypatch):
+    monkeypatch.delenv("REPRO_PREFLIGHT", raising=False)
+    assert analysis.preflight_mode() == "enforce"
+    monkeypatch.setenv("REPRO_PREFLIGHT", "warn")
+    assert analysis.preflight_mode() == "warn"
+    monkeypatch.setenv("REPRO_PREFLIGHT", "off")
+    assert analysis.preflight_mode() == "off"
+    monkeypatch.setenv("REPRO_PREFLIGHT", "nonsense")
+    assert analysis.preflight_mode() == "enforce"
+    report = AnalysisReport()
+    report.diagnostics.append(analysis.Diagnostic("x", ERROR, "boom"))
+    assert report.enforce("warn") is report          # warn never raises
+    with pytest.raises(PreflightError):
+        report.enforce("enforce")
+
+
+# --------------------------------------------------------------- CLI lint
+def test_lint_graph_cli_all_examples():
+    """The repo's own example graphs must lint clean (shape-aware, built
+    against an abstract weightless model)."""
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "lint_graph.py"),
+         "--all-examples"],
+        capture_output=True, text=True, timeout=600,
+        cwd=REPO, env={**__import__("os").environ,
+                       "PYTHONPATH": str(REPO / "src")},
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "FAILED" not in proc.stdout
+    assert "examples/steered_generation" in proc.stdout

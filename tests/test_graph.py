@@ -211,3 +211,85 @@ def test_bfloat16_array_roundtrip():
     dec = decode_value(json.loads(json.dumps(encode_value(arr))))
     assert dec.dtype == arr.dtype
     np.testing.assert_array_equal(dec, arr)
+
+
+# ----------------------------------------------------- node fingerprints
+def _node(op, *args, **kw):
+    g = InterventionGraph()
+    return g.add(op, *args, **kw)
+
+
+def test_fingerprint_excludes_step_stamp():
+    """The step coordinate is scheduling metadata, not structure — the
+    fused planner matches per-step slices across steps."""
+    from repro.core.graph import node_fingerprint
+
+    a = _node("tap_get", site="b", layer=1, step=0)
+    b = _node("tap_get", site="b", layer=1, step=5)
+    assert node_fingerprint(a) == node_fingerprint(b)
+    # site/layer ARE structure
+    c = _node("tap_get", site="b", layer=2, step=0)
+    assert node_fingerprint(a) != node_fingerprint(c)
+
+
+def test_fingerprint_abstract_constants():
+    """abstract_constants collapses a constant's VALUE to (dtype, shape):
+    the planner threads differing per-step constants through the scan,
+    so values need not match — but specs must."""
+    from repro.core.graph import node_fingerprint
+
+    one = _node("constant", np.full((3,), 1.0, np.float32))
+    nine = _node("constant", np.full((3,), 9.0, np.float32))
+    # concrete: values distinguish
+    assert node_fingerprint(one) != node_fingerprint(nine)
+    # abstract: same spec, values collapse
+    assert node_fingerprint(one, abstract_constants=True) == \
+        node_fingerprint(nine, abstract_constants=True)
+    # abstract still distinguishes dtype and shape
+    wide = _node("constant", np.full((4,), 1.0, np.float32))
+    half = _node("constant", np.full((3,), 1.0, np.float16))
+    assert node_fingerprint(one, abstract_constants=True) != \
+        node_fingerprint(wide, abstract_constants=True)
+    assert node_fingerprint(one, abstract_constants=True) != \
+        node_fingerprint(half, abstract_constants=True)
+
+
+def test_fingerprint_array_args_compare_by_content():
+    """Raw array args of NON-constant ops always compare by content, even
+    under abstract_constants — only ``constant`` nodes are abstracted."""
+    from repro.core.graph import node_fingerprint
+
+    g = InterventionGraph()
+    g.add("tap_get", site="a")
+    x = g.add("add", Ref(0), np.zeros((2,), np.float32))
+    g2 = InterventionGraph()
+    g2.add("tap_get", site="a")
+    y = g2.add("add", Ref(0), np.ones((2,), np.float32))
+    assert node_fingerprint(x, abstract_constants=True) != \
+        node_fingerprint(y, abstract_constants=True)
+    g3 = InterventionGraph()
+    g3.add("tap_get", site="a")
+    z = g3.add("add", Ref(0), np.zeros((2,), np.float32))
+    assert node_fingerprint(x) == node_fingerprint(z)
+
+
+def test_fingerprint_and_structural_key_exclude_source_meta():
+    """Source-line stamps (tracer-captured user code locations) are
+    diagnostics payload, not structure: two traces of the same program
+    written on different lines must dedupe to one compiled plan."""
+    from repro.core.graph import SOURCE_META_KEY, node_fingerprint
+
+    def build(src):
+        g = InterventionGraph()
+        t = g.add("tap_get", site="a", meta={SOURCE_META_KEY: src})
+        g.mark_saved("out", g.add("save", Ref(t.id)))
+        return g
+
+    ga, gb = build("nb.py:3: x"), build("other.py:99: y")
+    assert node_fingerprint(ga.nodes[0]) == node_fingerprint(gb.nodes[0])
+    assert structural_key(ga) == structural_key(gb)
+    # any OTHER meta key is structural
+    gc = InterventionGraph()
+    t = gc.add("tap_get", site="a", meta={"custom": 1})
+    gc.mark_saved("out", gc.add("save", Ref(t.id)))
+    assert structural_key(ga) != structural_key(gc)
