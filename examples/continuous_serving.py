@@ -1,15 +1,19 @@
-"""Continuous batching walkthrough: two clients with DIFFERENT generation
-lengths share ONE running decode loop.
+"""Continuous batching walkthrough: mixed-length clients share ONE running
+decode loop backed by a PAGED KV pool.
 
     PYTHONPATH=src python examples/continuous_serving.py
 
-The engine owns a persistent slot table (here 4 rows of preallocated cache).
-Alice asks for a long completion; one decode step later Bob arrives with a
-short, steered one.  Under burst-drain scheduling Bob would wait for Alice's
-whole decode loop; with ``policy="continuous"`` he is admitted into free
-slot rows at the next step boundary, decodes alongside her, RETIRES first
-(his ``max_new_tokens`` is smaller), and his slots are immediately reusable
-— all through the one compiled decode step (zero retraces).
+The engine owns a persistent slot table whose KV cache is a shared pool of
+fixed-size pages behind per-slot block tables: each admission allocates
+pages for its ACTUAL lifetime extent (prompt + requested tokens) instead of
+pinning ``slot_max_len`` cells, and grows page-by-page as decode proceeds.
+
+The cast: Alice asks for a long completion; one decode step later Bob
+(short, steered) and Carol (medium) join the RUNNING loop.  Bob retires
+first, leaving the free rows NON-CONTIGUOUS — under the old contiguous-run
+allocator Dana's 2-row request would now bounce on fragmentation, but the
+block-table indirection places her on the scattered free rows and decodes
+on — all through the one compiled decode step (zero retraces).
 """
 import time
 
@@ -45,6 +49,21 @@ def bob_request(cfg, rng):
     return Request(graph=g, batch={"tokens": toks}, max_new_tokens=4)
 
 
+def carol_request(cfg, rng):
+    """A medium completion, plain decode."""
+    toks = rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)
+    return Request(graph=InterventionGraph(), batch={"tokens": toks},
+                   max_new_tokens=10)
+
+
+def dana_request(cfg, rng):
+    """TWO rows at once — arrives after Bob retires, when the free rows
+    are non-contiguous (Alice and Carol hold rows in between)."""
+    toks = rng.integers(0, cfg.vocab_size, (2, 10)).astype(np.int32)
+    return Request(graph=InterventionGraph(), batch={"tokens": toks},
+                   max_new_tokens=5)
+
+
 def main() -> None:
     cfg = R.get_config("paper-gpt-small")
     model = R.build_model("paper-gpt-small", cfg)
@@ -54,7 +73,7 @@ def main() -> None:
     server.host(cfg.name, model, params, policy="continuous",
                 num_slots=4, slot_max_len=48, pad_slack=7)
     print(f"preloaded {cfg.name} in {time.time() - t0:.2f}s "
-          "(slot table: 4 rows x 48 positions)")
+          "(slot table: 4 rows x 48 positions, paged KV pool)")
 
     sched = server.schedulers[cfg.name]
     engine = server.engines[cfg.name]
@@ -63,23 +82,33 @@ def main() -> None:
     # Alice arrives first and starts decoding...
     t_alice = sched.submit(alice_request(cfg, rng))
     sched.pump()   # admit Alice + one decode step
-    print(f"step 1: occupancy {sched.loop.occupancy():.0%}, "
-          f"resident={[sr.request_id for sr in sched.loop.resident]}")
+    loop = sched.loop
+    print(f"step 1: occupancy {loop.occupancy():.0%}, "
+          f"pages {loop.pages_in_use()}/{loop.usable_pages()} in use, "
+          f"resident={[sr.request_id for sr in loop.resident]}")
 
-    # ...Bob arrives ONE STEP LATER and joins the RUNNING loop.
+    # ...Bob and Carol arrive ONE STEP LATER and join the RUNNING loop.
     t_bob = sched.submit(bob_request(cfg, rng))
+    t_carol = sched.submit(carol_request(cfg, rng))
+    t_dana = None
     done = []
     step = 1
-    while len(done) < 2:
+    while len(done) < (4 if t_dana else 3):
         finished = sched.pump()
         step += 1
         for t in finished:
             print(f"step {step}: request {t.request_id} retired, "
-                  f"occupancy {sched.loop.occupancy():.0%} — "
-                  "its slots are free while co-tenants keep decoding")
+                  f"occupancy {loop.occupancy():.0%}, "
+                  f"pages {loop.pages_in_use()}/{loop.usable_pages()} — "
+                  "its rows AND pages are free while co-tenants decode")
         done += finished
+        if t_bob in done and t_dana is None:
+            # Bob's retirement left the free rows non-contiguous; Dana's
+            # 2-row request lands on them via the block-table indirection
+            t_dana = sched.submit(dana_request(cfg, rng))
 
-    for name, t in (("alice", t_alice), ("bob", t_bob)):
+    for name, t in (("alice", t_alice), ("bob", t_bob),
+                    ("carol", t_carol), ("dana", t_dana)):
         assert t.error is None, t.error
         print(f"  {name}: tokens {t.result['tokens'].tolist()} "
               f"[{t.response_time * 1e3:.1f} ms]")
@@ -91,6 +120,14 @@ def main() -> None:
           f"decode_steps={snap['slot_steps']} "
           f"slot_occupancy={snap['slot_occupancy']:.2f} "
           f"compiles={snap['compiles']}")
+    print(f"paged KV: page_allocs={snap['page_allocs']} "
+          f"page_frees={snap['page_frees']} "
+          f"page_occupancy={snap['page_occupancy']:.2f} "
+          f"frag_events_avoided={snap['frag_events_avoided']} "
+          f"alloc_retries={snap['alloc_retries']}")
+    assert snap["frag_events_avoided"] >= 1, (
+        "Dana should have been placed on non-contiguous rows")
+    assert snap["pages_in_use"] == 0, "all pages returned on retirement"
 
 
 if __name__ == "__main__":

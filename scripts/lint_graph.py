@@ -128,6 +128,30 @@ def _broadcast_steering_graph() -> InterventionGraph:
     return g
 
 
+def _continuous_serving_merge_plan():
+    # examples/continuous_serving.py, the boundary after Bob retires:
+    # Alice holds row 0 and Carol row 2, so the free rows {1, 3} are
+    # NON-CONTIGUOUS — Dana's 2-row request is placed through the paged
+    # allocator's index-array starts.  The plan lint must prove the row
+    # sets pairwise disjoint (the write-write safety proof) exactly as it
+    # does for contiguous spans.
+    alice = InterventionGraph()
+    t = alice.add("tap_get", site="logits", step=0)
+    alice.mark_saved("lg", alice.add("save", Ref(t.id), step=0))
+    graphs = [alice, InterventionGraph(), InterventionGraph()]
+    sizes = [1, 1, 2]
+    starts = [0, (2,), (1, 3)]
+    return graphs, sizes, starts, 4
+
+
+# name -> builder returning (graphs, sizes, starts, num_rows); these mirror
+# admission boundaries the examples produce, with index-array starts where
+# the paged allocator lands requests on scattered free rows
+EXAMPLE_MERGE_PLANS: dict[str, object] = {
+    "continuous_serving": _continuous_serving_merge_plan,
+}
+
+
 # name -> (builder, n_steps or None); n_steps marks generation graphs
 EXAMPLE_GRAPHS: dict[str, tuple] = {
     "quickstart": (_quickstart_graph, None),
@@ -241,6 +265,18 @@ def main(argv: list[str] | None = None) -> int:
         for name, (build, n_steps) in EXAMPLE_GRAPHS.items():
             if not lint_graph(build(), f"examples/{name}", facts=facts,
                               n_steps=n_steps).ok():
+                failed += 1
+        for name, build_plan in EXAMPLE_MERGE_PLANS.items():
+            graphs, sizes, starts, num_rows = build_plan()
+            diags = analysis.check_merge_plan(graphs, sizes, starts,
+                                              num_rows=num_rows)
+            errs = [d for d in diags if d.severity == analysis.ERROR]
+            verdict = "clean" if not errs else "FAILED"
+            print(f"examples/{name} (merge plan): {len(graphs)} tenants, "
+                  f"starts {starts} — {verdict}")
+            for d in diags:
+                print(f"  {d.format()}")
+            if errs:
                 failed += 1
 
     return 1 if failed else 0

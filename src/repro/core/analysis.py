@@ -81,6 +81,7 @@ __all__ = [
     "infer_shapes",
     "analyze",
     "check_merge_plan",
+    "check_page_plan",
     "lint_fusion",
     "scan_fusion_reason",
     "dead_nodes",
@@ -890,24 +891,44 @@ def lint_fusion(
 
 
 # ------------------------------------------------------------- merge plan
+def _shared_set_sites(ga, gb) -> list:
+    return sorted(
+        {
+            (n.site, n.layer, n.step)
+            for n in ga.nodes
+            if n.op == "tap_set"
+        }
+        & {
+            (n.site, n.layer, n.step)
+            for n in gb.nodes
+            if n.op == "tap_set"
+        }
+    )
+
+
 def check_merge_plan(
     graphs: list[InterventionGraph],
     sizes: list[int],
-    starts: list[int] | None = None,
+    starts: list | None = None,
     *,
     num_rows: int | None = None,
 ) -> list[Diagnostic]:
     """Statically verify a co-tenant merge plan (the row starts/sizes a
     merge would assign) BEFORE building the merged graph.
 
-    Proves: (1) every tenant's row range is in-bounds, (2) ranges are
+    A start is either an int (a contiguous span of ``size`` rows, the
+    ``dynamic_slice`` rewrite) or a sequence of row indices (an arbitrary
+    row set, the paged allocator's gather/scatter rewrite).
+
+    Proves: (1) every tenant's row set is in-bounds (and, for index-array
+    starts, duplicate-free and of the declared size), (2) row sets are
     pairwise disjoint — each request's setters are row-confined by
-    construction (``merge_graphs`` rewrites them through row-sliced
-    updates), so disjointness of the assigned ranges IS the write-write
-    safety proof; (3) reports (as notes) cross-tenant getter/setter
-    pairs on the same ``(site, layer, step)`` — safe because merged
-    getters read the PRISTINE shared value (getters fire before setters
-    at a site), but worth surfacing in a lint.
+    construction (``merge_graphs`` rewrites them through row-sliced or
+    row-scattered updates), so disjointness of the assigned sets IS the
+    write-write safety proof; (3) reports (as notes) cross-tenant
+    getter/setter pairs on the same ``(site, layer, step)`` — safe
+    because merged getters read the PRISTINE shared value (getters fire
+    before setters at a site), but worth surfacing in a lint.
     """
     diags: list[Diagnostic] = []
     if starts is None:
@@ -923,42 +944,81 @@ def check_merge_plan(
             f"{len(sizes)} sizes, {len(starts)} starts",
         ))
         return diags
-    spans = list(zip(starts, sizes))
-    for i, (lo, b) in enumerate(spans):
-        if b < 1:
-            diags.append(Diagnostic(
-                "row-bounds", ERROR,
-                f"tenant {i} has {b} rows (must be >= 1)",
-            ))
-        if lo < 0 or (num_rows is not None and lo + b > num_rows):
-            diags.append(Diagnostic(
-                "row-bounds", ERROR,
-                f"tenant {i} rows [{lo}, {lo + b}) escape the table "
-                f"(0..{num_rows})",
-            ))
-    order = sorted(range(len(spans)), key=lambda i: spans[i][0])
-    for a, b in zip(order, order[1:]):
-        lo_a, n_a = spans[a]
-        lo_b, n_b = spans[b]
-        if lo_a + n_a > lo_b:
-            sites = sorted(
-                {
-                    (n.site, n.layer, n.step)
-                    for n in graphs[a].nodes
-                    if n.op == "tap_set"
-                }
-                & {
-                    (n.site, n.layer, n.step)
-                    for n in graphs[b].nodes
-                    if n.op == "tap_set"
-                }
-            )
-            extra = f"; both write {sites}" if sites else ""
-            diags.append(Diagnostic(
-                "row-overlap", ERROR,
-                f"tenants {a} and {b} overlap: rows [{lo_a}, {lo_a + n_a})"
-                f" vs [{lo_b}, {lo_b + n_b}){extra}",
-            ))
+    indexed = any(not isinstance(s, (int, np.integer)) for s in starts)
+    if indexed:
+        # index-array path: each tenant holds an explicit row SET
+        row_sets: list[set[int]] = []
+        for i, (s, b) in enumerate(zip(starts, sizes)):
+            if isinstance(s, (int, np.integer)):
+                rows = list(range(int(s), int(s) + b))
+            else:
+                rows = [int(r) for r in np.asarray(s).reshape(-1)]
+                if len(rows) != b:
+                    diags.append(Diagnostic(
+                        "merge-plan", ERROR,
+                        f"tenant {i} declares {b} rows but its index "
+                        f"array names {len(rows)}",
+                    ))
+                if len(set(rows)) != len(rows):
+                    diags.append(Diagnostic(
+                        "row-bounds", ERROR,
+                        f"tenant {i} row set {sorted(rows)} contains "
+                        "duplicates",
+                    ))
+            if b < 1:
+                diags.append(Diagnostic(
+                    "row-bounds", ERROR,
+                    f"tenant {i} has {b} rows (must be >= 1)",
+                ))
+            bad = [
+                r for r in rows
+                if r < 0 or (num_rows is not None and r >= num_rows)
+            ]
+            if bad:
+                diags.append(Diagnostic(
+                    "row-bounds", ERROR,
+                    f"tenant {i} rows {sorted(bad)} escape the table "
+                    f"(0..{num_rows})",
+                ))
+            row_sets.append(set(rows))
+        for a in range(len(row_sets)):
+            for b in range(a + 1, len(row_sets)):
+                shared = row_sets[a] & row_sets[b]
+                if shared:
+                    sites = _shared_set_sites(graphs[a], graphs[b])
+                    extra = f"; both write {sites}" if sites else ""
+                    diags.append(Diagnostic(
+                        "row-overlap", ERROR,
+                        f"tenants {a} and {b} overlap: share rows "
+                        f"{sorted(shared)}{extra}",
+                    ))
+    else:
+        spans = list(zip(starts, sizes))
+        for i, (lo, b) in enumerate(spans):
+            if b < 1:
+                diags.append(Diagnostic(
+                    "row-bounds", ERROR,
+                    f"tenant {i} has {b} rows (must be >= 1)",
+                ))
+            if lo < 0 or (num_rows is not None and lo + b > num_rows):
+                diags.append(Diagnostic(
+                    "row-bounds", ERROR,
+                    f"tenant {i} rows [{lo}, {lo + b}) escape the table "
+                    f"(0..{num_rows})",
+                ))
+        order = sorted(range(len(spans)), key=lambda i: spans[i][0])
+        for a, b in zip(order, order[1:]):
+            lo_a, n_a = spans[a]
+            lo_b, n_b = spans[b]
+            if lo_a + n_a > lo_b:
+                sites = _shared_set_sites(graphs[a], graphs[b])
+                extra = f"; both write {sites}" if sites else ""
+                diags.append(Diagnostic(
+                    "row-overlap", ERROR,
+                    f"tenants {a} and {b} overlap: rows "
+                    f"[{lo_a}, {lo_a + n_a})"
+                    f" vs [{lo_b}, {lo_b + n_b}){extra}",
+                ))
     # cross-tenant read/write relationships (informational: isolation
     # holds by construction — merged getters read the pristine value)
     set_sites = [
@@ -982,6 +1042,63 @@ def check_merge_plan(
                     "merged getters read the pristine (pre-setter) value, "
                     "so tenant isolation holds",
                 ))
+    return diags
+
+
+# -------------------------------------------------------------- page plan
+def check_page_plan(
+    block_tables: Any,
+    rows_list: list,
+    num_pages: int,
+    *,
+    reserved_pages: tuple[int, ...] = (0, 1),
+) -> list[Diagnostic]:
+    """Statically verify a paged-cache placement: given the slot table's
+    ``block_tables`` (rows x blocks of page ids, 0 = unallocated) and the
+    row set each tenant owns, prove (1) every referenced page id is
+    in-bounds for the pool, (2) no tenant's block table references a
+    reserved page (the null/trash pages are allocator-internal), and
+    (3) no two tenants share a page — page disjointness is the paged
+    analogue of the row-disjointness proof: a tenant's decode writes land
+    only in its own pages, so disjointness IS cache isolation.
+    """
+    diags: list[Diagnostic] = []
+    bt = np.asarray(block_tables)
+    owners: dict[int, int] = {}
+    for i, rows in enumerate(rows_list):
+        rows = np.asarray(rows).reshape(-1)
+        bad_rows = [int(r) for r in rows if r < 0 or r >= bt.shape[0]]
+        if bad_rows:
+            diags.append(Diagnostic(
+                "row-bounds", ERROR,
+                f"tenant {i} rows {bad_rows} escape the block table "
+                f"(0..{bt.shape[0]})",
+            ))
+            continue
+        pages = [int(p) for p in bt[rows].reshape(-1) if p != 0]
+        oob = sorted({p for p in pages if p < 0 or p >= num_pages})
+        if oob:
+            diags.append(Diagnostic(
+                "page-bounds", ERROR,
+                f"tenant {i} references pages {oob} outside the pool "
+                f"(0..{num_pages})",
+            ))
+        res = sorted({p for p in pages if p in reserved_pages})
+        if res:
+            diags.append(Diagnostic(
+                "page-bounds", ERROR,
+                f"tenant {i} references reserved pages {res} "
+                "(null/trash pages are allocator-internal)",
+            ))
+        for p in pages:
+            if p in reserved_pages or p < 0 or p >= num_pages:
+                continue
+            if p in owners and owners[p] != i:
+                diags.append(Diagnostic(
+                    "page-overlap", ERROR,
+                    f"tenants {owners[p]} and {i} share page {p}",
+                ))
+            owners[p] = i
     return diags
 
 

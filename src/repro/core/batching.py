@@ -240,6 +240,9 @@ def merge_graphs(
         for n in g.nodes:
             n_step = None if normalize_steps else n.step
             key = (n.site, n.layer, n_step)
+            indexed = not isinstance(start, (int, np.integer))
+            if indexed:
+                rows = tuple(int(x) for x in np.asarray(start).reshape(-1))
             if n.op == "tap_get":
                 if key not in shared_get:
                     node = merged.add(
@@ -247,13 +250,19 @@ def merge_graphs(
                     )
                     shared_get[key] = node
                     current.setdefault(key, node)
-                sl = merged.add(
-                    "dynamic_slice_in_dim",
-                    Ref(shared_get[key].id),
-                    start,
-                    size,
-                    axis=BATCH_AXIS,
-                )
+                if indexed:
+                    # non-contiguous placement: gather the tenant's rows
+                    sl = merged.add(
+                        "take_rows", Ref(shared_get[key].id), rows
+                    )
+                else:
+                    sl = merged.add(
+                        "dynamic_slice_in_dim",
+                        Ref(shared_get[key].id),
+                        start,
+                        size,
+                        axis=BATCH_AXIS,
+                    )
                 L = true_length(r, n)
                 if L is not None:
                     # unpad: the request's ops see its solo shapes
@@ -269,7 +278,16 @@ def merge_graphs(
                     shared_get.setdefault(key, node)
                     current[key] = node
                 val_ref = remap(n.args[0])
-                if true_length(r, n) is not None:
+                if indexed:
+                    # non-contiguous placement: scatter back to the
+                    # tenant's rows (prefix-confined when ragged)
+                    op = ("scatter_rows_prefix"
+                          if true_length(r, n) is not None
+                          else "scatter_rows")
+                    upd = merged.add(
+                        op, Ref(current[key].id), val_ref, rows
+                    )
+                elif true_length(r, n) is not None:
                     # ragged write: confined to real rows AND real positions
                     # (the update value is solo-shaped, start = (row, 0, ...))
                     upd = merged.add(

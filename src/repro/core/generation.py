@@ -551,11 +551,38 @@ _FREE_POS = np.iinfo(np.int32).max // 2
 
 
 class SlotAllocationError(RuntimeError):
-    """No contiguous run of free slot rows is available RIGHT NOW.
+    """The slot table (rows) or page pool is genuinely exhausted RIGHT NOW.
 
     Distinct from other runtime failures on purpose: the scheduler retries
-    the admission at the next step boundary (rows free as co-tenants
-    retire), whereas any other exception fails the request's ticket."""
+    the admission at the next step boundary (rows and pages free as
+    co-tenants retire), whereas any other exception fails the request's
+    ticket.  Carries the structured deficit so a capped-out retry can name
+    exactly what was missing (pages/rows requested vs free)."""
+
+    def __init__(self, msg: str, *, rows_requested: int | None = None,
+                 rows_free: int | None = None,
+                 pages_requested: int | None = None,
+                 pages_free: int | None = None) -> None:
+        super().__init__(msg)
+        self.rows_requested = rows_requested
+        self.rows_free = rows_free
+        self.pages_requested = pages_requested
+        self.pages_free = pages_free
+
+    def deficit(self) -> str:
+        """Human-readable deficit summary for ticket diagnostics."""
+        parts = []
+        if self.pages_requested is not None:
+            parts.append(
+                f"{self.pages_requested} pages requested, "
+                f"{self.pages_free} free"
+            )
+        if self.rows_requested is not None:
+            parts.append(
+                f"{self.rows_requested} rows requested, "
+                f"{self.rows_free} free"
+            )
+        return "; ".join(parts) or str(self)
 
 
 @dataclasses.dataclass
@@ -583,10 +610,31 @@ class SlotRequest:
     base_pos: Any = None  # (size,) int32 — each row's step-0 position
     new_tokens: list = dataclasses.field(default_factory=list)
     last_logits: Any = None
+    # Non-contiguous placement: the exact rows this request owns, when the
+    # allocator had to fall back from a contiguous run (None -> contiguous
+    # [start, start+size)).  ``start`` is then rows[0] for display/stats.
+    row_list: np.ndarray | None = None
+    # Paged KV bookkeeping (host side): pages allocated per row, and each
+    # row's total lifetime page need (allocated + still-reserved).
+    pages: dict[int, list[int]] = dataclasses.field(default_factory=dict)
+    page_need: dict[int, int] = dataclasses.field(default_factory=dict)
 
     @property
     def rows(self) -> np.ndarray:
+        if self.row_list is not None:
+            return np.asarray(self.row_list)
         return np.arange(self.start, self.start + self.size)
+
+    @property
+    def placement(self) -> int | tuple[int, ...]:
+        """Merge-plan start for this request: a plain int offset when the
+        rows are one contiguous run (the historical dynamic-slice rewrite,
+        preserving compiled-program reuse), else the explicit row tuple
+        (index-array gather/scatter rewrites)."""
+        r = self.rows
+        if len(r) == 0 or np.array_equal(r, np.arange(r[0], r[0] + len(r))):
+            return int(self.start)
+        return tuple(int(x) for x in r)
 
     def done(self) -> bool:
         return self.t >= self.max_new_tokens
@@ -603,6 +651,24 @@ class SlotRequest:
             saves=self.saves,
             logs=self.logs,
         )
+
+
+def _row_list_or_none(rows) -> np.ndarray | None:
+    """None for a contiguous run (SlotRequest then derives rows from
+    start/size, keeping historical reprs and merge rewrites), else the
+    explicit row array."""
+    rows = np.asarray(rows)
+    if np.array_equal(rows, np.arange(rows[0], rows[0] + len(rows))):
+        return None
+    return rows
+
+
+def _rows_index(sr: SlotRequest):
+    """Cheapest index selecting a request's rows from a batch-axis array:
+    a slice when contiguous (no gather), else the row array."""
+    if sr.row_list is None:
+        return slice(sr.start, sr.start + sr.size)
+    return np.asarray(sr.row_list)
 
 
 class DecodeLoop:
@@ -648,6 +714,9 @@ class DecodeLoop:
         stats: Any = None,
         fuse: bool = True,
         fused_fn: Callable | None = None,
+        paged: bool = False,
+        page_size: int = 16,
+        num_pages: int | None = None,
     ) -> None:
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
@@ -687,6 +756,40 @@ class DecodeLoop:
         self.resident: list[SlotRequest] = []
         self._free = set(range(num_slots))
         self.steps_run = 0
+        # ---- paged KV pool (block-table indirection) ---------------------
+        # Families with nothing to page (Mamba2's O(1) recurrent state)
+        # silently fall back to the dense slot table; the allocator still
+        # serves non-contiguous rows either way.
+        from repro.models.paged import FIRST_PAGE
+
+        self.page_size = int(page_size)
+        self._paged = bool(paged) and hasattr(model, "paged_exclude_keys")
+        win = getattr(getattr(model, "cfg", None), "sliding_window", None)
+        self._t_ring = (min(self.max_len, int(win))
+                        if (cache_kind == "window" and win) else self.max_len)
+        self._blocks_per_row = -(-self._t_ring // self.page_size)
+        if num_pages is None:
+            # default pool: every row can hold a full-length request (the
+            # capacity win then comes purely from shorter actual requests)
+            num_pages = FIRST_PAGE + self.num_slots * self._blocks_per_row
+        self.num_pages = int(num_pages)
+        if self._paged and self.num_pages < FIRST_PAGE + 1:
+            raise ValueError(
+                f"num_pages must be >= {FIRST_PAGE + 1} "
+                "(pages 0/1 are reserved null/trash)"
+            )
+        # lowest-first free list keeps block tables dense near the pool head
+        self._free_pages: list[int] = (
+            list(range(FIRST_PAGE, self.num_pages)) if self._paged else []
+        )
+        # pages promised to residents for decode growth but not yet handed
+        # out — page-by-page growth can never fail mid-decode
+        self._reserved_unalloc = 0
+        self._bt_host = (
+            np.zeros((self.num_slots, self._blocks_per_row), np.int32)
+            if self._paged else None
+        )
+        self.frag_avoided = 0
 
     # ------------------------------------------------------------ occupancy
     @property
@@ -712,6 +815,163 @@ class DecodeLoop:
             if run == size:
                 return row - size + 1
         return None
+
+    def alloc_rows(self, size: int, exclude: set | frozenset = frozenset()
+                   ) -> list[int]:
+        """Rows for one admission: contiguous first-fit when a run exists
+        (those placements keep the historical dynamic-slice merge rewrites
+        and their compiled-program reuse), else ANY free rows — the paged
+        index-array rewrites lifted the contiguity requirement, so
+        fragmentation of the row table no longer rejects admissions."""
+        start = self.find_run(size, exclude=exclude)
+        if start is not None:
+            return list(range(start, start + size))
+        free = sorted(r for r in self._free if r not in exclude)
+        if len(free) >= size:
+            self.frag_avoided += 1
+            if self.stats is not None and hasattr(self.stats,
+                                                  "record_frag_avoided"):
+                self.stats.record_frag_avoided()
+            return free[:size]
+        raise SlotAllocationError(
+            f"slot table exhausted: {size} rows requested, "
+            f"{len(free)} free of {self.num_slots}",
+            rows_requested=size, rows_free=len(free),
+        )
+
+    # ------------------------------------------------------------- paged KV
+    @property
+    def paged(self) -> bool:
+        return self._paged
+
+    def usable_pages(self) -> int:
+        from repro.models.paged import FIRST_PAGE
+
+        return max(0, self.num_pages - FIRST_PAGE) if self._paged else 0
+
+    def pages_free(self) -> int:
+        return len(self._free_pages)
+
+    def pages_in_use(self) -> int:
+        return self.usable_pages() - len(self._free_pages)
+
+    def pages_available(self) -> int:
+        """Pages neither allocated nor reserved for resident growth."""
+        return len(self._free_pages) - self._reserved_unalloc
+
+    def page_occupancy(self) -> float:
+        u = self.usable_pages()
+        return self.pages_in_use() / u if u else 0.0
+
+    def request_page_need(self, prompt_len: int, n_new: int) -> int:
+        """Lifetime page need of one row: blocks covering every cache slot
+        the request will ever write.  Full caches write ``[0, base+N)``;
+        sliding-window rings wrap at ``t_ring``, so the frontier clamps
+        there (after the wrap, writes land in already-allocated low
+        blocks)."""
+        base = max(0, int(prompt_len) - 1)
+        extent = min(base + int(n_new), self._t_ring)
+        return min(self._blocks_per_row, -(-extent // self.page_size))
+
+    def _plan_pages(self, row_lengths_list: list, n_new_list: list[int]
+                    ) -> list[list[tuple[int, int]]]:
+        """Per-request per-row ``(need, now)`` block counts, after an
+        all-or-nothing feasibility check against unreserved free pages.
+        Nothing is committed here — allocation happens in ``_install`` and
+        is then guaranteed to succeed."""
+        plan: list[list[tuple[int, int]]] = []
+        total = 0
+        for lens, n_new in zip(row_lengths_list, n_new_list):
+            rows_plan = []
+            for L in np.asarray(lens).reshape(-1):
+                need = self.request_page_need(int(L), n_new)
+                if self.cache_kind == "window":
+                    # the ring's high blocks can be hit from step 0 (long
+                    # prompts land near the wrap point): allocate the whole
+                    # lifetime extent up front — rings are small
+                    now = need
+                else:
+                    # blocks covering the prefilled prompt plus the step-0
+                    # write; the rest is reserved and allocated page-by-page
+                    # as decode crosses block boundaries
+                    now = min(need, max(0, int(L) - 1) // self.page_size + 1)
+                rows_plan.append((need, now))
+                total += need
+            plan.append(rows_plan)
+        avail = self.pages_available()
+        if total > avail:
+            raise SlotAllocationError(
+                f"page pool exhausted: {total} pages requested, "
+                f"{avail} unreserved of {self.usable_pages()} usable",
+                pages_requested=total, pages_free=avail,
+            )
+        return plan
+
+    def _take_page(self) -> int:
+        return self._free_pages.pop(0)
+
+    def _sync_block_tables(self) -> None:
+        """Value-only device refresh of the block tables — shapes are
+        static, so no recompile is ever triggered."""
+        from repro.models.paged import with_block_tables
+
+        if self.cache is not None:
+            self.cache = with_block_tables(self.cache, self._bt_host)
+
+    def _alloc_request_pages(self, sr: SlotRequest,
+                             rows_plan: list[tuple[int, int]]) -> None:
+        """Commit one request's page plan: hand out the ``now`` blocks,
+        reserve the remainder for growth.  ``_plan_pages`` already proved
+        feasibility for the whole admission group."""
+        allocated = 0
+        for row, (need, now) in zip(sr.rows, rows_plan):
+            row = int(row)
+            sr.page_need[row] = need
+            pages = [self._take_page() for _ in range(now)]
+            sr.pages[row] = pages
+            self._bt_host[row, :] = 0
+            self._bt_host[row, :now] = pages
+            self._reserved_unalloc += need - now
+            allocated += now
+        if self.stats is not None and hasattr(self.stats,
+                                              "record_page_alloc"):
+            self.stats.record_page_alloc(
+                allocated, self.pages_in_use(), self.pages_free()
+            )
+
+    def _grow_pages(self, k: int) -> None:
+        """Before dispatching a ``k``-step window, extend every resident's
+        block table to cover the window's write frontier, drawing from its
+        admission-time reservation (so this can never fail)."""
+        if not self._paged or self.cache is None:
+            return
+        changed = False
+        grown = 0
+        for sr in self.resident:
+            base = np.asarray(sr.base_pos).reshape(-1)
+            for idx, row in enumerate(sr.rows):
+                row = int(row)
+                target = int(base[idx]) + min(sr.t + k, sr.max_new_tokens)
+                target = min(target, self._t_ring)
+                want = min(sr.page_need.get(row, 0),
+                           -(-target // self.page_size))
+                have = sr.pages.get(row)
+                if have is None:
+                    continue
+                while len(have) < want:
+                    page = self._take_page()
+                    self._reserved_unalloc -= 1
+                    self._bt_host[row, len(have)] = page
+                    have.append(page)
+                    grown += 1
+                    changed = True
+        if changed:
+            self._sync_block_tables()
+            if self.stats is not None and hasattr(self.stats,
+                                                  "record_page_alloc"):
+                self.stats.record_page_alloc(
+                    grown, self.pages_in_use(), self.pages_free()
+                )
 
     def _fixed_extra_widths(self, extras: dict) -> dict[str, int]:
         """Ragged extras the slot table preallocates at a FIXED width
@@ -792,19 +1052,26 @@ class DecodeLoop:
                 "admitted alone"
             )
 
-        # ---- allocate slot runs up front (all-or-nothing) ----------------
-        placed: list[tuple[int, int]] = []
+        # ---- allocate slot rows up front (all-or-nothing) ----------------
+        placed: list[list[int]] = []
         taken: set[int] = set()
         for _, tokens, *_ in parsed:
             size = tokens.shape[0]
-            start = self.find_run(size, exclude=taken)
-            if start is None:
-                raise SlotAllocationError(
-                    f"no contiguous run of {size} free slot rows "
-                    f"({len(self._free) - len(taken)} free of {self.num_slots})"
-                )
-            placed.append((start, size))
-            taken.update(range(start, start + size))
+            rows = self.alloc_rows(size, exclude=taken)
+            placed.append(rows)
+            taken.update(rows)
+        # paged: prove the whole group's LIFETIME page need fits the
+        # unreserved pool before any prefill work runs.  Nothing commits
+        # until _install, so an early raise leaks neither rows nor pages.
+        page_plan = None
+        if self._paged:
+            row_lens = [
+                (np.asarray(lengths) if lengths is not None
+                 else np.full((tokens.shape[0],), tokens.shape[1]))
+                for _, tokens, lengths, *_ in parsed
+            ]
+            page_plan = self._plan_pages(row_lens,
+                                         [p[4] for p in parsed])
 
         # ---- single-token prompt: empty cache, whole prompt is step 0 ----
         if widths[0] == 1:
@@ -837,14 +1104,16 @@ class DecodeLoop:
             make_cache = self._empty_cache_fn or self.model.empty_cache
             src = make_cache(self.params, extras, B, self.max_len,
                              self.cache_kind)
-            start, size = placed[0]
+            rows0 = placed[0]
             sr = SlotRequest(
-                request_id=req_id, start=start, size=size,
+                request_id=req_id, start=rows0[0], size=len(rows0),
                 max_new_tokens=N, slices=slices,
                 inputs=(inputs[0] if inputs else None),
                 base_pos=jnp.zeros((B,), jnp.int32),
+                row_list=_row_list_or_none(rows0),
             )
-            self._install(sr, src, None, tokens)
+            self._install(sr, src, None, tokens,
+                          page_plan[0] if page_plan else None)
             return [sr]
 
         # ---- pad prompts to the group max / bucket ceiling ---------------
@@ -987,15 +1256,17 @@ class DecodeLoop:
         # ---- install each request into its slots -------------------------
         out_srs = []
         src_row0 = 0
-        for i, ((graph, tokens, lengths, _, N, req_id), (start, size)) in (
+        for i, ((graph, tokens, lengths, _, N, req_id), rows_i) in (
             enumerate(zip(parsed, placed))
         ):
             row_lengths = len_arrs[i]
+            size = len(rows_i)
             sr = SlotRequest(
-                request_id=req_id, start=start, size=size,
+                request_id=req_id, start=rows_i[0], size=size,
                 max_new_tokens=N, slices=all_slices[i],
                 inputs=(inputs[i] if inputs else None),
                 base_pos=row_lengths - 1,
+                row_list=_row_list_or_none(rows_i),
             )
             if merged_saves is not None:
                 sl = pre_slices[i]
@@ -1012,30 +1283,64 @@ class DecodeLoop:
                 tok_arrs[i], (row_lengths - 1)[:, None], axis=1
             )
             self._install(sr, src, src_rows if len(parsed) > 1 else None,
-                          token0)
+                          token0, page_plan[i] if page_plan else None)
             out_srs.append(sr)
             src_row0 += size
         return out_srs
 
-    def _install(self, sr: SlotRequest, src_cache, src_rows, token0) -> None:
-        if sr.size == self.num_slots and src_rows is None:
+    def _install(self, sr: SlotRequest, src_cache, src_rows, token0,
+                 rows_plan: list[tuple[int, int]] | None = None) -> None:
+        if (not self._paged and sr.size == self.num_slots
+                and src_rows is None and sr.row_list is None):
             # whole-table admission (e.g. run_generation running solo
             # through the stepper): adopt the prefilled cache directly
-            # instead of scattering every row onto itself
+            # instead of scattering every row onto itself.  A paged loop
+            # always scatters — the pool layout is not the dense layout.
             self.cache = src_cache
         else:
             if self.cache is None:
-                self.cache = self.model.init_cache(
-                    self.num_slots, self.max_len, kind=self.cache_kind
-                )
+                if self._paged:
+                    from repro.models.paged import build_paged_cache
+
+                    self.cache = build_paged_cache(
+                        self.model, self.num_slots, self.max_len,
+                        self.cache_kind, page_size=self.page_size,
+                        num_pages=self.num_pages,
+                    )
+                if self.cache is None:
+                    self.cache = self.model.init_cache(
+                        self.num_slots, self.max_len, kind=self.cache_kind
+                    )
+            if self._paged and rows_plan is not None:
+                self._alloc_request_pages(sr, rows_plan)
+                self._check_page_invariants(sr)
+                self._sync_block_tables()
             rows = jnp.asarray(sr.rows)
             self.cache = self._write_rows_fn(self.cache, rows, src_cache,
                                              src_rows)
-        self.token = self.token.at[sr.start:sr.start + sr.size].set(token0)
+        self.token = self.token.at[jnp.asarray(sr.rows)].set(token0)
         self._free.difference_update(int(r) for r in sr.rows)
         self.resident.append(sr)
         if self.stats is not None:
             self.stats.record_admission(sr.size)
+
+    def _check_page_invariants(self, sr: SlotRequest) -> None:
+        """Prove the host block tables sound after an allocation: every
+        referenced page in-bounds and non-reserved, no page shared across
+        tenants (the static analyzer's checker doubles as the allocator's
+        runtime invariant)."""
+        from repro.core import analysis
+
+        rows_list = [list(map(int, r.rows)) for r in self.resident]
+        rows_list.append(list(map(int, sr.rows)))
+        diags = analysis.check_page_plan(self._bt_host, rows_list,
+                                         self.num_pages)
+        errs = [d for d in diags if d.severity == "error"]
+        if errs:
+            raise RuntimeError(
+                "paged allocator invariant violated: "
+                + "; ".join(d.format() for d in errs)
+            )
 
     # ----------------------------------------------------------------- step
     def step(self) -> list[SlotRequest]:
@@ -1058,11 +1363,10 @@ class DecodeLoop:
             return []
         from repro.core.batching import merge_graphs, split_results
 
+        self._grow_pages(1)
         pos_np = np.full((self.num_slots,), _FREE_POS, np.int32)
         for sr in self.resident:
-            pos_np[sr.start:sr.start + sr.size] = (
-                np.asarray(sr.base_pos) + sr.t
-            )
+            pos_np[_rows_index(sr)] = np.asarray(sr.base_pos) + sr.t
         pos = jnp.asarray(pos_np)
 
         need = [
@@ -1090,7 +1394,7 @@ class DecodeLoop:
             merged = merge_graphs(
                 [sl.graph for _, sl in need],
                 [sr.size for sr, _ in need],
-                starts=[sr.start for sr, _ in need],
+                starts=[sr.placement for sr, _ in need],
                 normalize_steps=True,
             )
             merged.graph.validate(self.schedule.order)
@@ -1140,9 +1444,9 @@ class DecodeLoop:
         ]
         retired = []
         for sr in self.resident:
-            lo, hi = sr.start, sr.start + sr.size
-            sr.new_tokens.append(self.token[lo:hi, 0])
-            sr.last_logits = logits[lo:hi]
+            idx = _rows_index(sr)
+            sr.new_tokens.append(self.token[idx, 0])
+            sr.last_logits = logits[idx]
             sr.t += 1
             if sr.done():
                 retired.append(sr)
@@ -1180,7 +1484,7 @@ class DecodeLoop:
         offenders = []
         for sr, sl in need:
             single = merge_graphs(
-                [sl.graph], [sr.size], starts=[sr.start],
+                [sl.graph], [sr.size], starts=[sr.placement],
                 normalize_steps=True,
             )
             bound = {}
@@ -1268,7 +1572,7 @@ class DecodeLoop:
             merged = merge_graphs(
                 [sls[0].graph for _, sls in need_raw],
                 [sr.size for sr, _ in need_raw],
-                starts=[sr.start for sr, _ in need_raw],
+                starts=[sr.placement for sr, _ in need_raw],
                 normalize_steps=True,
             )
             graph = merged.graph
@@ -1377,15 +1681,17 @@ class DecodeLoop:
             ])
         if k < 1:
             return self._step_eager()
+        # extend block tables to the window's write frontier BEFORE the
+        # dispatch (value-only refresh — never a recompile); an eager
+        # fallback below re-runs growth harmlessly (idempotent)
+        self._grow_pages(k)
         plan = self._plan_fused(k)
         if plan is None:
             return self._step_eager()
 
         pos_np = np.full((self.num_slots,), _FREE_POS, np.int32)
         for sr in self.resident:
-            pos_np[sr.start:sr.start + sr.size] = (
-                np.asarray(sr.base_pos) + sr.t
-            )
+            pos_np[_rows_index(sr)] = np.asarray(sr.base_pos) + sr.t
         try:
             fn = self._fused_executable(plan.graph, plan.k)
             (self_cache, self_token), ys = fn(
@@ -1405,10 +1711,10 @@ class DecodeLoop:
         # request would rebuild the per-step dispatch cost being removed)
         tok_np = np.asarray(ys["token"])  # (k, num_slots, 1)
         for sr in self.resident:
-            lo, hi = sr.start, sr.start + sr.size
+            idx = _rows_index(sr)
             for j in range(plan.k):
-                sr.new_tokens.append(tok_np[j, lo:hi, 0])
-            sr.last_logits = ys["logits"][plan.k - 1, lo:hi]
+                sr.new_tokens.append(tok_np[j, idx, 0])
+            sr.last_logits = ys["logits"][plan.k - 1, idx]
             sr.t += plan.k
         for sr, sls, wire_by_nid in plan.need:
             # saves follow the NODE across steps: slice-local save node ids
@@ -1438,6 +1744,27 @@ class DecodeLoop:
 
     def _retire(self, sr: SlotRequest) -> None:
         self.cache = self._clear_rows_fn(self.cache, jnp.asarray(sr.rows))
+        if self._paged and sr.pages:
+            # return allocated pages AND drop the unallocated remainder of
+            # the lifetime reservation (an evicted request never grew to
+            # its full extent); host block-table rows go back to the null
+            # page so retired rows read zeros until reused
+            freed = 0
+            for row, pages in sr.pages.items():
+                self._free_pages.extend(pages)
+                freed += len(pages)
+                self._reserved_unalloc -= sr.page_need.get(row, len(pages)) \
+                    - len(pages)
+                self._bt_host[row, :] = 0
+            self._free_pages.sort()
+            sr.pages = {}
+            sr.page_need = {}
+            self._sync_block_tables()
+            if self.stats is not None and hasattr(self.stats,
+                                                  "record_page_free"):
+                self.stats.record_page_free(
+                    freed, self.pages_in_use(), self.pages_free()
+                )
         self._free.update(int(r) for r in sr.rows)
         self.resident.remove(sr)
         if self.stats is not None:

@@ -154,6 +154,39 @@ def _batch_update_slice(x, upd, start):
 
 register_op("batch_update_slice", _batch_update_slice)
 
+
+# ------------------------------------------------- non-contiguous row plans
+# Paged slot allocation can place one tenant on ANY free rows, not a
+# contiguous run; the batch merger then rewrites getters/setters through
+# these gather/scatter ops instead of dynamic_slice (which only expresses
+# contiguous windows).  ``rows`` arrives as a static tuple of ints so the
+# placement is part of the graph's structural key, exactly like an int
+# ``start`` is for the contiguous rewrites.
+def _take_rows(x, rows):
+    return jnp.take(x, jnp.asarray(rows, dtype=jnp.int32), axis=0)
+
+
+def _scatter_rows(x, upd, rows):
+    upd = jnp.asarray(upd, dtype=jnp.result_type(x))
+    return x.at[jnp.asarray(rows, dtype=jnp.int32)].set(upd)
+
+
+def _scatter_rows_prefix(x, upd, rows):
+    """Ragged analogue of ``batch_update_slice`` for index-array rows:
+    write ``upd`` into ``x`` at batch rows ``rows``, position 0 on every
+    other axis, so a ragged tenant's setter touches only its real rows and
+    real positions."""
+    upd = jnp.asarray(upd, dtype=jnp.result_type(x))
+    rows = jnp.asarray(rows, dtype=jnp.int32)
+    cur = jnp.take(x, rows, axis=0)
+    cur = jax.lax.dynamic_update_slice(cur, upd, (0,) * upd.ndim)
+    return x.at[rows].set(cur)
+
+
+register_op("take_rows", _take_rows)
+register_op("scatter_rows", _scatter_rows)
+register_op("scatter_rows_prefix", _scatter_rows_prefix)
+
 # ------------------------------------------------------------------- metrics
 # Server-side metrics (the Fig. 6c win: return a scalar, not hidden states).
 register_op(

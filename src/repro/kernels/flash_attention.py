@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["flash_attention_kernel_call"]
+__all__ = ["flash_attention_kernel_call", "paged_flash_attention_kernel_call"]
 
 NEG_INF = -1e30
 # Keep in sync with repro.models.common.PAD_LIMIT: any key whose position
@@ -256,6 +256,100 @@ def flash_attention_kernel_call(
         scratch_shapes=scratch,
         interpret=interpret,
     )(q, k, v)
+    return out[:, :, :S, :]
+
+
+def _kernel_paged(bt_ref, *args, **kwargs):
+    """Paged variant: the block-table scalar-prefetch ref is consumed by
+    the INDEX MAPS (each grid step's KV block is fetched straight from its
+    page in the pool — no gather materializes the dense view); the compute
+    body is byte-for-byte ``_kernel_pos``, so page-order iteration at
+    ``bk = page_size`` accumulates in exactly the dense kernel's order."""
+    _kernel_pos(*args, **kwargs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "interpret"),
+)
+def paged_flash_attention_kernel_call(
+    q: jax.Array,             # (B, H, S, hd)
+    k_pool: jax.Array,        # (P, K, page_size, hd) — shared page pool
+    v_pool: jax.Array,        # (P, K, page_size, hd)
+    block_tables: jax.Array,  # (B, n_blocks) int32 page ids per row
+    q_pos: jax.Array,         # (B, S) int32
+    k_pos: jax.Array,         # (B, n_blocks*page_size) int32 LOGICAL
+                              # positions (PAD sentinel at unwritten slots)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention over a paged (non-contiguous) KV cache.
+
+    The block tables ride as a scalar-prefetch operand
+    (``PrefetchScalarGridSpec``): grid step ``(b, h, iq, ik)`` DMAs KV
+    block ``block_tables[b, ik]`` of the pool, walking each row's logical
+    blocks in order.  Masking is position-delivered exactly like
+    ``_kernel_pos`` — a null page's slots carry PAD sentinels in ``k_pos``
+    and are provably inert, so rows of different allocated lengths share
+    one grid.  Parity: bit-exact vs ``flash_attention_kernel_call`` on the
+    gathered dense view with ``block_k = page_size`` (same accumulation
+    order, same masks)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    B, H, S, hd = q.shape
+    P, K, ps, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    if k_pos.shape[1] != nb * ps:
+        raise ValueError(
+            f"k_pos width {k_pos.shape[1]} != n_blocks*page_size {nb * ps}"
+        )
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(block_q, S)
+    Sp = -(-S // bq) * bq
+    qp = jnp.asarray(q_pos, jnp.int32)
+    if Sp != S:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Sp - S), (0, 0)))
+        qp = jnp.pad(qp, ((0, 0), (0, Sp - S)), constant_values=PAD_LIMIT)
+    n_q = Sp // bq
+
+    kv_spec = pl.BlockSpec(
+        (1, 1, ps, hd),
+        lambda b, h, iq, ik, bt, G=G: (bt[b, ik], h // G, 0, 0),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, n_q, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda b, h, iq, ik, bt: (b, h, iq, 0)),
+            kv_spec,
+            kv_spec,
+            pl.BlockSpec((1, bq), lambda b, h, iq, ik, bt: (b, iq)),
+            pl.BlockSpec((1, ps), lambda b, h, iq, ik, bt: (b, ik)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, iq, ik, bt: (b, h, iq, 0)),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),
+            _vmem((bq,), jnp.float32),
+            _vmem((bq, hd), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _kernel_paged, scale=scale, causal=causal, window=window,
+        bq=bq, bk=ps, n_kv=nb,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, hd), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32), q, k_pool, v_pool,
+      qp, jnp.asarray(k_pos, jnp.int32))
     return out[:, :, :S, :]
 
 

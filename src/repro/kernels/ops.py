@@ -12,10 +12,14 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention_kernel_call
+from repro.kernels.flash_attention import (
+    flash_attention_kernel_call,
+    paged_flash_attention_kernel_call,
+)
 from repro.kernels.ssd_scan import ssd_scan_kernel_call
 
-__all__ = ["flash_attention", "ssd_scan", "interpret_mode"]
+__all__ = ["flash_attention", "paged_flash_attention", "ssd_scan",
+           "interpret_mode"]
 
 
 def interpret_mode() -> bool:
@@ -58,6 +62,35 @@ def flash_attention(
     out = flash_attention_kernel_call(
         q, kt, vt, qp, kp, causal=causal, window=window,
         interpret=interpret_mode(),
+    )
+    return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4)
+
+
+def paged_flash_attention(
+    qg: jax.Array,            # (B, S, K, G, hd) — grouped layout
+    k_pool: jax.Array,        # (P, page_size, K, hd) — one layer's pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, n_blocks) int32
+    q_pos: jax.Array,         # (B, S) int32
+    k_pos: jax.Array,         # (B, n_blocks*page_size) int32 logical
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    """Attention over a paged KV pool WITHOUT materializing the dense
+    view: the pallas kernel walks each row's block table and DMAs pages
+    directly (scalar-prefetch index maps).  Layout mirrors
+    :func:`flash_attention` on the query side; pools arrive in the models'
+    page layout ``(page, slot, kv_head, hd)``."""
+    B, S, K, G, hd = qg.shape
+    q = qg.transpose(0, 2, 3, 1, 4).reshape(B, K * G, S, hd)  # (B, H, S, hd)
+    kp_ = k_pool.transpose(0, 2, 1, 3)  # (P, K, ps, hd)
+    vp_ = v_pool.transpose(0, 2, 1, 3)
+    out = paged_flash_attention_kernel_call(
+        q, kp_, vp_, block_tables,
+        jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (B, S)),
+        jnp.asarray(k_pos, jnp.int32),
+        causal=causal, window=window, interpret=interpret_mode(),
     )
     return out.reshape(B, K, G, S, hd).transpose(0, 3, 1, 2, 4)
 

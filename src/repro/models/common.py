@@ -79,6 +79,38 @@ def length_mask(lengths: jax.Array, seq_len: int) -> jax.Array:
     return jnp.arange(seq_len)[None, :] < lengths[:, None]
 
 
+def ring_align_ragged(data, positions, lengths, T: int):
+    """Per-ROW ring alignment of ragged prompts into a window cache.
+
+    A uniform last-``T`` crop + roll (the ``lengths is None`` path of the
+    families' ``_assemble_cache``) would evict a SHORT row's real keys
+    that are still inside ITS window.  Instead gather per row: ring slot
+    ``s`` must hold the newest position ``p < L_r`` with ``p ≡ s (mod
+    T)`` — that is ``p = s + floor((L_r-1-s)/T)*T``, valid iff ``p >= 0``
+    (exactly the row's last ``min(L_r, T)`` positions).  Decode then
+    continues the ring bit-exactly: writing ``pos % T`` evicts precisely
+    the key that just left the row's own window.
+
+    ``data`` is a pytree of ``(A0, B, S, *tail)`` leaves; returns the
+    ``(A0, B, T, *tail)`` aligned pytree and the ``(B, T)`` kept-position
+    array (sentinel where no position maps to the slot).
+    """
+    B, S = positions.shape
+    Lr = jnp.asarray(lengths, jnp.int32)[:, None]          # (B, 1)
+    s = jnp.arange(T, dtype=jnp.int32)[None, :]            # (1, T)
+    p = s + ((Lr - 1 - s) // T) * T
+    valid = p >= 0
+    p_safe = jnp.clip(p, 0, S - 1)
+
+    def gather(a):
+        idx = p_safe.reshape((1, B, T) + (1,) * (a.ndim - 3))
+        idx = jnp.broadcast_to(idx, (a.shape[0], B, T) + a.shape[3:])
+        return jnp.take_along_axis(a, idx, axis=2)
+
+    kept = jnp.where(valid, p, PAD_POS)
+    return jax.tree.map(gather, data), kept
+
+
 def valid_positions(lengths: jax.Array | None, batch: int, seq_len: int):
     """(B, S) positions with padded slots set to the PAD sentinel.
 

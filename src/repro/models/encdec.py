@@ -35,6 +35,10 @@ class EncDecModel:
     # prefill() runs a Python decoder-layer loop — generation traces tapping
     # it must be scheduled unrolled (repro.core.generation forces this).
     scan_prefill = False
+    # cross K/V (+ source positions) are fixed-size per row — dense under
+    # paging; only self-attention K/V grow with decode
+    paged_exclude_keys = ("cross",)
+    cache_axis0_keys = ("cross_pos",)
 
     def __init__(self, cfg: ModelConfig):
         assert cfg.encoder_layers > 0
@@ -309,12 +313,12 @@ class EncDecModel:
         k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
         if kind == "window" and S > T and lengths is not None:
             # see TransformerModel._assemble_cache: a uniform column crop
-            # would evict a short row's still-in-window keys
-            raise NotImplementedError(
-                "ragged prompts with a sliding-window cache are not "
-                "supported when the padded prompt exceeds the window"
+            # would evict a short row's still-in-window keys — per-row gather
+            aligned, kept = C.ring_align_ragged(
+                {"k": k_arr, "v": v_arr}, positions, lengths, T
             )
-        if kind == "window" and S > T:
+            k_arr, v_arr = aligned["k"], aligned["v"]
+        elif kind == "window" and S > T:
             k_arr = jnp.roll(k_arr[:, :, -T:], S % T, axis=2)
             v_arr = jnp.roll(v_arr[:, :, -T:], S % T, axis=2)
             kept = jnp.roll(positions[:, -T:], S % T, axis=1)
@@ -358,17 +362,27 @@ class EncDecModel:
     def cache_write_rows(self, table, rows, src, src_rows=None):
         """Scatter prefilled rows into the slot table (continuous batching).
         ``cross_pos`` carries batch at axis 0; everything else at axis 1."""
+        from repro.models.paged import PagedKVCache, paged_write_rows
         from repro.models.transformer import scatter_kv_rows
 
+        if isinstance(table, PagedKVCache):
+            return paged_write_rows(table, rows, src, src_rows)
         return scatter_kv_rows(table, rows, src, src_rows,
                                axis0_keys=("cross_pos",))
 
     def cache_clear_rows(self, table, rows):
+        from repro.models.paged import PagedKVCache, paged_clear_rows
         from repro.models.transformer import clear_kv_rows
 
+        if isinstance(table, PagedKVCache):
+            return paged_clear_rows(table, rows)
         return clear_kv_rows(table, rows, axis0_keys=("cross_pos",))
 
     def decode_step(self, params, cache, batch, *, mode: str = "scan"):
+        from repro.models.paged import PagedKVCache, paged_decode_step
+
+        if isinstance(cache, PagedKVCache):
+            return paged_decode_step(self, params, cache, batch, mode=mode)
         cfg = self.cfg
         token, pos = batch["token"], batch["pos"]
         B = token.shape[0]

@@ -28,6 +28,10 @@ class Zamba2Model:
     # prefill() runs a Python layer loop — generation traces tapping it must
     # be scheduled unrolled (repro.core.generation forces this).
     scan_prefill = False
+    # ssm/conv state is fixed-size per row — dense under paging; only the
+    # shared-attention-block K/V grow with decode and live in the pool
+    paged_exclude_keys = ("ssm", "conv")
+    cache_axis0_keys = ()
 
     def __init__(self, cfg: ModelConfig):
         assert cfg.shared_attn_every > 0
@@ -272,12 +276,12 @@ class Zamba2Model:
         k_arr, v_arr = jnp.stack(ks), jnp.stack(vs)
         if kind == "window" and S > T and lengths is not None:
             # see TransformerModel._assemble_cache: a uniform column crop
-            # would evict a short row's still-in-window keys
-            raise NotImplementedError(
-                "ragged prompts with a sliding-window cache are not "
-                "supported when the padded prompt exceeds the window"
+            # would evict a short row's still-in-window keys — per-row gather
+            aligned, kept = C.ring_align_ragged(
+                {"k": k_arr, "v": v_arr}, positions, lengths, T
             )
-        if kind == "window" and S > T:
+            k_arr, v_arr = aligned["k"], aligned["v"]
+        elif kind == "window" and S > T:
             k_arr = jnp.roll(k_arr[:, :, -T:], S % T, axis=2)
             v_arr = jnp.roll(v_arr[:, :, -T:], S % T, axis=2)
             kept = jnp.roll(positions[:, -T:], S % T, axis=1)
@@ -305,16 +309,26 @@ class Zamba2Model:
     def cache_write_rows(self, table, rows, src, src_rows=None):
         """Scatter prefilled rows (ssm state + conv tail + shared-block KV)
         into the slot table (continuous batching); all entries are (L|G, B, …)."""
+        from repro.models.paged import PagedKVCache, paged_write_rows
         from repro.models.transformer import scatter_kv_rows
 
+        if isinstance(table, PagedKVCache):
+            return paged_write_rows(table, rows, src, src_rows)
         return scatter_kv_rows(table, rows, src, src_rows)
 
     def cache_clear_rows(self, table, rows):
+        from repro.models.paged import PagedKVCache, paged_clear_rows
         from repro.models.transformer import clear_kv_rows
 
+        if isinstance(table, PagedKVCache):
+            return paged_clear_rows(table, rows)
         return clear_kv_rows(table, rows)
 
     def decode_step(self, params, cache, batch, *, mode: str = "scan"):
+        from repro.models.paged import PagedKVCache, paged_decode_step
+
+        if isinstance(cache, PagedKVCache):
+            return paged_decode_step(self, params, cache, batch, mode=mode)
         cfg = self.cfg
         token, pos = batch["token"], batch["pos"]
         B = token.shape[0]

@@ -1,0 +1,259 @@
+"""Paged KV cache: block-table indirection over a fixed pool of pages.
+
+The contiguous slot-table cache reserves ``slot_max_len`` positions per
+row — memory scales with the WORST-case request, which caps slot count
+and therefore occupancy (the NDIF serving bottleneck; vLLM's PagedAttention
+is the canonical fix).  This module replaces per-row reservation with a
+pool of fixed-size pages:
+
+  * paged data leaves live in a pool ``(A0, num_pages, page_size, *tail)``
+    (A0 = layers or app-blocks — every per-layer leaf keeps batch at
+    axis 1 and time at axis 2, so one gather shape rule covers all
+    families);
+  * each slot row owns a block table ``(num_blocks,)`` of page ids mapping
+    logical positions ``[blk*ps, (blk+1)*ps)`` to pool pages; page 0 is
+    the NULL page (always zero, the read target of unallocated blocks)
+    and page 1 is the TRASH page (the write sink for shape-stable
+    scatters; no block table ever references it), so usable pages start
+    at 2;
+  * pages are allocated by a request's ACTUAL length and returned to the
+    pool at retirement — the allocator lives host-side in
+    :class:`repro.core.generation.DecodeLoop`; block-table updates are
+    value-only uploads (fixed shape), so paged decode never retraces.
+
+Decode strategy: gather the pool into the logical dense view, run the
+family's EXISTING dense ``decode_step`` unchanged, then absorb the one
+written token back into its page.  Bit-exactness vs the contiguous path
+holds by construction: the gathered view differs from a contiguous cache
+only at masked slots (sentinel positions → ``NEG_INF`` bias → the
+softmax contribution underflows to exactly 0.0), so logits, taps and
+saves are bitwise identical.  The pallas block-gather kernel
+(:func:`repro.kernels.flash_attention.paged_flash_attention_kernel_call`)
+is the TPU fast path that skips the materialized gather; it walks pages
+in block-table order so its accumulation order — and therefore its
+output — is bit-identical to the dense kernel on the gathered view.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import KVCache, _SENTINEL_POS, _take_rows
+
+__all__ = [
+    "PagedKVCache",
+    "NULL_PAGE",
+    "TRASH_PAGE",
+    "FIRST_PAGE",
+    "build_paged_cache",
+    "dense_view",
+    "paged_decode_step",
+    "paged_write_rows",
+    "paged_clear_rows",
+    "with_block_tables",
+]
+
+NULL_PAGE = 0   # always-zero page: read target for unallocated blocks
+TRASH_PAGE = 1  # write sink for shape-stable scatters; never referenced
+FIRST_PAGE = 2  # first allocatable page id
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Pytree paged cache.  Static (aux) fields pin the layout so jitted
+    programs key on them; array fields thread through scan carries — the
+    block table rides the fused decode carry like any other leaf."""
+
+    kind: str                    # full | window | mla (aux)
+    page_size: int               # positions per page (aux)
+    t_logical: int               # logical per-row cache length T (aux)
+    paged_keys: tuple            # data keys stored in the pool (aux)
+    axis0_keys: tuple            # dense keys with batch at axis 0 (aux)
+    pool: dict                   # paged leaves (A0, P, ps, *tail)
+    dense: dict                  # unpaged leaves, dense slot-table layout
+    block_tables: jax.Array      # (B, num_blocks) int32 page ids, 0 = null
+    positions: jax.Array         # (B, T) original position of each slot
+    length: jax.Array            # (B,) tokens written so far
+
+    @property
+    def num_pages(self) -> int:
+        return next(iter(self.pool.values())).shape[1]
+
+
+jax.tree_util.register_pytree_node(
+    PagedKVCache,
+    lambda c: (
+        (c.pool, c.dense, c.block_tables, c.positions, c.length),
+        (c.kind, c.page_size, c.t_logical, c.paged_keys, c.axis0_keys),
+    ),
+    lambda aux, xs: PagedKVCache(*aux, *xs),
+)
+
+
+def with_block_tables(pc: PagedKVCache, block_tables) -> PagedKVCache:
+    """Value-only block-table refresh (host allocator → device).  The
+    shape is fixed at construction, so this never invalidates a trace."""
+    return dataclasses.replace(
+        pc, block_tables=jnp.asarray(block_tables, jnp.int32)
+    )
+
+
+def build_paged_cache(
+    model, batch_size: int, max_len: int, kind: str,
+    page_size: int, num_pages: int,
+):
+    """An all-empty paged slot table for ``model``, or None when the
+    family has nothing to page (fixed-size recurrent state)."""
+    seed = model.init_cache(batch_size, max_len, kind=kind)
+    if not isinstance(seed, KVCache):
+        return None  # ssm-family dict cache: state is O(1) per row
+    if num_pages < FIRST_PAGE + 1:
+        raise ValueError(
+            f"paged cache needs at least {FIRST_PAGE + 1} pages "
+            f"(null + trash + 1 usable), got {num_pages}"
+        )
+    exclude = tuple(getattr(model, "paged_exclude_keys", ()))
+    axis0 = tuple(getattr(model, "cache_axis0_keys", ()))
+    T = seed.positions.shape[1]
+    num_blocks = -(-T // page_size)
+    paged_keys = tuple(sorted(
+        k for k in seed.data
+        if not any(k.startswith(p) for p in exclude)
+    ))
+    pool = {
+        k: jnp.zeros(
+            (seed.data[k].shape[0], num_pages, page_size)
+            + seed.data[k].shape[3:],
+            seed.data[k].dtype,
+        )
+        for k in paged_keys
+    }
+    dense = {k: v for k, v in seed.data.items() if k not in paged_keys}
+    return PagedKVCache(
+        seed.kind, page_size, T, paged_keys, axis0,
+        pool, dense,
+        jnp.zeros((batch_size, num_blocks), jnp.int32),
+        seed.positions, seed.length,
+    )
+
+
+def dense_view(pc: PagedKVCache) -> KVCache:
+    """Gather the pool into the logical ``(B, T, ...)`` dense view.
+
+    Unallocated blocks read the null page (zeros) and carry sentinel
+    positions, so whatever they contain is provably inert to attention."""
+    B, nb = pc.block_tables.shape
+    ps = pc.page_size
+    data = {}
+    for k in pc.paged_keys:
+        v = pc.pool[k]  # (A0, P, ps, *tail)
+        g = v[:, pc.block_tables]  # (A0, B, nb, ps, *tail)
+        g = g.reshape((v.shape[0], B, nb * ps) + v.shape[3:])
+        data[k] = g[:, :, : pc.t_logical]
+    data.update(pc.dense)
+    return KVCache(pc.kind, data, pc.positions, pc.length)
+
+
+def _decode_slot(pc: PagedKVCache, pos):
+    return pos % pc.t_logical if pc.kind == "window" else pos
+
+
+def absorb_decode(pc: PagedKVCache, new_dense: KVCache, pos) -> PagedKVCache:
+    """Fold one dense decode step back into the pool: the single written
+    token per row lands in its page; every other gathered column is
+    unchanged by construction.  Rows without a valid target (free rows at
+    sentinel positions, unallocated blocks) write to the trash page, so
+    the scatter stays shape-stable and the null page is never dirtied."""
+    B, nb = pc.block_tables.shape
+    ps = pc.page_size
+    slot = _decode_slot(pc, pos)
+    blk = jnp.clip(slot // ps, 0, nb - 1)
+    page = pc.block_tables[jnp.arange(B), blk]
+    valid = (slot >= 0) & (slot < pc.t_logical) & (page >= FIRST_PAGE)
+    page_w = jnp.where(valid, page, TRASH_PAGE)
+    off = jnp.where(valid, slot % ps, jnp.arange(B) % ps)
+    slot_r = jnp.clip(slot, 0, pc.t_logical - 1)
+    pool = dict(pc.pool)
+    for k in pc.paged_keys:
+        new_tok = new_dense.data[k][:, jnp.arange(B), slot_r]
+        pool[k] = pool[k].at[:, page_w, off].set(new_tok)
+    dense = {k: new_dense.data[k] for k in pc.dense}
+    return dataclasses.replace(
+        pc, pool=pool, dense=dense,
+        positions=new_dense.positions, length=new_dense.length,
+    )
+
+
+def paged_decode_step(model, params, pc: PagedKVCache, batch, *,
+                      mode: str = "scan"):
+    """One-token decode against a paged cache: gather → the family's
+    dense ``decode_step`` (taps, interventions and logits run UNCHANGED
+    on the dense view) → absorb the written token into its page."""
+    out, new_dense = model.decode_step(
+        params, dense_view(pc), batch, mode=mode
+    )
+    return out, absorb_decode(pc, new_dense, batch["pos"])
+
+
+def paged_write_rows(pc: PagedKVCache, rows, src: KVCache,
+                     src_rows=None) -> PagedKVCache:
+    """Admission: scatter a freshly prefilled dense cache into the rows'
+    pages.  Every block of every row is written (unallocated blocks
+    redirect to the trash page) so the scatter compiles once per
+    row-count signature regardless of how many pages a request owns —
+    and stale pool content from a prior tenant is overwritten wholesale."""
+    rows = jnp.asarray(rows)
+    B, nb = pc.block_tables.shape
+    ps = pc.page_size
+    bt_rows = pc.block_tables[rows]  # (R, nb)
+    page_w = jnp.where(bt_rows >= FIRST_PAGE, bt_rows, TRASH_PAGE)
+    pool = dict(pc.pool)
+    for k in pc.paged_keys:
+        sv = _take_rows(src.data[k], src_rows, 1)  # (A0, R, T, *tail)
+        pad = nb * ps - sv.shape[2]
+        if pad:
+            sv = jnp.pad(
+                sv, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (sv.ndim - 3)
+            )
+        blocks = sv.reshape(
+            (sv.shape[0], sv.shape[1], nb, ps) + sv.shape[3:]
+        )
+        pool[k] = pool[k].at[:, page_w].set(blocks)
+    dense = {}
+    for k, v in pc.dense.items():
+        if k in pc.axis0_keys:
+            dense[k] = v.at[rows].set(_take_rows(src.data[k], src_rows, 0))
+        else:
+            dense[k] = v.at[:, rows].set(_take_rows(src.data[k], src_rows, 1))
+    return dataclasses.replace(
+        pc, pool=pool, dense=dense,
+        positions=pc.positions.at[rows].set(
+            _take_rows(src.positions, src_rows, 0)
+        ),
+        length=pc.length.at[rows].set(
+            _take_rows(src.length, src_rows, 0)
+        ),
+    )
+
+
+def paged_clear_rows(pc: PagedKVCache, rows) -> PagedKVCache:
+    """Retire rows: sentinel positions + zero length make every slot of
+    the row masked, and the host allocator drops its block table — the
+    pages themselves are left as-is (unreachable, overwritten wholesale
+    by the next tenant that receives them)."""
+    rows = jnp.asarray(rows)
+    dense = {}
+    for k, v in pc.dense.items():
+        if k in pc.axis0_keys:
+            dense[k] = v.at[rows].set(
+                _SENTINEL_POS if v.dtype == jnp.int32 else 0
+            )
+        else:
+            dense[k] = v.at[:, rows].set(0)
+    return dataclasses.replace(
+        pc, dense=dense,
+        positions=pc.positions.at[rows].set(_SENTINEL_POS),
+        length=pc.length.at[rows].set(0),
+    )

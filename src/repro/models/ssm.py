@@ -22,6 +22,10 @@ __all__ = ["Mamba2Model"]
 
 class Mamba2Model:
     scan_prefill = True
+    # Recurrent state is O(1) per row (no KV growth), so there is nothing
+    # to page: ``build_paged_cache`` returns None for this family and the
+    # paged decode loop falls back to the dense slot table — row scatter
+    # already accepts arbitrary (non-contiguous) row arrays.
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg

@@ -58,6 +58,11 @@ class TransformerModel:
     # delivered); families whose prefill runs a Python layer loop set False
     # and generation traces force unrolled scheduling for the prefill slice.
     scan_prefill = True
+    # cache data keys with these prefixes stay DENSE under paging (fixed
+    # per-row size — cross-attention K/V never grow with decode)
+    paged_exclude_keys = ("cross",)
+    # dense cache keys whose batch axis is 0 (none for this family)
+    cache_axis0_keys = ()
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
@@ -409,6 +414,10 @@ class TransformerModel:
         self, params: dict, cache: KVCache, batch: dict, *, mode: str = "scan"
     ) -> tuple[dict, KVCache]:
         """One-token decode against the cache. batch: token (B,1), pos (B,)."""
+        from repro.models.paged import PagedKVCache, paged_decode_step
+
+        if isinstance(cache, PagedKVCache):
+            return paged_decode_step(self, params, cache, batch, mode=mode)
         cfg = self.cfg
         token, pos = batch["token"], batch["pos"]
         B = token.shape[0]
@@ -668,12 +677,9 @@ class TransformerModel:
         data = {k: v for k, v in data.items() if not k.startswith("cross")}
         if kind == "window" and S > T and lengths is not None:
             # the uniform last-T column crop would evict a SHORT row's real
-            # keys that are still inside ITS window — refuse, don't corrupt
-            raise NotImplementedError(
-                "ragged prompts with a sliding-window cache are not "
-                "supported when the padded prompt exceeds the window"
-            )
-        if kind == "window" and S > T:
+            # keys that are still inside ITS window — gather per row instead
+            data, kept = C.ring_align_ragged(data, positions, lengths, T)
+        elif kind == "window" and S > T:
             # Ring alignment: position p must live at slot p % T so decode
             # writes (slot = pos % T) evict exactly the out-of-window key.
             data = jax.tree.map(
@@ -697,14 +703,23 @@ class TransformerModel:
                    else jnp.asarray(lengths, jnp.int32))
         return KVCache(cache.kind, data, kept, written)
 
-    def cache_write_rows(self, table: KVCache, rows, src: KVCache,
-                         src_rows=None) -> KVCache:
+    def cache_write_rows(self, table, rows, src: KVCache,
+                         src_rows=None):
         """Scatter a freshly prefilled request's cache rows into the
-        slot-table cache (continuous batching; see ``scatter_kv_rows``)."""
+        slot-table cache (continuous batching; see ``scatter_kv_rows``).
+        Paged tables route through the page-granular scatter."""
+        from repro.models.paged import PagedKVCache, paged_write_rows
+
+        if isinstance(table, PagedKVCache):
+            return paged_write_rows(table, rows, src, src_rows)
         return scatter_kv_rows(table, rows, src, src_rows)
 
-    def cache_clear_rows(self, table: KVCache, rows) -> KVCache:
+    def cache_clear_rows(self, table, rows):
         """Reset retired slot rows so they can be reused with no recompile."""
+        from repro.models.paged import PagedKVCache, paged_clear_rows
+
+        if isinstance(table, PagedKVCache):
+            return paged_clear_rows(table, rows)
         return clear_kv_rows(table, rows)
 
     def empty_cache(

@@ -75,6 +75,13 @@ class EngineStats:
         self.fused_segments = 0  # fused scan dispatches
         self.fused_steps = 0     # decode steps served by those dispatches
         self.eager_steps = 0     # decode steps served per-step (non-uniform)
+        # paged KV cache (block-table indirection over a shared page pool)
+        self.page_allocs = 0     # pages handed out (admission + growth)
+        self.page_frees = 0      # pages returned at retirement
+        self.pages_in_use = 0    # gauge: pages currently allocated
+        self.pages_free = 0      # gauge: pages currently free
+        self.alloc_retries = 0   # admissions requeued on pool exhaustion
+        self.frag_events_avoided = 0  # admissions served NON-contiguously
 
     def record_group(self, n_requests: int, padded: int, real: int) -> None:
         """Scheduler hook: one parallel co-tenancy group was executed."""
@@ -115,6 +122,29 @@ class EngineStats:
         """One decode step ran the eager per-step path."""
         self.eager_steps += 1
 
+    def record_page_alloc(self, n: int, in_use: int, free: int) -> None:
+        """The paged allocator handed out ``n`` pages (admission scatter or
+        decode growth); gauges reflect the pool after the allocation."""
+        self.page_allocs += int(n)
+        self.pages_in_use = int(in_use)
+        self.pages_free = int(free)
+
+    def record_page_free(self, n: int, in_use: int, free: int) -> None:
+        """A retirement returned ``n`` pages to the pool."""
+        self.page_frees += int(n)
+        self.pages_in_use = int(in_use)
+        self.pages_free = int(free)
+
+    def record_alloc_retry(self) -> None:
+        """An admission hit pool/row exhaustion and was requeued."""
+        self.alloc_retries += 1
+
+    def record_frag_avoided(self) -> None:
+        """An admission was served by NON-contiguous rows — under the old
+        contiguous-run allocator this would have been a fragmentation
+        rejection (a requeue or a failure)."""
+        self.frag_events_avoided += 1
+
     def snapshot(self) -> dict:
         """JSON-ready view for the server's ``stats`` endpoint."""
         cells = self.padded_tokens + self.real_tokens
@@ -148,6 +178,16 @@ class EngineStats:
             "fused_segments": self.fused_segments,
             "fused_steps": self.fused_steps,
             "eager_steps": self.eager_steps,
+            "page_allocs": self.page_allocs,
+            "page_frees": self.page_frees,
+            "pages_in_use": self.pages_in_use,
+            "pages_free": self.pages_free,
+            "page_occupancy": (
+                self.pages_in_use / (self.pages_in_use + self.pages_free)
+                if (self.pages_in_use + self.pages_free) else 0.0
+            ),
+            "alloc_retries": self.alloc_retries,
+            "frag_events_avoided": self.frag_events_avoided,
         }
 
 
@@ -548,7 +588,9 @@ class InferenceEngine:
 
     # ------------------------------------------------------ continuous loop
     def start_decode_loop(
-        self, num_slots: int, max_len: int, *, cache_kind: str = "full"
+        self, num_slots: int, max_len: int, *, cache_kind: str = "full",
+        paged: bool = True, page_size: int = 16,
+        num_pages: int | None = None,
     ):
         """A persistent slot-table decode loop (continuous batching).
 
@@ -556,6 +598,13 @@ class InferenceEngine:
         resident request; admissions prefill through the cached prefill jit
         and scatter their cache rows in, retirements clear rows for reuse —
         zero decode-step retraces across the loop's lifetime.
+
+        ``paged=True`` (the serving default) backs the KV cache with a
+        shared page pool behind per-slot block tables: rows are allocated
+        by ACTUAL request length (growing page-by-page during decode), so
+        short requests no longer pin ``max_len`` worth of memory and
+        admissions never fail on row fragmentation.  Families with nothing
+        to page (Mamba2) silently keep the dense table.
         """
         from repro.core.generation import DecodeLoop
 
@@ -566,6 +615,9 @@ class InferenceEngine:
             max_len,
             mode=self.mode,
             cache_kind=cache_kind,
+            paged=paged,
+            page_size=page_size,
+            num_pages=num_pages,
             prefill_fn=lambda p, b, ml: self._prefill_jit(p, b, max_len=ml),
             decode_fn=self._decode_jit,
             empty_cache_fn=lambda p, b, bs, ml, kind: self._empty_cache_jit(

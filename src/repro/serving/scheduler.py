@@ -100,6 +100,10 @@ class Ticket:
     finish_time: float | None = None
     result: dict | None = None
     error: str | None = None
+    # admission attempts bounced by slot/page exhaustion; capped by the
+    # scheduler so a request that will never fit terminates with a
+    # structured deficit instead of requeue-spinning forever
+    alloc_retries: int = 0
 
     @property
     def response_time(self) -> float:
@@ -204,6 +208,7 @@ class CoTenantScheduler:
         max_batch_cells: int = 8192,
         num_slots: int = 8,
         slot_max_len: int = 160,
+        alloc_retry_cap: int = 100,
     ) -> None:
         """``pad_slack`` bounds the wasted padding compute per merged row:
         requests whose ragged-input lengths fall in one bucket of width
@@ -221,6 +226,9 @@ class CoTenantScheduler:
         self.max_batch_cells = max_batch_cells
         self.num_slots = num_slots
         self.slot_max_len = slot_max_len
+        # step boundaries one ticket may bounce on slot/page exhaustion
+        # before its admission fails with the allocator's deficit
+        self.alloc_retry_cap = int(alloc_retry_cap)
         self.queue: list[tuple[Request, Ticket]] = []
         self.completed: list[Ticket] = []
         self._loop = None  # lazily-started persistent DecodeLoop
@@ -503,6 +511,23 @@ class CoTenantScheduler:
                 # cannot ever fit the slot table — classic solo fallback
                 done.append(self._run_one(req, ticket))
                 continue
+            if getattr(loop, "paged", False):
+                # pages-aware never-fits: a request whose LIFETIME page
+                # need exceeds the whole pool would requeue to the retry
+                # cap and fail — serve it solo instead
+                lens = req.batch.get("lengths")
+                if lens is not None:
+                    need = sum(
+                        loop.request_page_need(int(L), req.max_new_tokens)
+                        for L in np.asarray(lens).reshape(-1)
+                    )
+                else:
+                    need = rows * loop.request_page_need(
+                        tw, req.max_new_tokens
+                    )
+                if need > loop.usable_pages():
+                    done.append(self._run_one(req, ticket))
+                    continue
             if key is None:
                 # S == 1 / unbucketable: admit alone (empty-cache init) as
                 # its OWN plan so slot allocation happens strictly in plan
@@ -594,8 +619,28 @@ class CoTenantScheduler:
                  for _, (req, _t) in plan],
                 pad_to=pad_to,
             )
-        except SlotAllocationError:
-            rest.extend(plan)  # no contiguous run — retry next boundary
+        except SlotAllocationError as e:
+            # rows/pages genuinely exhausted right now: requeue for the
+            # next step boundary (capacity frees as co-tenants retire),
+            # but CAP the retries — a ticket that keeps losing the race
+            # terminates with the allocator's structured deficit instead
+            # of spinning in the queue forever
+            stats = getattr(self.engine, "stats", None)
+            for _idx, (req, ticket) in plan:
+                ticket.alloc_retries += 1
+                if stats is not None and hasattr(stats,
+                                                 "record_alloc_retry"):
+                    stats.record_alloc_retry()
+                if ticket.alloc_retries >= self.alloc_retry_cap:
+                    ticket.start_time = t0
+                    ticket.finish_time = time.perf_counter()
+                    ticket.error = (
+                        f"admission failed after {ticket.alloc_retries} "
+                        f"allocation retries: {e.deficit()}"
+                    )
+                    done.append(ticket)
+                else:
+                    rest.append((_idx, (req, ticket)))
             return False
         except Exception as e:
             if len(plan) == 1:

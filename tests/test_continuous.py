@@ -590,6 +590,11 @@ def test_remote_generate_tracer_roundtrip():
     stats = client.stats()
     assert stats["admissions"] >= 1 and stats["retires"] >= 1
     assert 0.0 < stats["slot_occupancy"] <= 1.0
+    # the paged-pool counters ride the same wire snapshot: the serving
+    # loop is paged by default, and everything retired above
+    assert stats["page_allocs"] >= 1 and stats["page_frees"] >= 1
+    assert stats["pages_in_use"] == 0 and stats["pages_free"] >= 1
+    assert stats["alloc_retries"] == 0
 
 
 def test_remote_generate_requires_backend():

@@ -1,0 +1,602 @@
+"""Paged KV cache: block-table indirection over a shared page pool.
+
+Layers under test:
+  * models/paged.py — pool layout, dense-view gather, decode absorb,
+    paged row scatter/clear (exercised through the DecodeLoop);
+  * DecodeLoop allocator — non-contiguous row placement, lifetime page
+    reservation with page-by-page decode growth, out-of-order page reuse,
+    all-or-nothing admission with structured deficits;
+  * core/analysis — ``check_merge_plan`` over index-array starts,
+    ``check_page_plan`` page-soundness proofs;
+  * kernels — paged pallas flash attention vs the dense kernel on the
+    gathered view (bit-exact, interpret mode);
+  * scheduler — capped admission retries with a pages/rows deficit;
+  * engine — paged counters in the stats snapshot, zero steady-state
+    recompiles across varied-length paged schedules.
+
+Parity bar: a paged loop's tokens are EXACTLY a dense (contiguous) loop's
+for every family — the decode gathers pages into the logical layout and
+runs the family's unchanged dense step, and masked garbage keys saturate
+at NEG_INF exactly, so even float accumulation order is identical.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import analysis
+from repro.core.generation import DecodeLoop, SlotAllocationError
+from repro.core.graph import InterventionGraph, Ref
+from repro.models import registry as R
+from repro.models.paged import FIRST_PAGE, PagedKVCache, build_paged_cache
+from repro.serving.engine import InferenceEngine
+from repro.serving.scheduler import CoTenantScheduler, Request
+
+FAMILIES = {
+    "paper-gpt-small": "transformer",
+    "mamba2-1.3b": "ssm",
+    "zamba2-2.7b": "hybrid",
+    "seamless-m4t-large-v2": "encdec",
+}
+
+
+@pytest.fixture(scope="module", params=sorted(FAMILIES))
+def family(request):
+    arch = request.param
+    cfg = R.get_config(arch, reduced=True)
+    model = R.build_model(arch, cfg)
+    params = model.init(jax.random.key(0))
+    return arch, cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def gpt():
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _batch(cfg, rows, seq, seed):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": rng.integers(1, cfg.vocab_size,
+                                    (rows, seq)).astype(np.int32)}
+    if cfg.arch_type == "audio":
+        batch["src_embeds"] = rng.standard_normal(
+            (rows, cfg.n_source_frames, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+def _run_schedule(model, params, cfg, *, paged, page_size=8, num_pages=None,
+                  mode="unrolled"):
+    """An interleaved admit/step/retire schedule; returns tokens per id."""
+    loop = DecodeLoop(model, params, 4, 48, mode=mode, paged=paged,
+                      page_size=page_size, num_pages=num_pages)
+    a = loop.admit(InterventionGraph(), _batch(cfg, 1, 7, 1), 6,
+                   request_id="a", pad_to=10)
+    b = loop.admit(InterventionGraph(), _batch(cfg, 2, 5, 2), 3,
+                   request_id="b", pad_to=10)
+    loop.step()
+    loop.step()
+    c = loop.admit(InterventionGraph(), _batch(cfg, 1, 9, 3), 5,
+                   request_id="c", pad_to=10)
+    loop.step()  # b retires; its rows AND pages free mid-schedule
+    d = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 4), 4,
+                   request_id="d", pad_to=10)
+    loop.run_to_completion()
+    return loop, {sr.request_id: np.asarray(sr.result().tokens)
+                  for sr in (a, b, c, d)}
+
+
+# ------------------------------------------------------------------- parity
+def test_paged_matches_dense_all_families(family):
+    """The SAME interleaved schedule through a paged loop and a dense loop
+    produces exactly the same tokens for every family (the paged decode
+    gathers into the logical layout and runs the unchanged dense step)."""
+    arch, cfg, model, params = family
+    _, dense = _run_schedule(model, params, cfg, paged=False)
+    loop, paged = _run_schedule(model, params, cfg, paged=True)
+    for k in dense:
+        np.testing.assert_array_equal(paged[k], dense[k])
+    if FAMILIES[arch] == "ssm":
+        # nothing to page: the loop must have fallen back to dense rows
+        assert not loop.paged
+    else:
+        assert loop.paged
+        assert isinstance(loop.cache, PagedKVCache)
+        # everything retired -> every page is back in the pool
+        assert loop.pages_in_use() == 0
+        assert loop._reserved_unalloc == 0
+
+
+def test_paged_saves_match_dense(gpt):
+    """Intervention-graph saves ride the paged loop bit-exactly: taps see
+    the gathered dense view, so getters/setters are untouched."""
+    cfg, model, params = gpt
+
+    def probe():
+        g = InterventionGraph()
+        for s in range(2):
+            t = g.add("tap_get", site="layers.output", layer=1, step=s)
+            g.mark_saved(f"acts{s}", g.add("save", Ref(t.id)))
+        return g
+
+    outs = []
+    for paged in (False, True):
+        loop = DecodeLoop(model, params, 3, 32, paged=paged, page_size=8)
+        loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 4,
+                   request_id="rider", pad_to=8)
+        loop.step()
+        sr = loop.admit(probe(), _batch(cfg, 1, 7, 1), 3,
+                        request_id="probe", pad_to=8)
+        loop.run_to_completion()
+        outs.append(sr.result())
+    for k in outs[0].saves:
+        np.testing.assert_array_equal(np.asarray(outs[0].saves[k]),
+                                      np.asarray(outs[1].saves[k]))
+    np.testing.assert_array_equal(np.asarray(outs[0].tokens),
+                                  np.asarray(outs[1].tokens))
+
+
+# ------------------------------------------------------------ page lifecycle
+def test_page_reuse_after_out_of_order_retirement(gpt):
+    """Requests retire in a different order than they were admitted; their
+    pages return to the pool and are reused by later admissions with no
+    stale-key contamination (tokens stay bit-exact vs a dense loop)."""
+    cfg, model, params = gpt
+
+    def run(paged):
+        loop = DecodeLoop(model, params, 4, 32, paged=paged, page_size=4)
+        a = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 8,
+                       request_id="a", pad_to=8)
+        b = loop.admit(InterventionGraph(), _batch(cfg, 1, 7, 1), 2,
+                       request_id="b", pad_to=8)
+        c = loop.admit(InterventionGraph(), _batch(cfg, 1, 5, 2), 5,
+                       request_id="c", pad_to=8)
+        if paged:
+            used0 = loop.pages_in_use()
+            assert used0 > 0
+        loop.step()
+        loop.step()  # b (admitted second) retires FIRST
+        assert "b" not in {sr.request_id for sr in loop.resident}
+        if paged:
+            assert loop.pages_in_use() < used0 + 2  # b's pages came back
+        # d reuses b's freed pages while a/c still decode on theirs
+        d = loop.admit(InterventionGraph(), _batch(cfg, 1, 8, 3), 4,
+                       request_id="d", pad_to=8)
+        loop.run_to_completion()
+        if paged:
+            assert loop.pages_in_use() == 0
+            assert sorted(loop._free_pages) == list(
+                range(FIRST_PAGE, loop.num_pages))
+        return {sr.request_id: np.asarray(sr.result().tokens)
+                for sr in (a, b, c, d)}
+
+    dense, paged = run(False), run(True)
+    for k in dense:
+        np.testing.assert_array_equal(paged[k], dense[k])
+
+
+def test_growth_across_page_boundary_mid_decode(gpt):
+    """A request allocated by ACTUAL prompt length grows page-by-page as
+    decode crosses block boundaries — from its admission-time reservation,
+    so growth can never fail — and the grown pages carry the decode
+    bit-exactly."""
+    cfg, model, params = gpt
+    loop = DecodeLoop(model, params, 2, 32, paged=True, page_size=4)
+    # base_pos = 5 -> prefill covers blocks 0..1; decode reaches pos 12
+    # -> lifetime need 4 blocks, so TWO growth events must happen
+    sr = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 8,
+                    request_id="g")
+    row = int(sr.rows[0])
+    assert sr.page_need[row] == 4
+    assert len(sr.pages[row]) == 2  # only the prefill extent is allocated
+    assert loop._reserved_unalloc == 2
+    used = [loop.pages_in_use()]
+    for _ in range(8):
+        loop.step()
+    used.append(loop.pages_in_use())
+    assert not loop.resident
+    # dense reference
+    ref = DecodeLoop(model, params, 2, 32, paged=False)
+    want = ref.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 8,
+                     request_id="g")
+    ref.run_to_completion()
+    np.testing.assert_array_equal(np.asarray(sr.result().tokens),
+                                  np.asarray(want.result().tokens))
+    assert loop.pages_in_use() == 0 and loop._reserved_unalloc == 0
+
+
+def test_fused_window_growth_stays_bit_exact(gpt):
+    """run_to_completion fuses whole inter-retirement windows into single
+    lax.scan dispatches; block tables grown BEFORE each window thread
+    through the scan carry, and multi-step windows match stepping."""
+    cfg, model, params = gpt
+
+    def run(stepwise):
+        loop = DecodeLoop(model, params, 2, 32, mode="scan", paged=True,
+                          page_size=4)
+        sr = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 10,
+                        request_id="w")
+        if stepwise:
+            while loop.resident:
+                loop.step()
+        else:
+            loop.run_to_completion()
+        assert loop.fused_steps > 0
+        return np.asarray(sr.result().tokens)
+
+    np.testing.assert_array_equal(run(True), run(False))
+
+
+def test_noncontiguous_rows_admission(gpt):
+    """Row fragmentation no longer rejects admissions: with free rows
+    {0, 3} a 2-row request is served by an index-array placement and is
+    bit-exact vs a contiguous placement of the same request."""
+    cfg, model, params = gpt
+
+    def run(paged):
+        loop = DecodeLoop(model, params, 4, 32, paged=paged, page_size=8)
+        x = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 1,
+                       request_id="x", pad_to=8)
+        y = loop.admit(InterventionGraph(), _batch(cfg, 2, 7, 1), 6,
+                       request_id="y", pad_to=8)
+        z = loop.admit(InterventionGraph(), _batch(cfg, 1, 5, 2), 1,
+                       request_id="z", pad_to=8)
+        loop.step()  # x and z retire -> free rows are {0, 3}
+        assert sorted(loop._free) == [0, 3]
+        w = loop.admit(InterventionGraph(), _batch(cfg, 2, 6, 3), 4,
+                       request_id="w", pad_to=8)
+        assert w.row_list is not None and w.placement == (0, 3)
+        assert loop.frag_avoided == 1
+        loop.run_to_completion()
+        return {sr.request_id: np.asarray(sr.result().tokens)
+                for sr in (x, y, z, w)}
+
+    dense, paged = run(False), run(True)
+    for k in dense:
+        np.testing.assert_array_equal(paged[k], dense[k])
+    # contiguous reference for the fragmented request
+    ref = DecodeLoop(model, params, 4, 32)
+    want = ref.admit(InterventionGraph(), _batch(cfg, 2, 6, 3), 4,
+                     request_id="w", pad_to=8)
+    ref.run_to_completion()
+    np.testing.assert_array_equal(dense["w"], np.asarray(want.result().tokens))
+
+
+def test_noncontiguous_rows_with_step_graphs(gpt):
+    """Intervention graphs on a fragmented placement rewrite through the
+    index-array getter/setter path and stay isolated per request."""
+    cfg, model, params = gpt
+
+    def probe():
+        g = InterventionGraph()
+        t = g.add("tap_get", site="logits", step=0)
+        g.mark_saved("lg0", g.add("save", Ref(t.id)))
+        return g
+
+    def run(fragmented):
+        loop = DecodeLoop(model, params, 4, 32, paged=True, page_size=8)
+        if fragmented:
+            x = loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 1,
+                           request_id="x", pad_to=8)
+            y = loop.admit(InterventionGraph(), _batch(cfg, 2, 7, 1), 5,
+                           request_id="y", pad_to=8)
+            z = loop.admit(InterventionGraph(), _batch(cfg, 1, 5, 2), 1,
+                           request_id="z", pad_to=8)
+            loop.step()
+            assert sorted(loop._free) == [0, 3]
+        w = loop.admit(probe(), _batch(cfg, 2, 6, 3), 3, request_id="w",
+                       pad_to=8)
+        if fragmented:
+            assert w.row_list is not None
+        loop.run_to_completion()
+        return w.result()
+
+    frag, solo = run(True), run(False)
+    np.testing.assert_array_equal(np.asarray(frag.tokens),
+                                  np.asarray(solo.tokens))
+    np.testing.assert_array_equal(np.asarray(frag.saves["lg0"]),
+                                  np.asarray(solo.saves["lg0"]))
+
+
+def test_admission_failure_leaks_nothing(gpt):
+    """An admission the page pool cannot serve raises the structured
+    deficit and leaves rows, pages, and reservations untouched."""
+    cfg, model, params = gpt
+    # 6 usable pages of 8 slots; a 32-token-lifetime request needs 4
+    loop = DecodeLoop(model, params, 4, 32, paged=True, page_size=8,
+                      num_pages=FIRST_PAGE + 6)
+    a = loop.admit(InterventionGraph(), _batch(cfg, 1, 9, 0), 24,
+                   request_id="a")
+    assert loop.cache is not None
+    free_before = loop.free_rows()
+    pages_avail = loop.pages_available()
+    with pytest.raises(SlotAllocationError) as ei:
+        loop.admit(InterventionGraph(), _batch(cfg, 1, 9, 1), 24,
+                   request_id="b")
+    assert ei.value.pages_requested == 4
+    assert ei.value.pages_free == pages_avail
+    assert "pages requested" in ei.value.deficit()
+    assert loop.free_rows() == free_before
+    assert loop.pages_available() == pages_avail
+    loop.run_to_completion()
+    assert a.result().tokens.shape == (1, 24)
+
+
+# ------------------------------------------------------- ragged window rings
+def test_ragged_window_prefill_admits_and_matches_solo():
+    """Ragged prompts into a sliding-window ring used to refuse
+    (NotImplementedError); per-row ring alignment now serves them, and the
+    group admission matches solo admissions exactly — paged and dense."""
+    cfg = R.get_config("paper-gpt-small", reduced=True, sliding_window=8)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+
+    def run(paged, group):
+        loop = DecodeLoop(model, params, 4, 24, cache_kind="window",
+                          paged=paged, page_size=4)
+        if group:  # ONE merged ragged prefill (lengths differ inside it)
+            srs = loop.admit_group(
+                [(InterventionGraph(), _batch(cfg, 1, 11, 0), 4, "long"),
+                 (InterventionGraph(), _batch(cfg, 1, 6, 1), 4, "short")],
+                pad_to=12)
+        else:
+            srs = [loop.admit(InterventionGraph(), _batch(cfg, 1, 11, 0), 4,
+                              request_id="long", pad_to=12),
+                   loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 1), 4,
+                              request_id="short", pad_to=12)]
+        loop.run_to_completion()
+        return {sr.request_id: np.asarray(sr.result().tokens) for sr in srs}
+
+    solo_dense = run(False, group=False)
+    for paged in (False, True):
+        got = run(paged, group=True)
+        for k in solo_dense:
+            np.testing.assert_array_equal(got[k], solo_dense[k])
+
+
+# ------------------------------------------------------------ merge analysis
+def test_check_merge_plan_rejects_overlapping_index_plans():
+    g = InterventionGraph()
+    diags = analysis.check_merge_plan([g, g], [2, 2], starts=[(0, 2), (2, 3)])
+    errs = [d for d in diags if d.severity == "error"]
+    assert errs and any(d.code == "row-overlap" for d in errs)
+    assert any("share rows [2]" in d.message for d in errs)
+    # disjoint index plans (and mixed int/index) are clean
+    assert not analysis.check_merge_plan([g, g], [2, 2],
+                                         starts=[(0, 3), (1, 2)])
+    assert not analysis.check_merge_plan([g, g], [2, 2], starts=[0, (2, 3)])
+
+
+def test_check_merge_plan_rejects_bad_row_sets():
+    g = InterventionGraph()
+    dup = analysis.check_merge_plan([g], [2], starts=[(1, 1)])
+    assert any(d.code == "row-bounds" for d in dup)
+    oob = analysis.check_merge_plan([g], [2], starts=[(0, 9)], num_rows=4)
+    assert any(d.code == "row-bounds" for d in oob)
+    wrong = analysis.check_merge_plan([g], [3], starts=[(0, 1)])
+    assert any(d.severity == "error" for d in wrong)
+
+
+def test_check_page_plan_proves_soundness():
+    bt = np.zeros((4, 3), np.int32)
+    bt[0] = [2, 3, 0]
+    bt[1] = [4, 0, 0]
+    clean = analysis.check_page_plan(bt, [[0], [1]], num_pages=6)
+    assert not [d for d in clean if d.severity == "error"]
+    # out-of-bounds page reference
+    bt[1, 1] = 9
+    oob = analysis.check_page_plan(bt, [[0], [1]], num_pages=6)
+    assert any(d.code == "page-bounds" for d in oob)
+    bt[1, 1] = 1  # reserved trash page must never be referenced
+    rsv = analysis.check_page_plan(bt, [[0], [1]], num_pages=6)
+    assert any(d.code == "page-bounds" for d in rsv)
+    bt[1, 1] = 3  # shared with tenant 0 -> overlap
+    shared = analysis.check_page_plan(bt, [[0], [1]], num_pages=6)
+    assert any(d.code == "page-overlap" for d in shared)
+
+
+# ------------------------------------------------------------- paged kernel
+def test_paged_kernel_matches_dense_kernel_bit_exact():
+    """The scalar-prefetch paged pallas kernel equals the dense positional
+    kernel run on the gathered view with block_k = page_size — including
+    ragged rows, null pages, and sliding windows (interpret mode)."""
+    from repro.kernels.flash_attention import (
+        PAD_LIMIT,
+        flash_attention_kernel_call,
+        paged_flash_attention_kernel_call,
+    )
+
+    rng = np.random.default_rng(0)
+    B, H, K, hd, ps, nb = 3, 4, 2, 8, 4, 5
+    T = nb * ps
+    k_pool = np.zeros((2 + B * nb, K, ps, hd), np.float32)
+    v_pool = np.zeros_like(k_pool)
+    bt = np.zeros((B, nb), np.int32)
+    k_pos = np.full((B, T), PAD_LIMIT, np.int32)
+    kd = np.zeros((B, K, T, hd), np.float32)
+    vd = np.zeros_like(kd)
+    lens, page = [7, 16, 11], 2
+    for b, L in enumerate(lens):
+        for blk in range(-(-L // ps)):
+            bt[b, blk] = page
+            lo, hi = blk * ps, min(L, blk * ps + ps)
+            k_pool[page] = rng.standard_normal((K, ps, hd)).astype(np.float32)
+            v_pool[page] = rng.standard_normal((K, ps, hd)).astype(np.float32)
+            kd[b, :, lo:lo + ps] = k_pool[page]
+            vd[b, :, lo:lo + ps] = v_pool[page]
+            k_pos[b, lo:hi] = np.arange(lo, hi)
+            page += 1
+    q = rng.standard_normal((B, H, 1, hd)).astype(np.float32)
+    q_pos = np.array([[L] for L in lens], np.int32)
+
+    for window in (None, 6):
+        paged = paged_flash_attention_kernel_call(
+            jnp.asarray(q), jnp.asarray(k_pool), jnp.asarray(v_pool),
+            jnp.asarray(bt), jnp.asarray(q_pos), jnp.asarray(k_pos),
+            causal=True, window=window, interpret=True)
+        dense = flash_attention_kernel_call(
+            jnp.asarray(q), jnp.asarray(kd), jnp.asarray(vd),
+            jnp.asarray(q_pos), jnp.asarray(k_pos),
+            causal=True, window=window, block_k=ps, interpret=True)
+        np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+def test_paged_ops_wrapper_layouts():
+    """kernels.ops.paged_flash_attention round-trips the models' grouped
+    query layout and the pools' (page, slot, kv_head, hd) layout."""
+    from repro.kernels import ops
+    from repro.kernels.flash_attention import PAD_LIMIT
+
+    rng = np.random.default_rng(1)
+    B, S, K, G, hd, ps, nb = 2, 1, 2, 2, 8, 4, 3
+    P = 2 + B * nb
+    qg = rng.standard_normal((B, S, K, G, hd)).astype(np.float32)
+    k_pool = rng.standard_normal((P, ps, K, hd)).astype(np.float32)
+    v_pool = rng.standard_normal((P, ps, K, hd)).astype(np.float32)
+    bt = np.arange(2, 2 + B * nb, dtype=np.int32).reshape(B, nb)
+    k_pos = np.full((B, nb * ps), PAD_LIMIT, np.int32)
+    lens = [9, 12]
+    for b, L in enumerate(lens):
+        k_pos[b, :L] = np.arange(L)
+    q_pos = np.asarray([[L] for L in lens], np.int32)
+    out = ops.paged_flash_attention(
+        jnp.asarray(qg), jnp.asarray(k_pool), jnp.asarray(v_pool),
+        jnp.asarray(bt), jnp.asarray(q_pos), jnp.asarray(k_pos))
+    assert out.shape == (B, S, K, G, hd)
+    # reference: dense gather then ops.flash_attention
+    kd = np.stack([k_pool[bt[b]].reshape(nb * ps, K, hd) for b in range(B)])
+    vd = np.stack([v_pool[bt[b]].reshape(nb * ps, K, hd) for b in range(B)])
+    ref = ops.flash_attention(
+        jnp.asarray(qg), jnp.asarray(kd), jnp.asarray(vd),
+        q_pos=jnp.asarray(q_pos), k_pos=jnp.asarray(k_pos))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ------------------------------------------------------- engine & scheduler
+def test_zero_recompiles_paged_varied_schedule(gpt):
+    """A 10-admission varied-length schedule with mid-decode page growth
+    performs ZERO new compiles on its second run: block-table updates are
+    value-only, placements reuse traced scatter signatures."""
+    cfg, model, params = gpt
+    engine = InferenceEngine(model, params, mode="unrolled")
+
+    def run_schedule():
+        loop = engine.start_decode_loop(4, 32, page_size=4)
+        assert loop.paged
+        lens = [9, 12, 15, 10, 14, 11, 13, 9, 15, 12]
+        srs = []
+        for i, L in enumerate(lens):
+            while loop.free_rows() == 0:
+                loop.step()
+            srs.append(loop.admit(InterventionGraph(), _batch(cfg, 1, L, i),
+                                  2 + i % 5, request_id=i, pad_to=15))
+            loop.step()
+        loop.run_to_completion()
+        return srs
+
+    run_schedule()  # warmup traces
+    c0 = engine.stats.compiles
+    srs = run_schedule()
+    assert engine.stats.compiles == c0, "steady-state must not retrace"
+    assert engine.stats.page_allocs > 0 and engine.stats.page_frees > 0
+    solo = InferenceEngine(model, params, mode="unrolled")
+    res = solo.generate_interleaved(InterventionGraph(),
+                                    _batch(cfg, 1, 15, 2), 4)
+    np.testing.assert_array_equal(np.asarray(srs[2].result().tokens),
+                                  np.asarray(res.tokens))
+
+
+def test_engine_stats_gain_paged_counters(gpt):
+    cfg, model, params = gpt
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(4, 32, page_size=8)
+    loop.admit(InterventionGraph(), _batch(cfg, 1, 6, 0), 3, request_id="a")
+    loop.run_to_completion()
+    snap = engine.stats.snapshot()
+    for key in ("page_allocs", "page_frees", "pages_in_use", "pages_free",
+                "page_occupancy", "alloc_retries", "frag_events_avoided"):
+        assert key in snap
+    assert snap["page_allocs"] > 0 and snap["page_frees"] > 0
+    assert snap["pages_in_use"] == 0
+    assert snap["pages_free"] == loop.usable_pages()
+
+
+def test_scheduler_caps_admission_retries_with_deficit(gpt):
+    """A ticket that keeps bouncing on page exhaustion terminates with the
+    allocator's structured deficit instead of requeue-spinning."""
+    cfg, model, params = gpt
+    engine = InferenceEngine(model, params, mode="unrolled")
+    # cap=1: the whole inter-retirement stretch fuses into one window, so
+    # ONE admission boundary passes before the hog frees its pages — the
+    # first bounce must already be terminal to observe the cap
+    sched = CoTenantScheduler(engine, policy="continuous", pad_slack=7,
+                              num_slots=2, slot_max_len=32,
+                              alloc_retry_cap=1)
+    # pool of 6 usable pages; the resident's lifetime need is 4
+    sched._loop = engine.start_decode_loop(2, 32, page_size=4,
+                                           num_pages=FIRST_PAGE + 6)
+    # widths 7 and 9 fall in DIFFERENT length buckets (slack 7), so the
+    # two requests plan separately: the hog admits (4 pages) and the
+    # second bounces on the 2 remaining pages every boundary
+    hog = sched.submit(Request(graph=InterventionGraph(),
+                               batch=_batch(cfg, 1, 7, 0),
+                               max_new_tokens=10))
+    starving = sched.submit(Request(graph=InterventionGraph(),
+                                    batch=_batch(cfg, 1, 9, 1),
+                                    max_new_tokens=6))
+    done = sched.drain()
+    assert len(done) == 2
+    assert hog.error is None
+    assert starving.error is not None
+    assert "allocation retries" in starving.error
+    assert "pages requested" in starving.error
+    assert starving.alloc_retries == 1
+    assert engine.stats.alloc_retries >= 1
+
+
+def test_paged_pool_admits_beyond_dense_budget(gpt):
+    """The capacity claim at loop level: with a pool HALF the dense
+    footprint, short mixed-length requests still all admit concurrently —
+    the dense layout would need a full max_len row each."""
+    cfg, model, params = gpt
+    # dense 4 rows x 32 slots = 128 cells; paged pool: 8 rows, 64 cells
+    loop = DecodeLoop(model, params, 8, 32, paged=True, page_size=4,
+                      num_pages=FIRST_PAGE + 16)
+    srs = [loop.admit(InterventionGraph(), _batch(cfg, 1, 5, i), 3,
+                      request_id=i, pad_to=8) for i in range(6)]
+    assert len(loop.resident) == 6  # 6 concurrent rows on 64 cells
+    loop.run_to_completion()
+    for i, sr in enumerate(srs):
+        ref = DecodeLoop(model, params, 8, 32)
+        want = ref.admit(InterventionGraph(), _batch(cfg, 1, 5, i), 3,
+                         request_id=i, pad_to=8)
+        ref.run_to_completion()
+        np.testing.assert_array_equal(np.asarray(sr.result().tokens),
+                                      np.asarray(want.result().tokens))
+
+
+def test_build_paged_cache_families(family):
+    """Pool construction: every KV family pages its time-axis leaves and
+    keeps fixed extras dense; ssm has nothing to page."""
+    arch, cfg, model, params = family
+    pc = build_paged_cache(model, 2, 16, "full", page_size=4,
+                           num_pages=FIRST_PAGE + 8)
+    if FAMILIES[arch] == "ssm":
+        assert pc is None
+        return
+    assert isinstance(pc, PagedKVCache)
+    assert pc.block_tables.shape == (2, 4)
+    for k in pc.paged_keys:
+        assert pc.pool[k].shape[1:3] == (FIRST_PAGE + 8, 4)
+    from repro.models.paged import dense_view
+
+    dv = dense_view(pc)
+    ref = model.init_cache(2, 16, kind="full")
+    assert sorted(dv.data) == sorted(ref.data)
+    for k in dv.data:
+        assert dv.data[k].shape == ref.data[k].shape, k

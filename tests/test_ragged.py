@@ -487,18 +487,36 @@ def test_single_token_generation_request_runs_solo():
     assert t1.result["tokens"].shape == (1, 2)
 
 
-def test_ragged_window_cache_prefill_refuses():
+def test_ragged_window_cache_prefill_serves():
     """A uniform window crop would evict a short row's still-in-window
-    keys — prefill must refuse rather than decode from a corrupt cache."""
+    keys; prefill used to refuse (NotImplementedError) rather than decode
+    from a corrupt cache.  Per-row ring alignment (PR 7) crops each row by
+    ITS OWN length, so the ragged group now admits — and must decode
+    exactly like solo admissions of the same rows."""
+    from repro.core.generation import DecodeLoop
+
     cfg = R.get_config("paper-gpt-small", reduced=True, sliding_window=8)
     model = R.build_model("paper-gpt-small", cfg)
     params = model.init(jax.random.key(0))
     rng = np.random.default_rng(0)
-    toks = rng.integers(0, cfg.vocab_size, (2, 12)).astype(np.int32)
-    with pytest.raises(NotImplementedError, match="sliding-window"):
-        model.prefill(params, {"tokens": toks,
-                               "lengths": np.array([12, 5], np.int32)},
-                      mode="unrolled", kind="window", max_len=12)
+    long_toks = rng.integers(0, cfg.vocab_size, (1, 12)).astype(np.int32)
+    short_toks = rng.integers(0, cfg.vocab_size, (1, 5)).astype(np.int32)
+
+    loop = DecodeLoop(model, params, 2, 24, cache_kind="window")
+    grp = loop.admit_group(
+        [(InterventionGraph(), {"tokens": long_toks}, 3, "long"),
+         (InterventionGraph(), {"tokens": short_toks}, 3, "short")],
+        pad_to=12)
+    loop.run_to_completion()
+    got = {sr.request_id: np.asarray(sr.result().tokens) for sr in grp}
+
+    for rid, toks in (("long", long_toks), ("short", short_toks)):
+        solo = DecodeLoop(model, params, 2, 24, cache_kind="window")
+        want = solo.admit(InterventionGraph(), {"tokens": toks}, 3,
+                          request_id=rid, pad_to=12)
+        solo.run_to_completion()
+        np.testing.assert_array_equal(got[rid],
+                                      np.asarray(want.result().tokens))
 
 
 def test_merge_graphs_lengths_record_roundtrip():
