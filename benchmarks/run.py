@@ -16,6 +16,8 @@ One module per paper table/figure:
                                 vs one N-invoke trace (one merged forward)
   fused_decode               -> whole decode loop as ONE lax.scan dispatch
                                 vs eager per-step (plain + steered)
+  compiled_islands           -> log/grad/stop workloads on the fused path
+                                vs the eager islands they used to be
   kernel_bench               -> kernels/fallbacks microbench
 
 Besides the CSV on stdout, every module's rows are written to
@@ -40,6 +42,7 @@ MODULES = [
     "benchmarks.invoke_batching",
     "benchmarks.gen_decode",
     "benchmarks.fused_decode",
+    "benchmarks.compiled_islands",
     "benchmarks.kernel_bench",
 ]
 

@@ -45,12 +45,21 @@ with lm.generate(tokens, max_new_tokens=N) as tr:
     for s in tr.steps(3, 6):
         lm.layers[2].mlp.output += 25.0
     # collect the (post-intervention) logits of EVERY step; saving under
-    # one name across steps stacks them along the token axis
+    # one name across steps stacks them along the token axis.  log() taps
+    # ride the COMPILED decode too: they lower to jax.debug.callback
+    # inside the scan body instead of forcing the step eager.  Caveat:
+    # callbacks flush when the dispatch completes, so logged values arrive
+    # per fused SEGMENT, not live per token — ordering within a segment is
+    # preserved (ordered=True), but don't expect a print-as-it-decodes
+    # stream.
     for s in tr.steps():
+        tr.log(lm.logits.max())
         lm.logits.save("logits")
 
 print("steered tokens: ", tr.output_tokens[0])
 print("stacked logits: ", np.asarray(tr.result("logits")).shape)  # (B, N, V)
+print("logged max-logit per step:",
+      np.round([float(v) for _, v in tr.logs], 2))
 # Steering only steps 3..5 makes the schedule non-uniform overall — the
 # loop still fuses the three uniform stretches (0..2 / 3..5 / 6..7) and
 # the tracer marks the overall schedule:
@@ -90,3 +99,20 @@ print("engine steered: ", np.asarray(res.tokens)[0])
 print(f"fused counters:  segments={snap['fused_segments']} "
       f"fused_steps={snap['fused_steps']} eager_steps={snap['eager_steps']} "
       f"(+{engine.stats.compiles - c0} compiles on repeat)")
+
+# ----------------------------------------------- compiled island: log taps
+# A log()-instrumented generation used to be an EAGER island (the callback
+# could not live inside the scan); the harvest-mold interpreter lowers it
+# into the compiled body, so the whole stretch still fuses — the
+# islands_compiled counter records each fused segment that carried
+# log/grad/cross-layer work the old interpreter would have served eagerly.
+gl = InterventionGraph()
+for s in range(N):
+    t = gl.add("tap_get", site="logits", step=s)
+    m = gl.add("jnp.max", Ref(t.id), step=s)
+    gl.add("log", Ref(m.id), step=s)
+res_l = engine.generate_interleaved(gl, {"tokens": tokens}, N)
+snap = engine.stats.snapshot()
+print(f"logged decode:   {len(res_l.logs)} values via jax.debug.callback, "
+      f"eager_steps={snap['eager_steps']} "
+      f"islands_compiled={snap['islands_compiled']}")

@@ -5,6 +5,7 @@
     PYTHONPATH=src python scripts/lint_graph.py --steps 8 decode_trace.json
     PYTHONPATH=src python scripts/lint_graph.py --model paper-gpt-small t.json
     PYTHONPATH=src python scripts/lint_graph.py --all-examples
+    PYTHONPATH=src python scripts/lint_graph.py --all-examples --summary
 
 Positional arguments are serialized wire graphs (the ``graph_to_json``
 payload an NDIF client ships).  Without ``--model`` the lint is purely
@@ -12,11 +13,13 @@ structural — op registry, step flow, dead nodes; with ``--model NAME``
 the named architecture is built ABSTRACTLY (``jax.eval_shape`` init, no
 weights materialized) so shape/dtype inference runs too.
 
-``--all-examples`` lints the graph each ``examples/`` script builds,
-with full shape facts, and exits nonzero if any is broken.  The graphs
-are reconstructed here rather than imported (several examples execute
+``--all-examples`` lints the graph each ``examples/`` script builds
+(plus the ``benchmarks/compiled_islands.py`` island workloads), with
+full shape facts, and exits nonzero if any is broken.  The graphs are
+reconstructed here rather than imported (several examples execute
 full-size models at import time); each builder mirrors its example's
-trace body node-for-node.
+trace body node-for-node.  ``--summary`` appends one machine-readable
+JSON line tabulating FusionVerdict reasons per generation graph.
 
 Exit status: 0 all graphs clean, 1 any error diagnostic, 2 bad input.
 """
@@ -88,7 +91,9 @@ def _multi_invoke_graph() -> InterventionGraph:
 
 def _steered_generation_graph(n_steps: int = 8) -> InterventionGraph:
     # examples/steered_generation.py: steer layer-2 MLP output at decode
-    # steps 3..5 only, save every step's logits under one stacked name.
+    # steps 3..5 only, save every step's logits under one stacked name,
+    # and log() each step's max logit (lowered to jax.debug.callback
+    # inside the fused scan — no eager island).
     g = InterventionGraph()
     for s in range(3, 6):
         t = g.add("tap_get", site="layers.mlp.output", layer=2, step=s)
@@ -98,6 +103,8 @@ def _steered_generation_graph(n_steps: int = 8) -> InterventionGraph:
     for s in range(n_steps):
         o = g.add("tap_get", site="logits", step=s)
         g.mark_saved("logits", g.add("save", Ref(o.id), step=s))
+        m = g.add("jnp.max", Ref(o.id), step=s)
+        g.add("log", Ref(m.id), step=s)
     return g
 
 
@@ -128,6 +135,53 @@ def _broadcast_steering_graph() -> InterventionGraph:
     return g
 
 
+def _islands_log_graph(n_steps: int = 8) -> InterventionGraph:
+    # benchmarks/compiled_islands.py (log workload): a scalar log() tap on
+    # every decode step.  Pre-harvest this forced the whole stretch eager
+    # (FusionVerdict reason "log"); now it lowers to jax.debug.callback
+    # inside the fused scan and the verdict is clean.
+    g = InterventionGraph()
+    for s in range(n_steps):
+        t = g.add("tap_get", site="logits", step=s)
+        m = g.add("jnp.mean", Ref(t.id), step=s)
+        g.add("log", Ref(m.id), step=s)
+        g.mark_saved("logits", g.add("save", Ref(t.id), step=s))
+    return g
+
+
+def _islands_grad_graph(n_steps: int = 8) -> InterventionGraph:
+    # benchmarks/compiled_islands.py (grad workload): a backward loss on
+    # one decode step with the gradient read at an MLP site.  Pre-harvest
+    # this was an eager island (reason "grad"); now the perturbation
+    # driver differentiates the step inside the fused scan body.
+    g = InterventionGraph()
+    gg = g.add("grad_get", site="layers.mlp.output", layer=1, step=1)
+    g.mark_saved("g", g.add("save", Ref(gg.id), step=1))
+    t = g.add("tap_get", site="logits", step=1)
+    sq = g.add("mul", Ref(t.id), Ref(t.id), step=1)
+    loss = g.add("jnp.sum", Ref(sq.id), step=1)
+    g.backward_loss = loss.id
+    return g
+
+
+def _islands_cross_layer_graph() -> InterventionGraph:
+    # benchmarks/compiled_islands.py (cross-layer workload): FORWARD
+    # cross-layer flow — read layer 0, steer layer 3 with it, every decode
+    # step.  Pre-harvest scan mode rejected any cross-layer setter flow
+    # ("scan-cross-layer"); the carry-threaded env lifts the forward case
+    # (backward flow stays rejected — the value does not exist yet).
+    g = InterventionGraph()
+    src = g.add("tap_get", site="layers.output", layer=0, step=ALL_STEPS)
+    scaled = g.add("mul", Ref(src.id), 0.1, step=ALL_STEPS)
+    dst = g.add("tap_get", site="layers.output", layer=3, step=ALL_STEPS)
+    new = g.add("add", Ref(dst.id), Ref(scaled.id), step=ALL_STEPS)
+    g.add("tap_set", Ref(new.id), site="layers.output", layer=3,
+          step=ALL_STEPS)
+    o = g.add("tap_get", site="logits", step=0)
+    g.mark_saved("first", g.add("save", Ref(o.id), step=0))
+    return g
+
+
 def _continuous_serving_merge_plan():
     # examples/continuous_serving.py, the boundary after Bob retires:
     # Alice holds row 0 and Carol row 2, so the free rows {1, 3} are
@@ -152,14 +206,19 @@ EXAMPLE_MERGE_PLANS: dict[str, object] = {
 }
 
 
-# name -> (builder, n_steps or None); n_steps marks generation graphs
+# label -> (builder, n_steps or None); n_steps marks generation graphs.
+# The "islands" entries mirror benchmarks/compiled_islands.py — workloads
+# that pre-harvest forced out of the fused path (log / grad / cross-layer).
 EXAMPLE_GRAPHS: dict[str, tuple] = {
-    "quickstart": (_quickstart_graph, None),
-    "activation_patching": (_activation_patching_graph, None),
-    "multi_invoke": (_multi_invoke_graph, None),
-    "steered_generation": (_steered_generation_graph, 8),
-    "attention_steering": (_attention_steering_graph, None),
-    "broadcast_steering": (_broadcast_steering_graph, 8),
+    "examples/quickstart": (_quickstart_graph, None),
+    "examples/activation_patching": (_activation_patching_graph, None),
+    "examples/multi_invoke": (_multi_invoke_graph, None),
+    "examples/steered_generation": (_steered_generation_graph, 8),
+    "examples/attention_steering": (_attention_steering_graph, None),
+    "examples/broadcast_steering": (_broadcast_steering_graph, 8),
+    "benchmarks/islands:log": (_islands_log_graph, 8),
+    "benchmarks/islands:grad": (_islands_grad_graph, 8),
+    "benchmarks/islands:cross_layer": (_islands_cross_layer_graph, 8),
 }
 
 
@@ -239,6 +298,9 @@ def main(argv: list[str] | None = None) -> int:
                          "(built abstractly; no weights)")
     ap.add_argument("--all-examples", action="store_true",
                     help="lint the graph every examples/ script builds")
+    ap.add_argument("--summary", action="store_true",
+                    help="print a machine-readable JSON fusion-verdict "
+                         "reason table as the last line of output")
     args = ap.parse_args(argv)
 
     if not args.paths and not args.all_examples:
@@ -250,6 +312,17 @@ def main(argv: list[str] | None = None) -> int:
     if args.all_examples or args.model:
         facts = ModelFacts(args.model or "paper-gpt-small")
 
+    # label -> {reason: count} over fusion verdicts (generation graphs)
+    reason_table: dict[str, dict[str, int]] = {}
+
+    def tally(label: str, report: analysis.AnalysisReport) -> None:
+        if not report.fusion:
+            return
+        counts: dict[str, int] = {}
+        for v in report.fusion:
+            counts[v.reason] = counts.get(v.reason, 0) + 1
+        reason_table[label] = counts
+
     for path in args.paths:
         try:
             payload = json.loads(Path(path).read_text())
@@ -257,14 +330,18 @@ def main(argv: list[str] | None = None) -> int:
         except (OSError, ValueError, KeyError) as e:
             print(f"{path}: unreadable wire graph ({e})")
             return 2
-        if not lint_graph(graph, path, facts=facts if args.model else None,
-                          n_steps=args.steps).ok():
+        report = lint_graph(graph, path, facts=facts if args.model else None,
+                            n_steps=args.steps)
+        tally(path, report)
+        if not report.ok():
             failed += 1
 
     if args.all_examples:
-        for name, (build, n_steps) in EXAMPLE_GRAPHS.items():
-            if not lint_graph(build(), f"examples/{name}", facts=facts,
-                              n_steps=n_steps).ok():
+        for label, (build, n_steps) in EXAMPLE_GRAPHS.items():
+            report = lint_graph(build(), label, facts=facts,
+                                n_steps=n_steps)
+            tally(label, report)
+            if not report.ok():
                 failed += 1
         for name, build_plan in EXAMPLE_MERGE_PLANS.items():
             graphs, sizes, starts, num_rows = build_plan()
@@ -278,6 +355,17 @@ def main(argv: list[str] | None = None) -> int:
                 print(f"  {d.format()}")
             if errs:
                 failed += 1
+
+    if args.summary:
+        # one JSON object, last line: per-graph fusion-verdict reason
+        # counts plus the aggregate.  Drive-to-zero metric for the
+        # harvest-mold interpreter: "log"/"grad" must never appear.
+        total: dict[str, int] = {}
+        for counts in reason_table.values():
+            for r, c in counts.items():
+                total[r] = total.get(r, 0) + c
+        print(json.dumps({"graphs": reason_table, "total": total},
+                         sort_keys=True))
 
     return 1 if failed else 0
 

@@ -24,10 +24,11 @@ over the graph IR that runs **zero model forwards**:
     relationships on the same ``(site, layer, step)`` — "merge and hope"
     becomes a checked merge plan.
   * :func:`lint_fusion` / :func:`scan_fusion_reason` — fusion-eligibility
-    lints with machine-readable reasons (``log``, ``grad``,
-    ``cross-step-flow``, ``non-uniform``, ``scan-cross-layer``), so the
+    lints with machine-readable reasons (``cross-step-flow``,
+    ``non-uniform``, ``scan-cross-layer`` for backward flow only), so the
     fused planner consults verdicts instead of burning failed XLA traces
-    into failure keys.
+    into failure keys.  ``log``/``grad``/forward-cross-layer graphs now
+    lint ``ok`` — the harvest-style interpreter compiles them.
   * :func:`dead_nodes` / :func:`eliminate_dead` / :func:`infer_stop_site`
     — dead-node elimination and stop inference as analysis facts.
 
@@ -147,7 +148,9 @@ class FusionVerdict:
 
     step: int
     fusable: bool
-    reason: str  # ok|empty|log|grad|cross-step-flow|non-uniform|scan-cross-layer
+    # ok|empty|cross-step-flow|non-uniform|scan-cross-layer (backward flow);
+    # log/grad/forward-cross-layer slices are "ok" — they compile
+    reason: str
     detail: str = ""
 
 
@@ -774,14 +777,12 @@ def eliminate_dead(
 def infer_stop_site(graph: InterventionGraph, schedule: Any) -> int | None:
     """``last_referenced_site`` as an analysis fact: index into the site
     order past which the model forward cannot affect the graph, or None
-    when the trace cannot be truncated (``.grad`` needs the full forward
-    and backward)."""
+    when nothing is tapped.  ``.grad`` graphs truncate too — the
+    perturbation driver differentiates the truncated forward, and every
+    site the loss (and therefore the backward) can read is counted."""
     from repro.core.interleave import last_referenced_site
 
-    try:
-        idx = last_referenced_site(graph, schedule)
-    except GraphValidationError:
-        return None
+    idx = last_referenced_site(graph, schedule)
     return None if idx == PRE_SITE else int(idx)
 
 
@@ -793,15 +794,18 @@ def scan_fusion_reason(
 
     Mirrors the rejections ``make_step_callable`` / ``Interleaver`` raise
     at trace time — consulted by the fused planner so an ineligible graph
-    never pays a failed XLA trace."""
-    for n in graph.nodes:
-        if n.op == "log":
-            return "log"
-        if n.op == "grad_get":
-            return "grad"
+    never pays a failed XLA trace.  ``log`` and ``grad`` graphs compile
+    (``jax.debug.callback`` / the in-trace perturbation driver), and
+    FORWARD cross-layer flow threads through the scan carry — only
+    backward flow (a setter consuming a later layer's getter) remains
+    impossible, because the value does not exist yet at the setter's
+    site."""
     scan_set = set(getattr(schedule, "scan_sites", ()) or ())
     if not scan_set:
         return None
+    site_index = {
+        key: i for i, key in enumerate(getattr(schedule, "order", ()) or ())
+    }
     by_id = {n.id: n for n in graph.nodes}
     getters = {
         n.id: n
@@ -820,7 +824,10 @@ def scan_fusion_reason(
             seen.add(nid)
             g = getters.get(nid)
             if g is not None and g.layer != s.layer:
-                return "scan-cross-layer"
+                gi = site_index.get((g.site, g.layer))
+                si = site_index.get((s.site, s.layer))
+                if gi is None or si is None or gi > si:
+                    return "scan-cross-layer"
             stack.extend(r.node_id for r in by_id[nid].refs())
     return None
 
@@ -843,21 +850,6 @@ def lint_fusion(
             verdicts.append(FusionVerdict(s, True, "empty"))
             fps.append(_EMPTY_FP)
             continue
-        ops = {n.op for n in sl.graph.nodes}
-        if "log" in ops:
-            ids = [n.id for n in sl.graph.nodes if n.op == "log"]
-            verdicts.append(FusionVerdict(
-                s, False, "log",
-                f"log nodes {ids} record host-side",
-            ))
-            fps.append(None)
-            continue
-        if "grad_get" in ops:
-            verdicts.append(FusionVerdict(
-                s, False, "grad", ".grad needs the perturbation driver",
-            ))
-            fps.append(None)
-            continue
         if sl.exports:
             verdicts.append(FusionVerdict(
                 s, False, "cross-step-flow",
@@ -870,8 +862,8 @@ def lint_fusion(
             if reason == "scan-cross-layer":
                 verdicts.append(FusionVerdict(
                     s, False, reason,
-                    "cross-layer setter data flow cannot compile in "
-                    "scan mode",
+                    "backward cross-layer setter data flow cannot compile "
+                    "in scan mode (the value does not exist yet)",
                 ))
                 fps.append(None)
                 continue

@@ -150,12 +150,16 @@ def merge_graphs(
     if starts is not None and len(starts) != len(graphs):
         raise ValueError("one row start per graph required")
     for g in graphs:
+        if (any(n.op == "grad_get" for n in g.nodes)
+                and g.backward_loss is None):
+            # Each grad graph must bring its own loss: the merged loss is
+            # the SUM of per-request losses, and a request without one
+            # would silently differentiate a co-tenant's objective.
+            raise ValueError(
+                "graph uses .grad but declares no backward loss; "
+                "cannot batch-merge"
+            )
         for n in g.nodes:
-            if n.op == "grad_get":
-                raise ValueError(
-                    "graphs using .grad cannot be batch-merged; "
-                    "schedule them sequentially"
-                )
             if (n.op == "tap_set" and n.step == ALL_STEPS
                     and not normalize_steps):
                 # A merged setter is a read-modify-write, and ALL_STEPS
@@ -216,6 +220,11 @@ def merge_graphs(
     # alias (None for single-forward graphs).
     shared_get: dict[tuple[str | None, int | None, int | None], Node] = {}
     current: dict[tuple[str | None, int | None, int | None], Node] = {}
+    # Per (site, layer, step): the shared gradient read.  The merged loss
+    # sums per-request losses, and each loss is confined to its own rows,
+    # so slicing a tenant's rows out of the batched gradient recovers its
+    # solo gradient exactly.
+    shared_grad: dict[tuple[str | None, int | None, int | None], Node] = {}
 
     if starts is None:
         starts = []
@@ -310,6 +319,29 @@ def merge_graphs(
                 )
                 current[key] = upd
                 idmap[n.id] = upd.id
+            elif n.op == "grad_get":
+                if key not in shared_grad:
+                    shared_grad[key] = merged.add(
+                        "grad_get", site=n.site, layer=n.layer, step=n_step
+                    )
+                if indexed:
+                    sl = merged.add(
+                        "take_rows", Ref(shared_grad[key].id), rows
+                    )
+                else:
+                    sl = merged.add(
+                        "dynamic_slice_in_dim",
+                        Ref(shared_grad[key].id),
+                        start,
+                        size,
+                        axis=BATCH_AXIS,
+                    )
+                L = true_length(r, n)
+                if L is not None:
+                    sl = merged.add(
+                        "dynamic_slice_in_dim", Ref(sl.id), 0, L, axis=SEQ_AXIS
+                    )
+                idmap[n.id] = sl.id
             elif n.op == "input":
                 node = merged.add("input", f"{prefix}/{n.args[0]}")
                 idmap[n.id] = node.id
@@ -327,6 +359,15 @@ def merge_graphs(
 
         for name, nid in g.saves.items():
             merged.saves[f"{prefix}/{name}"] = idmap[nid]
+        if g.backward_loss is not None:
+            loss_id = idmap[g.backward_loss]
+            if merged.backward_loss is None:
+                merged.backward_loss = loss_id
+            else:
+                total = merged.add(
+                    "add", Ref(merged.backward_loss), Ref(loss_id)
+                )
+                merged.backward_loss = total.id
         node_ranges.append((range_start, len(merged.nodes)))
 
     return MergedBatch(

@@ -209,6 +209,11 @@ def slice_steps(
             if nid in idmap:
                 sub.saves[name] = idmap[nid]
 
+        # a backward loss landing in this slice makes it a grad slice: the
+        # perturbation driver differentiates just this step's forward
+        if graph.backward_loss is not None and graph.backward_loss in idmap:
+            sub.backward_loss = idmap[graph.backward_loss]
+
         slices[step] = StepSlice(
             step=step, graph=sub, imports=imports, exports=exports
         )
@@ -230,16 +235,15 @@ def _slice_fingerprint(sl: StepSlice | None) -> Any | None:
     Two slices with equal fingerprints execute the same program — one
     compiled step body can serve both, with constant values threaded in as
     runtime arguments (equal-valued raw array args are folded into the
-    fingerprint, so a mismatch there forces separate steps).  Returns
-    ``None`` for slices the fused body cannot host at all (``log`` records
-    traced values host-side; ``.grad`` needs the perturbation driver).
+    fingerprint, so a mismatch there forces separate steps).  ``log`` and
+    ``grad_get`` slices fingerprint like any other since the harvest-mold
+    interpreter lowers both into the compiled body (``jax.debug.callback``
+    / the in-trace perturbation driver).
     """
     if sl is None or sl.is_empty():
         return _EMPTY_FP
     nodes = []
     for n in sl.graph.nodes:
-        if n.op in ("log", "grad_get"):
-            return None
         nodes.append(node_fingerprint(n, abstract_constants=True))
     return (
         tuple(nodes),
@@ -356,6 +360,13 @@ class _FusedPlan:
     consts: dict[int, Any]      # constant node id -> shared value
     step_consts: dict[int, Any]  # constant node id -> (k, ...) stack
     inputs: dict[str, Any]
+    # per-need [lo, hi) merged node-id ranges: log entries drained from the
+    # compiled body carry merged ids and route back by segment, exactly
+    # like the eager path's MergedBatch.owner_of
+    node_ranges: list = dataclasses.field(default_factory=list)
+    # the merged graph carries ops the pre-harvest loop ran eagerly
+    # (log / grad_get / cross-layer scan flow) — a compiled island
+    island: bool = False
 
 
 @dataclasses.dataclass
@@ -748,6 +759,10 @@ class DecodeLoop:
         self.fused_segments = 0
         self.fused_steps = 0
         self.eager_steps = 0
+        # Fused segments whose merged graph carries ops the pre-harvest
+        # loop HAD to run eagerly (log / grad / cross-layer scan flow) —
+        # each one is an island that now compiles.
+        self.islands_compiled = 0
         # The slot table is allocated lazily: a whole-table admission (the
         # run_generation solo path) adopts the prefilled cache directly and
         # never pays for a throwaway zero table.
@@ -1547,7 +1562,9 @@ class DecodeLoop:
     def _plan_fused(self, k: int) -> _FusedPlan | None:
         """Build the fused segment for the next ``k`` steps, or None when
         the eager per-step path must serve them (non-uniform slices,
-        cross-step env flow, log nodes, or a previously failed compile)."""
+        cross-step env flow, or a previously failed compile).  Log, grad,
+        and forward cross-layer graphs plan like any other — the harvest
+        interpreter lowers them into the compiled body."""
         from repro.core.batching import merge_graphs
         from repro.core.serialize import structural_key
 
@@ -1637,9 +1654,18 @@ class DecodeLoop:
                 {nid: f"{prefix}/{name}"
                  for name, nid in tmpl.graph.saves.items()},
             ))
+        island = any(n.op in ("log", "grad_get") for n in graph.nodes)
+        if not island and self.mode == "scan" and graph.nodes:
+            from repro.core.interleave import Interleaver
+
+            island = bool(
+                Interleaver(graph, self.schedule, mode="scan").cross_getters
+            )
         return _FusedPlan(
             key=key, graph=graph, k=k, need=need,
             consts=consts, step_consts=step_consts, inputs=inputs,
+            node_ranges=list(merged.node_ranges or ()) if merged else [],
+            island=island,
         )
 
     def _fused_executable(self, graph: InterventionGraph, k: int) -> Callable:
@@ -1666,9 +1692,12 @@ class DecodeLoop:
         steps 3..5 of an otherwise-plain trace carrying a setter fuse as
         their own segment, and a single non-uniform step runs as a
         length-1 window of the same compiled machinery (keeping numerics
-        independent of how co-tenancy split the loop).  Graphs the scan
-        body cannot host — ``log`` nodes, a failed compile — fall back to
-        ONE eager per-step execution, after which fusion is retried.
+        independent of how co-tenancy split the loop).  ``log`` graphs
+        fuse too: the compiled body emits through ``jax.debug.callback``
+        into :data:`repro.core.interleave.LOG_SINK`, drained here after
+        the dispatch and attributed per-request by merged node-id segment.
+        Only graphs that fail to compile fall back to ONE eager per-step
+        execution, after which fusion is retried.
         """
         if not self.resident:
             return []
@@ -1692,6 +1721,13 @@ class DecodeLoop:
         pos_np = np.full((self.num_slots,), _FREE_POS, np.int32)
         for sr in self.resident:
             pos_np[_rows_index(sr)] = np.asarray(sr.base_pos) + sr.t
+        has_log = any(n.op == "log" for n in plan.graph.nodes)
+        if has_log:
+            from repro.core.interleave import LOG_SINK
+
+            # entries from an earlier failed dispatch must not be
+            # attributed to this window
+            LOG_SINK.drain()
         try:
             fn = self._fused_executable(plan.graph, plan.k)
             (self_cache, self_token), ys = fn(
@@ -1710,6 +1746,18 @@ class DecodeLoop:
         # one host transfer for the whole token stack (k device slices per
         # request would rebuild the per-step dispatch cost being removed)
         tok_np = np.asarray(ys["token"])  # (k, num_slots, 1)
+        if has_log:
+            from repro.core.interleave import LOG_SINK
+
+            # the token transfer above synced the dispatch; drain() adds an
+            # effects barrier so every callback has landed.  Entries carry
+            # MERGED node ids — route each to its owning request's segment
+            # (a request never sees a co-tenant's logged values).
+            for nid, val in LOG_SINK.drain():
+                for i, (lo, hi) in enumerate(plan.node_ranges):
+                    if lo <= nid < hi:
+                        plan.need[i][0].logs.append((nid, val))
+                        break
         for sr in self.resident:
             idx = _rows_index(sr)
             for j in range(plan.k):
@@ -1731,12 +1779,16 @@ class DecodeLoop:
         self.steps_run += plan.k
         self.fused_segments += 1
         self.fused_steps += plan.k
+        if plan.island:
+            self.islands_compiled += 1
         if self.stats is not None:
             busy = self.num_slots - len(self._free)
             for _ in range(plan.k):
                 self.stats.record_slot_step(busy, self.num_slots)
             if hasattr(self.stats, "record_fused_segment"):
                 self.stats.record_fused_segment(plan.k)
+            if plan.island and hasattr(self.stats, "record_islands_compiled"):
+                self.stats.record_islands_compiled()
         retired = [sr for sr in self.resident if sr.done()]
         for sr in retired:
             self._retire(sr)

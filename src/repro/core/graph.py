@@ -374,11 +374,7 @@ def assign_steps(graph: InterventionGraph, n_steps: int) -> dict[int, int]:
         if n.op in ("constant", "input"):
             ready[n.id] = PRE_STEP
             continue
-        if n.op == "grad_get":
-            raise GraphValidationError(
-                ".grad is not supported inside a generation trace"
-            )
-        if n.op in ("tap_get", "tap_set"):
+        if n.op in ("tap_get", "tap_set", "grad_get"):
             if n.step is None:
                 raise GraphValidationError(
                     f"node %{n.id} taps ({n.site!r}, layer={n.layer}) with "
@@ -402,7 +398,10 @@ def assign_steps(graph: InterventionGraph, n_steps: int) -> dict[int, int]:
                 "constants/inputs"
             )
         avail = ALL_STEPS if broadcast else max(concrete, default=PRE_STEP)
-        if n.op == "tap_get":
+        if n.op in ("tap_get", "grad_get"):
+            # grad_get places like a getter: the gradient materializes on
+            # the same execution the loss (validated by the interleaver to
+            # sit in the same slice) is computed on.
             ready[n.id] = n.step
         elif n.op == "tap_set":
             target = n.step

@@ -21,14 +21,33 @@ graph is sliced into one sub-graph per model execution (prefill / each
 decode step) and every slice runs through :func:`run_interleaved`, so site
 scheduling, scan mode, and setter validation apply per step — see
 :mod:`repro.core.generation`.
+
+The interpreter is *final-style* in the harvest mold (oryx's ``sow``/
+``reap``): every graph feature lowers into the traced body instead of
+escaping to the host, so there are no eager islands left —
+
+* ``log`` nodes emit through ``jax.debug.callback`` into a host-side
+  :class:`LogSink` (the value stays in the compiled program; only the
+  flush crosses to the host);
+* ``tracer.stop()`` raises :class:`EarlyStop` *at trace time*, so a jitted
+  caller gets a program that is both truncated and compiled;
+* ``.grad`` runs the perturbation driver inside the traced step body —
+  state threads through function arguments and the scan carry, never
+  through Python-side env mutation — so gradients ride ``lax.scan``;
+* scan-mode cross-layer data flow threads the intervention env through the
+  scan carry (``taps.scan_env_init``/``scan_env_provide``/
+  ``scan_env_update``), lifting the same-iteration setter restriction for
+  forward flow.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import taps
 from repro.core.graph import (
@@ -49,6 +68,8 @@ __all__ = [
     "make_step_callable",
     "EarlyStop",
     "last_referenced_site",
+    "LogSink",
+    "LOG_SINK",
 ]
 
 
@@ -56,7 +77,45 @@ class EarlyStop(Exception):
     """Raised by the state to abandon model execution after the last site an
     intervention graph references (``tracer.stop()``).  Caught by
     :func:`run_interleaved`; saves are assembled from the partial execution.
+
+    The raise happens at *trace time*, so a jitted caller that catches it
+    inside its traced function lowers the partial trace: the resulting XLA
+    program is simultaneously truncated and compiled.
     """
+
+
+class LogSink:
+    """Host-side sink for ``log()`` values emitted from compiled code.
+
+    A ``log`` node inside a compiled body lowers to ``jax.debug.callback``
+    targeting this sink, so log-carrying graphs fuse instead of forcing the
+    eager per-step path.  The callback appends ``(node_id, value)`` from the
+    runtime's host-callback thread; :meth:`drain` runs
+    ``jax.effects_barrier()`` so every dispatched callback has landed before
+    entries are handed back.
+
+    Ordering caveat: entries arrive per *dispatch* — one fused scan segment
+    flushes all of its per-step callbacks together when drained, not one
+    Python line at a time.  Entries keep the merged graph's node ids, so
+    per-request attribution maps them through
+    ``MergedBatch.node_ranges``/``owner_of``.
+    """
+
+    def __init__(self) -> None:
+        self.entries: list[tuple[int, Any]] = []
+
+    def emit(self, node_id: int, value: Any) -> None:
+        self.entries.append((int(node_id), np.asarray(value)))
+
+    def drain(self) -> list[tuple[int, Any]]:
+        jax.effects_barrier()
+        out, self.entries = self.entries, []
+        return out
+
+
+#: Default sink used by :func:`make_step_callable` for graphs with ``log``
+#: nodes when the caller does not supply its own ``log_cb``.
+LOG_SINK = LogSink()
 
 
 @dataclasses.dataclass
@@ -131,9 +190,12 @@ class Interleaver:
         # Scan mode: compute the transitive dependency closure of in-scan
         # setters (those nodes execute inside the scan body); everything else
         # that depends on in-scan getters executes post-scan from collected
-        # stacks.  Validate the same-iteration rule.
+        # stacks.  Cross-layer *forward* flow (getter fires before the
+        # consuming setter) threads through the scan carry; backward flow is
+        # rejected.
         self.scan_exec: dict[str, list[Node]] = {}
         self.collect_sites: tuple[str, ...] = ()
+        self.cross_getters: list[Node] = []
         if mode == "scan":
             self._plan_scan(scan_set)
 
@@ -173,17 +235,28 @@ class Interleaver:
             return out
 
         body_exec_ids: set[int] = set()
+        cross_ids: set[int] = set()
         for site_name, setters in self.scan_setters.items():
             for s in setters:
                 deps = transitive_deps(s)
                 for nid in deps & in_scan_getter_ids:
                     g = by_id[nid]
-                    if g.layer != s.layer:
+                    if g.layer == s.layer:
+                        continue  # same-iteration binding, as before
+                    # Forward flow (the getter's site fires strictly before
+                    # the setter's in the schedule) is carried through the
+                    # scan carry; backward flow would need a value from a
+                    # future iteration and stays rejected.
+                    gi = self.site_index.get((g.site, g.layer))
+                    si = self.site_index.get((s.site, s.layer))
+                    if gi is None or si is None or gi > si:
                         raise GraphValidationError(
                             f"scan mode: setter %{s.id} (layer {s.layer}) "
                             f"depends on getter %{g.id} (layer {g.layer}); "
-                            "cross-layer data flow requires unrolled mode"
+                            "backward cross-layer data flow requires "
+                            "unrolled mode"
                         )
+                    cross_ids.add(nid)
                 for nid in deps:
                     n = by_id[nid]
                     if (
@@ -192,6 +265,10 @@ class Interleaver:
                         and self._in_scan(self.ready[nid], scan_set)
                     ):
                         body_exec_ids.add(nid)
+
+        # Getters whose value must survive past their own iteration: the
+        # model threads them through the scan carry (taps.scan_env_*).
+        self.cross_getters = [by_id[nid] for nid in sorted(cross_ids)]
 
         # Assign each in-body op node to the site at which it becomes ready.
         for nid in sorted(body_exec_ids):
@@ -233,20 +310,17 @@ def last_referenced_site(
 
     The truncation point for ``tracer.stop()``: model execution past this
     site cannot affect any getter, setter, or save, so the interleaver may
-    abandon the forward there.  Graphs using ``.grad`` cannot be truncated
-    (gradients need the full forward plus the backward pass).
+    abandon the forward there.  ``.grad`` graphs truncate too: every
+    perturbation site is referenced by its ``grad_get`` node (counted
+    here), and the in-graph loss only reads tapped values, so the
+    differentiated forward is cut strictly past everything the loss — and
+    therefore the backward pass — can depend on.
     """
-    for n in graph.nodes:
-        if n.op == "grad_get":
-            raise GraphValidationError(
-                "tracer.stop() cannot truncate a trace that uses .grad "
-                "(gradients need the full forward and backward pass)"
-            )
     site_index = schedule.index()
     idx = [
         site_index[(n.site, n.layer)]
         for n in graph.nodes
-        if n.op in ("tap_get", "tap_set")
+        if n.op in ("tap_get", "tap_set", "grad_get")
         and (n.site, n.layer) in site_index
     ]
     return max(idx, default=PRE_SITE)
@@ -262,6 +336,8 @@ class InterleaveState:
         perts: dict[Any, Any] | None = None,
         const_env: dict[int, Any] | None = None,
         stop_after: int | None = None,
+        log_cb: Callable[[int, Any], None] | None = None,
+        cross_shapes: dict[str, Any] | None = None,
     ) -> None:
         self.plan = plan
         self.env: dict[int, Any] = {}
@@ -272,6 +348,14 @@ class InterleaveState:
         # Scan-mode sites cannot interrupt a running lax.scan, so the stop
         # fires at the first NON-scan site at/past the index instead.
         self.stop_after = stop_after
+        # With a log callback, `log` nodes lower to jax.debug.callback so
+        # the body stays compilable; without one they append traced values
+        # to self.logs at trace time (the eager contract).
+        self.log_cb = log_cb
+        # Abstract specs (by site name) for zero-initialising the scan-carry
+        # slots of cross-layer getters whose value is not yet in the env.
+        self.cross_shapes = cross_shapes or {}
+        self._cross_ids = {g.id for g in plan.cross_getters}
         self._scan_record: dict[str, Any] = {}
         self._executed: set[int] = set()
         inputs = inputs or {}
@@ -305,7 +389,12 @@ class InterleaveState:
             self.env[node.id] = args[0]
         elif node.op == "log":
             self.env[node.id] = args[0]
-            self.logs.append((node.id, args[0]))
+            if self.log_cb is not None:
+                jax.debug.callback(
+                    partial(self.log_cb, node.id), args[0], ordered=True
+                )
+            else:
+                self.logs.append((node.id, args[0]))
         else:
             self.env[node.id] = resolve_op(node.op)(*args, **kwargs)
 
@@ -348,9 +437,19 @@ class InterleaveState:
             # site several times per iteration: keep every fire, in order.
             self._scan_record.setdefault(name, []).append(value)
         for g in plan.scan_getters.get(name, []):
-            # Per-iteration symbolic binding; only same-layer setter closures
-            # consume it (validated), under a layer-index mask.
-            self.env[g.id] = value
+            if g.id in self._cross_ids and g.id in self.env:
+                # Cross-layer getter: latch the value at its own iteration,
+                # keep the carried value everywhere else.  The env slot was
+                # seeded by scan_env_provide from the scan carry.
+                cond = jnp.asarray(layer == g.layer)
+                self.env[g.id] = jax.tree.map(
+                    lambda v_, p_: jnp.where(cond, v_, p_),
+                    value, self.env[g.id],
+                )
+            else:
+                # Per-iteration symbolic binding; only same-layer setter
+                # closures consume it, under a layer-index mask.
+                self.env[g.id] = value
         for node in plan.scan_exec.get(name, []):
             self._exec_node(node)
             self._executed.discard(node.id)  # may re-run post-scan
@@ -375,6 +474,40 @@ class InterleaveState:
             )
         self._scan_record = {}
         return out
+
+    def scan_env_init(self) -> dict[int, Any]:
+        """Initial scan-carry slots for cross-layer getters.
+
+        Values already in the env (delivered by an earlier scan of a
+        multi-scan model) seed their slot; otherwise the slot starts as
+        zeros from the abstract site spec — it is latched with the real
+        value at the getter's own iteration, before any consumer reads it.
+        """
+        out: dict[int, Any] = {}
+        for g in self.plan.cross_getters:
+            if g.id in self.env:
+                out[g.id] = self.env[g.id]
+                continue
+            spec = self.cross_shapes.get(g.site)
+            if spec is None:
+                raise GraphValidationError(
+                    f"scan mode: no shape captured for cross-layer getter "
+                    f"%{g.id} at site {g.site!r}; the caller must pass "
+                    "cross_shapes from capture_site_shapes"
+                )
+            out[g.id] = jax.tree.map(
+                lambda s: jnp.zeros(tuple(s.shape), s.dtype), spec
+            )
+        return out
+
+    def scan_env_provide(self, env_c: dict[int, Any]) -> None:
+        """Bind the carried intervention env at the top of a scan body."""
+        for gid, v in env_c.items():
+            self.env[gid] = v
+
+    def scan_env_update(self, env_c: dict[int, Any]) -> dict[int, Any]:
+        """New carry at the bottom of a scan body (same structure as init)."""
+        return {gid: self.env[gid] for gid in env_c}
 
     def _site_layers(self, name: str) -> list[int]:
         return [l for (n, l) in self.plan.schedule.order if n == name]
@@ -475,6 +608,10 @@ class _ShapeCaptureState:
             key = (name, layer)
             if key in self.keys:
                 self.shapes[key] = spec
+            # All requested keys captured: abandon the abstract forward
+            # (mirrors tracer.stop() truncation; never inside a scan body).
+            if self.keys <= set(self.shapes):
+                raise EarlyStop((name, layer))
         return value
 
     def scan_collect_values(self) -> dict:
@@ -497,13 +634,15 @@ def capture_site_shapes(
         taps.push_state(cap)  # type: ignore[arg-type]
         try:
             return model_fn(*a, **k)
+        except EarlyStop:
+            return None  # every requested key already captured
         finally:
             taps.pop_state()
 
     jax.eval_shape(run, args, kwargs)
     missing = keys - set(cap.shapes)
     if missing:
-        raise GraphValidationError(f"grad sites never fired: {missing}")
+        raise GraphValidationError(f"tap sites never fired: {missing}")
     return cap.shapes
 
 
@@ -514,6 +653,7 @@ def make_step_callable(
     schedule: SiteSchedule,
     *,
     mode: str = "unrolled",
+    log_cb: Callable[[int, Any], None] | None = None,
 ) -> Callable[..., tuple[Any, dict[str, Any]]]:
     """Emit a jit-able interleaved step function with the plan built ONCE.
 
@@ -524,23 +664,18 @@ def make_step_callable(
     :mod:`repro.core.generation` uses it as the scan body, so per-step saves
     come back as stacked scan ys).
 
-    Features that cannot live inside a compiled body are rejected up front:
-    ``.grad`` (needs the perturbation driver), ``log`` (appends traced
-    values to a Python list at trace time), and early stop (raises through
-    the trace).
+    Every graph feature lowers into the traced body (the final-style
+    interpreter): ``log`` nodes emit through ``jax.debug.callback`` to
+    ``log_cb`` (default: the module-level :data:`LOG_SINK`), ``.grad``
+    graphs run the perturbation driver inside the step — the loss and its
+    gradients are part of the traced program, so the step still scans — and
+    scan-mode cross-layer flow rides the intervention-env carry.  Nothing
+    is rejected up front any more.
     """
     plan = Interleaver(graph, schedule, mode=mode)
-    if plan.grad_nodes:
-        raise GraphValidationError(
-            ".grad cannot be compiled into a fused step; use the eager "
-            "per-step path"
-        )
-    for n in graph.nodes:
-        if n.op == "log":
-            raise GraphValidationError(
-                "log nodes cannot be compiled into a fused step (logs are "
-                "recorded host-side); use the eager per-step path"
-            )
+    if log_cb is None and any(n.op == "log" for n in graph.nodes):
+        log_cb = LOG_SINK.emit
+    cross_sites = {g.site for g in plan.cross_getters}
 
     def step(
         args: tuple,
@@ -548,10 +683,24 @@ def make_step_callable(
         inputs: dict[str, Any] | None = None,
         const_env: dict[int, Any] | None = None,
     ) -> tuple[Any, dict[str, Any]]:
-        state = InterleaveState(plan, inputs=inputs, const_env=const_env)
+        kwargs_ = kwargs or {}
+        if plan.grad_nodes:
+            out, saves, _ = _run_grad(
+                plan, model_fn, args, kwargs_,
+                inputs=inputs, const_env=const_env, log_cb=log_cb,
+            )
+            return out, saves
+        cross_shapes = None
+        if cross_sites:
+            cross_shapes = capture_site_shapes(
+                model_fn, args, kwargs_, set(cross_sites),
+                schedule.scan_sites,
+            )
+        state = InterleaveState(plan, inputs=inputs, const_env=const_env,
+                                log_cb=log_cb, cross_shapes=cross_shapes)
         taps.push_state(state)
         try:
-            out = model_fn(*args, **(kwargs or {}))
+            out = model_fn(*args, **kwargs_)
         finally:
             taps.pop_state()
         state.finalize(include_grad_dependents=True)
@@ -581,37 +730,68 @@ def run_interleaved(
     ``stop_after_site`` (``tracer.stop()``) abandons the model forward right
     after the schedule index fires — typically
     :func:`last_referenced_site` — returning ``None`` as the model output;
-    saves are assembled from the partial execution.  Eager execution only
-    (an exception at jit-trace time would abort the whole trace), and
-    incompatible with ``.grad``.
+    saves are assembled from the partial execution.  The EarlyStop raise
+    happens at trace time, so a jitted caller lowers a program that is both
+    truncated and compiled.  ``.grad`` composes with it: the perturbation
+    driver differentiates the truncated forward (every grad site is
+    referenced, so it fires before the stop).
     """
     kwargs = kwargs or {}
     plan = Interleaver(graph, schedule, mode=mode)
-    if stop_after_site is not None and plan.grad_nodes:
-        raise GraphValidationError(
-            "stop_after_site cannot be combined with .grad"
+
+    if plan.grad_nodes:
+        return _run_grad(
+            plan, model_fn, args, kwargs, inputs=inputs,
+            const_env=const_env, stop_after=stop_after_site,
         )
 
-    if not plan.grad_nodes:
-        state = InterleaveState(plan, inputs=inputs, const_env=const_env,
-                                stop_after=stop_after_site)
-        taps.push_state(state)
-        try:
-            out = model_fn(*args, **kwargs)
-        except EarlyStop:
-            out = None  # truncated: sites past the last referenced one
-        finally:
-            taps.pop_state()
-        state.finalize(include_grad_dependents=True)
-        return out, state.saves(), state.logs
+    cross_shapes = None
+    if plan.cross_getters:
+        cross_shapes = capture_site_shapes(
+            model_fn, args, kwargs, {g.site for g in plan.cross_getters},
+            schedule.scan_sites,
+        )
+    state = InterleaveState(plan, inputs=inputs, const_env=const_env,
+                            stop_after=stop_after_site,
+                            cross_shapes=cross_shapes)
+    taps.push_state(state)
+    try:
+        out = model_fn(*args, **kwargs)
+    except EarlyStop:
+        out = None  # truncated: sites past the last referenced one
+    finally:
+        taps.pop_state()
+    state.finalize(include_grad_dependents=True)
+    return out, state.saves(), state.logs
 
-    # --- gradient path -----------------------------------------------------
+
+# ---------------------------------------------------------------- gradients
+def _run_grad(
+    plan: Interleaver,
+    model_fn: Callable[..., Any],
+    args: tuple,
+    kwargs: dict,
+    *,
+    inputs: dict[str, Any] | None = None,
+    const_env: dict[int, Any] | None = None,
+    stop_after: int | None = None,
+    log_cb: Callable[[int, Any], None] | None = None,
+) -> tuple[Any, dict[str, Any], list[tuple[int, Any]]]:
+    """Perturbation-trick gradient driver, shared by :func:`run_interleaved`
+    and :func:`make_step_callable`.
+
+    Pure function of its array inputs: the loss, gradients, and the
+    grad-dependent subgraph all execute inside the caller's trace (no
+    Python-side env mutation escapes), so the whole thing jits and scans.
+    """
+    graph, schedule, mode = plan.graph, plan.schedule, plan.mode
     if mode == "scan":
         pert_keys = {k[0] for k in plan.grad_keys}  # site names
     else:
         pert_keys = set(plan.grad_keys)
+    cross_sites = {g.site for g in plan.cross_getters}
     shapes = capture_site_shapes(
-        model_fn, args, kwargs, pert_keys, schedule.scan_sites
+        model_fn, args, kwargs, pert_keys | cross_sites, schedule.scan_sites
     )
 
     def zeros_for(key: Any) -> Any:
@@ -626,14 +806,16 @@ def run_interleaved(
         )
 
     perts0 = {key: zeros_for(key) for key in pert_keys}
-    grad_dependents = Interleaver(graph, schedule, mode=mode)  # fresh plan
 
     def fwd(perts):
         state = InterleaveState(plan, inputs=inputs, perts=perts,
-                                const_env=const_env)
+                                const_env=const_env, stop_after=stop_after,
+                                log_cb=log_cb, cross_shapes=shapes)
         taps.push_state(state)
         try:
             out = model_fn(*args, **kwargs)
+        except EarlyStop:
+            out = None  # truncated past the last referenced site
         finally:
             taps.pop_state()
         state.finalize(include_grad_dependents=False)
@@ -649,10 +831,13 @@ def run_interleaved(
 
     # Bind grad_get nodes and run the remaining (grad-dependent) subgraph.
     state = InterleaveState.__new__(InterleaveState)
-    state.plan = grad_dependents
+    state.plan = plan
     state.env = dict(carried)
     state.logs = list(logs)
     state.perts = {}
+    state.log_cb = log_cb
+    state.cross_shapes = {}
+    state._cross_ids = set()
     state._scan_record = {}
     state._executed = set(carried.keys())
     for n in plan.grad_nodes:

@@ -104,7 +104,8 @@ class Proxy:
                 ".grad is only available directly on tap-site proxies"
             )
         node = self.graph.add(
-            "grad_get", site=self._root_site, layer=self._root_layer
+            "grad_get", site=self._root_site, layer=self._root_layer,
+            step=getattr(self._tracer._target(), "_step", None),
         )
         return Proxy(self._tracer, node)
 

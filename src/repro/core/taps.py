@@ -13,9 +13,11 @@ Layered models come in two flavours:
   Fully general interventions (any cross-layer data flow).
 * **scan** — ``jax.lax.scan`` over stacked layer params; ``layer`` is a traced
   index.  Compile time is O(1) in depth (required for the 62–100 layer
-  production configs).  Interventions are supported with one restriction,
-  validated up front: a setter inside the scan may only consume getters from
-  the *same* layer iteration (plus anything available before the scan).
+  production configs).  A setter inside the scan may consume getters from
+  the same layer iteration or any *earlier* one: forward cross-layer values
+  thread through the scan carry, which models expose by bracketing their
+  scan body with ``scan_env_init``/``scan_env_provide``/``scan_env_update``.
+  Backward flow (a getter from a later iteration) is rejected up front.
   Per-layer getter values are emitted as stacked scan outputs
   (``taps.scan_outputs()``) so post-scan nodes see every layer.
 """
@@ -26,7 +28,10 @@ from typing import Any, TYPE_CHECKING
 if TYPE_CHECKING:  # pragma: no cover
     from repro.core.interleave import InterleaveState
 
-__all__ = ["site", "scan_outputs", "push_state", "pop_state", "active_state"]
+__all__ = [
+    "site", "scan_outputs", "push_state", "pop_state", "active_state",
+    "scan_env_init", "scan_env_provide", "scan_env_update",
+]
 
 _ACTIVE: list["InterleaveState | None"] = []
 
@@ -56,6 +61,34 @@ def deliver_scan(ys: dict) -> None:
     state = active_state()
     if state is not None:
         state.deliver_scan(ys)
+
+
+def scan_env_init() -> dict:
+    """Before a ``lax.scan``: initial carry for the intervention env.
+
+    Models thread the returned dict through their scan carry so forward
+    cross-layer data flow survives iteration boundaries.  With no active
+    state (or no cross-layer getters) it is ``{}`` — zero extra carry
+    leaves, the scan signature is unchanged.
+    """
+    state = active_state()
+    fn = getattr(state, "scan_env_init", None)
+    return fn() if fn is not None else {}
+
+
+def scan_env_provide(env_c: dict) -> None:
+    """Top of a scan body: bind the carried intervention env slots."""
+    state = active_state()
+    fn = getattr(state, "scan_env_provide", None)
+    if fn is not None:
+        fn(env_c)
+
+
+def scan_env_update(env_c: dict) -> dict:
+    """Bottom of a scan body: the new env carry (same structure as init)."""
+    state = active_state()
+    fn = getattr(state, "scan_env_update", None)
+    return fn(env_c) if fn is not None else env_c
 
 
 def scan_outputs() -> dict:

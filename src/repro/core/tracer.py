@@ -505,7 +505,10 @@ class Tracer:
 
         Model computation past that site cannot affect any getter, setter,
         or save, so the forward is abandoned there (the paper's early-stop:
-        pay only for the layers you use).  Incompatible with ``.grad``."""
+        pay only for the layers you use).  The truncation happens BEFORE
+        lowering, so the partial program compiles; ``.grad`` composes with
+        it — the perturbation driver differentiates the truncated forward
+        (every grad site is referenced, so it fires before the stop)."""
         self._stop = True
 
     # -------------------------------------------------------------- results

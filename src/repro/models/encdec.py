@@ -137,14 +137,18 @@ class EncDecModel:
                 p = jax.tree.map(lambda a: a[i], params["encoder"])
                 h = layer(p, h, i)
         else:
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 p, idx = inp
-                return layer(p, h, idx), taps.scan_outputs()
+                h = layer(p, h, idx)
+                return (h, taps.scan_env_update(env_c)), taps.scan_outputs()
 
             if remat:
                 body = jax.checkpoint(body)
-            h, ys = jax.lax.scan(
-                body, h, (params["encoder"], jnp.arange(cfg.encoder_layers))
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
+                (params["encoder"], jnp.arange(cfg.encoder_layers)),
             )
             taps.deliver_scan(ys)
         h = C.rms_norm(h, params["enc_norm"], cfg.norm_eps)
@@ -235,15 +239,18 @@ class EncDecModel:
                 p = jax.tree.map(lambda a: a[i], params["decoder"])
                 h, _ = self._dec_layer(p, h, positions, enc_out, enc_pos, i)
         else:
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 p, idx = inp
                 h, _ = self._dec_layer(p, h, positions, enc_out, enc_pos, idx)
-                return h, taps.scan_outputs()
+                return (h, taps.scan_env_update(env_c)), taps.scan_outputs()
 
             if remat:
                 body = jax.checkpoint(body)
-            h, ys = jax.lax.scan(
-                body, h, (params["decoder"], jnp.arange(cfg.n_layers))
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
+                (params["decoder"], jnp.arange(cfg.n_layers)),
             )
             taps.deliver_scan(ys)
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
@@ -415,18 +422,21 @@ class EncDecModel:
                     "cross_v": cache.data["cross_v"],
                     "cross_pos": enc_pos}
         else:
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 p, kc, vc, ck, cv, idx = inp
                 h, new_l = self._dec_layer(
                     p, h, positions, None, enc_pos, idx,
                     cache_l={"k": kc, "v": vc}, kv_positions=new_positions,
                     slot=slot, cross_kv=(ck, cv), window=window, decode=True,
                 )
-                return h, {**taps.scan_outputs(), "__k__": new_l["k"],
-                           "__v__": new_l["v"]}
+                ys = {**taps.scan_outputs(), "__k__": new_l["k"],
+                      "__v__": new_l["v"]}
+                return (h, taps.scan_env_update(env_c)), ys
 
-            h, ys = jax.lax.scan(
-                body, h,
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
                 (params["decoder"], cache.data["k"], cache.data["v"],
                  cache.data["cross_k"], cache.data["cross_v"],
                  jnp.arange(cfg.n_layers)),

@@ -191,18 +191,23 @@ class Zamba2Model:
                 params["layers"],
             )
 
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 pg, g = inp
                 for j in range(k_every):
                     p = jax.tree.map(lambda a: a[j], pg)
                     h, _ = self._mamba_layer(p, h, g * k_every + j, lengths)
                 h, _ = self._shared_block(params, h, h0, g, positions,
                                           window=window)
-                return h, taps.scan_outputs()
+                return (h, taps.scan_env_update(env_c)), taps.scan_outputs()
 
             if remat:
                 body = jax.checkpoint(body)
-            h, ys = jax.lax.scan(body, h, (grouped, jnp.arange(self.n_apps)))
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
+                (grouped, jnp.arange(self.n_apps)),
+            )
             taps.deliver_scan(ys)
 
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
@@ -384,7 +389,9 @@ class Zamba2Model:
             ssm_g = cache.data["ssm"].reshape((self.n_apps, k_every) + cache.data["ssm"].shape[1:])
             conv_g = cache.data["conv"].reshape((self.n_apps, k_every) + cache.data["conv"].shape[1:])
 
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 pg, sg, cg, kg, vg, g = inp
                 new_s, new_c = [], []
                 for j in range(k_every):
@@ -400,10 +407,10 @@ class Zamba2Model:
                 ys = {**taps.scan_outputs(),
                       "__s__": jnp.stack(new_s), "__c__": jnp.stack(new_c),
                       "__k__": kv[0], "__v__": kv[1]}
-                return h, ys
+                return (h, taps.scan_env_update(env_c)), ys
 
-            h, ys = jax.lax.scan(
-                body, h,
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
                 (grouped, ssm_g, conv_g, cache.data["k"], cache.data["v"],
                  jnp.arange(self.n_apps)),
             )

@@ -98,15 +98,18 @@ class Mamba2Model:
                 p = jax.tree.map(lambda a: a[i], params["layers"])
                 h, _ = self._layer(p, h, i, lengths)
         else:
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 p, idx = inp
                 h, _ = self._layer(p, h, idx, lengths)
-                return h, taps.scan_outputs()
+                return (h, taps.scan_env_update(env_c)), taps.scan_outputs()
 
             if remat:
                 body = jax.checkpoint(body)
-            h, ys = jax.lax.scan(
-                body, h, (params["layers"], jnp.arange(cfg.n_layers))
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
+                (params["layers"], jnp.arange(cfg.n_layers)),
             )
             taps.deliver_scan(ys)
         h = C.rms_norm(h, params["final_norm"], cfg.norm_eps)
@@ -170,13 +173,17 @@ class Mamba2Model:
                 conv_states.append(c)
             states = (jnp.stack(ssm_states), jnp.stack(conv_states))
         else:
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 p, idx = inp
                 h, state = self._layer(p, h, idx, lengths)
-                return h, {**taps.scan_outputs(), "__state__": state}
+                ys = {**taps.scan_outputs(), "__state__": state}
+                return (h, taps.scan_env_update(env_c)), ys
 
-            h, ys = jax.lax.scan(
-                body, h, (params["layers"], jnp.arange(cfg.n_layers))
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
+                (params["layers"], jnp.arange(cfg.n_layers)),
             )
             states = ys.pop("__state__")
             taps.deliver_scan(ys)
@@ -215,13 +222,16 @@ class Mamba2Model:
                 new_conv.append(c)
             new_cache = {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv)}
         else:
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 p, s, c, idx = inp
                 h, (s2, c2) = layer_step(p, h, (s, c), idx)
-                return h, {**taps.scan_outputs(), "__s__": s2, "__c__": c2}
+                ys = {**taps.scan_outputs(), "__s__": s2, "__c__": c2}
+                return (h, taps.scan_env_update(env_c)), ys
 
-            h, ys = jax.lax.scan(
-                body, h,
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
                 (params["layers"], cache["ssm"], cache["conv"],
                  jnp.arange(cfg.n_layers)),
             )

@@ -297,20 +297,21 @@ class TransformerModel:
         cfg = self.cfg
         if not self.is_vlm:
             def body(carry, inp):
-                h, aux = carry
+                (h, aux), env_c = carry
+                taps.scan_env_provide(env_c)
                 p, idx = inp
                 h, a, kv = self._layer(p, h, positions, idx, window=window,
                                        collect=collect)
                 ys = dict(taps.scan_outputs())
                 if collect:
                     ys["__kv__"] = kv
-                return (h, aux + a), ys
+                return ((h, aux + a), taps.scan_env_update(env_c)), ys
 
             if remat:
                 body = jax.checkpoint(body)
-            (h, aux), ys = jax.lax.scan(
+            ((h, aux), _), ys = jax.lax.scan(
                 body,
-                (h, jnp.zeros((), jnp.float32)),
+                ((h, jnp.zeros((), jnp.float32)), taps.scan_env_init()),
                 (params["layers"], jnp.arange(cfg.n_layers)),
             )
             kv = ys.pop("__kv__", None)
@@ -326,7 +327,8 @@ class TransformerModel:
         )
 
         def body(carry, inp):
-            h, aux = carry
+            (h, aux), env_c = carry
+            taps.scan_env_provide(env_c)
             pg, cp_leaf, g = inp
             kvs = []
             cross_kv_entry = None
@@ -358,13 +360,13 @@ class TransformerModel:
             if collect:
                 ys["__kv__"] = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
                 ys["__cross__"] = cross_kv_entry
-            return (h, aux), ys
+            return ((h, aux), taps.scan_env_update(env_c)), ys
 
         if remat:
             body = jax.checkpoint(body)
-        (h, aux), ys = jax.lax.scan(
+        ((h, aux), _), ys = jax.lax.scan(
             body,
-            (h, jnp.zeros((), jnp.float32)),
+            ((h, jnp.zeros((), jnp.float32)), taps.scan_env_init()),
             (grouped, params["cross"], jnp.arange(n_groups)),
         )
         kv = ys.pop("__kv__", None)
@@ -451,7 +453,8 @@ class TransformerModel:
                 )
         else:
             def body(carry, inp):
-                h, aux = carry
+                (h, aux), env_c = carry
+                taps.scan_env_provide(env_c)
                 p, cache_l, idx = inp
                 cross = None
                 if self.is_vlm:
@@ -462,11 +465,12 @@ class TransformerModel:
                     cp = jax.tree.map(lambda a: a[ci], params["cross"])
                     cross = (cp, ck, cv, is_cross)
                 h, a, new_l = one_layer(p, h, cache_l, idx, cross)
-                return (h, aux + a), {**taps.scan_outputs(), "__cache__": new_l}
+                ys = {**taps.scan_outputs(), "__cache__": new_l}
+                return ((h, aux + a), taps.scan_env_update(env_c)), ys
 
-            (h, aux_total), ys = jax.lax.scan(
+            ((h, aux_total), _), ys = jax.lax.scan(
                 body,
-                (h, jnp.zeros((), jnp.float32)),
+                ((h, jnp.zeros((), jnp.float32)), taps.scan_env_init()),
                 (params["layers"], per_layer, jnp.arange(cfg.n_layers)),
             )
             new_data = ys.pop("__cache__")

@@ -75,6 +75,9 @@ class EngineStats:
         self.fused_segments = 0  # fused scan dispatches
         self.fused_steps = 0     # decode steps served by those dispatches
         self.eager_steps = 0     # decode steps served per-step (non-uniform)
+        # fused segments carrying log/grad/cross-layer work — the "eager
+        # islands" the harvest interpreter now compiles
+        self.islands_compiled = 0
         # paged KV cache (block-table indirection over a shared page pool)
         self.page_allocs = 0     # pages handed out (admission + growth)
         self.page_frees = 0      # pages returned at retirement
@@ -121,6 +124,11 @@ class EngineStats:
     def record_eager_step(self) -> None:
         """One decode step ran the eager per-step path."""
         self.eager_steps += 1
+
+    def record_islands_compiled(self) -> None:
+        """One fused segment carried log/grad/cross-layer work that the
+        pre-harvest loop would have served eagerly."""
+        self.islands_compiled += 1
 
     def record_page_alloc(self, n: int, in_use: int, free: int) -> None:
         """The paged allocator handed out ``n`` pages (admission scatter or
@@ -178,6 +186,7 @@ class EngineStats:
             "fused_segments": self.fused_segments,
             "fused_steps": self.fused_steps,
             "eager_steps": self.eager_steps,
+            "islands_compiled": self.islands_compiled,
             "page_allocs": self.page_allocs,
             "page_frees": self.page_frees,
             "pages_in_use": self.pages_in_use,
@@ -217,6 +226,9 @@ class _FusedCountersOnly:
 
     def record_eager_step(self) -> None:
         self._stats.record_eager_step()
+
+    def record_islands_compiled(self) -> None:
+        self._stats.record_islands_compiled()
 
 
 class InferenceEngine:
@@ -418,10 +430,12 @@ class InferenceEngine:
         """Run ``graph`` interleaved with one forward. Returns (saves, out).
 
         ``stop=True`` (``tracer.stop()`` shipped over the wire) truncates
-        the forward after the last site the graph references.  Truncated
-        executions run EAGERLY — an exception at jit-trace time would abort
-        the whole trace — and skip the compile cache: the saving is model
-        compute, not compile reuse.
+        the forward after the last site the graph references — BEFORE
+        lowering: the interleaver raises ``EarlyStop`` inside the traced
+        function, so the partial trace IS the jaxpr and the truncated
+        program compiles and caches like any other (keyed separately from
+        the full-forward program of the same graph).  The saving is both
+        model compute AND per-call dispatch.
         """
         from repro.core import analysis
 
@@ -432,16 +446,43 @@ class InferenceEngine:
         if stop:
             from repro.core.interleave import last_referenced_site
 
-            t0 = time.perf_counter()
-            _out, saves, _logs = run_interleaved(
-                self._model_fn,
-                graph,
-                self.schedule,
-                (self.params, batch),
-                {},
-                mode=self.mode,
-                stop_after_site=last_referenced_site(graph, self.schedule),
+            stop_idx = last_referenced_site(graph, self.schedule)
+            const_env = {
+                n.id: n.args[0] for n in graph.nodes if n.op == "constant"
+            }
+            key = (
+                "stop",
+                structural_key(graph),
+                tuple(sorted(
+                    (k, tuple(np.shape(v)),
+                     str(np.asarray(v).dtype) if not hasattr(v, "dtype")
+                     else str(v.dtype))
+                    for k, v in batch.items()
+                )),
             )
+            fn = self._cache.get(key)
+            if fn is None:
+                self.stats.compiles += 1
+
+                @jax.jit
+                def fn(params, batch_, consts):
+                    _out, saves, _logs = run_interleaved(
+                        self._model_fn,
+                        graph,
+                        self.schedule,
+                        (params, batch_),
+                        {},
+                        mode=self.mode,
+                        const_env=consts,
+                        stop_after_site=stop_idx,
+                    )
+                    return saves
+
+                self._cache[key] = fn
+            else:
+                self.stats.cache_hits += 1
+            t0 = time.perf_counter()
+            saves = fn(self.params, batch, const_env)
             saves = jax.tree.map(lambda x: jax.device_get(x), saves)
             self.stats.exec_seconds += time.perf_counter() - t0
             self.stats.executions += 1

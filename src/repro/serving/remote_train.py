@@ -28,9 +28,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import taps
 from repro.core.graph import InterventionGraph, Ref
-from repro.core.interleave import Interleaver, InterleaveState
+from repro.core.interleave import (
+    Interleaver,
+    last_referenced_site,
+    run_interleaved,
+)
 
 __all__ = ["train_graph_inputs", "lora_graph"]
 
@@ -58,16 +61,24 @@ def train_graph_inputs(
         raise KeyError(f"loss save {loss_name!r} not in graph")
     fixed = {k: jnp.asarray(v) for k, v in (fixed_inputs or {}).items()}
     params0 = {k: jnp.asarray(v) for k, v in trainable.items()}
+    # the loss only needs sites up to the last one the graph references:
+    # a probe on layer L trains on a forward truncated right after L (the
+    # EarlyStop fires at trace time, so the jitted step compiles the
+    # truncated program — same machinery as tracer.stop()).
+    stop_idx = last_referenced_site(graph, engine.schedule)
 
     def loss_fn(train_params, model_params, batch_):
-        state = InterleaveState(plan, inputs={**fixed, **train_params})
-        taps.push_state(state)
-        try:
-            engine._model_fn(model_params, batch_)
-        finally:
-            taps.pop_state()
-        state.finalize(include_grad_dependents=True)
-        return state.env[graph.saves[loss_name]]
+        _out, saves, _logs = run_interleaved(
+            engine._model_fn,
+            graph,
+            engine.schedule,
+            (model_params, batch_),
+            {},
+            mode=engine.mode,
+            inputs={**fixed, **train_params},
+            stop_after_site=stop_idx,
+        )
+        return saves[loss_name]
 
     @partial(jax.jit, donate_argnums=(0,))
     def step(train_params, opt, model_params, batch_):

@@ -76,7 +76,8 @@ class Request:
     # co-tenant requests (a double merge would re-slice its slices).
     premerged: bool = False
     # tracer.stop(): truncate the forward after the last referenced site.
-    # Runs solo (schedule truncation is per-request) and eagerly.
+    # Runs solo (schedule truncation is per-request) on a compiled+cached
+    # truncated program — the partial trace IS the jaxpr.
     stop: bool = False
     request_id: int = dataclasses.field(default_factory=lambda: next(_ids))
 
@@ -122,7 +123,10 @@ def _merge_key(req: Request, pad_slack: int = 0) -> tuple | None:
         return None
     for n in req.graph.nodes:
         if n.op == "grad_get":
-            return None  # grads never merge — sequential fallback
+            # merge_graphs CAN merge grads (shared grad_get + summed
+            # per-request losses), but the scheduler keeps them solo:
+            # co-tenant grad batching is a ROADMAP residual.
+            return None
         if n.op == "tap_set" and n.step == ALL_STEPS:
             return None  # broadcast setters run solo (see merge_graphs)
     items = []
@@ -164,7 +168,11 @@ def _admit_key(req: Request, pad_slack: int = 0) -> tuple | None:
     solo run (grads, scalar inputs)."""
     for n in req.graph.nodes:
         if n.op == "grad_get":
-            return None  # .grad cannot ride a generation trace — solo error
+            # .grad now rides the fused generation scan — but solo: the
+            # solo fallback path runs run_generation(fused=True), which
+            # compiles the grad step into the lax.scan body.  Co-tenant
+            # grad admission is a ROADMAP residual.
+            return None
     t = req.batch.get("tokens")
     if t is None or np.asarray(t).ndim < 2 or np.asarray(t).shape[1] == 1:
         return None

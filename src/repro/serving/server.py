@@ -26,7 +26,7 @@ Multi-invoke traces arrive PRE-merged (the tracer lowered its invokes into
 one row-sliced graph client-side): ``premerged=True`` makes the scheduler
 run them as-is — re-merging with co-tenant requests would re-slice their
 slices.  ``stop=True`` (tracer.stop()) truncates the forward after the last
-referenced site; it runs solo and eagerly.  A multi-invoke GENERATION
+referenced site; it runs solo on a compiled+cached truncated program.  A multi-invoke GENERATION
 request ships its invokes as a list: under ``policy="continuous"`` each
 invoke is admitted as a row-group of the persistent decode loop (retiring
 at its own ``max_new_tokens``, co-tenants welcome); other policies serve

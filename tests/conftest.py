@@ -30,14 +30,19 @@ def make_tiny_model(n_layers=3, d=4, scan=False):
         def model_fn(params, x):
             h = taps.site("embed", x)
 
-            def body(h, inp):
+            def body(carry, inp):
+                h, env_c = carry
+                taps.scan_env_provide(env_c)
                 w, idx = inp
                 h = taps.site("layers.input", h, layer=idx)
                 h = h @ w
                 h = taps.site("layers.output", h, layer=idx)
-                return h, taps.scan_outputs()
+                return (h, taps.scan_env_update(env_c)), taps.scan_outputs()
 
-            h, ys = jax.lax.scan(body, h, (params["w"], jnp.arange(n_layers)))
+            (h, _), ys = jax.lax.scan(
+                body, (h, taps.scan_env_init()),
+                (params["w"], jnp.arange(n_layers)),
+            )
             taps.deliver_scan(ys)
             return taps.site("logits", h)
         scan_sites = ("layers.input", "layers.output")

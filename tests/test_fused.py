@@ -145,11 +145,11 @@ def test_steps_uniform_classes():
     g.add("tap_set", Ref(t.id), site="logits", step=1)
     assert not steps_uniform(g, 2)
 
-    g = InterventionGraph()  # log records host-side — never fusable
+    g = InterventionGraph()  # logs lower to jax.debug.callback — fusable
     for s in range(2):
         t = g.add("tap_get", site="logits", step=s)
-        g.add("log", Ref(t.id))
-    assert not steps_uniform(g, 2)
+        g.add("log", Ref(t.id), step=s)
+    assert steps_uniform(g, 2)
 
 
 def test_steps_uniform_allows_varying_constants():
@@ -532,6 +532,120 @@ def test_single_token_prompt_fuses():
     np.testing.assert_array_equal(np.asarray(got.tokens),
                                   np.asarray(want.tokens))
     assert engine.stats.fused_segments == 1
+
+
+# ------------------------------------------------- compiled eager islands
+def _log_graph(n_steps, *, save=False):
+    """Per-step logits log (+ optional save) — step-uniform."""
+    g = InterventionGraph()
+    for s in range(n_steps):
+        t = g.add("tap_get", site="logits", step=s)
+        m = g.add("jnp.mean", Ref(t.id), step=s)
+        g.add("log", Ref(m.id), step=s)
+        if save:
+            g.mark_saved(f"lg@step{s}", g.add("save", Ref(t.id)))
+    return g
+
+
+def test_log_generation_fuses_with_zero_eager_steps():
+    """Per-step logs ride the compiled scan (jax.debug.callback) — no
+    eager fallback, values matching the eager interleaver's."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    N = 4
+    loop = engine.start_decode_loop(2, 16)
+    sr = loop.admit(_log_graph(N), _batch(cfg, 2, 6, 80), N)
+    loop.run_to_completion()
+    assert loop.eager_steps == 0
+    assert loop.islands_compiled >= 1
+    got = sr.result()
+    assert len(got.logs) == N
+
+    want = run_generation(model, params, _log_graph(N),
+                          jnp.asarray(_batch(cfg, 2, 6, 80)["tokens"]), N,
+                          mode="unrolled", fused=False)
+    assert len(want.logs) == N
+    for (_, a), (_, b) in zip(got.logs, want.logs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+
+
+def test_grad_generation_fused_matches_eager():
+    """.grad at a decode step compiles (the perturbation driver runs
+    inside the scan body) and matches the eager interleaver."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+
+    def mk():
+        g = InterventionGraph()
+        gr = g.add("grad_get", site="layers.mlp.output", layer=1, step=1)
+        g.mark_saved("g", g.add("save", Ref(gr.id)))
+        t = g.add("tap_get", site="logits", step=1)
+        sq = g.add("mul", Ref(t.id), Ref(t.id), step=1)
+        loss = g.add("jnp.sum", Ref(sq.id), step=1)
+        g.backward_loss = loss.id
+        return g
+
+    toks = jnp.asarray(_batch(cfg, 2, 6, 81)["tokens"])
+    engine = InferenceEngine(model, params, mode="unrolled")
+    loop = engine.start_decode_loop(2, 16)
+    sr = loop.admit(mk(), {"tokens": toks}, 3)
+    loop.run_to_completion()
+    assert loop.eager_steps == 0
+    assert loop.islands_compiled >= 1
+    got = sr.result()
+    want = run_generation(model, params, mk(), toks, 3,
+                          mode="unrolled", fused=False)
+    np.testing.assert_array_equal(np.asarray(got.tokens),
+                                  np.asarray(want.tokens))
+    np.testing.assert_allclose(np.asarray(got.saves["g"]),
+                               np.asarray(want.saves["g"]),
+                               rtol=1e-4, atol=1e-5)
+    assert np.any(np.asarray(got.saves["g"]) != 0.0)
+
+
+def test_cotenant_log_isolation_compiled():
+    """A log-carrying request sharing the slot table with a clean request,
+    entirely on the compiled path: the clean tenant's tokens and saves are
+    BIT-exact vs its solo run, every log entry is attributed to its owner
+    (the clean request sees none), and no step ran eagerly."""
+    cfg = R.get_config("paper-gpt-small", reduced=True)
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    engine = InferenceEngine(model, params, mode="unrolled")
+    N = 4
+
+    def clean_graph():
+        g = InterventionGraph()
+        for s in range(N):
+            t = g.add("tap_get", site="layers.output", layer=1, step=s)
+            g.mark_saved(f"h@step{s}", g.add("save", Ref(t.id)))
+        return g
+
+    loop = engine.start_decode_loop(2, 16)
+    sr_log = loop.admit(_log_graph(N), _batch(cfg, 1, 6, 82), N,
+                        request_id="logger")
+    sr_clean = loop.admit(clean_graph(), _batch(cfg, 1, 6, 83), N,
+                          request_id="clean")
+    loop.run_to_completion()
+    assert loop.eager_steps == 0, "co-tenant logs must not force eager steps"
+
+    assert len(sr_log.result().logs) == N
+    assert sr_clean.result().logs == []
+
+    solo = engine.start_decode_loop(2, 16)
+    sr_solo = solo.admit(clean_graph(), _batch(cfg, 1, 6, 83), N)
+    solo.run_to_completion()
+    np.testing.assert_array_equal(np.asarray(sr_clean.result().tokens),
+                                  np.asarray(sr_solo.result().tokens))
+    for k in sr_solo.saves:
+        np.testing.assert_array_equal(np.asarray(sr_clean.saves[k]),
+                                      np.asarray(sr_solo.saves[k]))
 
 
 def test_fused_failure_falls_back_to_eager_isolation():

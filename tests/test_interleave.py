@@ -125,11 +125,37 @@ class TestScanMode:
         h[1] = h[0]
         np.testing.assert_allclose(out.value, h @ (3 * I))
 
-    def test_cross_layer_setter_rejected(self, tiny_scan, x2x4):
-        with pytest.raises(GraphValidationError, match="cross-layer"):
+    def test_cross_layer_forward_flow_carries(self, tiny, tiny_scan, x2x4):
+        # forward cross-layer flow threads through the scan carry: getter
+        # at layer 0 feeds a setter at layer 2, matching unrolled mode
+        with tiny_scan.trace(x2x4):
+            early = tiny_scan.layers[0].output
+            tiny_scan.layers[2].output = early * 1.0
+            out_s = tiny_scan.output.save()
+        with tiny.trace(x2x4):
+            early = tiny.layers[0].output
+            tiny.layers[2].output = early * 1.0
+            out_u = tiny.output.save()
+        np.testing.assert_allclose(out_s.value, out_u.value)
+        np.testing.assert_allclose(out_s.value, np.asarray(x2x4) @ I)
+
+    def test_cross_layer_derived_forward_flow(self, tiny_scan, x2x4):
+        # a derived value (not the raw getter) crossing layers also carries
+        with tiny_scan.trace(x2x4):
+            early = tiny_scan.layers[0].output * 0.5
+            tiny_scan.layers[2].output = tiny_scan.layers[2].output + early
+            out = tiny_scan.output.save()
+        h0 = np.asarray(x2x4) @ I
+        h2 = h0 @ (2 * I) @ (3 * I)
+        np.testing.assert_allclose(out.value, h2 + 0.5 * h0)
+
+    def test_cross_layer_backward_flow_rejected(self, tiny_scan, x2x4):
+        # backward flow (setter consumes a later layer's getter) stays
+        # impossible: the value does not exist yet at the setter's site
+        with pytest.raises(GraphValidationError):
             with tiny_scan.trace(x2x4):
-                early = tiny_scan.layers[0].output
-                tiny_scan.layers[2].output = early * 1.0
+                late = tiny_scan.layers[2].output
+                tiny_scan.layers[0].output = late * 1.0
                 tiny_scan.output.save()
 
     def test_all_layer_reads(self, tiny_scan, x2x4):

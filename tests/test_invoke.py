@@ -337,15 +337,24 @@ class TestStop:
         assert np.all(np.asarray(tr.result("h")) == 0)
         assert "layer2" not in fired
 
-    def test_stop_with_grad_rejected(self):
-        lm, _, _ = _counting_model()
-        x = jnp.ones((1, 4), jnp.float32)
-        with pytest.raises(GraphValidationError, match="grad"):
-            with lm.trace(x) as tr:
-                g = lm.layers[0].output.grad.save("g")
-                loss = (lm.output * lm.output).mean().save("loss")
-                tr.backward(loss)
-                tr.stop()
+    def test_stop_with_grad_truncates_and_differentiates(self):
+        # stop() + .grad now compose: the perturbation driver
+        # differentiates the TRUNCATED forward.  Loss reads layer 1, grad
+        # taps layer 0 — layer 2 and the logits head never execute, yet the
+        # gradient matches the full-model run (the backward only needs the
+        # forward up to the loss).
+        lm, fired, ws = _counting_model()
+        x = jnp.arange(8, dtype=jnp.float32).reshape(2, 4)
+        with lm.trace(x) as tr:
+            g = lm.layers[0].output.grad.save("g")
+            loss = (lm.layers[1].output * lm.layers[1].output).sum().save("loss")
+            tr.backward(loss)
+            tr.stop()
+        assert "layer1" in fired and "layer2" not in fired
+        assert "logits" not in fired
+        h1 = np.asarray(x) @ np.asarray(ws[0]) @ np.asarray(ws[1])
+        expect = (2 * h1) @ np.asarray(ws[1]).T  # dL/d(h0) for L = sum(h1^2)
+        np.testing.assert_allclose(tr.result("g"), expect, rtol=1e-5)
 
     def test_stop_in_multi_invoke_trace(self):
         lm, fired, ws = _counting_model()
