@@ -1,0 +1,258 @@
+"""Live front-door load harness: 200 concurrent clients, real threads.
+
+Every other serving benchmark replays arrivals on a VIRTUAL clock against a
+synchronously-pumped scheduler.  This one exercises the actual threaded
+path: 200 client threads submit through the wire protocol (submit/stream
+kinds over a LoopbackTransport) under seeded Poisson arrivals while the
+FrontDoor's engine thread steps the decode loop — queueing, backpressure,
+admission and streaming all happen live, with real sleeping and real lock
+contention.
+
+Asserted (hard failures, not just reported):
+  * every admitted client's tokens are BIT-EXACT vs the solo synchronous
+    path (chunked streams concatenate to the exact solo result);
+  * ZERO steady-state recompiles — the measured phase performs no XLA
+    traces (power-of-two window ladder + one length bucket + warmup);
+  * bounded queue: the high-water backlog never exceeds the configured
+    ``max_queue_depth``;
+  * an over-budget burst is refused with STRUCTURED backpressure
+    (``code="backpressure"`` + ``retry_after_ms``), and the system keeps
+    serving afterwards;
+  * sustained throughput and p95 response stay within scale-invariant
+    bounds derived from the machine's own measured per-step cost (one
+    noise retry, same idiom as the co-tenancy benchmarks).
+
+Reported: tokens/s, p50/p95 response, p95 time-to-first-token, refusal
+counts, queue high-water — ``tokens_per_s`` is gated HIGHER-better by
+scripts/bench_check.py.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, build
+from repro.models import registry as R
+from repro.serving import (
+    AdmissionRefused,
+    LoopbackTransport,
+    NDIFClient,
+    NDIFServer,
+)
+
+N_CLIENTS = 200
+N_JOBS = 8          # distinct (prompt, n_new) jobs shared across clients
+NUM_SLOTS = 8
+SLOT_MAX_LEN = 48
+MAX_QUEUE_DEPTH = 32
+SEQ_LEN = 6         # one length bucket -> one compiled prefill shape
+STREAM_EVERY = 3    # every 3rd client streams; the rest are batch clients
+
+
+def make_jobs(cfg):
+    rng = np.random.default_rng(17)
+    jobs = []
+    for _ in range(N_JOBS):
+        toks = rng.integers(0, cfg.vocab_size, (1, SEQ_LEN)).astype(np.int32)
+        n_new = int(rng.integers(4, 11))
+        jobs.append((toks, n_new))
+    return jobs
+
+
+def run_load(client, jobs, arrivals, job_of, *, collect):
+    """Replay one full arrival schedule from N_CLIENTS real threads.
+
+    Backpressure refusals back off by the server's ``retry_after_ms`` hint
+    and retry — every client eventually completes (bounded queue trades
+    admission latency, not answers).  Returns per-client timings.
+    """
+    t0 = time.perf_counter()
+    lock = threading.Lock()
+    out = {"resp": [], "refused": 0, "errors": [], "results": {}}
+
+    def worker(i):
+        delay = arrivals[i] - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        toks, n_new = jobs[job_of[i]]
+        submit_t = time.perf_counter()
+        for _ in range(500):
+            try:
+                tk = client.submit(toks, n_new,
+                                   stream=(i % STREAM_EVERY == 0))
+            except AdmissionRefused as e:
+                if e.code != "backpressure":
+                    with lock:
+                        out["errors"].append(f"{i}: refused {e.code}")
+                    return
+                with lock:
+                    out["refused"] += 1
+                time.sleep(max(e.retry_after_ms or 1.0, 1.0) / 1000.0)
+                continue
+            try:
+                res = tk.result(timeout=900.0)
+            except Exception as e:
+                with lock:
+                    out["errors"].append(f"{i}: {type(e).__name__}: {e}")
+                return
+            with lock:
+                out["resp"].append(time.perf_counter() - submit_t)
+                if collect:
+                    out["results"][i] = np.asarray(res["tokens"])
+            return
+        with lock:
+            out["errors"].append(f"{i}: starved after 500 refusals")
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(arrivals))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    out["wall"] = time.perf_counter() - t0
+    return out
+
+
+def rows() -> list[Row]:
+    cfg = R.get_config("paper-gpt-small")
+    model, params = build(cfg)
+    server = NDIFServer()
+    server.host("live", model, params, policy="continuous",
+                num_slots=NUM_SLOTS, slot_max_len=SLOT_MAX_LEN,
+                max_queue_depth=MAX_QUEUE_DEPTH)
+    client = NDIFClient(LoopbackTransport(server.handle), "live")
+    engine = server.engines["live"]
+    jobs = make_jobs(cfg)
+
+    # solo references (front door idle: nothing competes for the engine) —
+    # also warms the prefill/decode/fused executables for this bucket
+    refs = [np.asarray(client.generate(toks, n)["tokens"])
+            for toks, n in jobs]
+
+    rng = np.random.default_rng(23)
+    job_of = rng.integers(0, N_JOBS, N_CLIENTS)
+
+    # --- warmup: cover every admission-group row count 1..NUM_SLOTS (each
+    # group size is a distinct prefill/write_rows shape) plus the window
+    # ladder, so the measured phase hits only cached executables
+    for g in range(1, NUM_SLOTS + 1):
+        tickets = [client.submit(*jobs[k % N_JOBS]) for k in range(g)]
+        for tk in tickets:
+            tk.result(timeout=900.0)
+
+    # calibrate offered load to THIS machine: ~1.2x the loop's measured
+    # service capacity, so the queue genuinely builds without starving
+    step = engine.stats.step_cost_ema or 0.01
+    mean_tokens = float(np.mean([n for _, n in jobs]))
+    service_rate = NUM_SLOTS / (mean_tokens * step)  # requests/s capacity
+    gaps = rng.exponential(1.0 / (1.2 * service_rate), N_CLIENTS)
+    arrivals = np.cumsum(gaps)
+
+    # --- stabilization pass: absorb any executable this exact arrival
+    # pattern still manages to need (first fused windows, odd group mixes)
+    run_load(client, jobs, arrivals[: N_CLIENTS // 4],
+             job_of, collect=False)
+
+    out: list[Row] = []
+    for attempt in range(2):  # one retry absorbs shared-CPU noise
+        compiles_before = engine.stats.compiles
+        load = run_load(client, jobs, arrivals, job_of, collect=True)
+        compiles_delta = engine.stats.compiles - compiles_before
+        assert not load["errors"], load["errors"][:5]
+        assert len(load["resp"]) == N_CLIENTS, len(load["resp"])
+
+        # bit-exact vs solo, for every client, streamed or batch
+        for i, toks_out in load["results"].items():
+            np.testing.assert_array_equal(
+                toks_out, refs[job_of[i]],
+                err_msg=f"client {i} diverged from solo",
+            )
+
+        # zero steady-state recompiles
+        assert compiles_delta == 0, (
+            f"measured phase performed {compiles_delta} XLA traces"
+        )
+
+        snap = engine.stats.snapshot()
+        assert snap["queue_depth_max"] <= MAX_QUEUE_DEPTH, (
+            snap["queue_depth_max"], MAX_QUEUE_DEPTH
+        )
+
+        resp = np.asarray(load["resp"])
+        p50 = float(np.percentile(resp, 50))
+        p95 = float(np.percentile(resp, 95))
+        total_tokens = int(sum(jobs[job_of[i]][1] for i in range(N_CLIENTS)))
+        tokens_per_s = total_tokens / load["wall"]
+        ttfts = [t["time_to_first_token"] for t in snap["tickets"]
+                 if t.get("time_to_first_token") is not None]
+        ttft_p95 = float(np.percentile(ttfts, 95)) if ttfts else 0.0
+
+        # scale-invariant SLO: the whole offered load, served at the
+        # measured steady-state step cost by NUM_SLOTS rows, takes
+        # ~total_tokens/NUM_SLOTS steps; p95 must stay within a small
+        # multiple of that full-drain bound (queueing included)
+        step_now = engine.stats.step_cost_ema
+        drain_bound = (total_tokens / NUM_SLOTS) * step_now
+        floor_rate = 0.25 * NUM_SLOTS / step_now  # >=25% of ideal tokens/s
+        ok_p95 = p95 <= 3.0 * drain_bound
+        ok_thr = tokens_per_s >= floor_rate
+        if not (ok_p95 and ok_thr) and attempt == 0:
+            continue  # noise retry
+        assert ok_p95, (f"p95 {p95 * 1e3:.0f}ms vs bound "
+                        f"{3.0 * drain_bound * 1e3:.0f}ms")
+        assert ok_thr, (f"{tokens_per_s:.1f} tok/s vs floor "
+                        f"{floor_rate:.1f}")
+        break
+
+    # --- over-budget burst: rapid-fire submits from one thread must hit
+    # the structured refusal, and the system keeps serving afterwards
+    burst_refusals = []
+    burst_tickets = []
+    for _ in range(MAX_QUEUE_DEPTH + 24):
+        try:
+            burst_tickets.append(client.submit(*jobs[0]))
+        except AdmissionRefused as e:
+            burst_refusals.append(e)
+    assert burst_refusals, "over-budget burst was never refused"
+    assert all(e.code == "backpressure" for e in burst_refusals)
+    assert all(e.retry_after_ms and e.retry_after_ms > 0
+               for e in burst_refusals)
+    for tk in burst_tickets:
+        np.testing.assert_array_equal(
+            np.asarray(tk.result(timeout=900.0)["tokens"]), refs[0]
+        )
+
+    snap = engine.stats.snapshot()
+    server.shutdown()
+    out.append(Row(
+        f"live_serving/poisson/clients_{N_CLIENTS}",
+        float(np.mean(resp)) * 1e6,
+        f"tok_s={tokens_per_s:.1f};p95_ms={p95 * 1e3:.1f};"
+        f"refused={load['refused'] + len(burst_refusals)}",
+        extra={
+            "tokens_per_s": round(tokens_per_s, 2),
+            "p50_ms": round(p50 * 1e3, 3),
+            "p95_ms": round(p95 * 1e3, 3),
+            "ttft_p95_ms": round(ttft_p95 * 1e3, 3),
+            "mean_ms": round(float(np.mean(resp)) * 1e3, 3),
+            "wall_s": round(load["wall"], 3),
+            "clients": N_CLIENTS,
+            "refused_backpressure": load["refused"],
+            "burst_refusals": len(burst_refusals),
+            "queue_depth_max": snap["queue_depth_max"],
+            "rejected_submissions": snap["rejected_submissions"],
+            "stream_chunks": snap["stream_chunks"],
+            "compiles_measured_phase": 0,
+            "step_cost_ema_ms": round(snap["step_cost_ema"] * 1e3, 3),
+            "prefill_cost_ema_ms": round(
+                snap["prefill_cost_ema"] * 1e3, 3),
+        },
+    ))
+    return out
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

@@ -18,6 +18,9 @@ One module per paper table/figure:
                                 vs eager per-step (plain + steered)
   compiled_islands           -> log/grad/stop workloads on the fused path
                                 vs the eager islands they used to be
+  live_serving               -> 200 real client threads through the live
+                                threaded front door (Poisson arrivals,
+                                streaming, backpressure, zero recompiles)
   kernel_bench               -> kernels/fallbacks microbench
 
 Besides the CSV on stdout, every module's rows are written to
@@ -43,6 +46,7 @@ MODULES = [
     "benchmarks.gen_decode",
     "benchmarks.fused_decode",
     "benchmarks.compiled_islands",
+    "benchmarks.live_serving",
     "benchmarks.kernel_bench",
 ]
 

@@ -11,6 +11,8 @@ Comparison rules, per (benchmark, row name):
   * ``us_per_call`` must satisfy fresh <= baseline * (1 + tol);
   * any numeric ``extra`` key containing ``p95`` (the tail-latency stats the
     co-tenancy benchmarks attach) is held to the same tolerance;
+  * any numeric ``extra`` key containing ``tokens_per_s`` (live-serving
+    throughput) is gated HIGHER-better: fresh >= baseline * (1 - tol);
   * rows/benchmarks present only in one side are reported but never fail
     (new benchmarks land without a baseline; a partial --only run skips
     modules).
@@ -55,6 +57,15 @@ def p95_keys(row: dict) -> dict[str, float]:
     return out
 
 
+def throughput_keys(row: dict) -> dict[str, float]:
+    """Numeric extra entries that are throughputs (HIGHER is better)."""
+    out = {}
+    for k, v in (row.get("extra") or {}).items():
+        if "tokens_per_s" in k and isinstance(v, (int, float)):
+            out[k] = float(v)
+    return out
+
+
 def compare_file(
     name: str, fresh: dict[str, dict], base: dict[str, dict], tol: float
 ) -> tuple[list[str], list[str]]:
@@ -81,6 +92,17 @@ def compare_file(
                 regressions.append(
                     f"{name}:{row_name}: {k} {fval:.1f} vs baseline "
                     f"{bval:.1f} (+{(fval / bval - 1) * 100:.0f}%)"
+                )
+        fthr, bthr = throughput_keys(f), throughput_keys(b)
+        for k, bval in bthr.items():
+            fval = fthr.get(k)
+            if fval is None or bval <= 0:
+                continue
+            if fval < bval * (1.0 - tol):
+                regressions.append(
+                    f"{name}:{row_name}: {k} {fval:.1f} vs baseline "
+                    f"{bval:.1f} ({(fval / bval - 1) * 100:.0f}%, "
+                    f"higher-better tol {tol * 100:.0f}%)"
                 )
     for row_name in fresh:
         if row_name not in base:

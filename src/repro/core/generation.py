@@ -728,6 +728,7 @@ class DecodeLoop:
         paged: bool = False,
         page_size: int = 16,
         num_pages: int | None = None,
+        on_segment: Callable[[int, list["SlotRequest"]], None] | None = None,
     ) -> None:
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
@@ -743,6 +744,15 @@ class DecodeLoop:
         self._write_rows_fn = write_rows_fn or model.cache_write_rows
         self._clear_rows_fn = clear_rows_fn or model.cache_clear_rows
         self.stats = stats
+        # Segment-boundary hook: called as ``on_segment(k, retired)`` after
+        # every decode window (fused or eager) with the number of steps it
+        # served and the requests that retired inside it (already off the
+        # slot table; every other resident has fresh ``new_tokens`` /
+        # ``saves`` / ``logs`` entries).  The live front door streams
+        # incremental chunks from here — a driver looping
+        # ``step_fused(fusable_steps())`` would otherwise only observe
+        # retirement boundaries.
+        self.on_segment = on_segment
         self.schedule = _step_order(model.site_schedule(mode))
         # Fused decode: step-uniform stretches of the loop run as ONE
         # lax.scan dispatch.  `fused_fn(graph, n_steps)` supplies the
@@ -1443,6 +1453,11 @@ class DecodeLoop:
                     sr.error = err
                     self._retire(sr)
                     evicted.append(sr)
+                if self.on_segment is not None and evicted:
+                    # zero-step boundary: evictions surface immediately
+                    # (their channels get the error without waiting for the
+                    # retried step's segment)
+                    self.on_segment(0, evicted)
                 return evicted + self.step()
             for i, ((sr, sl), saves_r) in enumerate(
                 zip(need, split_results(sl_saves, merged))
@@ -1474,6 +1489,8 @@ class DecodeLoop:
                 self.stats.record_eager_step()
         for sr in retired:
             self._retire(sr)
+        if self.on_segment is not None:
+            self.on_segment(1, retired)
         return retired
 
     def _isolate_offenders(self, need, pos, exc) -> list[tuple]:
@@ -1792,6 +1809,8 @@ class DecodeLoop:
         retired = [sr for sr in self.resident if sr.done()]
         for sr in retired:
             self._retire(sr)
+        if self.on_segment is not None:
+            self.on_segment(plan.k, retired)
         return retired
 
     def _retire(self, sr: SlotRequest) -> None:

@@ -721,11 +721,19 @@ def run_interleaved(
     inputs: dict[str, Any] | None = None,
     const_env: dict[int, Any] | None = None,
     stop_after_site: int | None = None,
+    log_cb: Callable[[int, Any], None] | None = None,
 ) -> tuple[Any, dict[str, Any], list[tuple[int, Any]]]:
     """Run ``model_fn(*args, **kwargs)`` with ``graph`` interleaved.
 
     Pure function of its inputs — safe to wrap in ``jax.jit`` (the serving
     engine does).  Returns ``(model_output, saves, logs)``.
+
+    ``log_cb`` lowers ``log`` nodes to ``jax.debug.callback`` so the body
+    stays compilable under an outer ``jax.jit`` — the callback fires on
+    every EXECUTION (cache hits included), not just at trace time; the
+    returned ``logs`` list is then empty and the caller drains its sink
+    (see :class:`LogSink`).  Without it, logs are traced values appended at
+    trace time — correct only for unjitted callers.
 
     ``stop_after_site`` (``tracer.stop()``) abandons the model forward right
     after the schedule index fires — typically
@@ -743,6 +751,7 @@ def run_interleaved(
         return _run_grad(
             plan, model_fn, args, kwargs, inputs=inputs,
             const_env=const_env, stop_after=stop_after_site,
+            log_cb=log_cb,
         )
 
     cross_shapes = None
@@ -753,6 +762,7 @@ def run_interleaved(
         )
     state = InterleaveState(plan, inputs=inputs, const_env=const_env,
                             stop_after=stop_after_site,
+                            log_cb=log_cb,
                             cross_shapes=cross_shapes)
     taps.push_state(state)
     try:

@@ -731,10 +731,26 @@ class Tracer:
             if self.invokes:
                 self._lower()
                 raw = backend.execute(self)
+                # reserved logs key travels OUTSIDE the per-invoke save
+                # namespace: pop before the prefix-keyed split, attribute
+                # per invoke by merged node-id segment
+                logs = raw.pop("__logs__", None) if isinstance(raw, dict) \
+                    else None
+                if logs:
+                    self.logs = [(int(n), v) for n, v in logs]
+                    for k, inv in enumerate(self.invokes):
+                        inv.logs = [
+                            e for e in self.logs
+                            if self._merged.owner_of(e[0]) == k
+                        ]
                 return self._finish_invoke_results(
                     split_results(raw, self._merged)
                 )
             self._results = backend.execute(self)
+            if isinstance(self._results, dict):
+                logs = self._results.pop("__logs__", None)
+                if logs:
+                    self.logs = [(int(n), v) for n, v in logs]
             return self._results
         if self._scan_pending:
             self._scan_pending = False
@@ -1157,11 +1173,12 @@ class GenerateTracer(Tracer):
             results = []
             for wire in wires:
                 saves = dict(wire)
+                logs = saves.pop("__logs__", None) or []
                 results.append(GenerationResult(
                     tokens=np.asarray(saves.pop("tokens")),
                     logits=saves.pop("logits"),
                     saves=saves,
-                    logs=[],
+                    logs=[(int(n), v) for n, v in logs],
                 ))
             return self._finish_generation_invokes(results)
         extras = {k: np.asarray(v) for k, v in self.model_kwargs.items()}
@@ -1174,6 +1191,9 @@ class GenerateTracer(Tracer):
             **extras,
         )
         saves = dict(wire)
+        logs = saves.pop("__logs__", None)
+        if logs:
+            self.logs = [(int(n), v) for n, v in logs]
         # reserved keys: the generated ids and last-step logits
         self.output_tokens = np.asarray(saves.pop("tokens"))
         self.output_logits = saves.pop("logits")
@@ -1441,6 +1461,10 @@ class Session:
         if self.remote:
             results = self.backend.execute_session(self)
             for tracer, res in zip(self.tracers, results):
+                logs = res.pop("__logs__", None) if isinstance(res, dict) \
+                    else None
+                if logs:
+                    tracer.logs = [(int(n), v) for n, v in logs]
                 if tracer.invokes:
                     tracer._finish_invoke_results(
                         split_results(res, tracer._merged)

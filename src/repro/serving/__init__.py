@@ -1,16 +1,25 @@
 """NDIF-style shared inference service (paper §3.3)."""
-from repro.serving.client import NDIFClient
+from repro.serving.client import AdmissionRefused, LiveTicket, NDIFClient
 from repro.serving.engine import InferenceEngine
+from repro.serving.frontdoor import AdmissionError, FrontDoor
 from repro.serving.scheduler import CoTenantScheduler, Request, Ticket
 from repro.serving.server import NDIFServer
-from repro.serving.transport import LoopbackTransport
+from repro.serving.stream import Chunk, StreamChannel
+from repro.serving.transport import LoopbackTransport, TransportSession
 
 __all__ = [
-    "NDIFClient",
-    "InferenceEngine",
+    "AdmissionError",
+    "AdmissionRefused",
+    "Chunk",
     "CoTenantScheduler",
-    "Request",
-    "Ticket",
-    "NDIFServer",
+    "FrontDoor",
+    "InferenceEngine",
+    "LiveTicket",
     "LoopbackTransport",
+    "NDIFClient",
+    "NDIFServer",
+    "Request",
+    "StreamChannel",
+    "Ticket",
+    "TransportSession",
 ]

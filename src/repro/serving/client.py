@@ -4,17 +4,107 @@ Serializes the tracer's intervention graph + model inputs, ships them over a
 transport, and inserts the returned ``.save()`` leaves back into the local
 trace — the paper's "local WebSocket client pulls the final results from the
 Object Store and inserts the result back into the local intervention graph".
+
+Live serving: :meth:`NDIFClient.submit` posts work through the server's
+threaded front door and returns a :class:`LiveTicket` immediately — poll
+it, iterate its :meth:`~LiveTicket.chunks`, or block on
+:meth:`~LiveTicket.result`.  A refused submission (queue full, SLO
+infeasible, capacity) raises :class:`AdmissionRefused` carrying the
+structured payload (``code``, ``retry_after_ms``, ...) so callers can
+back off instead of string-matching error text.
 """
 from __future__ import annotations
 
 import json
-from typing import Any
+from typing import Any, Iterator
 
 import numpy as np
 
 from repro.core.serialize import decode_value, encode_value, graph_to_json
+from repro.serving.scheduler import LOGS_KEY
+from repro.serving.stream import assemble_result, check_frames
 
-__all__ = ["NDIFClient"]
+__all__ = ["AdmissionRefused", "LiveTicket", "NDIFClient"]
+
+
+class AdmissionRefused(RuntimeError):
+    """Structured front-door refusal; ``payload["code"]`` distinguishes
+    ``backpressure`` / ``capacity`` / ``slo`` / ``closed`` and
+    backpressure refusals carry ``retry_after_ms``."""
+
+    def __init__(self, payload: dict) -> None:
+        super().__init__(payload.get("error", "submission refused"))
+        self.payload = dict(payload)
+        self.code = payload.get("code")
+        self.retry_after_ms = payload.get("retry_after_ms")
+
+
+class LiveTicket:
+    """Handle to one in-flight front-door submission.
+
+    All messages for this ticket travel over one transport session (byte
+    metering per conversation); chunks accumulate internally so
+    :meth:`result` can frame-check the FULL sequence (gapless seqs, no
+    cross-ticket chunks) before assembling.
+    """
+
+    def __init__(self, client: "NDIFClient", ticket_id: Any) -> None:
+        self.client = client
+        self.id = ticket_id
+        session = getattr(client.transport, "session", None)
+        self._transport = session() if session is not None else None
+        self._chunks: list[dict] = []
+        self._done = False
+
+    def _fetch(self, kind: str, timeout: float | None = None) -> list[dict]:
+        msg = {"kind": kind, "model": self.client.model_name,
+               "ticket": self.id}
+        if timeout is not None:
+            msg["timeout"] = timeout
+        reply = self.client._roundtrip(msg, transport=self._transport)
+        fresh = reply["chunks"]
+        self._chunks.extend(fresh)
+        if reply["done"]:
+            self._done = True
+            if self._transport is not None:
+                self._transport.close()
+        return fresh
+
+    def poll(self) -> list[dict]:
+        """Non-blocking: whatever chunks arrived since the last call."""
+        if self._done:
+            return []
+        return self._fetch("poll")
+
+    def chunks(self, timeout: float = 30.0) -> Iterator[dict]:
+        """Iterate chunks as the engine produces them (each wait blocks up
+        to ``timeout`` on the server side, then retries)."""
+        for c in list(self._chunks):
+            yield c
+        while not self._done:
+            for c in self._fetch("stream", timeout=timeout):
+                yield c
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self, timeout: float = 120.0) -> dict:
+        """Block until completion, verify framing, assemble the final
+        result dict (identical to the synchronous ``generate``/``trace``
+        form; streamed token chunks concatenate bit-exact)."""
+        import time
+
+        deadline = time.perf_counter() + timeout
+        while not self._done:
+            if time.perf_counter() > deadline:
+                raise TimeoutError(f"ticket {self.id!r} still running")
+            self._fetch("stream", timeout=5.0)
+        check_frames(self._chunks, self.id)
+        result, logs = assemble_result(self._chunks)
+        if logs:
+            result[LOGS_KEY] = logs
+        return result
 
 
 class NDIFClient:
@@ -191,9 +281,55 @@ class NDIFClient:
         }
         return self._roundtrip(msg)["results"]
 
+    # Live serving (the threaded front door) ----------------------------
+    def submit(self, tokens=None, max_new_tokens: int | None = None, *,
+               graph=None, batch: dict | None = None, stream: bool = False,
+               slo_ms: float | None = None, lengths=None,
+               **extras) -> LiveTicket:
+        """Post work through the live front door; returns a
+        :class:`LiveTicket` as soon as the server admits it (the decode
+        loop keeps stepping co-tenants while this request queues).
+
+        ``stream=True`` asks for incremental chunks — tokens per fused
+        segment, saves and ``log()`` values as they flush; the default
+        delivers one ``done`` chunk at retirement.  ``slo_ms`` opts into
+        SLO-aware admission: the server refuses (:class:`AdmissionRefused`,
+        ``code="slo"``) when the projected completion already blows the
+        budget.  Raises :class:`AdmissionRefused` on structured refusals.
+        """
+        if batch is None:
+            batch = {"tokens": np.asarray(tokens), **extras}
+            if lengths is not None:
+                batch["lengths"] = np.asarray(lengths, np.int32)
+        n_steps = None if max_new_tokens is None else int(max_new_tokens)
+        self._preflight_wire(graph, n_steps=n_steps)
+        msg = {
+            "kind": "submit",
+            "model": self.model_name,
+            "batch": {k: np.asarray(v) for k, v in batch.items()},
+            "stream": bool(stream),
+        }
+        if n_steps is not None:
+            msg["max_new_tokens"] = n_steps
+        if graph is not None and graph.nodes:
+            msg["graph"] = graph_to_json(graph)
+        if slo_ms is not None:
+            msg["slo_ms"] = float(slo_ms)
+        payload = json.dumps(encode_value(msg),
+                             separators=(",", ":")).encode()
+        raw = self.transport.request(payload)
+        reply = decode_value(json.loads(raw.decode()))
+        if not reply.get("ok"):
+            if reply.get("code") is not None:
+                raise AdmissionRefused(reply)
+            raise RuntimeError(f"NDIF error: {reply.get('error')}")
+        return LiveTicket(self, reply["ticket"])
+
     def stats(self) -> dict:
         """The hosted engine's EngineStats snapshot (compiles, generations,
-        merged-group sizes, padding waste) for capacity planning."""
+        merged-group sizes, padding waste, live front-door counters —
+        queue depth, rejected submissions, stream chunks, per-ticket
+        queue_wait / time_to_first_token records) for capacity planning."""
         return self._roundtrip(
             {"kind": "stats", "model": self.model_name}
         )["results"]
@@ -217,9 +353,9 @@ class NDIFClient:
             batch[k] = np.asarray(v)
         return batch
 
-    def _roundtrip(self, msg: dict) -> dict:
+    def _roundtrip(self, msg: dict, transport: Any | None = None) -> dict:
         payload = json.dumps(encode_value(msg), separators=(",", ":")).encode()
-        raw = self.transport.request(payload)
+        raw = (transport or self.transport).request(payload)
         reply = decode_value(json.loads(raw.decode()))
         if not reply.get("ok"):
             raise RuntimeError(f"NDIF error: {reply.get('error')}")

@@ -85,6 +85,18 @@ class EngineStats:
         self.pages_free = 0      # gauge: pages currently free
         self.alloc_retries = 0   # admissions requeued on pool exhaustion
         self.frag_events_avoided = 0  # admissions served NON-contiguously
+        # live front door (threaded serving: repro.serving.frontdoor)
+        self.queue_depth = 0           # gauge: submissions waiting right now
+        self.queue_depth_max = 0       # high-water mark of the gauge
+        self.rejected_submissions = 0  # submits refused (backpressure / SLO)
+        self.stream_chunks = 0         # incremental chunks pushed to clients
+        # measured per-step / per-prefill cost EMAs (seconds) — the SLO
+        # planner prices admission decisions against these
+        self.step_cost_ema = 0.0
+        self.prefill_cost_ema = 0.0
+        self._cost_alpha = 0.3
+        # recent completed front-door tickets (queue_wait / ttft / response)
+        self.ticket_records: list[dict] = []
 
     def record_group(self, n_requests: int, padded: int, real: int) -> None:
         """Scheduler hook: one parallel co-tenancy group was executed."""
@@ -153,6 +165,46 @@ class EngineStats:
         rejection (a requeue or a failure)."""
         self.frag_events_avoided += 1
 
+    # ---------------------------------------------------------- front door
+    def record_queue_depth(self, depth: int) -> None:
+        """Gauge update from the front door's submission inbox."""
+        self.queue_depth = int(depth)
+        if self.queue_depth > self.queue_depth_max:
+            self.queue_depth_max = self.queue_depth
+
+    def record_rejected_submission(self) -> None:
+        """A submit was refused with structured backpressure / SLO error."""
+        self.rejected_submissions += 1
+
+    def record_stream_chunks(self, n: int) -> None:
+        """``n`` incremental chunks were pushed onto result channels."""
+        self.stream_chunks += int(n)
+
+    def record_step_cost(self, seconds_per_step: float) -> None:
+        """EMA of the measured per-decode-step wall cost."""
+        s = float(seconds_per_step)
+        a = self._cost_alpha
+        self.step_cost_ema = (
+            s if self.step_cost_ema == 0.0
+            else (1 - a) * self.step_cost_ema + a * s
+        )
+
+    def record_prefill_cost(self, seconds: float) -> None:
+        """EMA of the measured admission (prefill) wall cost."""
+        s = float(seconds)
+        a = self._cost_alpha
+        self.prefill_cost_ema = (
+            s if self.prefill_cost_ema == 0.0
+            else (1 - a) * self.prefill_cost_ema + a * s
+        )
+
+    def record_ticket(self, record: dict) -> None:
+        """One front-door ticket completed; keep a bounded recent history
+        (queue_wait and time_to_first_token per ticket, for the ``stats``
+        wire endpoint)."""
+        self.ticket_records.append(dict(record))
+        del self.ticket_records[:-self.GROUP_HISTORY]
+
     def snapshot(self) -> dict:
         """JSON-ready view for the server's ``stats`` endpoint."""
         cells = self.padded_tokens + self.real_tokens
@@ -197,6 +249,13 @@ class EngineStats:
             ),
             "alloc_retries": self.alloc_retries,
             "frag_events_avoided": self.frag_events_avoided,
+            "queue_depth": self.queue_depth,
+            "queue_depth_max": self.queue_depth_max,
+            "rejected_submissions": self.rejected_submissions,
+            "stream_chunks": self.stream_chunks,
+            "step_cost_ema": self.step_cost_ema,
+            "prefill_cost_ema": self.prefill_cost_ema,
+            "tickets": [dict(r) for r in self.ticket_records],
         }
 
 
@@ -429,6 +488,28 @@ class InferenceEngine:
     ) -> tuple[dict[str, Any], Any]:
         """Run ``graph`` interleaved with one forward. Returns (saves, out).
 
+        Compatibility wrapper over :meth:`execute_logged` — callers that
+        need ``log()`` values (the scheduler, which attributes them per
+        ticket) use that form directly.
+        """
+        saves, out, _logs = self.execute_logged(graph, batch, stop=stop)
+        return saves, out
+
+    def execute_logged(
+        self, graph: InterventionGraph, batch: dict, *, stop: bool = False
+    ) -> tuple[dict[str, Any], Any, list[tuple[int, Any]]]:
+        """Run ``graph`` interleaved with one forward.
+        Returns ``(saves, out, logs)``.
+
+        ``log`` nodes lower to ``jax.debug.callback`` into the module
+        :data:`~repro.core.interleave.LOG_SINK` INSIDE the jitted program —
+        the callback fires on every execution (cache hits included), so the
+        single-forward jit path no longer drops ``log()`` values.  The sink
+        is cleared before dispatch (stale entries from unrelated dispatches
+        must not be attributed here) and drained after; entries keep the
+        graph's node ids for per-request attribution by merged-graph
+        segment.
+
         ``stop=True`` (``tracer.stop()`` shipped over the wire) truncates
         the forward after the last site the graph references — BEFORE
         lowering: the interleaver raises ``EarlyStop`` inside the traced
@@ -438,11 +519,14 @@ class InferenceEngine:
         model compute AND per-call dispatch.
         """
         from repro.core import analysis
+        from repro.core.interleave import LOG_SINK
 
         pmode = analysis.preflight_mode()
         if pmode != "off" and graph.nodes:
             self.preflight(graph, batch).enforce(pmode)
         graph.validate(self.schedule.order)
+        has_log = any(n.op == "log" for n in graph.nodes)
+        log_cb = LOG_SINK.emit if has_log else None
         if stop:
             from repro.core.interleave import last_referenced_site
 
@@ -475,6 +559,7 @@ class InferenceEngine:
                         mode=self.mode,
                         const_env=consts,
                         stop_after_site=stop_idx,
+                        log_cb=log_cb,
                     )
                     return saves
 
@@ -482,11 +567,14 @@ class InferenceEngine:
             else:
                 self.stats.cache_hits += 1
             t0 = time.perf_counter()
+            if has_log:
+                LOG_SINK.drain()  # clear stale entries before this dispatch
             saves = fn(self.params, batch, const_env)
             saves = jax.tree.map(lambda x: jax.device_get(x), saves)
+            logs = LOG_SINK.drain() if has_log else []
             self.stats.exec_seconds += time.perf_counter() - t0
             self.stats.executions += 1
-            return saves, None
+            return saves, None, logs
         const_env = {
             n.id: n.args[0] for n in graph.nodes if n.op == "constant"
         }
@@ -503,7 +591,7 @@ class InferenceEngine:
 
             @partial(jax.jit, static_argnames=())
             def fn(params, batch_, consts):
-                out, saves, logs = run_interleaved(
+                out, saves, _logs = run_interleaved(
                     self._model_fn,
                     graph,
                     self.schedule,
@@ -511,6 +599,7 @@ class InferenceEngine:
                     {},
                     mode=self.mode,
                     const_env=consts,
+                    log_cb=log_cb,
                 )
                 return saves, out
 
@@ -518,11 +607,14 @@ class InferenceEngine:
         else:
             self.stats.cache_hits += 1
         t0 = time.perf_counter()
+        if has_log:
+            LOG_SINK.drain()  # clear stale entries before this dispatch
         saves, out = fn(self.params, batch, const_env)
         saves = jax.tree.map(lambda x: jax.device_get(x), saves)
+        logs = LOG_SINK.drain() if has_log else []
         self.stats.exec_seconds += time.perf_counter() - t0
         self.stats.executions += 1
-        return saves, out
+        return saves, out, logs
 
     # ------------------------------------------------------------ generate
     def generate(
@@ -631,7 +723,7 @@ class InferenceEngine:
     def start_decode_loop(
         self, num_slots: int, max_len: int, *, cache_kind: str = "full",
         paged: bool = True, page_size: int = 16,
-        num_pages: int | None = None,
+        num_pages: int | None = None, on_segment: Callable | None = None,
     ):
         """A persistent slot-table decode loop (continuous batching).
 
@@ -659,6 +751,7 @@ class InferenceEngine:
             paged=paged,
             page_size=page_size,
             num_pages=num_pages,
+            on_segment=on_segment,
             prefill_fn=lambda p, b, ml: self._prefill_jit(p, b, max_len=ml),
             decode_fn=self._decode_jit,
             empty_cache_fn=lambda p, b, bs, ml, kind: self._empty_cache_jit(

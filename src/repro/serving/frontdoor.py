@@ -1,0 +1,551 @@
+"""Live NDIF front door: a threaded serving loop with streaming results.
+
+Everything before this module drives the serving stack *synchronously* —
+a caller submits, then calls ``drain()``/``pump()`` on the scheduler and
+blocks until results exist.  The :class:`FrontDoor` turns that into a live
+service: a dedicated **engine thread** steps the persistent
+:class:`~repro.core.generation.DecodeLoop` continuously, a thread-safe
+submission inbox admits new work at decode-step boundaries (a request
+arriving mid-decode joins at the next boundary, it never waits for the
+loop to empty), and every ticket gets a :class:`~repro.serving.stream.
+StreamChannel` that the engine thread pushes incremental chunks onto as
+the loop crosses segment boundaries.
+
+Threading model — ALL JAX compute happens on the ONE engine thread.
+Client threads only append to the inbox (under the door lock) and drain
+stream channels (each channel has its own lock); nothing else is shared
+mutable state.  The engine thread owns the scheduler queue, the decode
+loop and the channels' producer side, so the synchronous scheduler
+internals (`_serve_single_forwards`, `_admit_arrivals`) are reused as-is,
+single-threaded, with zero locking added inside them.
+
+Backpressure + SLO-aware admission happen in :meth:`FrontDoor.submit`,
+on the CLIENT's thread, before anything is queued:
+
+  * bounded queue depth — when inbox + scheduler backlog reach
+    ``max_queue_depth`` the submission is refused with a structured
+    :class:`AdmissionError` carrying ``retry_after_ms`` (the projected
+    drain time of the current backlog from measured step costs);
+  * capacity preflight (pages-aware) — a request whose rows, positions or
+    lifetime KV page need exceed the slot table / page pool is refused
+    immediately (``code="capacity"``) instead of being accepted and then
+    stalling the live loop with a solo fallback;
+  * SLO admission — a request submitted with ``slo_ms`` is refused
+    (``code="slo"``) when even the OPTIMISTIC completion projection
+    (queue wait + prefill + N decode steps, all from the
+    ``EngineStats`` cost EMAs) exceeds its budget: admitting it would
+    burn slots on an answer that arrives too late.
+
+The SLO planner also shapes execution: the fused-window picker quantizes
+``fusable_steps()`` down a power-of-two ladder (so steady state touches a
+handful of compiled window sizes — zero recompiles) and caps the window
+so the tightest streaming ticket gets chunks at its SLO-derived cadence
+instead of waiting for the slowest co-tenant's retirement.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.serving.scheduler import (
+    LOGS_KEY,
+    CoTenantScheduler,
+    Request,
+    Ticket,
+    _attach_logs,
+    _bucket_ceiling,
+    _req_rows,
+)
+from repro.serving.stream import StreamChannel
+
+__all__ = ["AdmissionError", "FrontDoor"]
+
+
+class AdmissionError(RuntimeError):
+    """Structured submission refusal (backpressure / capacity / SLO / closed).
+
+    ``payload`` is the wire form: always ``error`` (human-readable) and
+    ``code`` (machine-readable: ``backpressure`` | ``capacity`` | ``slo``
+    | ``closed``), plus refusal-specific fields — backpressure carries
+    ``retry_after_ms`` and the queue depths, SLO refusals carry the
+    projection that blew the budget.
+    """
+
+    def __init__(self, message: str, code: str, **fields: Any) -> None:
+        super().__init__(message)
+        self.code = code
+        self.payload = {"error": message, "code": code, **fields}
+
+
+class _Progress:
+    """Engine-thread-private per-ticket streaming cursor: how much of the
+    resident SlotRequest's accumulated state has already been chunked."""
+
+    __slots__ = ("req", "ticket", "stream", "slo_ms", "steps", "save_keys",
+                 "logs", "single_forward")
+
+    def __init__(self, req: Request, ticket: Ticket, stream: bool,
+                 slo_ms: float | None) -> None:
+        self.req = req
+        self.ticket = ticket
+        self.stream = bool(stream)
+        self.slo_ms = slo_ms
+        self.steps = 0                  # decode steps already emitted
+        self.save_keys: set = set()     # save names already emitted
+        self.logs = 0                   # log entries already emitted
+        self.single_forward = req.max_new_tokens is None
+
+
+class FrontDoor:
+    """The live, threaded admission/streaming layer over one engine.
+
+    One front door owns one engine's continuous decode loop; create it,
+    ``submit()`` from any number of client threads, drain chunks via
+    ``take()`` (the server's poll/stream kinds call this), ``close()``
+    when done — residents drain, queued work is rejected with a
+    structured error, and the engine thread joins.
+    """
+
+    #: fused-window ladder — steady state compiles only these step counts
+    WINDOW_LADDER = (1, 2, 4, 8, 16, 32, 64)
+
+    def __init__(
+        self,
+        engine: Any,
+        *,
+        num_slots: int = 8,
+        slot_max_len: int = 160,
+        max_queue_depth: int = 32,
+        pad_slack: int = 16,
+        stream_chunk_ms: float = 50.0,
+        idle_wait: float = 0.05,
+    ) -> None:
+        self.engine = engine
+        self.max_queue_depth = int(max_queue_depth)
+        # SLO-derived default cadence for streaming tickets without a
+        # budget of their own: cap fused windows so a chunk lands roughly
+        # this often once step costs are measured.
+        self.stream_chunk_ms = float(stream_chunk_ms)
+        self.idle_wait = float(idle_wait)
+        # The front door owns its OWN continuous scheduler (and loop): the
+        # engine thread is the only caller of its internals, so the
+        # synchronous wire kinds on a co-hosted server never race it.
+        self.sched = CoTenantScheduler(
+            engine,
+            policy="continuous",
+            num_slots=num_slots,
+            slot_max_len=slot_max_len,
+            pad_slack=pad_slack,
+        )
+        self.loop = engine.start_decode_loop(
+            num_slots, slot_max_len, on_segment=self._on_segment
+        )
+        self.sched._loop = self.loop  # pre-wired with the segment hook
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        # client threads append here; the engine thread moves entries into
+        # sched.queue at the next boundary
+        self._inbox: list[tuple[Request, Ticket, bool, float | None]] = []
+        # published by the engine thread after every boundary so submit()
+        # can read the scheduler backlog without touching sched.queue
+        self._sched_backlog = 0
+        self._channels: dict[Any, StreamChannel] = {}
+        self._progress: dict[Any, _Progress] = {}
+        self._closing = False
+        self._exc: BaseException | None = None
+        self._thread = threading.Thread(
+            target=self._run, name="frontdoor-engine", daemon=True
+        )
+        self._thread.start()
+
+    # ------------------------------------------------------------ submission
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._inbox) + self._sched_backlog
+
+    def submit(
+        self,
+        req: Request,
+        *,
+        stream: bool = False,
+        slo_ms: float | None = None,
+    ) -> Any:
+        """Admit a request into the live loop; returns its ticket id.
+
+        Runs entirely on the caller's thread: backpressure, capacity and
+        SLO checks happen here and raise :class:`AdmissionError` BEFORE
+        anything is queued, so a refused submission costs zero engine
+        work.  ``stream=True`` asks for incremental chunks (tokens per
+        fused segment, saves/logs as they flush); the default emits one
+        ``done`` chunk at retirement with the full result.
+        """
+        stats = self.engine.stats
+        self._preflight_capacity(req, stats)
+        ticket = Ticket(req.request_id, submit_time=time.perf_counter())
+        with self._wake:
+            if self._closing:
+                stats.record_rejected_submission()
+                raise AdmissionError(
+                    "front door is closed", "closed"
+                )
+            depth = len(self._inbox) + self._sched_backlog
+            stats.record_queue_depth(depth)
+            if depth >= self.max_queue_depth:
+                stats.record_rejected_submission()
+                raise AdmissionError(
+                    f"queue full: {depth} pending >= "
+                    f"max_queue_depth={self.max_queue_depth}",
+                    "backpressure",
+                    retry_after_ms=self._retry_after_ms(depth, stats),
+                    queue_depth=depth,
+                    max_queue_depth=self.max_queue_depth,
+                )
+            if slo_ms is not None:
+                projected = self._project_ms(req, depth, stats)
+                if projected is not None and projected > float(slo_ms):
+                    stats.record_rejected_submission()
+                    raise AdmissionError(
+                        f"SLO infeasible: projected {projected:.1f}ms "
+                        f"> budget {float(slo_ms):.1f}ms",
+                        "slo",
+                        projected_ms=projected,
+                        slo_ms=float(slo_ms),
+                        retry_after_ms=self._retry_after_ms(depth, stats),
+                    )
+            chan = StreamChannel(req.request_id)
+            self._channels[req.request_id] = chan
+            self._progress[req.request_id] = _Progress(
+                req, ticket, stream, slo_ms
+            )
+            self._inbox.append((req, ticket, stream, slo_ms))
+            self._wake.notify()
+        return req.request_id
+
+    def _preflight_capacity(self, req: Request, stats) -> None:
+        """Refuse requests the slot table / page pool can NEVER hold.
+
+        The synchronous scheduler serves these via a solo fallback run;
+        on the live path that fallback would stall every co-tenant for
+        the full solo duration, so the front door refuses instead —
+        pages-aware: a paged loop is sized by its pool, not its rows.
+        """
+        if req.max_new_tokens is None:
+            return  # single-forward traces never touch the slot table
+        loop = self.loop
+        try:
+            rows = _req_rows(req)
+        except Exception:
+            return  # malformed batches fail per-ticket downstream
+        t = np.asarray(req.batch.get("tokens", np.zeros((1, 1))))
+        tw = int(t.shape[1]) if t.ndim >= 2 else 1
+        ceil = _bucket_ceiling(tw, self.sched.pad_slack)
+        if rows > loop.num_slots or (
+            (ceil - 1 if tw > 1 else 0) + req.max_new_tokens > loop.max_len
+        ):
+            stats.record_rejected_submission()
+            raise AdmissionError(
+                f"request can never fit the slot table: {rows} rows / "
+                f"{tw}+{req.max_new_tokens} positions vs "
+                f"{loop.num_slots} slots x {loop.max_len}",
+                "capacity",
+                rows=rows, num_slots=loop.num_slots,
+                positions=tw + req.max_new_tokens, max_len=loop.max_len,
+            )
+        if getattr(loop, "paged", False):
+            lens = req.batch.get("lengths")
+            if lens is not None:
+                need = sum(
+                    loop.request_page_need(int(L), req.max_new_tokens)
+                    for L in np.asarray(lens).reshape(-1)
+                )
+            else:
+                need = rows * loop.request_page_need(tw, req.max_new_tokens)
+            if need > loop.usable_pages():
+                stats.record_rejected_submission()
+                raise AdmissionError(
+                    f"request needs {need} KV pages, pool holds "
+                    f"{loop.usable_pages()}",
+                    "capacity",
+                    page_need=need, usable_pages=loop.usable_pages(),
+                )
+
+    # -------------------------------------------------------- SLO projection
+    def _retry_after_ms(self, depth: int, stats) -> float:
+        """How long until the backlog plausibly drains one slot's worth —
+        the client's structured backoff hint."""
+        per = stats.step_cost_ema or 0.005
+        return max(1.0, 1000.0 * depth * per)
+
+    def _project_ms(self, req: Request, depth: int, stats) -> float | None:
+        """Optimistic completion projection: queue wait (one boundary per
+        queued request ahead) + one prefill + N decode steps, from the
+        measured cost EMAs.  None until costs exist (a cold door admits —
+        it cannot honestly refuse on numbers it has not measured)."""
+        if stats.step_cost_ema <= 0.0:
+            return None
+        n = req.max_new_tokens or 0
+        wait = depth * stats.step_cost_ema
+        return 1000.0 * (
+            wait + stats.prefill_cost_ema + n * stats.step_cost_ema
+        )
+
+    def _pick_window(self) -> int:
+        """Fused-window size for the next segment: the largest ladder rung
+        that fits ``fusable_steps()``, capped by the tightest streaming
+        ticket's chunk cadence (SLO budget over its remaining steps, else
+        the door-wide ``stream_chunk_ms``).  The ladder bounds the set of
+        compiled window executables; the cap bounds time-to-next-chunk."""
+        base = self.loop.fusable_steps()
+        cap = base
+        step = self.engine.stats.step_cost_ema
+        if step > 0.0:
+            for sr in self.loop.resident:
+                prog = self._progress.get(sr.request_id)
+                if prog is None or not prog.stream:
+                    continue
+                if prog.slo_ms is not None:
+                    remaining = max(1, sr.max_new_tokens - sr.t)
+                    budget_ms = float(prog.slo_ms) / remaining
+                else:
+                    budget_ms = self.stream_chunk_ms
+                cap = min(cap, max(1, int(budget_ms / (1000.0 * step))))
+        k = 1
+        for rung in self.WINDOW_LADDER:
+            if rung <= min(base, cap):
+                k = rung
+        return k
+
+    # ------------------------------------------------------- engine thread
+    def _run(self) -> None:
+        try:
+            self._serve_forever()
+        except BaseException as e:  # engine thread must never die silently
+            self._exc = e
+            with self._lock:
+                channels = list(self._channels.values())
+            for chan in channels:
+                try:
+                    chan.push("error", {"error": f"engine thread died: "
+                                                 f"{type(e).__name__}: {e}"},
+                              final=True)
+                except RuntimeError:
+                    pass  # already terminal
+
+    def _serve_forever(self) -> None:
+        sched, loop = self.sched, self.loop
+        while True:
+            with self._wake:
+                while (not self._inbox and not sched.queue
+                       and not loop.resident and not self._closing):
+                    self._wake.wait(self.idle_wait)
+                closing = self._closing
+                moved, self._inbox = self._inbox, []
+                if not closing:
+                    # move inbox -> sched.queue UNDER the lock and refresh
+                    # the published backlog in the same step: submit()'s
+                    # depth (inbox + backlog) must never undercount the
+                    # moved entries, or a burst admitted during boundary
+                    # processing could overshoot max_queue_depth
+                    for req, ticket, _stream, _slo in moved:
+                        sched.queue.append((req, ticket))
+                    self._sched_backlog = len(sched.queue)
+            if closing:
+                self._reject_pending(moved)
+                if not sched.queue and not loop.resident:
+                    self._publish_depth()
+                    return
+            done: list[Ticket] = []
+            sched._serve_single_forwards(done)
+            before_admitted = len(sched._slot_tickets)
+            t0 = time.perf_counter()
+            sched._admit_arrivals(loop, done)
+            if len(sched._slot_tickets) > before_admitted:
+                self.engine.stats.record_prefill_cost(
+                    time.perf_counter() - t0
+                )
+            for ticket in done:
+                # single-forward completions + admission-time failures
+                self._finalize(ticket)
+            self._publish_depth()
+            if loop.resident:
+                steps0 = loop.steps_run
+                t0 = time.perf_counter()
+                # retirement/streaming happens inside _on_segment; the
+                # return value is already handled
+                loop.step_fused(self._pick_window())
+                dt = time.perf_counter() - t0
+                if loop.steps_run > steps0:
+                    self.engine.stats.record_step_cost(
+                        dt / (loop.steps_run - steps0)
+                    )
+
+    def _publish_depth(self) -> None:
+        with self._lock:
+            self._sched_backlog = len(self.sched.queue)
+            depth = len(self._inbox) + self._sched_backlog
+        self.engine.stats.record_queue_depth(depth)
+
+    def _reject_pending(self, moved) -> None:
+        """Closing: everything not yet resident gets a structured error
+        chunk; residents keep decoding to completion."""
+        sched = self.sched
+        queued = [(r, t) for r, t in sched.queue]
+        sched.queue = []
+        for req, ticket, *_ in moved:
+            queued.append((req, ticket))
+        for req, ticket in queued:
+            ticket.finish_time = time.perf_counter()
+            ticket.error = "front door closed before execution"
+            self._finalize(ticket)
+
+    # ------------------------------------------------------------- streaming
+    def _on_segment(self, k: int, retired: list) -> None:
+        """DecodeLoop segment hook (engine thread): stream fresh state for
+        every resident, then finalize the retirements."""
+        for sr in list(self.loop.resident) + [
+            sr for sr in retired if sr.error is None
+        ]:
+            prog = self._progress.get(sr.request_id)
+            if prog is None or not prog.stream:
+                continue
+            self._emit_increments(sr, prog)
+        for sr in retired:
+            ticket = self.sched._finish_slot(sr)
+            self.sched.completed.append(ticket)
+            self._finalize(ticket)
+
+    def _emit_increments(self, sr, prog: _Progress) -> None:
+        chan = self._channels.get(sr.request_id)
+        if chan is None or chan.closed:
+            return
+        sent = 0
+        if len(sr.new_tokens) > prog.steps:
+            fresh = sr.new_tokens[prog.steps:]
+            chan.push("tokens", {
+                "tokens": np.stack([np.asarray(t) for t in fresh], axis=1)
+            })
+            prog.steps = len(sr.new_tokens)
+            sent += 1
+            if prog.ticket.first_token_time is None:
+                prog.ticket.first_token_time = time.perf_counter()
+        fresh_saves = {
+            k: np.asarray(v) for k, v in sr.saves.items()
+            if k not in prog.save_keys
+        }
+        if fresh_saves:
+            chan.push("saves", fresh_saves)
+            prog.save_keys.update(fresh_saves)
+            sent += 1
+        if len(sr.logs) > prog.logs:
+            chan.push("logs", [
+                (int(n), np.asarray(v)) for n, v in sr.logs[prog.logs:]
+            ])
+            prog.logs = len(sr.logs)
+            sent += 1
+        if sent:
+            self.engine.stats.record_stream_chunks(sent)
+
+    def _finalize(self, ticket: Ticket) -> None:
+        """Terminal chunk + stats for one finished ticket (engine thread)."""
+        with self._lock:
+            prog = self._progress.pop(ticket.request_id, None)
+            chan = self._channels.get(ticket.request_id)
+        if chan is None or chan.closed:
+            return
+        if ticket.error is not None:
+            chan.push("error", {"error": ticket.error}, final=True)
+            self.engine.stats.record_stream_chunks(1)
+            self._record_ticket(ticket, "error")
+            return
+        result = dict(ticket.result or {})
+        if prog is not None and prog.stream and not prog.single_forward:
+            # streamed tickets already received tokens/saves/logs
+            # incrementally — the done chunk carries only the remainder
+            result.pop("tokens", None)
+            for k in prog.save_keys:
+                result.pop(k, None)
+            logs = result.pop(LOGS_KEY, [])
+            _attach_logs(result, logs[prog.logs:])
+        if ticket.first_token_time is None:
+            ticket.first_token_time = ticket.finish_time
+        chan.push("done", result, final=True)
+        self.engine.stats.record_stream_chunks(1)
+        self._record_ticket(ticket, "ok")
+
+    def _record_ticket(self, ticket: Ticket, status: str) -> None:
+        self.engine.stats.record_ticket({
+            "request_id": ticket.request_id,
+            "status": status,
+            "queue_wait": ticket.queue_wait,
+            "time_to_first_token": ticket.time_to_first_token,
+            "response_time": ticket.response_time,
+        })
+
+    # --------------------------------------------------------------- results
+    def take(
+        self, ticket_id: Any, *, blocking: bool = False,
+        timeout: float | None = None,
+    ) -> tuple[list[dict], bool]:
+        """Drain a ticket's pending chunks (wire form).  ``blocking`` waits
+        for at least one chunk or termination (this blocks the CLIENT's
+        thread — the engine thread keeps stepping).  Returns
+        ``(chunks, done)``; once ``done`` the ticket is forgotten and a
+        further take raises ``KeyError``."""
+        with self._lock:
+            chan = self._channels.get(ticket_id)
+        if chan is None:
+            raise KeyError(f"unknown ticket {ticket_id!r}")
+        if blocking:
+            chunks, done = chan.get(timeout)
+        else:
+            chunks, done = chan.drain()
+        if done:
+            with self._lock:
+                self._channels.pop(ticket_id, None)
+        return [c.to_wire() for c in chunks], done
+
+    def result(self, ticket_id: Any, timeout: float | None = None) -> dict:
+        """Convenience: block until the ticket completes, assemble the full
+        result (local callers / tests; the wire path uses ``take``)."""
+        from repro.serving.stream import assemble_result, check_frames
+
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        chunks: list[dict] = []
+        while True:
+            left = None if deadline is None else deadline - time.perf_counter()
+            if left is not None and left <= 0:
+                raise TimeoutError(f"ticket {ticket_id!r} still running")
+            got, done = self.take(ticket_id, blocking=True, timeout=left)
+            chunks.extend(got)
+            if done:
+                break
+        check_frames(chunks, ticket_id)
+        result, logs = assemble_result(chunks)
+        if logs:
+            _attach_logs(result, logs)
+        return result
+
+    # -------------------------------------------------------------- shutdown
+    def close(self, timeout: float | None = 60.0) -> None:
+        """Drain residents, reject queued work with a structured error,
+        join the engine thread.  Idempotent; submit() afterwards raises
+        ``AdmissionError(code="closed")``."""
+        with self._wake:
+            self._closing = True
+            self._wake.notify_all()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise RuntimeError("front door engine thread failed to stop")
+        if self._exc is not None:
+            raise RuntimeError(
+                f"front door engine thread died: {self._exc!r}"
+            ) from self._exc
+
+    def __enter__(self) -> "FrontDoor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -99,6 +99,11 @@ class Ticket:
     submit_time: float
     start_time: float | None = None
     finish_time: float | None = None
+    # when the request's FIRST decoded token (or, for single-forward
+    # traces, its result) became available — the live front door stamps
+    # this at the first streamed chunk, so time_to_first_token measures
+    # what a streaming client actually observes
+    first_token_time: float | None = None
     result: dict | None = None
     error: str | None = None
     # admission attempts bounced by slot/page exhaustion; capped by the
@@ -114,6 +119,13 @@ class Ticket:
     def queue_wait(self) -> float:
         """Time spent queued before execution/admission began."""
         return (self.start_time or self.submit_time) - self.submit_time
+
+    @property
+    def time_to_first_token(self) -> float | None:
+        """Submit -> first output span (None until something was emitted;
+        falls back to the finish time for batch-style completions)."""
+        t = self.first_token_time or self.finish_time
+        return None if t is None else t - self.submit_time
 
 
 def _merge_key(req: Request, pad_slack: int = 0) -> tuple | None:
@@ -187,6 +199,21 @@ def _admit_key(req: Request, pad_slack: int = 0) -> tuple | None:
         else:
             items.append((k, v.shape[1:], str(v.dtype)))
     return tuple(items)
+
+
+#: Reserved result key carrying per-request ``log()`` values over the wire
+#: as ``[(node_id, value), ...]`` — the tracer pops it back into
+#: ``tracer.logs`` client-side, so remote logs survive the roundtrip.
+LOGS_KEY = "__logs__"
+
+
+def _attach_logs(result: dict, logs) -> None:
+    """Attach a request's logged values to its wire result (only when any
+    exist, so log-free results keep their exact historical key set)."""
+    if logs:
+        result[LOGS_KEY] = [
+            (int(nid), np.asarray(val)) for nid, val in logs
+        ]
 
 
 def _req_rows(req: Request) -> int:
@@ -286,11 +313,13 @@ class CoTenantScheduler:
                     "tokens": np.asarray(res.tokens),
                     "logits": np.asarray(res.logits),
                 }
+                _attach_logs(ticket.result, res.logs)
             else:
-                saves, _ = self.engine.execute(
+                saves, _, logs = self.engine.execute_logged(
                     req.graph, req.batch, stop=req.stop
                 )
-                ticket.result = saves
+                ticket.result = dict(saves)
+                _attach_logs(ticket.result, logs)
         except Exception as e:  # surface per-request, keep serving
             ticket.error = f"{type(e).__name__}: {e}"
         ticket.finish_time = time.perf_counter()
@@ -377,20 +406,30 @@ class CoTenantScheduler:
                 per_req = split_results(res.saves, merged)
                 toks = np.asarray(res.tokens)
                 logits = np.asarray(res.logits)
-                for t, (start, size), saves_r in zip(
+                for i, (t, (start, size), saves_r) in enumerate(zip(
                     tickets, merged.row_slices, per_req
-                ):
+                )):
                     t.result = {
                         **saves_r,
                         "tokens": toks[start:start + size],
                         "logits": logits[start:start + size],
                     }
+                    # logs attributed by merged-graph node-id segment so a
+                    # ticket never sees a co-tenant's logged values
+                    _attach_logs(t.result, [
+                        e for e in res.logs if merged.owner_of(e[0]) == i
+                    ])
                     t.finish_time = time.perf_counter()
             else:
-                saves, _ = self.engine.execute(merged.graph, batch)
+                saves, _, logs = self.engine.execute_logged(
+                    merged.graph, batch
+                )
                 per_req = split_results(saves, merged)
-                for t, res in zip(tickets, per_req):
-                    t.result = res
+                for i, (t, res) in enumerate(zip(tickets, per_req)):
+                    t.result = dict(res)
+                    _attach_logs(t.result, [
+                        e for e in logs if merged.owner_of(e[0]) == i
+                    ])
                     t.finish_time = time.perf_counter()
         except Exception as e:
             for t in tickets:
@@ -469,6 +508,7 @@ class CoTenantScheduler:
                 "tokens": np.asarray(res.tokens),
                 "logits": np.asarray(res.logits),
             }
+            _attach_logs(ticket.result, res.logs)
         # per-request accounting: THIS request's rows retired now, even if
         # co-tenants keep decoding
         ticket.finish_time = time.perf_counter()

@@ -22,6 +22,20 @@ The wire protocol is a dict (JSON-encodable via repro.core.serialize):
   {"kind": "stats",   "model": str}
 Reply: {"ok": bool, "results": ... | "error": str}
 
+Live serving (the threaded front door, repro.serving.frontdoor):
+  {"kind": "submit", "model": str, "graph"?: {...}, "batch": {...},
+   "max_new_tokens"?: int, "stream"?: bool, "slo_ms"?: float}
+      -> {"ok": True, "ticket": id} immediately, or a structured refusal
+         {"ok": False, "error": str, "code": "backpressure"|"capacity"|
+          "slo"|"closed", "retry_after_ms"?: float, ...}
+  {"kind": "poll",   "model": str, "ticket": id}            (non-blocking)
+  {"kind": "stream", "model": str, "ticket": id, "timeout"?: float}
+      -> {"ok": True, "chunks": [{ticket, seq, kind, payload, final}...],
+          "done": bool}; ``stream`` blocks (in the CLIENT's thread — the
+          engine thread keeps stepping) until a chunk or termination.
+The per-model FrontDoor is created lazily at the first ``submit`` and owns
+its own decode loop; the synchronous kinds above keep their scheduler.
+
 Multi-invoke traces arrive PRE-merged (the tracer lowered its invokes into
 one row-sliced graph client-side): ``premerged=True`` makes the scheduler
 run them as-is — re-merging with co-tenant requests would re-slice their
@@ -48,6 +62,7 @@ merged-group sizes, padding waste) for capacity planning.
 from __future__ import annotations
 
 import json
+import threading
 from typing import Any
 
 import numpy as np
@@ -56,7 +71,8 @@ from repro.core.graph import GraphValidationError, InterventionGraph
 from repro.core.op_registry import OPS
 from repro.core.serialize import decode_value, encode_value, graph_from_json
 from repro.serving.engine import InferenceEngine
-from repro.serving.scheduler import CoTenantScheduler, Request
+from repro.serving.frontdoor import AdmissionError, FrontDoor
+from repro.serving.scheduler import CoTenantScheduler, Request, _attach_logs
 
 __all__ = ["NDIFServer"]
 
@@ -69,6 +85,11 @@ class NDIFServer:
         self.engines: dict[str, InferenceEngine] = {}
         self.schedulers: dict[str, CoTenantScheduler] = {}
         self.object_store: dict[int, Any] = {}
+        # live front doors, one per model, created lazily at first submit
+        # (each owns an engine thread — synchronous-only servers never pay)
+        self.frontdoors: dict[str, FrontDoor] = {}
+        self._door_cfg: dict[str, dict] = {}
+        self._door_lock = threading.Lock()
 
     # ------------------------------------------------------------- hosting
     def host(
@@ -84,12 +105,16 @@ class NDIFServer:
         max_batch_cells: int = 8192,
         num_slots: int = 8,
         slot_max_len: int = 160,
+        max_queue_depth: int = 32,
     ) -> None:
         """Preload a model (the expensive step users never pay for).
 
         ``policy="continuous"`` serves generation through a persistent
         slot-table decode loop (``num_slots`` rows, ``slot_max_len`` cache
-        positions) with in-flight admission; see repro.serving.scheduler."""
+        positions) with in-flight admission; see repro.serving.scheduler.
+        ``max_queue_depth`` bounds the live front door's backlog (the
+        ``submit`` wire kind) — submissions beyond it are refused with
+        structured backpressure."""
         engine = InferenceEngine(model, params, mode=mode, name=name)
         self.engines[name] = engine
         self.schedulers[name] = CoTenantScheduler(
@@ -97,6 +122,37 @@ class NDIFServer:
             pad_slack=pad_slack, max_batch_cells=max_batch_cells,
             num_slots=num_slots, slot_max_len=slot_max_len,
         )
+        self._door_cfg[name] = dict(
+            num_slots=num_slots, slot_max_len=slot_max_len,
+            pad_slack=pad_slack, max_queue_depth=max_queue_depth,
+        )
+
+    def _frontdoor(self, name: str) -> FrontDoor:
+        """The model's live front door, created on first use (engine
+        thread + its own continuous scheduler/loop — the synchronous wire
+        kinds never share state with it)."""
+        with self._door_lock:
+            door = self.frontdoors.get(name)
+            if door is None:
+                if getattr(self, "_doors_closed", False):
+                    raise AdmissionError(
+                        "server was shut down", "closed"
+                    )
+                door = FrontDoor(self.engines[name], **self._door_cfg[name])
+                self.frontdoors[name] = door
+            return door
+
+    def shutdown(self) -> None:
+        """Close every live front door: residents drain, queued work is
+        rejected with a structured error, engine threads join.  Closed
+        doors STAY registered — a submit afterwards gets the structured
+        ``code="closed"`` refusal instead of silently opening a fresh
+        door (and leaking its engine thread past the server's lifetime)."""
+        with self._door_lock:
+            self._doors_closed = True
+            doors = list(self.frontdoors.values())
+        for door in doors:
+            door.close()
 
     def hosted(self) -> list[str]:
         return sorted(self.engines)
@@ -232,11 +288,13 @@ class NDIFServer:
             return {"ok": True, "results": results}
         results = []
         for res in engine.generate_invokes(items):
-            results.append({
+            entry = {
                 **res.saves,
                 "tokens": np.asarray(res.tokens),
                 "logits": np.asarray(res.logits),
-            })
+            }
+            _attach_logs(entry, res.logs)
+            results.append(entry)
         return {"ok": True, "results": results}
 
     # ------------------------------------------------------------ handling
@@ -314,8 +372,54 @@ class NDIFServer:
             if ticket.error:
                 return {"ok": False, "error": ticket.error}
             return {"ok": True, "results": ticket.result}
+        if kind == "submit":
+            graph = (
+                graph_from_json(msg["graph"]) if msg.get("graph")
+                else InterventionGraph()
+            )
+            n_new = msg.get("max_new_tokens")
+            if graph.nodes:
+                if n_new is None:
+                    self._validate_graph(engine, graph)
+                else:
+                    self._validate_generation_graph(engine, graph)
+            batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
+            req = Request(
+                graph=graph, batch=batch,
+                max_new_tokens=None if n_new is None else int(n_new),
+                premerged=bool(msg.get("premerged")),
+                stop=bool(msg.get("stop")),
+            )
+            slo = msg.get("slo_ms")
+            try:
+                ticket = self._frontdoor(name).submit(
+                    req, stream=bool(msg.get("stream")),
+                    slo_ms=None if slo is None else float(slo),
+                )
+            except AdmissionError as e:
+                return {"ok": False, **e.payload}
+            return {"ok": True, "ticket": ticket}
+        if kind in ("poll", "stream"):
+            door = self.frontdoors.get(name)
+            if door is None:
+                return {"ok": False,
+                        "error": f"model {name!r} has no live front door "
+                                 "(nothing was submitted)"}
+            try:
+                chunks, done = door.take(
+                    msg["ticket"], blocking=(kind == "stream"),
+                    timeout=float(msg.get("timeout", 30.0)),
+                )
+            except KeyError:
+                return {"ok": False,
+                        "error": f"unknown ticket {msg.get('ticket')!r}"}
+            return {"ok": True, "chunks": chunks, "done": done}
         if kind == "stats":
-            return {"ok": True, "results": engine.stats.snapshot()}
+            snap = engine.stats.snapshot()
+            door = self.frontdoors.get(name)
+            if door is not None:
+                snap["queue_depth"] = door.queue_depth()
+            return {"ok": True, "results": snap}
         if kind == "hidden_states":
             batch = {k: np.asarray(v) for k, v in msg["batch"].items()}
             tokens = batch.pop("tokens")

@@ -1,0 +1,176 @@
+"""Streaming result channels for the live NDIF front door.
+
+A submitted request gets a :class:`StreamChannel`: the engine thread pushes
+:class:`Chunk`s onto it as the decode loop crosses segment boundaries —
+tokens per fused window, saves and ``log()`` values as they flush — and the
+client side drains them through the wire ``poll``/``stream`` kinds (see
+repro.serving.frontdoor / server).  Channels are the ONLY hand-off between
+the engine thread and client threads, so everything here is lock-guarded
+and every chunk carries a per-ticket strictly-increasing ``seq`` — frame
+integrity under concurrent polling is checkable by the receiver
+(:func:`check_frames`).
+
+Chunk kinds:
+
+  ``tokens``  payload ``{"tokens": (rows, j) int32}`` — j newly decoded
+              steps, concatenating bit-exact to the solo result;
+  ``saves``   payload ``{name: value, ...}`` — saves that appeared since
+              the previous chunk;
+  ``logs``    payload ``[(node_id, value), ...]`` — log() flushes;
+  ``done``    payload the FINAL result dict (batch clients get everything
+              here; streaming clients get logits + anything not yet
+              streamed), always the last chunk, ``final=True``;
+  ``error``   payload ``{"error": msg}``, terminal like ``done``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any
+
+import numpy as np
+
+__all__ = ["Chunk", "StreamChannel", "assemble_result", "check_frames"]
+
+
+@dataclasses.dataclass
+class Chunk:
+    """One framed increment of a ticket's result stream."""
+
+    ticket: Any           # the request id this chunk belongs to
+    seq: int              # strictly increasing per ticket, from 0
+    kind: str             # tokens | saves | logs | done | error
+    payload: Any
+    final: bool = False   # True on the terminal done/error chunk
+
+    def to_wire(self) -> dict:
+        return {
+            "ticket": self.ticket,
+            "seq": int(self.seq),
+            "kind": self.kind,
+            "payload": self.payload,
+            "final": bool(self.final),
+        }
+
+
+class StreamChannel:
+    """Thread-safe chunk queue between the engine thread and one client.
+
+    The engine thread is the only producer (:meth:`push` / :meth:`close`);
+    any client thread may consume.  ``get`` blocks (condition variable, no
+    spinning) until at least one chunk or the terminal state arrives;
+    ``drain`` is the non-blocking poll.  Sequence numbers are assigned
+    HERE, under the lock, so concurrent producers could never interleave
+    two chunks with the same seq.
+    """
+
+    def __init__(self, ticket: Any) -> None:
+        self.ticket = ticket
+        self._lock = threading.Lock()
+        self._ready = threading.Condition(self._lock)
+        self._chunks: list[Chunk] = []
+        self._seq = 0
+        self._closed = False
+
+    def push(self, kind: str, payload: Any, *, final: bool = False) -> Chunk:
+        with self._ready:
+            if self._closed:
+                raise RuntimeError(
+                    f"channel for ticket {self.ticket!r} is closed"
+                )
+            chunk = Chunk(self.ticket, self._seq, kind, payload, final)
+            self._seq += 1
+            self._chunks.append(chunk)
+            if final:
+                self._closed = True
+            self._ready.notify_all()
+            return chunk
+
+    def close(self) -> None:
+        """Terminal-state close without a chunk (defensive; the front door
+        normally closes by pushing a final done/error chunk)."""
+        with self._ready:
+            self._closed = True
+            self._ready.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed
+
+    def drain(self) -> tuple[list[Chunk], bool]:
+        """Non-blocking: everything queued right now + whether the stream
+        has terminated (no more chunks will ever arrive once the returned
+        flag is True and the list drained)."""
+        with self._lock:
+            out, self._chunks = self._chunks, []
+            return out, self._closed and not self._chunks
+
+    def get(self, timeout: float | None = None) -> tuple[list[Chunk], bool]:
+        """Block until at least one chunk (or termination), then drain.
+
+        Returns ``(chunks, done)``; an empty list with ``done=False`` means
+        the timeout elapsed first.
+        """
+        with self._ready:
+            if not self._chunks and not self._closed:
+                self._ready.wait(timeout)
+            out, self._chunks = self._chunks, []
+            return out, self._closed and not self._chunks
+
+
+def check_frames(chunks: list[dict], ticket: Any) -> None:
+    """Receiver-side frame-integrity check for one ticket's chunk list:
+    every chunk belongs to the ticket, seqs are gapless from 0, and only
+    the last chunk is terminal.  Raises ``ValueError`` on corruption —
+    cross-attributed chunks or torn frames under concurrent polling."""
+    for i, c in enumerate(chunks):
+        if c["ticket"] != ticket:
+            raise ValueError(
+                f"frame corruption: chunk for ticket {c['ticket']!r} "
+                f"delivered to ticket {ticket!r}"
+            )
+        if c["seq"] != i:
+            raise ValueError(
+                f"frame corruption: ticket {ticket!r} seq {c['seq']} "
+                f"at position {i}"
+            )
+        if c["final"] != (i == len(chunks) - 1):
+            raise ValueError(
+                f"frame corruption: ticket {ticket!r} terminal chunk "
+                f"misplaced at {i}/{len(chunks)}"
+            )
+
+
+def assemble_result(chunks: list[dict]) -> tuple[dict, list]:
+    """Concatenate one ticket's streamed chunks into the batch-form result.
+
+    Returns ``(result, logs)`` where ``result`` matches what a synchronous
+    ``generate``/``trace`` roundtrip returns — token chunks concatenate
+    along the step axis (bit-exact vs solo: fused window splits are
+    bit-identical), saves merge in arrival order, the done chunk
+    contributes logits and any remainder.  Raises ``RuntimeError`` on an
+    error chunk.
+    """
+    result: dict[str, Any] = {}
+    logs: list = []
+    token_parts: list[np.ndarray] = []
+    for c in chunks:
+        kind, payload = c["kind"], c["payload"]
+        if kind == "error":
+            raise RuntimeError(payload["error"])
+        if kind == "tokens":
+            token_parts.append(np.asarray(payload["tokens"]))
+        elif kind == "saves":
+            result.update(payload)
+        elif kind == "logs":
+            logs.extend((int(n), v) for n, v in payload)
+        elif kind == "done":
+            for k, v in (payload or {}).items():
+                if k == "__logs__":
+                    logs.extend((int(n), v_) for n, v_ in v)
+                else:
+                    result[k] = v
+    if token_parts:
+        result["tokens"] = np.concatenate(token_parts, axis=1)
+    return result, logs

@@ -5,22 +5,65 @@ The wire format is what the paper standardizes; sockets are incidental.
 ways and can model a network bandwidth (the paper's Petals comparison ran on
 a ~60 MB/s link), exposing ``modeled_transfer_seconds`` so benchmarks can
 report transfer cost without real NICs.
+
+Live serving additions: metering is lock-guarded (the front door serves
+many client THREADS over one transport — unsynchronized ``+=`` would drop
+counts under contention) and :meth:`LoopbackTransport.session` opens a
+multi-message :class:`TransportSession` for streaming conversations —
+one submit, many polls — that meters into its own stats AND the parent
+transport's, so per-conversation byte accounting coexists with the
+door-wide totals.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable
 
-__all__ = ["LoopbackTransport", "TransportStats"]
+__all__ = ["LoopbackTransport", "TransportSession", "TransportStats"]
 
 
 class TransportStats:
+    """Byte/request counters; all mutation goes through :meth:`record`
+    under the owning transport's lock."""
+
     def __init__(self) -> None:
         self.requests = 0
         self.bytes_sent = 0
         self.bytes_received = 0
 
+    def record(self, sent: int, received: int) -> None:
+        self.requests += 1
+        self.bytes_sent += sent
+        self.bytes_received += received
+
     def modeled_transfer_seconds(self, bandwidth_bytes_per_s: float) -> float:
         return (self.bytes_sent + self.bytes_received) / bandwidth_bytes_per_s
+
+
+class TransportSession:
+    """A multi-message conversation over one transport (live streaming:
+    one submit then repeated poll/stream messages share the session).
+    Byte metering lands in ``self.stats`` and the parent's totals."""
+
+    def __init__(self, parent: "LoopbackTransport") -> None:
+        self._parent = parent
+        self.stats = TransportStats()
+        self.closed = False
+
+    def request(self, payload: bytes) -> bytes:
+        if self.closed:
+            raise RuntimeError("transport session is closed")
+        reply = self._parent._dispatch(payload, extra=self.stats)
+        return reply
+
+    def close(self) -> None:
+        self.closed = True
+
+    def __enter__(self) -> "TransportSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class LoopbackTransport:
@@ -33,13 +76,29 @@ class LoopbackTransport:
         self.handler = handler
         self.bandwidth = bandwidth_bytes_per_s
         self.stats = TransportStats()
+        # one lock guards ALL metering through this transport (parent and
+        # session stats alike): concurrent client threads are the live
+        # front door's normal operating mode
+        self._lock = threading.Lock()
+
+    def _dispatch(self, payload: bytes,
+                  extra: TransportStats | None = None) -> bytes:
+        # the handler itself runs outside the lock — it may block (a
+        # streaming poll waits on the engine thread) and other client
+        # threads must keep flowing
+        reply = self.handler(payload)
+        with self._lock:
+            self.stats.record(len(payload), len(reply))
+            if extra is not None:
+                extra.record(len(payload), len(reply))
+        return reply
 
     def request(self, payload: bytes) -> bytes:
-        self.stats.requests += 1
-        self.stats.bytes_sent += len(payload)
-        reply = self.handler(payload)
-        self.stats.bytes_received += len(reply)
-        return reply
+        return self._dispatch(payload)
+
+    def session(self) -> TransportSession:
+        """Open a multi-message session (streaming conversations)."""
+        return TransportSession(self)
 
     def last_modeled_latency(self, req_bytes: int, rep_bytes: int) -> float:
         if not self.bandwidth:
