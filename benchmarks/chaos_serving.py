@@ -1,0 +1,313 @@
+"""Chaos harness: the live front door under a SEEDED fault plan.
+
+Replays the live_serving Poisson client load (real threads, wire
+protocol) while a deterministic :class:`FaultPlan` breaks the serving
+stack on purpose — engine crashes mid-decode, a page-pool exhaustion
+burst, lost transport messages in both directions, injected latency
+spikes — plus deliberately doomed co-tenants (tiny ``deadline_ms``,
+client-side cancels) riding next to the healthy load.
+
+Asserted (hard failures, not just reported):
+  * TERMINATION — every client ends with a result or a STRUCTURED error
+    (a known machine-readable code); nothing hangs, nothing times out,
+    nothing dies with an unstructured exception;
+  * BIT-EXACTNESS — every surviving client's tokens match the solo
+    synchronous path exactly, crashes and requeues notwithstanding;
+  * the faults actually happened: ``faults_injected > 0`` and the
+    supervisor performed ``engine_restarts >= 1``;
+  * NO THREAD LEAKS — ``threading.active_count()`` returns to its
+    pre-chaos baseline once the load drains;
+  * RECOVERY REACHES STEADY STATE — a final fault-free pass over the
+    same arrival schedule completes with ZERO additional XLA traces
+    (the rebuilt loop reuses every cached executable) and full
+    bit-exactness.
+
+Reported: chaos-pass and recovery-pass tokens/s + p95, fault counters
+(faults_injected / engine_restarts / tickets_requeued / cancellations /
+deadline_evictions).  ``tokens_per_s`` (recovery pass) is gated
+HIGHER-better by scripts/bench_check.py.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import Row, build
+from repro.core.generation import SlotAllocationError
+from repro.models import registry as R
+from repro.serving import (
+    AdmissionRefused,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    LoopbackTransport,
+    NDIFClient,
+    NDIFServer,
+    RetryPolicy,
+    TicketError,
+    TransportError,
+)
+from repro.serving import faults
+
+N_CLIENTS = 80
+N_JOBS = 8
+NUM_SLOTS = 8
+SLOT_MAX_LEN = 48
+MAX_QUEUE_DEPTH = 32
+SEQ_LEN = 6
+STREAM_EVERY = 3    # every 3rd client streams
+CANCEL_EVERY = 23   # these clients cancel right after admission
+DEADLINE_EVERY = 29  # these clients carry an immediately-expiring deadline
+
+#: terminal error codes the serving stack is ALLOWED to hand a client —
+#: anything else (or any non-TicketError exception) fails the harness
+STRUCTURED_CODES = {
+    "deadline", "cancelled", "engine_restart", "engine_failed",
+    "engine_stalled", "closed",
+}
+
+
+def make_jobs(cfg):
+    rng = np.random.default_rng(17)
+    jobs = []
+    for _ in range(N_JOBS):
+        toks = rng.integers(0, cfg.vocab_size, (1, SEQ_LEN)).astype(np.int32)
+        n_new = int(rng.integers(4, 11))
+        jobs.append((toks, n_new))
+    return jobs
+
+
+def chaos_plan(stats) -> FaultPlan:
+    """The seeded fault schedule: same seed + same workload => the same
+    fault sequence, so a chaos failure reproduces bit-for-bit."""
+    return FaultPlan(
+        [
+            # two engine crashes mid-decode: supervisor restarts, requeues
+            FaultSpec("decode.step", nth=6, error=FaultError,
+                      message="chaos: injected engine crash #1"),
+            FaultSpec("decode.step", nth=30, error=FaultError,
+                      message="chaos: injected engine crash #2"),
+            # latency spikes on decode windows (pure stalls, no error)
+            FaultSpec("decode.step", every=13, delay_s=0.02, error=None,
+                      max_fires=4),
+            # one page-pool exhaustion burst at admission
+            FaultSpec("page.alloc", nth=3, error=SlotAllocationError),
+            # lossy transport, both directions (clients retry under
+            # idempotency keys; polls are cursor reads)
+            FaultSpec("transport.send", p=0.01, error=TransportError,
+                      max_fires=6),
+            FaultSpec("transport.recv", p=0.01, error=TransportError,
+                      max_fires=6),
+        ],
+        seed=1234,
+        stats=stats,
+    )
+
+
+def run_load(mk_client, jobs, arrivals, job_of, *, collect):
+    """Replay one arrival schedule from real client threads.
+
+    Each worker gets its OWN retrying client (per-client seeded jitter).
+    Returns results, structured terminations, and hard errors (which the
+    caller asserts empty).
+    """
+    t0 = time.perf_counter()
+    lock = threading.Lock()
+    out = {"resp": [], "refused": 0, "errors": [], "results": {},
+           "structured": {}}
+
+    def worker(i):
+        client = mk_client(i)
+        delay = arrivals[i] - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        toks, n_new = jobs[job_of[i]]
+        deadline_ms = 1.0 if i % DEADLINE_EVERY == 7 else None
+        submit_t = time.perf_counter()
+        for _ in range(500):
+            try:
+                tk = client.submit(toks, n_new,
+                                   stream=(i % STREAM_EVERY == 0),
+                                   deadline_ms=deadline_ms)
+            except AdmissionRefused as e:
+                if e.code != "backpressure":
+                    with lock:
+                        out["errors"].append(f"{i}: refused {e.code}")
+                    return
+                with lock:
+                    out["refused"] += 1
+                time.sleep(max(e.retry_after_ms or 1.0, 1.0) / 1000.0)
+                continue
+            if i % CANCEL_EVERY == 5:
+                tk.cancel()
+            try:
+                res = tk.result(timeout=900.0)
+            except TicketError as e:
+                with lock:
+                    if e.code in STRUCTURED_CODES:
+                        out["structured"][i] = e.code
+                    else:
+                        out["errors"].append(
+                            f"{i}: unstructured code {e.code!r}: {e}"
+                        )
+                return
+            except Exception as e:
+                with lock:
+                    out["errors"].append(f"{i}: {type(e).__name__}: {e}")
+                return
+            with lock:
+                out["resp"].append(time.perf_counter() - submit_t)
+                if collect:
+                    out["results"][i] = np.asarray(res["tokens"])
+            return
+        with lock:
+            out["errors"].append(f"{i}: starved after 500 refusals")
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(len(arrivals))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    out["wall"] = time.perf_counter() - t0
+    return out
+
+
+def rows() -> list[Row]:
+    cfg = R.get_config("paper-gpt-small")
+    model, params = build(cfg)
+    server = NDIFServer()
+    server.host("chaos", model, params, policy="continuous",
+                num_slots=NUM_SLOTS, slot_max_len=SLOT_MAX_LEN,
+                max_queue_depth=MAX_QUEUE_DEPTH,
+                door_kwargs=dict(max_restarts=10, restart_backoff_s=0.01,
+                                 quarantine_after=4))
+    engine = server.engines["chaos"]
+    jobs = make_jobs(cfg)
+
+    def mk_client(i):
+        return NDIFClient(
+            LoopbackTransport(server.handle), "chaos",
+            retry=RetryPolicy(max_attempts=8, base_delay_ms=2.0, seed=i),
+        )
+
+    base_client = NDIFClient(LoopbackTransport(server.handle), "chaos")
+    refs = [np.asarray(base_client.generate(toks, n)["tokens"])
+            for toks, n in jobs]
+
+    rng = np.random.default_rng(23)
+    job_of = rng.integers(0, N_JOBS, N_CLIENTS)
+
+    # warmup: every admission-group row count + the window ladder, so the
+    # chaos AND recovery passes run against cached executables only
+    for g in range(1, NUM_SLOTS + 1):
+        tickets = [base_client.submit(*jobs[k % N_JOBS]) for k in range(g)]
+        for tk in tickets:
+            tk.result(timeout=900.0)
+
+    step = engine.stats.step_cost_ema or 0.01
+    mean_tokens = float(np.mean([n for _, n in jobs]))
+    service_rate = NUM_SLOTS / (mean_tokens * step)
+    gaps = rng.exponential(1.0 / (1.2 * service_rate), N_CLIENTS)
+    arrivals = np.cumsum(gaps)
+
+    threads_before = threading.active_count()
+    restarts_before = engine.stats.engine_restarts
+
+    # ---------------------------------------------------------- chaos pass
+    plan = chaos_plan(engine.stats)
+    with faults.inject(plan):
+        load = run_load(mk_client, jobs, arrivals, job_of, collect=True)
+    assert not load["errors"], load["errors"][:5]
+
+    # TERMINATION: every client has a result or a structured error
+    accounted = len(load["results"]) + len(load["structured"])
+    assert accounted == N_CLIENTS, (
+        f"{N_CLIENTS - accounted} clients unaccounted for"
+    )
+    # the doomed co-tenants really terminated via their structured path
+    assert any(c == "deadline" for c in load["structured"].values())
+    assert any(c == "cancelled" for c in load["structured"].values())
+
+    # BIT-EXACTNESS for every survivor, streamed or batch
+    for i, toks_out in load["results"].items():
+        np.testing.assert_array_equal(
+            toks_out, refs[job_of[i]],
+            err_msg=f"client {i} diverged from solo after recovery",
+        )
+
+    # the chaos actually happened, and the supervisor recovered from it
+    assert plan.fires() > 0, "fault plan never fired"
+    restarts = engine.stats.engine_restarts - restarts_before
+    assert restarts >= 1, "no supervised engine restart happened"
+    chaos_resp = np.asarray(load["resp"])
+    chaos_tokens = int(sum(jobs[job_of[i]][1] for i in load["results"]))
+    chaos_tok_s = chaos_tokens / load["wall"]
+
+    # NO THREAD LEAKS: workers joined, supervisor still owns ONE engine
+    # thread, nothing else survived the chaos
+    deadline = time.time() + 10.0
+    while threading.active_count() > threads_before \
+            and time.time() < deadline:
+        time.sleep(0.05)
+    assert threading.active_count() <= threads_before, (
+        f"thread leak: {threads_before} before chaos, "
+        f"{threading.active_count()} after "
+        f"({[t.name for t in threading.enumerate()]})"
+    )
+
+    # ------------------------------------------------------- recovery pass
+    # fault-free replay of the SAME schedule: the recovered door must be
+    # in steady state — zero additional XLA traces, full bit-exactness
+    compiles_before = engine.stats.compiles
+    load2 = run_load(mk_client, jobs, arrivals, job_of, collect=True)
+    compiles_delta = engine.stats.compiles - compiles_before
+    assert not load2["errors"], load2["errors"][:5]
+    assert len(load2["results"]) + len(load2["structured"]) == N_CLIENTS
+    survivors2 = {i for i in range(N_CLIENTS)
+                  if i % CANCEL_EVERY != 5 and i % DEADLINE_EVERY != 7}
+    assert set(load2["results"]) == survivors2
+    for i, toks_out in load2["results"].items():
+        np.testing.assert_array_equal(toks_out, refs[job_of[i]])
+    assert compiles_delta == 0, (
+        f"recovered door performed {compiles_delta} XLA traces"
+    )
+
+    resp2 = np.asarray(load2["resp"])
+    tokens2 = int(sum(jobs[job_of[i]][1] for i in load2["results"]))
+    tok_s2 = tokens2 / load2["wall"]
+
+    snap = engine.stats.snapshot()
+    server.shutdown()
+    return [Row(
+        f"chaos_serving/recovery/clients_{N_CLIENTS}",
+        float(np.mean(resp2)) * 1e6,
+        f"tok_s={tok_s2:.1f};restarts={restarts};"
+        f"faults={snap['faults_injected']}",
+        extra={
+            "tokens_per_s": round(tok_s2, 2),
+            "p95_ms": round(float(np.percentile(resp2, 95)) * 1e3, 3),
+            # chaos-pass numbers are deliberately NOT gate-matching keys:
+            # the pass includes crashes, backoff and restarts by design
+            "chaos_pass_tok_s": round(chaos_tok_s, 2),
+            "chaos_pass_tail_ms": round(
+                float(np.percentile(chaos_resp, 95)) * 1e3, 3),
+            "clients": N_CLIENTS,
+            "faults_injected": snap["faults_injected"],
+            "engine_restarts": snap["engine_restarts"],
+            "tickets_requeued": snap["tickets_requeued"],
+            "cancellations": snap["cancellations"],
+            "deadline_evictions": snap["deadline_evictions"],
+            "alloc_retries": snap["alloc_retries"],
+            "structured_errors": len(load["structured"]),
+            "refused_backpressure": load["refused"] + load2["refused"],
+            "compiles_recovery_phase": 0,
+        },
+    )]
+
+
+if __name__ == "__main__":
+    for r in rows():
+        print(r.csv())

@@ -158,6 +158,7 @@ def rows() -> list[Row]:
     out: list[Row] = []
     for attempt in range(2):  # one retry absorbs shared-CPU noise
         compiles_before = engine.stats.compiles
+        recs_before = len(engine.stats.ticket_records)
         load = run_load(client, jobs, arrivals, job_of, collect=True)
         compiles_delta = engine.stats.compiles - compiles_before
         assert not load["errors"], load["errors"][:5]
@@ -185,7 +186,11 @@ def rows() -> list[Row]:
         p95 = float(np.percentile(resp, 95))
         total_tokens = int(sum(jobs[job_of[i]][1] for i in range(N_CLIENTS)))
         tokens_per_s = total_tokens / load["wall"]
-        ttfts = [t["time_to_first_token"] for t in snap["tickets"]
+        # measured-pass tickets ONLY: warmup/stabilization records carry
+        # XLA compile stalls in their first-token times and would
+        # dominate the p95 with numbers that say nothing about serving
+        ttfts = [t["time_to_first_token"]
+                 for t in snap["tickets"][recs_before:]
                  if t.get("time_to_first_token") is not None]
         ttft_p95 = float(np.percentile(ttfts, 95)) if ttfts else 0.0
 

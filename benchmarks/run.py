@@ -21,6 +21,10 @@ One module per paper table/figure:
   live_serving               -> 200 real client threads through the live
                                 threaded front door (Poisson arrivals,
                                 streaming, backpressure, zero recompiles)
+  chaos_serving              -> the same Poisson load under a seeded fault
+                                plan (engine crashes, lost messages, alloc
+                                bursts): termination, bit-exact recovery,
+                                zero post-restart recompiles
   kernel_bench               -> kernels/fallbacks microbench
 
 Besides the CSV on stdout, every module's rows are written to
@@ -47,6 +51,7 @@ MODULES = [
     "benchmarks.fused_decode",
     "benchmarks.compiled_islands",
     "benchmarks.live_serving",
+    "benchmarks.chaos_serving",
     "benchmarks.kernel_bench",
 ]
 

@@ -93,6 +93,22 @@ __all__ = [
 
 _ENV = "__env%d"  # import/export name for a cross-step value (by orig id)
 
+_faults_fire: Callable[[str], None] | None = None
+
+
+def _fault(point: str) -> None:
+    """Fault-injection hook (repro.serving.faults) for the core decode
+    loop's instrumented sites — prefill dispatch, decode windows, page
+    allocation.  Imported lazily: core must not import the serving package
+    at module load (serving imports core), and the deferred bind keeps the
+    disabled-path cost at one global check + one call per WINDOW, not per
+    token."""
+    global _faults_fire
+    if _faults_fire is None:
+        from repro.serving.faults import fire
+        _faults_fire = fire
+    _faults_fire(point)
+
 
 @dataclasses.dataclass
 class StepSlice:
@@ -617,6 +633,10 @@ class SlotRequest:
     # set when the request was EVICTED by a step-time failure of its own
     # intervention graph; result() is unavailable in that case
     error: str | None = None
+    # machine-readable eviction class for structured client errors
+    # (e.g. "deadline" | "cancelled" | "engine_restart"); None for plain
+    # step-time failures
+    error_code: str | None = None
     t: int = 0
     base_pos: Any = None  # (size,) int32 — each row's step-0 position
     new_tokens: list = dataclasses.field(default_factory=list)
@@ -904,6 +924,10 @@ class DecodeLoop:
         all-or-nothing feasibility check against unreserved free pages.
         Nothing is committed here — allocation happens in ``_install`` and
         is then guaranteed to succeed."""
+        # fault point: an injected SlotAllocationError here simulates a
+        # page-exhaustion burst — the scheduler requeues the admission for
+        # the next boundary exactly as for a genuinely empty pool
+        _fault("page.alloc")
         plan: list[list[tuple[int, int]]] = []
         total = 0
         for lens, n_new in zip(row_lengths_list, n_new_list):
@@ -1232,6 +1256,9 @@ class DecodeLoop:
             pre_mode = "unrolled"
             pre_schedule = _step_order(self.model.site_schedule("unrolled"))
 
+        # fault point: nothing is committed yet (rows/pages install below),
+        # so an injected prefill failure fails the admission cleanly
+        _fault("prefill.dispatch")
         if not any(sl is not None for sl in pre_slices):
             if self._prefill_fn is not None:
                 _out, src = self._prefill_fn(self.params, prompt, self.max_len)
@@ -1718,6 +1745,10 @@ class DecodeLoop:
         """
         if not self.resident:
             return []
+        # fault point: fires BEFORE the window's try/except, so an injected
+        # error escapes to the caller — in the live front door that is the
+        # engine thread, i.e. the supervised crash-recovery surface
+        _fault("decode.step")
         if not self.fuse:
             return self._step_eager()
         k = max(1, min(int(k), self.fusable_steps()))
@@ -1841,6 +1872,26 @@ class DecodeLoop:
         if self.stats is not None:
             # sr.t, not max_new_tokens: an evicted request decoded fewer
             self.stats.record_retire(sr.size, sr.t)
+
+    def evict(self, request_id: Any, error: str,
+              code: str | None = None) -> SlotRequest | None:
+        """Evict one resident request at a step boundary (deadline blown /
+        cancelled / quarantined): its slot rows clear, its KV pages —
+        allocated AND still-reserved — return to the pool immediately, and
+        co-tenants keep decoding untouched.  Returns the evicted
+        :class:`SlotRequest` (``error``/``error_code`` set, ``result()``
+        unavailable) or ``None`` when the id is not resident.
+
+        Callers are responsible for invoking this BETWEEN decode windows
+        only (the live front door's engine thread does, before picking the
+        next window) — mid-``step_fused`` the scan owns the slot rows."""
+        for sr in list(self.resident):
+            if sr.request_id == request_id:
+                sr.error = str(error)
+                sr.error_code = code
+                self._retire(sr)
+                return sr
+        return None
 
     def run_to_completion(self) -> list[SlotRequest]:
         """Step until every resident request has retired (fused segments

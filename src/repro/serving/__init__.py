@@ -1,17 +1,30 @@
 """NDIF-style shared inference service (paper §3.3)."""
-from repro.serving.client import AdmissionRefused, LiveTicket, NDIFClient
+from repro.serving.client import (
+    AdmissionRefused,
+    LiveTicket,
+    NDIFClient,
+    RetryPolicy,
+)
 from repro.serving.engine import InferenceEngine
+from repro.serving.faults import FaultError, FaultPlan, FaultSpec
 from repro.serving.frontdoor import AdmissionError, FrontDoor
 from repro.serving.scheduler import CoTenantScheduler, Request, Ticket
 from repro.serving.server import NDIFServer
-from repro.serving.stream import Chunk, StreamChannel
-from repro.serving.transport import LoopbackTransport, TransportSession
+from repro.serving.stream import Chunk, StreamChannel, TicketError
+from repro.serving.transport import (
+    LoopbackTransport,
+    TransportError,
+    TransportSession,
+)
 
 __all__ = [
     "AdmissionError",
     "AdmissionRefused",
     "Chunk",
     "CoTenantScheduler",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
     "FrontDoor",
     "InferenceEngine",
     "LiveTicket",
@@ -19,7 +32,10 @@ __all__ = [
     "NDIFClient",
     "NDIFServer",
     "Request",
+    "RetryPolicy",
     "StreamChannel",
     "Ticket",
+    "TicketError",
+    "TransportError",
     "TransportSession",
 ]

@@ -12,10 +12,23 @@ it, iterate its :meth:`~LiveTicket.chunks`, or block on
 infeasible, capacity) raises :class:`AdmissionRefused` carrying the
 structured payload (``code``, ``retry_after_ms``, ...) so callers can
 back off instead of string-matching error text.
+
+Resilience: construct the client with a :class:`RetryPolicy` and every
+roundtrip survives :class:`~repro.serving.transport.TransportError` —
+exponential backoff with SEEDED jitter (reproducible schedules), the
+server's ``retry_after_ms`` hint honored when present.  Retried submits
+carry an auto-generated idempotency key, so the AMBIGUOUS failure (reply
+lost after the server admitted) dedupes server-side instead of
+double-executing; polls are cursor reads (``since`` = next expected
+seq), so re-delivered chunks drop client-side and lost replies lose no
+data.  ``deadline_ms`` rides submit for server-side enforcement;
+:meth:`LiveTicket.cancel` requests cooperative cancellation.
 """
 from __future__ import annotations
 
 import json
+import time
+import uuid
 from typing import Any, Iterator
 
 import numpy as np
@@ -23,8 +36,48 @@ import numpy as np
 from repro.core.serialize import decode_value, encode_value, graph_to_json
 from repro.serving.scheduler import LOGS_KEY
 from repro.serving.stream import assemble_result, check_frames
+from repro.serving.transport import TransportError
 
-__all__ = ["AdmissionRefused", "LiveTicket", "NDIFClient"]
+__all__ = ["AdmissionRefused", "LiveTicket", "NDIFClient", "RetryPolicy"]
+
+
+class RetryPolicy:
+    """Client-side retry schedule for lost messages and backpressure.
+
+    ``delay_ms(attempt)`` grows exponentially from ``base_delay_ms`` and
+    is jittered by a SEEDED rng — two clients with different seeds
+    desynchronize their retries (no thundering herd), while one seed
+    reproduces its schedule exactly.  A server-provided
+    ``retry_after_ms`` hint (structured backpressure) wins whenever it
+    is larger than the computed backoff.
+    """
+
+    def __init__(
+        self,
+        max_attempts: int = 4,
+        *,
+        base_delay_ms: float = 20.0,
+        max_delay_ms: float = 2000.0,
+        jitter: float = 0.25,
+        seed: int = 0,
+    ) -> None:
+        self.max_attempts = int(max_attempts)
+        self.base_delay_ms = float(base_delay_ms)
+        self.max_delay_ms = float(max_delay_ms)
+        self.jitter = float(jitter)
+        self._rng = np.random.default_rng(seed)
+
+    def delay_ms(self, attempt: int,
+                 retry_after_ms: float | None = None) -> float:
+        d = min(self.max_delay_ms, self.base_delay_ms * (2.0 ** attempt))
+        d *= 1.0 + self.jitter * float(self._rng.random())
+        if retry_after_ms is not None:
+            d = max(d, float(retry_after_ms))
+        return d
+
+    def sleep(self, attempt: int,
+              retry_after_ms: float | None = None) -> None:
+        time.sleep(self.delay_ms(attempt, retry_after_ms) / 1000.0)
 
 
 class AdmissionRefused(RuntimeError):
@@ -54,21 +107,43 @@ class LiveTicket:
         session = getattr(client.transport, "session", None)
         self._transport = session() if session is not None else None
         self._chunks: list[dict] = []
+        # next expected seq — polls are CURSOR reads (``since``) against
+        # channel history, so a retried poll re-requests the same cursor
+        # and duplicates from redelivery drop right here
+        self._next_seq = 0
         self._done = False
 
     def _fetch(self, kind: str, timeout: float | None = None) -> list[dict]:
         msg = {"kind": kind, "model": self.client.model_name,
-               "ticket": self.id}
+               "ticket": self.id, "since": self._next_seq}
         if timeout is not None:
             msg["timeout"] = timeout
         reply = self.client._roundtrip(msg, transport=self._transport)
-        fresh = reply["chunks"]
+        fresh = []
+        for c in reply["chunks"]:
+            if c["seq"] == self._next_seq:
+                fresh.append(c)
+                self._next_seq += 1
         self._chunks.extend(fresh)
-        if reply["done"]:
+        if reply["done"] and (not self._chunks
+                              or self._chunks[-1]["final"]):
             self._done = True
             if self._transport is not None:
                 self._transport.close()
         return fresh
+
+    def cancel(self) -> bool:
+        """Request cooperative cancellation server-side.  Returns True
+        when the ticket was still live — its stream then terminates with
+        a structured error (``code="cancelled"``); False means it
+        already finished and the existing result stands."""
+        if self._done:
+            return False
+        reply = self.client._roundtrip({
+            "kind": "cancel", "model": self.client.model_name,
+            "ticket": self.id,
+        }, transport=self._transport)
+        return bool(reply.get("cancelled"))
 
     def poll(self) -> list[dict]:
         """Non-blocking: whatever chunks arrived since the last call."""
@@ -108,9 +183,15 @@ class LiveTicket:
 
 
 class NDIFClient:
-    def __init__(self, transport: Any, model_name: str) -> None:
+    def __init__(self, transport: Any, model_name: str,
+                 retry: RetryPolicy | None = None) -> None:
         self.transport = transport
         self.model_name = model_name
+        # None = fail fast on the first TransportError (historic
+        # behavior); a RetryPolicy makes every roundtrip resilient —
+        # safe because polls are cursor reads and submits carry
+        # idempotency keys
+        self.retry = retry
 
     # ---------------------------------------------------------- preflight
     @staticmethod
@@ -284,7 +365,8 @@ class NDIFClient:
     # Live serving (the threaded front door) ----------------------------
     def submit(self, tokens=None, max_new_tokens: int | None = None, *,
                graph=None, batch: dict | None = None, stream: bool = False,
-               slo_ms: float | None = None, lengths=None,
+               slo_ms: float | None = None, deadline_ms: float | None = None,
+               idempotency_key: str | None = None, lengths=None,
                **extras) -> LiveTicket:
         """Post work through the live front door; returns a
         :class:`LiveTicket` as soon as the server admits it (the decode
@@ -296,6 +378,14 @@ class NDIFClient:
         SLO-aware admission: the server refuses (:class:`AdmissionRefused`,
         ``code="slo"``) when the projected completion already blows the
         budget.  Raises :class:`AdmissionRefused` on structured refusals.
+
+        ``deadline_ms`` is a hard budget the SERVER enforces (the ticket
+        is evicted mid-decode past it, ``code="deadline"``).  With a
+        :class:`RetryPolicy` on the client, lost submits retry under an
+        ``idempotency_key`` (auto-generated unless given) — the retry
+        after an ambiguous failure returns the ORIGINAL ticket instead
+        of admitting twice — and structured backpressure refusals retry
+        after the server's ``retry_after_ms`` hint.
         """
         if batch is None:
             batch = {"tokens": np.asarray(tokens), **extras}
@@ -315,21 +405,46 @@ class NDIFClient:
             msg["graph"] = graph_to_json(graph)
         if slo_ms is not None:
             msg["slo_ms"] = float(slo_ms)
+        if deadline_ms is not None:
+            msg["deadline_ms"] = float(deadline_ms)
+        if idempotency_key is None and self.retry is not None:
+            # retried submits MUST dedupe: without a key, a reply lost
+            # after admission would double-execute on retry
+            idempotency_key = uuid.uuid4().hex
+        if idempotency_key is not None:
+            msg["idempotency_key"] = idempotency_key
         payload = json.dumps(encode_value(msg),
                              separators=(",", ":")).encode()
-        raw = self.transport.request(payload)
-        reply = decode_value(json.loads(raw.decode()))
-        if not reply.get("ok"):
-            if reply.get("code") is not None:
-                raise AdmissionRefused(reply)
-            raise RuntimeError(f"NDIF error: {reply.get('error')}")
-        return LiveTicket(self, reply["ticket"])
+        attempt = 0
+        while True:
+            try:
+                raw = self.transport.request(payload)
+                reply = decode_value(json.loads(raw.decode()))
+            except TransportError:
+                if (self.retry is None
+                        or attempt + 1 >= self.retry.max_attempts):
+                    raise
+                self.retry.sleep(attempt)
+                attempt += 1
+                continue
+            if reply.get("ok"):
+                return LiveTicket(self, reply["ticket"])
+            if reply.get("code") is None:
+                raise RuntimeError(f"NDIF error: {reply.get('error')}")
+            if (reply["code"] == "backpressure" and self.retry is not None
+                    and attempt + 1 < self.retry.max_attempts):
+                self.retry.sleep(attempt, reply.get("retry_after_ms"))
+                attempt += 1
+                continue
+            raise AdmissionRefused(reply)
 
     def stats(self) -> dict:
         """The hosted engine's EngineStats snapshot (compiles, generations,
         merged-group sizes, padding waste, live front-door counters —
         queue depth, rejected submissions, stream chunks, per-ticket
-        queue_wait / time_to_first_token records) for capacity planning."""
+        queue_wait / time_to_first_token records — and the fault-tolerance
+        counters: faults_injected, engine_restarts, tickets_requeued,
+        cancellations, deadline_evictions) for capacity planning."""
         return self._roundtrip(
             {"kind": "stats", "model": self.model_name}
         )["results"]
@@ -355,7 +470,20 @@ class NDIFClient:
 
     def _roundtrip(self, msg: dict, transport: Any | None = None) -> dict:
         payload = json.dumps(encode_value(msg), separators=(",", ":")).encode()
-        raw = (transport or self.transport).request(payload)
+        attempt = 0
+        while True:
+            try:
+                raw = (transport or self.transport).request(payload)
+                break
+            except TransportError:
+                # safe to retry blindly: every kind routed through here is
+                # idempotent — polls/streams are cursor reads against
+                # channel history, stats/cancel re-apply harmlessly
+                if (self.retry is None
+                        or attempt + 1 >= self.retry.max_attempts):
+                    raise
+                self.retry.sleep(attempt)
+                attempt += 1
         reply = decode_value(json.loads(raw.decode()))
         if not reply.get("ok"):
             raise RuntimeError(f"NDIF error: {reply.get('error')}")

@@ -39,6 +39,7 @@ from repro.core.generation import (
 from repro.core.graph import InterventionGraph
 from repro.core.interleave import SiteSchedule, run_interleaved
 from repro.core.serialize import structural_key
+from repro.serving import faults
 
 __all__ = ["InferenceEngine", "EngineStats"]
 
@@ -97,6 +98,12 @@ class EngineStats:
         self._cost_alpha = 0.3
         # recent completed front-door tickets (queue_wait / ttft / response)
         self.ticket_records: list[dict] = []
+        # fault tolerance (repro.serving.faults + the front-door supervisor)
+        self.faults_injected = 0     # injected faults that actually fired
+        self.engine_restarts = 0     # supervised engine-loop restarts
+        self.tickets_requeued = 0    # in-flight tickets requeued by recovery
+        self.cancellations = 0       # tickets cancelled via the cancel kind
+        self.deadline_evictions = 0  # tickets evicted past their deadline_ms
 
     def record_group(self, n_requests: int, padded: int, real: int) -> None:
         """Scheduler hook: one parallel co-tenancy group was executed."""
@@ -198,6 +205,28 @@ class EngineStats:
             else (1 - a) * self.prefill_cost_ema + a * s
         )
 
+    # ------------------------------------------------------ fault tolerance
+    def record_fault_injected(self, point: str) -> None:
+        """A :class:`~repro.serving.faults.FaultPlan` spec fired."""
+        self.faults_injected += 1
+
+    def record_engine_restart(self) -> None:
+        """The front-door supervisor rebuilt and restarted the engine loop."""
+        self.engine_restarts += 1
+
+    def record_ticket_requeued(self) -> None:
+        """Recovery requeued an in-flight ticket instead of failing it."""
+        self.tickets_requeued += 1
+
+    def record_cancellation(self) -> None:
+        """A ticket was cancelled (queued removal or mid-decode eviction)."""
+        self.cancellations += 1
+
+    def record_deadline_eviction(self) -> None:
+        """A ticket blew its ``deadline_ms`` and was evicted, freeing its
+        slot rows and KV pages for co-tenants."""
+        self.deadline_evictions += 1
+
     def record_ticket(self, record: dict) -> None:
         """One front-door ticket completed; keep a bounded recent history
         (queue_wait and time_to_first_token per ticket, for the ``stats``
@@ -256,6 +285,11 @@ class EngineStats:
             "step_cost_ema": self.step_cost_ema,
             "prefill_cost_ema": self.prefill_cost_ema,
             "tickets": [dict(r) for r in self.ticket_records],
+            "faults_injected": self.faults_injected,
+            "engine_restarts": self.engine_restarts,
+            "tickets_requeued": self.tickets_requeued,
+            "cancellations": self.cancellations,
+            "deadline_evictions": self.deadline_evictions,
         }
 
 
@@ -382,6 +416,10 @@ class InferenceEngine:
         key = (structural_key(graph), int(n_steps))
         fn = self._fused_exec.get(key)
         if fn is None:
+            # fault point: a failed build degrades this window to the eager
+            # per-step path (step_fused memoizes the key as bad), it never
+            # crashes the loop
+            faults.fire("fused.compile")
             runner = make_fused_step(
                 self.model, graph, self._step_schedule, int(n_steps),
                 mode=self.mode,

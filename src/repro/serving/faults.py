@@ -1,0 +1,261 @@
+"""Deterministic fault injection for the serving stack.
+
+Operational reliability — not raw speed — is the gating concern for
+running an NDIF-style fabric in production (the eDIF feasibility study).
+This module makes failure a FIRST-CLASS, reproducible input: named fault
+points are instrumented at the seams where a real deployment breaks
+
+  ``transport.send``    the request is lost before the server sees it
+  ``transport.recv``    the reply is lost after the server processed it
+  ``prefill.dispatch``  admission-time prefill execution
+  ``decode.step``       a decode window dispatch (engine crash surface)
+  ``fused.compile``     building a fused-window executable
+  ``page.alloc``        KV page-pool allocation (exhaustion bursts)
+  ``engine.tick``       the front door's engine-thread loop body
+
+and a :class:`FaultPlan` decides — deterministically, from a seed —
+which hits of which points fire what: an injected exception type, a
+latency spike, or both.  The same plan over the same workload produces
+the same fault sequence, so chaos runs (benchmarks/chaos_serving.py)
+are replayable bit-for-bit and recovery assertions are meaningful.
+
+Zero overhead when disabled: every instrumented site calls :func:`fire`,
+which is a single module-global ``None`` check until a plan is armed.
+The ``REPRO_FAULTS`` environment variable (default ``off``) gates
+persistent arming via :func:`install` — production code cannot be
+fault-injected by accident; tests and the chaos harness use the
+:func:`inject` context manager, an explicit, scoped, always-restored
+opt-in that needs no environment mutation.
+
+Schedules (per :class:`FaultSpec`):
+
+  * ``nth=N``            fire on the Nth hit of the point (1-based);
+  * ``nth=N, every=M``   fire on hit N and every Mth hit after it;
+  * ``every=M``          fire on every Mth hit;
+  * ``p=q``              fire each hit with seeded probability q —
+                         decisions are drawn from a per-spec
+                         ``np.random.default_rng([seed, spec_index])``
+                         stream in hit order, so they depend only on the
+                         hit sequence, never on wall clock or thread
+                         interleaving;
+  * ``max_fires``        cap on total fires (default 1; ``None`` = no cap);
+  * ``delay_s``          latency spike before (or instead of) the raise —
+                         ``error=None`` makes the spec a pure stall.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = [
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "POINTS",
+    "active",
+    "enabled",
+    "fire",
+    "inject",
+    "install",
+    "uninstall",
+]
+
+#: The named fault points instrumented across the serving stack.
+POINTS = (
+    "transport.send",
+    "transport.recv",
+    "prefill.dispatch",
+    "decode.step",
+    "fused.compile",
+    "page.alloc",
+    "engine.tick",
+)
+
+
+class FaultError(RuntimeError):
+    """Default injected exception — unambiguously synthetic in tracebacks."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scheduled fault at one named point.  See the module docstring
+    for schedule semantics; exactly one of ``nth``/``every``/``p`` drives
+    the schedule (``nth`` + ``every`` combine into nth-then-every-Mth)."""
+
+    point: str
+    nth: int | None = None
+    every: int | None = None
+    p: float | None = None
+    max_fires: int | None = 1
+    error: Callable[[str], BaseException] | None = FaultError
+    message: str = ""
+    delay_s: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.point not in POINTS:
+            raise ValueError(
+                f"unknown fault point {self.point!r} (known: {POINTS})"
+            )
+        if self.nth is None and self.every is None and self.p is None:
+            raise ValueError(
+                f"spec for {self.point!r} has no schedule: set nth, every "
+                "or p"
+            )
+
+    def _due(self, hit: int, draw: float | None) -> bool:
+        """Does this spec fire on the ``hit``-th hit of its point?"""
+        if self.p is not None:
+            return draw is not None and draw < float(self.p)
+        if self.nth is not None:
+            if hit < self.nth:
+                return False
+            if hit == self.nth:
+                return True
+            return (self.every is not None
+                    and (hit - self.nth) % self.every == 0)
+        return hit % self.every == 0
+
+
+class FaultPlan:
+    """A seeded set of :class:`FaultSpec`s plus its runtime counters.
+
+    Thread-safe: hits arrive from client threads (transport points) and
+    the engine thread (everything else) concurrently.  Probability draws
+    come from per-spec seeded streams consumed in hit order, so the fault
+    sequence is a pure function of (seed, per-point hit counts).
+
+    ``stats`` may be an :class:`~repro.serving.engine.EngineStats`; every
+    fire then lands in its ``faults_injected`` counter so the fault load
+    shows up in the ``stats`` wire kind next to the recovery counters.
+    """
+
+    def __init__(self, specs: list[FaultSpec], *, seed: int = 0,
+                 stats: Any = None) -> None:
+        self.specs = list(specs)
+        self.seed = int(seed)
+        self.stats = stats
+        self._lock = threading.Lock()
+        self.hits: dict[str, int] = {}
+        self.fired: dict[str, int] = {}
+        self._spec_fires = [0] * len(self.specs)
+        self._rngs = [
+            np.random.default_rng([self.seed, i])
+            for i in range(len(self.specs))
+        ]
+
+    # ------------------------------------------------------------- firing
+    def fire(self, point: str) -> None:
+        """One hit of ``point``: decide under the lock, stall/raise outside
+        it (an injected latency spike must not serialize other threads'
+        fault decisions)."""
+        delay = 0.0
+        err: BaseException | None = None
+        with self._lock:
+            hit = self.hits.get(point, 0) + 1
+            self.hits[point] = hit
+            for i, spec in enumerate(self.specs):
+                if spec.point != point:
+                    continue
+                draw = float(self._rngs[i].random()) if spec.p is not None \
+                    else None
+                if spec.max_fires is not None \
+                        and self._spec_fires[i] >= spec.max_fires:
+                    continue
+                if not spec._due(hit, draw):
+                    continue
+                self._spec_fires[i] += 1
+                self.fired[point] = self.fired.get(point, 0) + 1
+                delay = max(delay, spec.delay_s)
+                if spec.error is not None and err is None:
+                    msg = spec.message or (
+                        f"injected fault at {point} (hit {hit})"
+                    )
+                    err = spec.error(msg)
+                if self.stats is not None and hasattr(
+                        self.stats, "record_fault_injected"):
+                    self.stats.record_fault_injected(point)
+        if delay > 0.0:
+            time.sleep(delay)
+        if err is not None:
+            raise err
+
+    # ----------------------------------------------------------- counters
+    def fires(self) -> int:
+        with self._lock:
+            return sum(self.fired.values())
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "seed": self.seed,
+                "hits": dict(self.hits),
+                "fired": dict(self.fired),
+                "total_fired": sum(self.fired.values()),
+            }
+
+
+# ---------------------------------------------------------------- arming
+_PLAN: FaultPlan | None = None
+_ARM_LOCK = threading.Lock()
+
+
+def enabled() -> bool:
+    """Whether ``REPRO_FAULTS`` permits persistent arming (default off)."""
+    return os.environ.get("REPRO_FAULTS", "off").lower() not in (
+        "off", "0", "false", ""
+    )
+
+
+def fire(point: str) -> None:
+    """Instrumented-site hook: a no-op ``None`` check unless a plan is
+    armed — the whole fault plane costs one global read when disabled."""
+    plan = _PLAN
+    if plan is not None:
+        plan.fire(point)
+
+
+def active() -> FaultPlan | None:
+    return _PLAN
+
+
+def install(plan: FaultPlan) -> None:
+    """Persistently arm a plan.  Refused unless ``REPRO_FAULTS`` is set
+    (e.g. ``on``): an unset environment means production semantics, and
+    production must not be fault-injectable by a stray code path.  Scoped
+    callers (tests, the chaos harness) should prefer :func:`inject`."""
+    if not enabled():
+        raise RuntimeError(
+            "fault injection is disabled (REPRO_FAULTS=off); set "
+            "REPRO_FAULTS=on or use faults.inject(...) for a scoped plan"
+        )
+    global _PLAN
+    with _ARM_LOCK:
+        _PLAN = plan
+
+
+def uninstall() -> None:
+    global _PLAN
+    with _ARM_LOCK:
+        _PLAN = None
+
+
+@contextlib.contextmanager
+def inject(plan: FaultPlan):
+    """Scoped arming: the plan is live inside the ``with`` body and ALWAYS
+    disarmed on exit, regardless of how the body leaves.  This is the
+    explicit opt-in path — it works with ``REPRO_FAULTS=off`` because the
+    call site itself is the consent."""
+    global _PLAN
+    with _ARM_LOCK:
+        prev, _PLAN = _PLAN, plan
+    try:
+        yield plan
+    finally:
+        with _ARM_LOCK:
+            _PLAN = prev

@@ -41,15 +41,48 @@ The SLO planner also shapes execution: the fused-window picker quantizes
 handful of compiled window sizes — zero recompiles) and caps the window
 so the tightest streaming ticket gets chunks at its SLO-derived cadence
 instead of waiting for the slowest co-tenant's retirement.
+
+Fault tolerance (the supervisor): the engine thread runs the serve loop
+UNDER a supervisor.  A crash escaping the loop is contained — the
+supervisor classifies the failing phase (``admit`` | ``decode`` |
+``single_forward`` | ``cancel`` | ``deadline`` | ``tick``), blames the
+residents of the crashed loop (a co-tenant resident across
+``quarantine_after`` crashes is quarantined: its ticket fails with
+``code="engine_restart"`` instead of riding along forever), rebuilds the
+scheduler and :class:`DecodeLoop` from scratch, and REQUEUES every
+surviving in-flight ticket from its admission record (kept in
+``_Progress.req``) in submit order.  Re-execution is deterministic
+greedy decode, and the streaming cursors in ``_Progress`` survive the
+restart, so a streaming client sees a seamless, bit-exact continuation —
+tokens already chunked are never re-sent.  Restarts are budgeted
+(``max_restarts``, exponential backoff); past the budget the door is
+declared FAILED: every pending ticket gets a terminal structured error
+(``code="engine_failed"``) and later submissions are refused — nothing
+ever hangs.  An optional watchdog thread (``stall_timeout_s``; off by
+default, long XLA compiles look like stalls) detects a STUCK engine step
+— not just a dead thread — via a heartbeat the serve loop touches at
+every boundary, and fails the door (``code="engine_stalled"``) so
+blocked pollers wake immediately.
+
+Deadlines and cancellation ride the same boundary machinery: a ticket
+submitted with ``deadline_ms`` is evicted mid-decode once its budget
+expires (rows and KV pages freed, ``code="deadline"``), and ``cancel()``
+evicts or dequeues a ticket cooperatively (``code="cancelled"``).
+Retried submits carry an ``idempotency_key`` so an ambiguous transport
+failure never double-admits, and ``take(since=...)`` re-reads delivered
+chunks from channel history (terminal channels are parked in a bounded
+done-history) so a lost poll reply is never data loss.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import OrderedDict
 from typing import Any
 
 import numpy as np
 
+from repro.serving import faults
 from repro.serving.scheduler import (
     LOGS_KEY,
     CoTenantScheduler,
@@ -84,15 +117,21 @@ class _Progress:
     """Engine-thread-private per-ticket streaming cursor: how much of the
     resident SlotRequest's accumulated state has already been chunked."""
 
-    __slots__ = ("req", "ticket", "stream", "slo_ms", "steps", "save_keys",
-                 "logs", "single_forward")
+    __slots__ = ("req", "ticket", "stream", "slo_ms", "deadline", "steps",
+                 "save_keys", "logs", "single_forward")
 
     def __init__(self, req: Request, ticket: Ticket, stream: bool,
-                 slo_ms: float | None) -> None:
+                 slo_ms: float | None,
+                 deadline_ms: float | None = None) -> None:
         self.req = req
         self.ticket = ticket
         self.stream = bool(stream)
         self.slo_ms = slo_ms
+        # absolute eviction deadline (perf_counter clock), None = no limit
+        self.deadline = (
+            None if deadline_ms is None
+            else ticket.submit_time + float(deadline_ms) / 1000.0
+        )
         self.steps = 0                  # decode steps already emitted
         self.save_keys: set = set()     # save names already emitted
         self.logs = 0                   # log entries already emitted
@@ -111,6 +150,12 @@ class FrontDoor:
 
     #: fused-window ladder — steady state compiles only these step counts
     WINDOW_LADDER = (1, 2, 4, 8, 16, 32, 64)
+    #: terminal channels retained for idempotent poll redelivery
+    DONE_HISTORY = 256
+    #: idempotency keys remembered for submit dedup
+    IDEM_HISTORY = 1024
+    #: healthy boundaries after which the restart budget heals back to 0
+    HEAL_AFTER = 64
 
     def __init__(
         self,
@@ -122,6 +167,11 @@ class FrontDoor:
         pad_slack: int = 16,
         stream_chunk_ms: float = 50.0,
         idle_wait: float = 0.05,
+        max_restarts: int = 3,
+        restart_backoff_s: float = 0.05,
+        stall_timeout_s: float | None = None,
+        quarantine_after: int = 2,
+        retry_after_bounds: tuple[float, float] = (10.0, 10_000.0),
     ) -> None:
         self.engine = engine
         self.max_queue_depth = int(max_queue_depth)
@@ -130,6 +180,21 @@ class FrontDoor:
         # this often once step costs are measured.
         self.stream_chunk_ms = float(stream_chunk_ms)
         self.idle_wait = float(idle_wait)
+        self.num_slots = int(num_slots)
+        self.slot_max_len = int(slot_max_len)
+        self.pad_slack = int(pad_slack)
+        # supervisor knobs: restart budget with exponential backoff, blame
+        # threshold for quarantining crash-adjacent co-tenants, optional
+        # stuck-step watchdog (None = off: a long XLA compile inside one
+        # step is indistinguishable from a stall)
+        self.max_restarts = int(max_restarts)
+        self.restart_backoff_s = float(restart_backoff_s)
+        self.stall_timeout_s = (
+            None if stall_timeout_s is None else float(stall_timeout_s)
+        )
+        self.quarantine_after = int(quarantine_after)
+        lo, hi = retry_after_bounds
+        self.retry_after_bounds = (float(lo), float(hi))
         # The front door owns its OWN continuous scheduler (and loop): the
         # engine thread is the only caller of its internals, so the
         # synchronous wire kinds on a co-hosted server never race it.
@@ -154,12 +219,34 @@ class FrontDoor:
         self._sched_backlog = 0
         self._channels: dict[Any, StreamChannel] = {}
         self._progress: dict[Any, _Progress] = {}
+        # terminal channels parked here (bounded) so a retried poll whose
+        # previous reply was lost can still re-read the final chunks
+        self._done_hist: OrderedDict[Any, StreamChannel] = OrderedDict()
+        # idempotency_key -> request_id (bounded): a retried submit after
+        # an ambiguous transport failure dedupes to the original ticket
+        self._idem: OrderedDict[Any, Any] = OrderedDict()
+        self._cancels: set = set()
+        self._crash_blame: dict[Any, int] = {}
+        self._restarts = 0
+        self._healthy_boundaries = 0
+        self._phase = "idle"
+        self._heartbeat = time.monotonic()
         self._closing = False
+        # terminal door failure (supervised): the structured error payload
+        # every pending ticket received; submit() refuses with its code
+        self._failed: dict | None = None
+        # the supervisor itself crashed — a bug, re-raised by close()
         self._exc: BaseException | None = None
         self._thread = threading.Thread(
             target=self._run, name="frontdoor-engine", daemon=True
         )
         self._thread.start()
+        self._watchdog: threading.Thread | None = None
+        if self.stall_timeout_s is not None:
+            self._watchdog = threading.Thread(
+                target=self._watch, name="frontdoor-watchdog", daemon=True
+            )
+            self._watchdog.start()
 
     # ------------------------------------------------------------ submission
     def queue_depth(self) -> int:
@@ -172,6 +259,8 @@ class FrontDoor:
         *,
         stream: bool = False,
         slo_ms: float | None = None,
+        deadline_ms: float | None = None,
+        idempotency_key: Any = None,
     ) -> Any:
         """Admit a request into the live loop; returns its ticket id.
 
@@ -181,11 +270,34 @@ class FrontDoor:
         work.  ``stream=True`` asks for incremental chunks (tokens per
         fused segment, saves/logs as they flush); the default emits one
         ``done`` chunk at retirement with the full result.
+
+        ``deadline_ms`` is a hard per-ticket budget enforced SERVER-side:
+        past it the ticket is evicted mid-decode (rows and KV pages
+        freed) with ``code="deadline"``.  ``idempotency_key`` makes the
+        submit retry-safe — a key seen before returns the ORIGINAL
+        ticket id without admitting anything, so a client retrying after
+        an ambiguous transport failure never double-executes.
         """
         stats = self.engine.stats
+        with self._wake:
+            if idempotency_key is not None:
+                prior = self._idem.get(idempotency_key)
+                if prior is not None:
+                    return prior
         self._preflight_capacity(req, stats)
         ticket = Ticket(req.request_id, submit_time=time.perf_counter())
         with self._wake:
+            if idempotency_key is not None:
+                # re-check under the lock: two racing retries of the same
+                # submit must still admit exactly once
+                prior = self._idem.get(idempotency_key)
+                if prior is not None:
+                    return prior
+            if self._failed is not None:
+                stats.record_rejected_submission()
+                raise AdmissionError(
+                    self._failed["error"], self._failed["code"]
+                )
             if self._closing:
                 stats.record_rejected_submission()
                 raise AdmissionError(
@@ -201,6 +313,7 @@ class FrontDoor:
                     "backpressure",
                     retry_after_ms=self._retry_after_ms(depth, stats),
                     queue_depth=depth,
+                    position=depth,
                     max_queue_depth=self.max_queue_depth,
                 )
             if slo_ms is not None:
@@ -218,11 +331,31 @@ class FrontDoor:
             chan = StreamChannel(req.request_id)
             self._channels[req.request_id] = chan
             self._progress[req.request_id] = _Progress(
-                req, ticket, stream, slo_ms
+                req, ticket, stream, slo_ms, deadline_ms
             )
             self._inbox.append((req, ticket, stream, slo_ms))
+            if idempotency_key is not None:
+                self._idem[idempotency_key] = req.request_id
+                while len(self._idem) > self.IDEM_HISTORY:
+                    self._idem.popitem(last=False)
             self._wake.notify()
         return req.request_id
+
+    def cancel(self, ticket_id: Any) -> bool:
+        """Request cooperative cancellation of an in-flight ticket.
+
+        Returns True when the ticket is still live (queued or resident) —
+        the engine thread evicts it at the next step boundary and its
+        channel gets a terminal error chunk with ``code="cancelled"``.
+        False means the ticket already terminated (or was never known):
+        nothing to cancel, the existing result/error stands.
+        """
+        with self._wake:
+            known = ticket_id in self._progress
+            if known:
+                self._cancels.add(ticket_id)
+                self._wake.notify()
+            return known
 
     def _preflight_capacity(self, req: Request, stats) -> None:
         """Refuse requests the slot table / page pool can NEVER hold.
@@ -275,9 +408,13 @@ class FrontDoor:
     # -------------------------------------------------------- SLO projection
     def _retry_after_ms(self, depth: int, stats) -> float:
         """How long until the backlog plausibly drains one slot's worth —
-        the client's structured backoff hint."""
+        the client's structured backoff hint.  Clamped to
+        ``retry_after_bounds``: a cold ``step_cost_ema`` would otherwise
+        hint 0ms (hot retry loop) and a pathological EMA spike would
+        park clients for minutes."""
+        lo, hi = self.retry_after_bounds
         per = stats.step_cost_ema or 0.005
-        return max(1.0, 1000.0 * depth * per)
+        return float(min(hi, max(lo, 1000.0 * depth * per)))
 
     def _project_ms(self, req: Request, depth: int, stats) -> float | None:
         """Optimistic completion projection: queue wait (one boundary per
@@ -302,9 +439,18 @@ class FrontDoor:
         cap = base
         step = self.engine.stats.step_cost_ema
         if step > 0.0:
+            now = time.perf_counter()
             for sr in self.loop.resident:
                 prog = self._progress.get(sr.request_id)
-                if prog is None or not prog.stream:
+                if prog is None:
+                    continue
+                if prog.deadline is not None:
+                    # a boundary must land near the nearest deadline, or
+                    # an expired ticket burns a whole window before its
+                    # eviction can happen
+                    left = max(0.0, prog.deadline - now)
+                    cap = min(cap, max(1, int(left / step)))
+                if not prog.stream:
                     continue
                 if prog.slo_ms is not None:
                     remaining = max(1, sr.max_new_tokens - sr.t)
@@ -320,27 +466,44 @@ class FrontDoor:
 
     # ------------------------------------------------------- engine thread
     def _run(self) -> None:
+        """Supervisor: run the serve loop, contain crashes, restart.
+
+        The serve loop runs in THIS thread under the supervisor — a crash
+        escaping it triggers :meth:`_recover` (blame, rebuild, requeue)
+        and re-enters the loop; past the restart budget the door fails
+        terminally instead.  Only a bug in the supervisor itself lands in
+        ``_exc`` (re-raised by ``close()``)."""
         try:
-            self._serve_forever()
-        except BaseException as e:  # engine thread must never die silently
-            self._exc = e
-            with self._lock:
-                channels = list(self._channels.values())
-            for chan in channels:
+            while True:
                 try:
-                    chan.push("error", {"error": f"engine thread died: "
-                                                 f"{type(e).__name__}: {e}"},
-                              final=True)
-                except RuntimeError:
-                    pass  # already terminal
+                    self._serve_forever()
+                    return  # clean close() drain, or door declared failed
+                except BaseException as e:
+                    if not self._recover(e):
+                        return
+        except BaseException as e:  # the supervisor must never die silently
+            self._exc = e
+            self._fail_door(
+                f"front door supervisor crashed: {type(e).__name__}: {e}",
+                "engine_failed",
+            )
 
     def _serve_forever(self) -> None:
         sched, loop = self.sched, self.loop
         while True:
+            self._heartbeat = time.monotonic()
+            if self._failed is not None:
+                return  # the watchdog declared the door dead mid-stall
+            self._phase = "tick"
+            faults.fire("engine.tick")
             with self._wake:
                 while (not self._inbox and not sched.queue
-                       and not loop.resident and not self._closing):
+                       and not loop.resident and not self._closing
+                       and not self._cancels and self._failed is None):
+                    self._heartbeat = time.monotonic()
                     self._wake.wait(self.idle_wait)
+                if self._failed is not None:
+                    return
                 closing = self._closing
                 moved, self._inbox = self._inbox, []
                 if not closing:
@@ -357,8 +520,14 @@ class FrontDoor:
                 if not sched.queue and not loop.resident:
                     self._publish_depth()
                     return
+            self._phase = "cancel"
+            self._process_cancels()
+            self._phase = "deadline"
+            self._enforce_deadlines()
             done: list[Ticket] = []
+            self._phase = "single_forward"
             sched._serve_single_forwards(done)
+            self._phase = "admit"
             before_admitted = len(sched._slot_tickets)
             t0 = time.perf_counter()
             sched._admit_arrivals(loop, done)
@@ -371,6 +540,7 @@ class FrontDoor:
                 self._finalize(ticket)
             self._publish_depth()
             if loop.resident:
+                self._phase = "decode"
                 steps0 = loop.steps_run
                 t0 = time.perf_counter()
                 # retirement/streaming happens inside _on_segment; the
@@ -381,6 +551,205 @@ class FrontDoor:
                     self.engine.stats.record_step_cost(
                         dt / (loop.steps_run - steps0)
                     )
+            self._healthy_boundaries += 1
+            if self._restarts and self._healthy_boundaries >= self.HEAL_AFTER:
+                # sustained health heals the restart budget: transient
+                # storms are forgiven, only persistent crash loops fail
+                self._restarts = 0
+                self._healthy_boundaries = 0
+
+    # --------------------------------------------------- supervisor internals
+    def _recover(self, exc: BaseException) -> bool:
+        """Crash containment: blame, quarantine, rebuild, requeue.
+
+        Runs on the engine thread after a crash escaped the serve loop.
+        Returns True to re-enter the loop with a fresh scheduler/decode
+        loop and every surviving ticket requeued from its admission
+        record, False when the restart budget is exhausted (the door is
+        failed; every pending ticket already got its terminal error)."""
+        phase = self._phase
+        self._restarts += 1
+        self._healthy_boundaries = 0
+        self.engine.stats.record_engine_restart()
+        if self._restarts > self.max_restarts:
+            self._fail_door(
+                f"engine failed permanently after {self.max_restarts} "
+                f"restarts (last crash in phase {phase!r}: "
+                f"{type(exc).__name__}: {exc})",
+                "engine_failed",
+            )
+            return False
+        time.sleep(self.restart_backoff_s * (2 ** (self._restarts - 1)))
+        # blame the residents of the crashed loop: a ticket resident
+        # across quarantine_after crashes is the likely offender —
+        # quarantine it instead of requeueing it into the next crash
+        quarantined: set = set()
+        for sr in list(self.loop.resident):
+            n = self._crash_blame.get(sr.request_id, 0) + 1
+            self._crash_blame[sr.request_id] = n
+            if n >= self.quarantine_after:
+                quarantined.add(sr.request_id)
+        # rebuild the execution state from scratch — the crashed loop's
+        # slot table / page pool may be mid-mutation and unrecoverable
+        self.sched = CoTenantScheduler(
+            self.engine,
+            policy="continuous",
+            num_slots=self.num_slots,
+            slot_max_len=self.slot_max_len,
+            pad_slack=self.pad_slack,
+        )
+        self.loop = self.engine.start_decode_loop(
+            self.num_slots, self.slot_max_len, on_segment=self._on_segment
+        )
+        self.sched._loop = self.loop
+        # requeue every surviving in-flight ticket from its admission
+        # record, in submit order; inbox entries are untouched (they move
+        # at the next boundary as usual).  Deterministic re-execution +
+        # the _Progress streaming cursors make the restart invisible to
+        # streaming clients: already-chunked tokens are skipped, the
+        # continuation is bit-exact.
+        with self._lock:
+            inbox_ids = {req.request_id for req, *_ in self._inbox}
+            progs = [
+                p for rid, p in self._progress.items()
+                if rid not in inbox_ids
+            ]
+        progs.sort(key=lambda p: p.ticket.submit_time)
+        now = time.perf_counter()
+        for prog in progs:
+            rid = prog.req.request_id
+            if rid in quarantined:
+                prog.ticket.finish_time = now
+                prog.ticket.error = (
+                    f"quarantined after {self._crash_blame[rid]} engine "
+                    f"crashes while resident (last in phase {phase!r}: "
+                    f"{type(exc).__name__}: {exc})"
+                )
+                prog.ticket.error_code = "engine_restart"
+                self._finalize(prog.ticket)
+            else:
+                self.sched.queue.append((prog.req, prog.ticket))
+                self.engine.stats.record_ticket_requeued()
+        self._publish_depth()
+        return True
+
+    def _fail_door(self, message: str, code: str) -> None:
+        """Terminal door failure: every pending ticket gets a structured
+        error chunk, every blocked poller wakes, later submissions are
+        refused with this code.  Nothing ever hangs.  Safe from the
+        engine thread AND the watchdog (idempotent terminal pushes)."""
+        payload = {"error": message, "code": code}
+        with self._wake:
+            if self._failed is None:
+                self._failed = payload
+            channels = list(self._channels.values())
+            progs = list(self._progress.values())
+            self._progress.clear()
+            self._inbox = []
+            self._cancels.clear()
+            self._sched_backlog = 0
+            self._wake.notify_all()
+        now = time.perf_counter()
+        for prog in progs:
+            t = prog.ticket
+            if t.finish_time is None:
+                t.finish_time = now
+                t.error = message
+                t.error_code = code
+                self._record_ticket(t, "error")
+        for chan in channels:
+            chan.push_final_once("error", dict(payload))
+
+    def _watch(self) -> None:
+        """Watchdog thread: detect a STUCK engine step (not just a dead
+        thread) via the boundary heartbeat and fail the door so blocked
+        pollers get their structured error immediately instead of
+        timing out one by one."""
+        period = max(0.005, min(self.stall_timeout_s / 4.0, 0.05))
+        while True:
+            time.sleep(period)
+            if (self._closing or self._failed is not None
+                    or self._exc is not None):
+                return
+            if not self._thread.is_alive():
+                return  # the supervisor already handled its own exit
+            stalled = time.monotonic() - self._heartbeat
+            if stalled > self.stall_timeout_s:
+                self._fail_door(
+                    f"engine step stalled for {stalled:.2f}s in phase "
+                    f"{self._phase!r} (stall_timeout_s="
+                    f"{self.stall_timeout_s})",
+                    "engine_stalled",
+                )
+                return
+
+    def _process_cancels(self) -> None:
+        """Cooperative cancellation at a step boundary (engine thread):
+        resident tickets are evicted (rows + KV pages freed), queued
+        tickets are dequeued; either way the channel terminates with
+        ``code="cancelled"``."""
+        with self._lock:
+            cancels, self._cancels = self._cancels, set()
+        for rid in cancels:
+            self._kill_ticket(rid, "cancelled by client", "cancelled")
+            self.engine.stats.record_cancellation()
+
+    def _enforce_deadlines(self) -> None:
+        """Server-side ``deadline_ms`` enforcement at a step boundary:
+        expired residents are evicted mid-decode (their rows and KV pages
+        free immediately for co-tenants), expired queued tickets fail
+        before burning a prefill."""
+        now = time.perf_counter()
+        expired: list = []
+        for sr in list(self.loop.resident):
+            prog = self._progress.get(sr.request_id)
+            if (prog is not None and prog.deadline is not None
+                    and now > prog.deadline):
+                expired.append(sr.request_id)
+        for req, ticket in list(self.sched.queue):
+            prog = self._progress.get(req.request_id)
+            if (prog is not None and prog.deadline is not None
+                    and now > prog.deadline):
+                expired.append(req.request_id)
+        for rid in expired:
+            self._kill_ticket(rid, "deadline_ms exceeded", "deadline")
+            self.engine.stats.record_deadline_eviction()
+
+    def _kill_ticket(self, rid: Any, error: str, code: str) -> None:
+        """Terminate one live ticket (engine thread, between windows):
+        evict it if resident, dequeue it if still queued, then finalize
+        with the structured error."""
+        sr = self.loop.evict(rid, error, code=code)
+        if sr is not None:
+            ticket = self.sched._finish_slot(sr)
+            self.sched.completed.append(ticket)
+            self._finalize(ticket)
+            return
+        for i, (req, ticket) in enumerate(self.sched.queue):
+            if req.request_id == rid:
+                del self.sched.queue[i]
+                ticket.finish_time = time.perf_counter()
+                ticket.error = error
+                ticket.error_code = code
+                self._finalize(ticket)
+                return
+        # not queued, not resident: it may still sit in the inbox (moved
+        # next boundary) or have terminated already — check progress
+        with self._lock:
+            prog = self._progress.get(rid)
+            inbox_hit = None
+            for i, entry in enumerate(self._inbox):
+                if entry[0].request_id == rid:
+                    inbox_hit = i
+                    break
+            if inbox_hit is not None:
+                del self._inbox[inbox_hit]
+        if prog is not None:
+            ticket = prog.ticket
+            ticket.finish_time = time.perf_counter()
+            ticket.error = error
+            ticket.error_code = code
+            self._finalize(ticket)
 
     def _publish_depth(self) -> None:
         with self._lock:
@@ -399,6 +768,7 @@ class FrontDoor:
         for req, ticket in queued:
             ticket.finish_time = time.perf_counter()
             ticket.error = "front door closed before execution"
+            ticket.error_code = "closed"
             self._finalize(ticket)
 
     # ------------------------------------------------------------- streaming
@@ -449,16 +819,23 @@ class FrontDoor:
             self.engine.stats.record_stream_chunks(sent)
 
     def _finalize(self, ticket: Ticket) -> None:
-        """Terminal chunk + stats for one finished ticket (engine thread)."""
+        """Terminal chunk + stats for one finished ticket (engine thread).
+        Terminal pushes are idempotent (``push_final_once``): the
+        watchdog's fail-everything path may have already closed the
+        channel from its own thread."""
         with self._lock:
             prog = self._progress.pop(ticket.request_id, None)
             chan = self._channels.get(ticket.request_id)
         if chan is None or chan.closed:
             return
         if ticket.error is not None:
-            chan.push("error", {"error": ticket.error}, final=True)
-            self.engine.stats.record_stream_chunks(1)
-            self._record_ticket(ticket, "error")
+            pushed = chan.push_final_once("error", {
+                "error": ticket.error,
+                "code": ticket.error_code or "error",
+            })
+            if pushed is not None:
+                self.engine.stats.record_stream_chunks(1)
+                self._record_ticket(ticket, "error")
             return
         result = dict(ticket.result or {})
         if prog is not None and prog.stream and not prog.single_forward:
@@ -471,9 +848,9 @@ class FrontDoor:
             _attach_logs(result, logs[prog.logs:])
         if ticket.first_token_time is None:
             ticket.first_token_time = ticket.finish_time
-        chan.push("done", result, final=True)
-        self.engine.stats.record_stream_chunks(1)
-        self._record_ticket(ticket, "ok")
+        if chan.push_final_once("done", result) is not None:
+            self.engine.stats.record_stream_chunks(1)
+            self._record_ticket(ticket, "ok")
 
     def _record_ticket(self, ticket: Ticket, status: str) -> None:
         self.engine.stats.record_ticket({
@@ -487,24 +864,42 @@ class FrontDoor:
     # --------------------------------------------------------------- results
     def take(
         self, ticket_id: Any, *, blocking: bool = False,
-        timeout: float | None = None,
+        timeout: float | None = None, since: int | None = None,
     ) -> tuple[list[dict], bool]:
         """Drain a ticket's pending chunks (wire form).  ``blocking`` waits
         for at least one chunk or termination (this blocks the CLIENT's
         thread — the engine thread keeps stepping).  Returns
-        ``(chunks, done)``; once ``done`` the ticket is forgotten and a
-        further take raises ``KeyError``."""
+        ``(chunks, done)``.
+
+        ``since`` switches to IDEMPOTENT cursor reads: every chunk with
+        ``seq >= since`` is (re-)delivered from channel history, so a
+        client whose previous reply was lost in flight just re-requests
+        the same cursor.  Terminal channels are parked in a bounded done
+        history rather than forgotten, so redelivery keeps working after
+        completion; only tickets never seen (or long since evicted from
+        the history) raise ``KeyError``."""
         with self._lock:
             chan = self._channels.get(ticket_id)
+            if chan is None:
+                chan = self._done_hist.get(ticket_id)
         if chan is None:
             raise KeyError(f"unknown ticket {ticket_id!r}")
-        if blocking:
+        if since is not None:
+            chunks, done = chan.read_since(
+                since, blocking=blocking, timeout=timeout
+            )
+        elif blocking:
             chunks, done = chan.get(timeout)
         else:
             chunks, done = chan.drain()
         if done:
             with self._lock:
-                self._channels.pop(ticket_id, None)
+                if self._channels.pop(ticket_id, None) is not None:
+                    self._done_hist[ticket_id] = chan
+                    while len(self._done_hist) > self.DONE_HISTORY:
+                        self._done_hist.popitem(last=False)
+                elif ticket_id in self._done_hist:
+                    self._done_hist.move_to_end(ticket_id)
         return [c.to_wire() for c in chunks], done
 
     def result(self, ticket_id: Any, timeout: float | None = None) -> dict:
@@ -531,12 +926,19 @@ class FrontDoor:
     # -------------------------------------------------------------- shutdown
     def close(self, timeout: float | None = 60.0) -> None:
         """Drain residents, reject queued work with a structured error,
-        join the engine thread.  Idempotent; submit() afterwards raises
-        ``AdmissionError(code="closed")``."""
+        join the engine (and watchdog) threads.  Idempotent; submit()
+        afterwards raises ``AdmissionError(code="closed")``.
+
+        A SUPERVISED failure (restart budget exhausted, watchdog stall)
+        does not raise here — every affected ticket already received its
+        structured error, which is the contract.  Only a bug in the
+        supervisor itself re-raises."""
         with self._wake:
             self._closing = True
             self._wake.notify_all()
         self._thread.join(timeout)
+        if self._watchdog is not None:
+            self._watchdog.join(timeout)
         if self._thread.is_alive():
             raise RuntimeError("front door engine thread failed to stop")
         if self._exc is not None:

@@ -106,6 +106,10 @@ class Ticket:
     first_token_time: float | None = None
     result: dict | None = None
     error: str | None = None
+    # machine-readable failure class riding next to ``error`` on the wire
+    # ("deadline" | "cancelled" | "engine_restart" | "engine_failed" |
+    # "closed" | ...); None for ordinary per-request execution failures
+    error_code: str | None = None
     # admission attempts bounced by slot/page exhaustion; capped by the
     # scheduler so a request that will never fit terminates with a
     # structured deficit instead of requeue-spinning forever
@@ -501,6 +505,7 @@ class CoTenantScheduler:
             # evicted by a step-time failure of its own graph — surface
             # per-request, co-tenants keep decoding
             ticket.error = sr.error
+            ticket.error_code = sr.error_code
         else:
             res = sr.result()
             ticket.result = {

@@ -24,15 +24,28 @@ Reply: {"ok": bool, "results": ... | "error": str}
 
 Live serving (the threaded front door, repro.serving.frontdoor):
   {"kind": "submit", "model": str, "graph"?: {...}, "batch": {...},
-   "max_new_tokens"?: int, "stream"?: bool, "slo_ms"?: float}
+   "max_new_tokens"?: int, "stream"?: bool, "slo_ms"?: float,
+   "deadline_ms"?: float, "idempotency_key"?: str}
       -> {"ok": True, "ticket": id} immediately, or a structured refusal
          {"ok": False, "error": str, "code": "backpressure"|"capacity"|
           "slo"|"closed", "retry_after_ms"?: float, ...}
-  {"kind": "poll",   "model": str, "ticket": id}            (non-blocking)
-  {"kind": "stream", "model": str, "ticket": id, "timeout"?: float}
+      ``deadline_ms`` is enforced server-side (expired tickets are
+      evicted mid-decode, code="deadline"); ``idempotency_key`` dedupes
+      a retried submit after an ambiguous transport failure to the
+      ORIGINAL ticket.
+  {"kind": "poll",   "model": str, "ticket": id, "since"?: int}
+  {"kind": "stream", "model": str, "ticket": id, "timeout"?: float,
+   "since"?: int}
       -> {"ok": True, "chunks": [{ticket, seq, kind, payload, final}...],
           "done": bool}; ``stream`` blocks (in the CLIENT's thread — the
           engine thread keeps stepping) until a chunk or termination.
+      ``since`` switches to idempotent cursor reads: chunks with
+      ``seq >= since`` are (re-)delivered from channel history, so a
+      lost reply is never data loss — retry with the same cursor.
+  {"kind": "cancel", "model": str, "ticket": id}
+      -> {"ok": True, "cancelled": bool} — cooperative: the ticket's
+         channel terminates with code="cancelled" at the next boundary;
+         ``cancelled=False`` means it already finished.
 The per-model FrontDoor is created lazily at the first ``submit`` and owns
 its own decode loop; the synchronous kinds above keep their scheduler.
 
@@ -106,6 +119,7 @@ class NDIFServer:
         num_slots: int = 8,
         slot_max_len: int = 160,
         max_queue_depth: int = 32,
+        door_kwargs: dict | None = None,
     ) -> None:
         """Preload a model (the expensive step users never pay for).
 
@@ -114,7 +128,9 @@ class NDIFServer:
         positions) with in-flight admission; see repro.serving.scheduler.
         ``max_queue_depth`` bounds the live front door's backlog (the
         ``submit`` wire kind) — submissions beyond it are refused with
-        structured backpressure."""
+        structured backpressure.  ``door_kwargs`` passes extra FrontDoor
+        knobs through (``max_restarts``, ``stall_timeout_s``,
+        ``quarantine_after``, ``retry_after_bounds``, ...)."""
         engine = InferenceEngine(model, params, mode=mode, name=name)
         self.engines[name] = engine
         self.schedulers[name] = CoTenantScheduler(
@@ -125,6 +141,7 @@ class NDIFServer:
         self._door_cfg[name] = dict(
             num_slots=num_slots, slot_max_len=slot_max_len,
             pad_slack=pad_slack, max_queue_depth=max_queue_depth,
+            **(door_kwargs or {}),
         )
 
     def _frontdoor(self, name: str) -> FrontDoor:
@@ -391,10 +408,13 @@ class NDIFServer:
                 stop=bool(msg.get("stop")),
             )
             slo = msg.get("slo_ms")
+            dl = msg.get("deadline_ms")
             try:
                 ticket = self._frontdoor(name).submit(
                     req, stream=bool(msg.get("stream")),
                     slo_ms=None if slo is None else float(slo),
+                    deadline_ms=None if dl is None else float(dl),
+                    idempotency_key=msg.get("idempotency_key"),
                 )
             except AdmissionError as e:
                 return {"ok": False, **e.payload}
@@ -405,15 +425,25 @@ class NDIFServer:
                 return {"ok": False,
                         "error": f"model {name!r} has no live front door "
                                  "(nothing was submitted)"}
+            since = msg.get("since")
             try:
                 chunks, done = door.take(
                     msg["ticket"], blocking=(kind == "stream"),
                     timeout=float(msg.get("timeout", 30.0)),
+                    since=None if since is None else int(since),
                 )
             except KeyError:
                 return {"ok": False,
                         "error": f"unknown ticket {msg.get('ticket')!r}"}
             return {"ok": True, "chunks": chunks, "done": done}
+        if kind == "cancel":
+            door = self.frontdoors.get(name)
+            if door is None:
+                return {"ok": False,
+                        "error": f"model {name!r} has no live front door "
+                                 "(nothing was submitted)"}
+            return {"ok": True,
+                    "cancelled": door.cancel(msg["ticket"])}
         if kind == "stats":
             snap = engine.stats.snapshot()
             door = self.frontdoors.get(name)

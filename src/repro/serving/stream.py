@@ -20,7 +20,19 @@ Chunk kinds:
   ``done``    payload the FINAL result dict (batch clients get everything
               here; streaming clients get logits + anything not yet
               streamed), always the last chunk, ``final=True``;
-  ``error``   payload ``{"error": msg}``, terminal like ``done``.
+  ``error``   payload ``{"error": msg, "code": str}``, terminal like
+              ``done`` — ``code`` is the machine-readable failure class
+              ("deadline" | "cancelled" | "engine_restart" |
+              "engine_failed" | "closed" | "error") that
+              :func:`assemble_result` surfaces as :class:`TicketError`.
+
+Fault tolerance: every chunk ever pushed is retained in the channel's
+``history`` until the channel is dropped, and :meth:`StreamChannel.
+read_since` re-delivers from an arbitrary ``seq`` cursor.  This makes
+``poll``/``stream`` IDEMPOTENT reads: a client whose reply was lost in
+flight re-requests the same cursor and loses nothing — the transport only
+has to be at-least-once, exactly-once delivery is reconstructed from the
+seq numbers (duplicates drop client-side).
 """
 from __future__ import annotations
 
@@ -30,7 +42,24 @@ from typing import Any
 
 import numpy as np
 
-__all__ = ["Chunk", "StreamChannel", "assemble_result", "check_frames"]
+__all__ = ["Chunk", "StreamChannel", "TicketError", "assemble_result",
+           "check_frames"]
+
+
+class TicketError(RuntimeError):
+    """A ticket terminated with a structured error chunk.
+
+    ``payload`` is the error chunk's payload; ``code`` distinguishes the
+    failure class machine-readably (``deadline``, ``cancelled``,
+    ``engine_restart``, ``engine_failed``, ``closed``, plain ``error``
+    for per-request execution failures) so retry/deadline logic never
+    string-matches messages.  Subclasses ``RuntimeError`` for
+    compatibility with pre-fault-tolerance callers."""
+
+    def __init__(self, payload: dict) -> None:
+        super().__init__(payload.get("error", "ticket failed"))
+        self.payload = dict(payload)
+        self.code = payload.get("code", "error")
 
 
 @dataclasses.dataclass
@@ -69,6 +98,9 @@ class StreamChannel:
         self._lock = threading.Lock()
         self._ready = threading.Condition(self._lock)
         self._chunks: list[Chunk] = []
+        # every chunk ever pushed, in seq order — read_since() re-delivers
+        # from here, so a reply lost in flight is never data loss
+        self.history: list[Chunk] = []
         self._seq = 0
         self._closed = False
 
@@ -81,8 +113,26 @@ class StreamChannel:
             chunk = Chunk(self.ticket, self._seq, kind, payload, final)
             self._seq += 1
             self._chunks.append(chunk)
+            self.history.append(chunk)
             if final:
                 self._closed = True
+            self._ready.notify_all()
+            return chunk
+
+    def push_final_once(self, kind: str, payload: Any) -> Chunk | None:
+        """Idempotent terminal push: a no-op on an already-terminal channel.
+
+        The supervisor's fail-everything path and a concurrent
+        ``take()``'s dead-door check may race to deliver the terminal
+        error; whichever arrives second must not raise."""
+        with self._ready:
+            if self._closed:
+                return None
+            chunk = Chunk(self.ticket, self._seq, kind, payload, True)
+            self._seq += 1
+            self._chunks.append(chunk)
+            self.history.append(chunk)
+            self._closed = True
             self._ready.notify_all()
             return chunk
 
@@ -118,6 +168,29 @@ class StreamChannel:
             out, self._chunks = self._chunks, []
             return out, self._closed and not self._chunks
 
+    def read_since(
+        self,
+        since: int,
+        *,
+        blocking: bool = False,
+        timeout: float | None = None,
+    ) -> tuple[list[Chunk], bool]:
+        """Cursor read: every chunk with ``seq >= since``, from history.
+
+        Unlike :meth:`drain`/:meth:`get` this does not consume — the same
+        cursor re-reads the same chunks, which is what makes retried
+        polls idempotent.  Returns ``(chunks, done)`` where ``done`` means
+        the terminal chunk has been pushed (it is included in ``chunks``
+        whenever ``since`` reaches back far enough).  With ``blocking``,
+        waits up to ``timeout`` for something new past the cursor.
+        """
+        since = max(0, int(since))
+        with self._ready:
+            if blocking and self._seq <= since and not self._closed:
+                self._ready.wait(timeout)
+            out = [c for c in self.history if c.seq >= since]
+            return out, self._closed
+
 
 def check_frames(chunks: list[dict], ticket: Any) -> None:
     """Receiver-side frame-integrity check for one ticket's chunk list:
@@ -149,7 +222,8 @@ def assemble_result(chunks: list[dict]) -> tuple[dict, list]:
     ``generate``/``trace`` roundtrip returns — token chunks concatenate
     along the step axis (bit-exact vs solo: fused window splits are
     bit-identical), saves merge in arrival order, the done chunk
-    contributes logits and any remainder.  Raises ``RuntimeError`` on an
+    contributes logits and any remainder.  Raises :class:`TicketError`
+    (a ``RuntimeError`` subclass carrying the payload and ``code``) on an
     error chunk.
     """
     result: dict[str, Any] = {}
@@ -158,7 +232,7 @@ def assemble_result(chunks: list[dict]) -> tuple[dict, list]:
     for c in chunks:
         kind, payload = c["kind"], c["payload"]
         if kind == "error":
-            raise RuntimeError(payload["error"])
+            raise TicketError(payload)
         if kind == "tokens":
             token_parts.append(np.asarray(payload["tokens"]))
         elif kind == "saves":

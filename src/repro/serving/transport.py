@@ -13,13 +13,30 @@ multi-message :class:`TransportSession` for streaming conversations —
 one submit, many polls — that meters into its own stats AND the parent
 transport's, so per-conversation byte accounting coexists with the
 door-wide totals.
+
+Fault tolerance: the dispatch path carries the two transport fault
+points (``transport.send`` fires BEFORE the handler — the request is
+lost and the server never saw it; ``transport.recv`` fires AFTER — the
+reply is lost although the server fully processed the message, the
+AMBIGUOUS failure mode that motivates idempotency keys).  Both surface
+as :class:`TransportError`, the exception class the client-side
+``RetryPolicy`` treats as retryable.
 """
 from __future__ import annotations
 
 import threading
 from typing import Any, Callable
 
-__all__ = ["LoopbackTransport", "TransportSession", "TransportStats"]
+from repro.serving import faults
+
+__all__ = ["LoopbackTransport", "TransportError", "TransportSession",
+           "TransportStats"]
+
+
+class TransportError(RuntimeError):
+    """A message was lost in flight (either direction).  Retryable: the
+    client cannot tell whether the server processed the request, so
+    retried submits must carry an idempotency key."""
 
 
 class TransportStats:
@@ -83,10 +100,16 @@ class LoopbackTransport:
 
     def _dispatch(self, payload: bytes,
                   extra: TransportStats | None = None) -> bytes:
+        # fault point: the request never reaches the server (nothing was
+        # processed — a plain retry is always safe)
+        faults.fire("transport.send")
         # the handler itself runs outside the lock — it may block (a
         # streaming poll waits on the engine thread) and other client
         # threads must keep flowing
         reply = self.handler(payload)
+        # fault point: the reply is lost AFTER the server processed the
+        # message — the ambiguous case idempotency keys exist for
+        faults.fire("transport.recv")
         with self._lock:
             self.stats.record(len(payload), len(reply))
             if extra is not None:

@@ -1,5 +1,8 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see ONE real device
 (the 512-device override belongs exclusively to repro.launch.dryrun)."""
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +11,35 @@ import pytest
 from repro.core.interleave import SiteSchedule
 from repro.core.tracer import TracedModel
 from repro.core import taps
+
+# test modules that spin up live front doors (engine/watchdog threads);
+# every test in them must leave the process thread count where it found it
+_THREADED_MODULES = ("test_frontdoor", "test_faults")
+
+
+@pytest.fixture(autouse=True)
+def _no_thread_leaks(request):
+    """Front-door tests must not leak threads: a door left open (engine
+    thread, watchdog) poisons every later test's timing.  Module-scoped
+    live fixtures are forced up FIRST so their long-lived threads are part
+    of the baseline, then the test must return to that count."""
+    mod = request.module.__name__.rsplit(".", 1)[-1]
+    if mod not in _THREADED_MODULES:
+        yield
+        return
+    for name in ("live",):
+        if name in request.fixturenames:
+            request.getfixturevalue(name)
+    before = threading.active_count()
+    yield
+    deadline = time.time() + 10.0
+    while threading.active_count() > before and time.time() < deadline:
+        time.sleep(0.05)
+    after = threading.active_count()
+    assert after <= before, (
+        f"thread leak: {before} threads before the test, {after} after "
+        f"({[t.name for t in threading.enumerate()]})"
+    )
 
 
 def make_tiny_model(n_layers=3, d=4, scan=False):

@@ -1,0 +1,458 @@
+"""Fault-tolerant serving: deterministic injection + supervised recovery.
+
+Every live test here drives the REAL threaded front door through the wire
+protocol while a seeded :class:`FaultPlan` breaks it on purpose — engine
+crashes, lost transport messages, allocation bursts, stalls.  The
+assertions are the recovery contract: every ticket terminates with a
+result or a STRUCTURED error (nothing hangs), survivors stay bit-exact
+against the synchronous solo path, and the fault-tolerance counters
+(faults_injected / engine_restarts / tickets_requeued / cancellations /
+deadline_evictions) account for everything that happened.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.generation import SlotAllocationError
+from repro.models import registry as R
+from repro.serving import (
+    AdmissionRefused,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    LoopbackTransport,
+    NDIFClient,
+    NDIFServer,
+    RetryPolicy,
+    TicketError,
+    TransportError,
+)
+from repro.serving import faults
+from repro.serving.stream import StreamChannel, assemble_result, check_frames
+
+
+# ------------------------------------------------------------- unit layer
+def _pattern(seed):
+    """Fire a fixed hit sequence against a plan; return the fire bitmap."""
+    plan = FaultPlan(
+        [
+            FaultSpec("decode.step", nth=3),
+            FaultSpec("engine.tick", every=2, max_fires=None),
+            FaultSpec("page.alloc", p=0.5, max_fires=None),
+            FaultSpec("prefill.dispatch", nth=2, every=3, max_fires=None),
+        ],
+        seed=seed,
+    )
+    fired = []
+    for _ in range(12):
+        for pt in ("decode.step", "engine.tick", "page.alloc",
+                   "prefill.dispatch"):
+            try:
+                plan.fire(pt)
+                fired.append(0)
+            except FaultError:
+                fired.append(1)
+    return fired, plan.snapshot()
+
+
+def test_fault_plan_schedules_are_deterministic():
+    f1, s1 = _pattern(7)
+    f2, s2 = _pattern(7)
+    assert f1 == f2 and s1 == s2          # same seed => same fault sequence
+    f3, _ = _pattern(8)
+    assert f3 != f1                       # p-spec stream differs by seed
+    # nth=3, max_fires=1 (default): exactly one fire, on hit 3
+    steps = f1[0::4]
+    assert steps == [0, 0, 1] + [0] * 9
+    # every=2, uncapped: every second hit
+    ticks = f1[1::4]
+    assert ticks == [1 if (h + 1) % 2 == 0 else 0 for h in range(12)]
+    # nth=2 then every 3rd: hits 2, 5, 8, 11
+    prefills = f1[3::4]
+    assert [h + 1 for h, x in enumerate(prefills) if x] == [2, 5, 8, 11]
+    # the probabilistic spec fired at least once across 12 draws at p=.5
+    assert sum(f1[2::4]) >= 1
+    assert s1["total_fired"] == sum(f1)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault point"):
+        FaultSpec("bogus.point", nth=1)
+    with pytest.raises(ValueError, match="no schedule"):
+        FaultSpec("decode.step")
+
+
+def test_install_is_gated_but_inject_is_not(monkeypatch):
+    plan = FaultPlan([FaultSpec("decode.step", nth=1)])
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    assert not faults.enabled()
+    with pytest.raises(RuntimeError, match="REPRO_FAULTS"):
+        faults.install(plan)
+    assert faults.active() is None
+    # inject() is the explicit scoped opt-in: works with the env unset,
+    # and ALWAYS disarms — even when the body raises
+    with pytest.raises(FaultError):
+        with faults.inject(plan):
+            assert faults.active() is plan
+            faults.fire("decode.step")
+    assert faults.active() is None
+    faults.fire("decode.step")  # disarmed: a pure no-op
+    monkeypatch.setenv("REPRO_FAULTS", "on")
+    assert faults.enabled()
+    faults.install(plan)
+    try:
+        assert faults.active() is plan
+    finally:
+        faults.uninstall()
+    assert faults.active() is None
+
+
+def test_channel_history_cursor_and_idempotent_final():
+    chan = StreamChannel("t")
+    chan.push("tokens", {"tokens": np.zeros((1, 1))})
+    assert chan.push_final_once("done", {}) is not None
+    # a racing second terminal push (watchdog vs engine thread) is dropped
+    assert chan.push_final_once("error", {"error": "x"}) is None
+    chunks, done = chan.read_since(0)
+    assert done and [c.seq for c in chunks] == [0, 1]
+    assert chunks[-1].kind == "done"
+    # cursor reads are NON-consuming: the same cursor re-delivers
+    again, done = chan.read_since(0)
+    assert done and [c.seq for c in again] == [0, 1]
+    tail, _ = chan.read_since(1)
+    assert [c.seq for c in tail] == [1]
+
+
+def test_retry_policy_is_seeded_and_honors_hint():
+    a = RetryPolicy(seed=3)
+    b = RetryPolicy(seed=3)
+    assert [a.delay_ms(i) for i in range(4)] == [
+        b.delay_ms(i) for i in range(4)
+    ]
+    assert RetryPolicy(seed=1).delay_ms(0, retry_after_ms=5000.0) >= 5000.0
+
+
+# ------------------------------------------------------------- live layer
+@pytest.fixture(scope="module")
+def live():
+    cfg = R.get_config("paper-gpt-small")
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    toks = np.asarray(
+        jax.random.randint(jax.random.key(2), (1, 6), 0, cfg.vocab_size)
+    )
+    servers = []
+
+    def make(*, retry=None, **host_kw):
+        host_kw.setdefault("num_slots", 4)
+        host_kw.setdefault("slot_max_len", 64)
+        host_kw.setdefault("max_queue_depth", 16)
+        server = NDIFServer()
+        server.host("m", model, params, policy="continuous", **host_kw)
+        client = NDIFClient(LoopbackTransport(server.handle), "m",
+                            retry=retry)
+        server._frontdoor("m")  # eager: thread-leak baseline counts it
+        servers.append(server)
+        return server, client
+
+    # the shared door most tests ride: generous restart budget so the
+    # crash tests stay independent, fast backoff, no quarantine surprises
+    server, client = make(door_kwargs=dict(
+        max_restarts=100, restart_backoff_s=0.01, quarantine_after=5,
+    ))
+    yield {"make": make, "server": server, "client": client, "toks": toks}
+    for s in servers:
+        s.shutdown()
+
+
+def test_transport_fault_without_retry_raises(live):
+    client, toks = live["client"], live["toks"]
+    plan = FaultPlan(
+        [FaultSpec("transport.send", nth=1, error=TransportError)], seed=0
+    )
+    with faults.inject(plan), pytest.raises(TransportError):
+        client.submit(toks, 4)
+    assert plan.fires() == 1
+
+
+def test_retry_and_idempotency_survive_lost_messages(live):
+    """Lost request (safe) THEN lost reply (ambiguous): the retrying
+    client converges on ONE server-side execution via its idempotency
+    key, and the result is bit-exact."""
+    server, toks = live["server"], live["toks"]
+    stats = server.engines["m"].stats
+    rclient = NDIFClient(
+        LoopbackTransport(server.handle), "m",
+        retry=RetryPolicy(max_attempts=5, base_delay_ms=1.0, seed=1),
+    )
+    ref = rclient.generate(toks, 6)["tokens"]
+    before = len(stats.snapshot()["tickets"])
+    plan = FaultPlan(
+        [
+            # roundtrip 1 (submit): request lost before the server saw it
+            FaultSpec("transport.send", nth=1, error=TransportError),
+            # roundtrip 2 (retry): server ADMITS, then the reply is lost
+            FaultSpec("transport.recv", nth=1, error=TransportError),
+        ],
+        seed=0, stats=stats,
+    )
+    with faults.inject(plan):
+        tk = rclient.submit(toks, 6)
+        out = tk.result(timeout=600.0)
+    assert plan.fires() == 2
+    np.testing.assert_array_equal(out["tokens"], ref)
+    # the ambiguous retry deduped: exactly ONE ticket executed
+    assert len(stats.snapshot()["tickets"]) == before + 1
+
+
+def test_engine_crash_recovery_is_bit_exact(live):
+    """A decode-window crash mid-flight: the supervisor rebuilds the
+    loop, requeues every in-flight ticket, and deterministic re-execution
+    makes results — including an already-streaming ticket — bit-exact."""
+    server, client, toks = live["server"], live["client"], live["toks"]
+    stats = server.engines["m"].stats
+    before = stats.snapshot()
+    ref = client.generate(toks, 12)["tokens"]
+    plan = FaultPlan(
+        [FaultSpec("decode.step", nth=2, error=FaultError,
+                   message="injected engine crash")],
+        seed=0, stats=stats,
+    )
+    with faults.inject(plan):
+        tks = [client.submit(toks, 12) for _ in range(2)]
+        tks.append(client.submit(toks, 12, stream=True))
+        outs = [t.result(timeout=600.0) for t in tks]
+    assert plan.fires() == 1
+    for out in outs:
+        np.testing.assert_array_equal(out["tokens"], ref)
+    after = stats.snapshot()
+    assert after["engine_restarts"] == before["engine_restarts"] + 1
+    # every ticket ADMITTED by crash time is requeued; stragglers still in
+    # the inbox ride the normal admission path instead (timing-dependent)
+    requeued = after["tickets_requeued"] - before["tickets_requeued"]
+    assert 1 <= requeued <= 3
+    assert after["faults_injected"] == before["faults_injected"] + 1
+
+
+def test_page_alloc_fault_requeues_admission(live):
+    """Page-pool exhaustion at admission is NOT a crash: the scheduler
+    requeues the admission and the next boundary succeeds."""
+    server, client, toks = live["server"], live["client"], live["toks"]
+    stats = server.engines["m"].stats
+    before = stats.snapshot()
+    ref = client.generate(toks, 6)["tokens"]
+    plan = FaultPlan(
+        [FaultSpec("page.alloc", nth=1, error=SlotAllocationError)],
+        seed=0, stats=stats,
+    )
+    with faults.inject(plan):
+        out = client.submit(toks, 6).result(timeout=600.0)
+    assert plan.fires() == 1
+    np.testing.assert_array_equal(out["tokens"], ref)
+    after = stats.snapshot()
+    assert after["alloc_retries"] == before["alloc_retries"] + 1
+    assert after["engine_restarts"] == before["engine_restarts"]
+
+
+def test_deadline_eviction_frees_pages_and_spares_cotenant(live):
+    server, client, toks = live["server"], live["client"], live["toks"]
+    stats = server.engines["m"].stats
+    before = stats.snapshot()
+    door = server.frontdoors["m"]
+    deadline = time.time() + 30.0
+    while (door.loop.resident or door.queue_depth()) \
+            and time.time() < deadline:
+        time.sleep(0.02)
+    pages_before = len(door.loop._free_pages)
+    ref = client.generate(toks, 6)["tokens"]
+    # a pure latency spike on the first decode window guarantees the
+    # doomed ticket is resident past its budget, deterministically
+    plan = FaultPlan(
+        [FaultSpec("decode.step", nth=1, delay_s=0.4, error=None)], seed=0
+    )
+    with faults.inject(plan):
+        doomed = client.submit(toks, 40, deadline_ms=150.0)
+        ok = client.submit(toks, 6)
+        out = ok.result(timeout=600.0)
+        with pytest.raises(TicketError) as ei:
+            doomed.result(timeout=600.0)
+    assert ei.value.code == "deadline"
+    np.testing.assert_array_equal(out["tokens"], ref)
+    after = stats.snapshot()
+    assert after["deadline_evictions"] == before["deadline_evictions"] + 1
+    # the evicted ticket's rows AND reserved KV pages came back
+    deadline = time.time() + 30.0
+    while (door.loop.resident or door.queue_depth()) \
+            and time.time() < deadline:
+        time.sleep(0.02)
+    assert len(door.loop._free_pages) == pages_before
+
+
+def test_cancel_kills_ticket_with_structured_error(live):
+    server, client, toks = live["server"], live["client"], live["toks"]
+    stats = server.engines["m"].stats
+    before = stats.snapshot()
+    tk = client.submit(toks, 40)
+    assert tk.cancel() is True
+    with pytest.raises(TicketError) as ei:
+        tk.result(timeout=600.0)
+    assert ei.value.code == "cancelled"
+    assert tk.cancel() is False  # already terminated: result stands
+    after = stats.snapshot()
+    assert after["cancellations"] == before["cancellations"] + 1
+
+
+def test_poll_redelivery_after_done(live):
+    """take(since=0) re-reads the FULL chunk history even after the
+    ticket completed — a lost poll reply is never data loss."""
+    server, client, toks = live["server"], live["client"], live["toks"]
+    tk = client.submit(toks, 4)
+    out = tk.result(timeout=600.0)
+    door = server.frontdoors["m"]
+    chunks1, done1 = door.take(tk.id, since=0)
+    chunks2, done2 = door.take(tk.id, since=0)
+    assert done1 and done2
+    assert [c["seq"] for c in chunks1] == [c["seq"] for c in chunks2]
+    check_frames(chunks1, tk.id)
+    result, _logs = assemble_result(chunks1)
+    np.testing.assert_array_equal(result["tokens"], out["tokens"])
+
+
+def test_fused_compile_fault_degrades_to_eager(live):
+    """A compile failure for one fused window size degrades THAT window
+    to eager stepping — bit-exact, no restart, door stays healthy."""
+    make, toks = live["make"], live["toks"]
+    server, client = make()
+    try:
+        stats = server.engines["m"].stats
+        plan = FaultPlan(
+            [FaultSpec("fused.compile", nth=1, error=FaultError)],
+            seed=0, stats=stats,
+        )
+        with faults.inject(plan):
+            out = client.submit(toks, 6).result(timeout=600.0)
+        ref = client.generate(toks, 6)["tokens"]
+        np.testing.assert_array_equal(out["tokens"], ref)
+        assert plan.fires() == 1
+        assert stats.engine_restarts == 0
+    finally:
+        server.shutdown()
+
+
+def test_restart_budget_exhaustion_fails_door_cleanly(live):
+    """A persistent crash loop exhausts max_restarts: every pending
+    ticket gets a terminal structured error, later submissions are
+    refused with the same code, close() does NOT raise."""
+    make, toks = live["make"], live["toks"]
+    server, client = make(door_kwargs=dict(
+        # quarantine_after above the budget: the offender must keep
+        # requeueing so the RESTART budget (not quarantine) ends the loop
+        max_restarts=2, restart_backoff_s=0.01, quarantine_after=99,
+    ))
+    try:
+        stats = server.engines["m"].stats
+        plan = FaultPlan(
+            [FaultSpec("decode.step", every=1, max_fires=None,
+                       error=FaultError)],
+            seed=0, stats=stats,
+        )
+        with faults.inject(plan):
+            tk = client.submit(toks, 6)
+            with pytest.raises(TicketError) as ei:
+                tk.result(timeout=600.0)
+            assert ei.value.code == "engine_failed"
+            with pytest.raises(AdmissionRefused) as ar:
+                client.submit(toks, 6)
+            assert ar.value.code == "engine_failed"
+        assert stats.engine_restarts == 3  # budget 2 + the failing crash
+    finally:
+        server.shutdown()  # supervised failure: shutdown must not raise
+
+
+def test_repeat_offender_is_quarantined(live):
+    """A ticket resident across quarantine_after crashes is failed with
+    code="engine_restart" instead of riding the requeue forever; the
+    door then serves fresh work normally."""
+    make, toks = live["make"], live["toks"]
+    server, client = make(door_kwargs=dict(
+        max_restarts=10, restart_backoff_s=0.01, quarantine_after=2,
+    ))
+    try:
+        stats = server.engines["m"].stats
+        plan = FaultPlan(
+            [FaultSpec("decode.step", every=1, max_fires=2,
+                       error=FaultError)],
+            seed=0, stats=stats,
+        )
+        with faults.inject(plan):
+            tk = client.submit(toks, 6)
+            with pytest.raises(TicketError) as ei:
+                tk.result(timeout=600.0)
+        assert ei.value.code == "engine_restart"
+        assert stats.engine_restarts == 2
+        # the door survived — fresh work completes bit-exact
+        out = client.submit(toks, 6).result(timeout=600.0)
+        ref = client.generate(toks, 6)["tokens"]
+        np.testing.assert_array_equal(out["tokens"], ref)
+    finally:
+        server.shutdown()
+
+
+def test_backpressure_retry_after_is_clamped_with_position(live):
+    make, toks = live["make"], live["toks"]
+    server, client = make(
+        num_slots=2, max_queue_depth=2,
+        door_kwargs=dict(retry_after_bounds=(25.0, 40.0)),
+    )
+    try:
+        refusal = None
+        for _ in range(50):
+            try:
+                client.submit(toks, 32)
+            except AdmissionRefused as e:
+                refusal = e
+                break
+        assert refusal is not None and refusal.code == "backpressure"
+        assert 25.0 <= refusal.retry_after_ms <= 40.0
+        assert refusal.payload["position"] >= 1
+    finally:
+        server.shutdown()
+
+
+def test_watchdog_detects_stuck_step(live):
+    """A stall INSIDE the engine loop (thread alive, heartbeat frozen)
+    trips the watchdog: blocked pollers get code="engine_stalled"
+    immediately, submissions are refused, close() stays clean."""
+    make, toks = live["make"], live["toks"]
+    server, client = make(door_kwargs=dict(stall_timeout_s=30.0))
+    try:
+        # warm the door under a generous threshold (XLA compiles must not
+        # look like the stall), then tighten it — the watchdog re-reads
+        # the threshold every period
+        client.submit(toks, 6).result(timeout=600.0)
+        server.frontdoors["m"].stall_timeout_s = 0.25
+        plan = FaultPlan(
+            [FaultSpec("engine.tick", nth=1, delay_s=2.0, error=None)],
+            seed=0,
+        )
+        with faults.inject(plan):
+            tk = client.submit(toks, 6)
+            with pytest.raises(TicketError) as ei:
+                tk.result(timeout=600.0)
+            assert ei.value.code == "engine_stalled"
+            with pytest.raises(AdmissionRefused) as ar:
+                client.submit(toks, 6)
+            assert ar.value.code == "engine_stalled"
+        assert plan.fires() == 1
+    finally:
+        server.shutdown()
+
+
+def test_stats_wire_kind_carries_fault_counters(live):
+    client = live["client"]
+    snap = client.stats()
+    for key in ("faults_injected", "engine_restarts", "tickets_requeued",
+                "cancellations", "deadline_evictions"):
+        assert key in snap and snap[key] >= 0

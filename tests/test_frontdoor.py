@@ -37,6 +37,9 @@ def live():
                 slot_max_len=64, max_queue_depth=8)
     transport = LoopbackTransport(server.handle)
     client = NDIFClient(transport, "m")
+    # create the door (and its engine thread) EAGERLY so the per-test
+    # thread-leak fixture's baseline already includes it
+    server._frontdoor("m")
     toks = np.asarray(
         jax.random.randint(jax.random.key(1), (1, 6), 0, cfg.vocab_size)
     )
@@ -324,6 +327,77 @@ def test_close_drains_rejects_and_joins():
     with pytest.raises(AdmissionRefused) as ei:
         client.submit(toks, 4)
     assert ei.value.code == "closed"
+
+
+def _private_door(num_slots=2, max_queue_depth=16, key=2):
+    cfg = R.get_config("paper-gpt-small")
+    model = R.build_model("paper-gpt-small", cfg)
+    params = model.init(jax.random.key(0))
+    server = NDIFServer()
+    server.host("m", model, params, policy="continuous",
+                num_slots=num_slots, slot_max_len=64,
+                max_queue_depth=max_queue_depth)
+    client = NDIFClient(LoopbackTransport(server.handle), "m")
+    server._frontdoor("m")
+    toks = np.asarray(
+        jax.random.randint(jax.random.key(key), (1, 6), 0, cfg.vocab_size)
+    )
+    return server, client, toks
+
+
+def test_close_races_submit():
+    """close() from one thread while another spam-submits: every submit
+    either returns a ticket that TERMINATES (result or structured error)
+    or raises the structured ``closed`` refusal — never a hang, never an
+    unstructured crash."""
+    server, client, toks = _private_door()
+    tickets, refusals, errors = [], [], []
+    stop = threading.Event()
+
+    def submitter():
+        while not stop.is_set():
+            try:
+                tickets.append(client.submit(toks, 4))
+            except AdmissionRefused as e:
+                refusals.append(e.code)
+                if e.code == "closed":
+                    return
+                time.sleep(0.005)
+            except Exception as e:  # pragma: no cover - failure reporting
+                errors.append(f"{type(e).__name__}: {e}")
+                return
+
+    t = threading.Thread(target=submitter)
+    t.start()
+    time.sleep(0.3)  # let some submissions land mid-flight
+    server.shutdown()
+    stop.set()
+    t.join(30.0)
+    assert not t.is_alive()
+    assert not errors, errors
+    for tk in tickets:  # every admitted ticket terminates, one way or another
+        try:
+            tk.result(timeout=60.0)
+        except RuntimeError as e:
+            assert "closed" in str(e)
+    assert "closed" in refusals or tickets
+
+
+def test_close_races_inflight_fused_window():
+    """close() issued while a fused decode window is mid-flight on the
+    engine thread: the resident drains to completion and its result stays
+    bit-exact — closing never tears a window."""
+    server, client, toks = _private_door(key=3)
+    ref = client.generate(toks, 12)["tokens"]
+    tk = client.submit(toks, 12)
+    door = server.frontdoors["m"]
+    deadline = time.perf_counter() + 60.0
+    while not door.loop.resident and time.perf_counter() < deadline:
+        time.sleep(0.005)
+    assert door.loop.resident
+    # no boundary sync: close lands while the engine thread is stepping
+    server.shutdown()
+    np.testing.assert_array_equal(tk.result(timeout=60.0)["tokens"], ref)
 
 
 # ----------------------------------------------------- satellite: log fix
